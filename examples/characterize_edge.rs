@@ -1,0 +1,45 @@
+//! Fig 2 reproduction: characterize MolmoAct-7B on the commercial edge
+//! platforms (simulated Jetson Orin / Thor), with the operator-level trace
+//! that explains WHY decode dominates.
+//!
+//! ```bash
+//! cargo run --release --example characterize_edge
+//! ```
+
+use vla_char::hw::platform;
+use vla_char::model::molmoact::molmoact_7b;
+use vla_char::profile::{top_ops, trace_table, trace::trace_stage};
+use vla_char::report::{check_fig2, fig2, render};
+use vla_char::sim::SimOptions;
+
+fn main() -> anyhow::Result<()> {
+    let options = SimOptions::default();
+    let f = fig2::run(&options);
+    println!("{}", f.table().to_markdown());
+    println!("{}", f.bars());
+    println!("{}\n", f.summary());
+
+    // The Nsight-style view: top operators of one decode step on Orin.
+    let cfg = molmoact_7b();
+    let stage = cfg.decode_stage_at(cfg.shape.prefill_len() + 64);
+    let costs = trace_stage(&platform::orin(), &stage, false);
+    println!(
+        "{}",
+        trace_table("Top-15 decode-step operators (Orin)", &top_ops(costs, 15)).to_markdown()
+    );
+
+    // Stage-level roofline attribution.
+    for r in [&f.orin, &f.thor] {
+        println!(
+            "{}: decode achieves {:.0} GB/s of {:.0} GB/s effective DRAM BW ({:.0}% of link)",
+            r.platform,
+            r.decode.achieved_bw() / 1e9,
+            platform::by_name(&r.platform)?.mem.effective_bw() / 1e9,
+            r.decode.achieved_bw() / platform::by_name(&r.platform)?.mem.effective_bw() * 100.0
+        );
+    }
+
+    let (text, ok) = render(&check_fig2(&f));
+    println!("\n{text}");
+    std::process::exit(if ok { 0 } else { 1 });
+}

@@ -1,0 +1,59 @@
+//! Quickstart: load the AOT artifacts, run one full VLA control step
+//! (perceive -> reason -> act), and print the phase-latency decomposition.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use vla_char::engine::{FrameSource, VlaEngine, VlaModel};
+use vla_char::runtime::Runtime;
+use vla_char::util::units::fmt_time;
+
+fn main() -> anyhow::Result<()> {
+    // 1. PJRT CPU client + compiled artifacts (python ran once, at build).
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform_name());
+    let model = VlaModel::load(&rt)?;
+    let m = model.manifest.clone();
+    println!(
+        "tiny VLA: {} params | decoder {}x{} | {} visual + {} prompt tokens -> {} generated",
+        m.n_params,
+        m.decoder.layers,
+        m.decoder.hidden,
+        m.workload.image_tokens,
+        m.workload.prompt_tokens,
+        m.workload.decode_tokens
+    );
+
+    // 2. One synthetic camera frame + instruction.
+    let engine = VlaEngine::new(model);
+    let mut frames = FrameSource::new(1, m.vision.patches, m.vision.patch_dim, 42);
+    let prompt = frames.prompt(0, m.workload.prompt_tokens, m.decoder.vocab);
+    let frame = frames.next_frame(0, 0);
+
+    // 3. Full control step: vision -> prefill -> autoregressive decode -> action.
+    let r = engine.step(&frame, &prompt)?;
+
+    println!("\nreasoning/action tokens: {:?}", &r.tokens[..8.min(r.tokens.len())]);
+    println!("action chunk row 0:      {:?}", &r.actions[..m.action.action_dim]);
+    println!("\nphase decomposition (the paper's Fig 2 view):");
+    for (name, d) in [
+        ("vision", r.times.vision),
+        ("prefill", r.times.prefill),
+        ("decode", r.times.decode),
+        ("action", r.times.action),
+    ] {
+        let share = d.as_secs_f64() / r.times.total().as_secs_f64() * 100.0;
+        println!("  {name:<8} {:>12}  {share:5.1}%", fmt_time(d.as_secs_f64()));
+    }
+    println!(
+        "\ntotal {} | generation share {:.1}% | decode {:.1} tok/s",
+        fmt_time(r.times.total().as_secs_f64()),
+        r.times.generation_share() * 100.0,
+        r.decode_tps
+    );
+    println!("\nEven at 5.8M parameters on a CPU backend, autoregressive");
+    println!("action generation dominates the control step - the bottleneck");
+    println!("the paper measures at 7B on Jetson hardware.");
+    Ok(())
+}

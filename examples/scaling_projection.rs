@@ -1,0 +1,41 @@
+//! Fig 3 reproduction: project control frequency for 2B-100B VLA models on
+//! current and hypothetical memory systems (Table 1), including the
+//! amortized (action-chunk) view and the 10 Hz real-time bar.
+//!
+//! ```bash
+//! cargo run --release --example scaling_projection
+//! ```
+
+use vla_char::model::scaling::ANCHOR_SIZES_B;
+use vla_char::report::{check_fig3, fig3, render};
+use vla_char::sim::SimOptions;
+
+fn main() -> anyhow::Result<()> {
+    let options = SimOptions {
+        decode_stride: 4, // linear-in-position KV traffic: stride-4 error <1%
+        ..Default::default()
+    };
+    let f = fig3::run(&options, &ANCHOR_SIZES_B);
+    println!("{}", f.table(false).to_markdown());
+    println!("{}", f.table(true).to_markdown());
+
+    println!("10 Hz amortized target reached by:");
+    let reaching = f.reaching_target(10.0);
+    if reaching.is_empty() {
+        println!("  none - even PIM cannot close the gap (the paper's conclusion)");
+    }
+    for c in reaching {
+        println!("  {} @ {:.0}B ({:.1} actions/s)", c.platform, c.size_b, c.amortized_hz);
+    }
+
+    // Per-size generation share: the bottleneck intensifies with scale.
+    println!("\ngeneration share on Orin by model size:");
+    for &s in &f.sizes {
+        let c = f.cell(s, "Orin").unwrap();
+        println!("  {:>4.0}B: {:.1}% of {:.1}s step", s, c.generation_share * 100.0, c.total_latency);
+    }
+
+    let (text, ok) = render(&check_fig3(&f));
+    println!("\n{text}");
+    std::process::exit(if ok { 0 } else { 1 });
+}

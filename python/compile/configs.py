@@ -1,0 +1,77 @@
+"""Model configuration for the runnable tiny VLA (build-time only).
+
+The tiny VLA mirrors MolmoAct's three-subsystem architecture (vision towers ->
+projector -> decoder-only reasoning engine with KV cache -> action head) at a
+scale the CPU PJRT backend executes in milliseconds, so the rust engine can
+measure the same phase decomposition the paper measures on Jetson.
+
+Dimensions intentionally match `rust/src/model/vla.rs::tiny_test_config` so
+the simulator's `cpu-host` predictions can be calibrated against real
+measurements of the same workload (EXPERIMENTS.md E-C6).
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class VisionCfg:
+    layers: int = 2
+    hidden: int = 128
+    heads: int = 4
+    head_dim: int = 32
+    ffn: int = 512
+    patches: int = 64       # 8x8 grid
+    patch_dim: int = 147    # 3 * 7 * 7 pixels per patch
+
+
+@dataclass(frozen=True)
+class DecoderCfg:
+    layers: int = 4
+    hidden: int = 256
+    heads: int = 8
+    kv_heads: int = 2
+    head_dim: int = 32
+    ffn: int = 1024
+    vocab: int = 2048
+    max_seq: int = 128
+
+    @property
+    def q_dim(self) -> int:
+        return self.heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.kv_heads * self.head_dim
+
+
+@dataclass(frozen=True)
+class ActionCfg:
+    layers: int = 2
+    hidden: int = 128
+    heads: int = 4
+    head_dim: int = 32
+    ffn: int = 512
+    horizon: int = 8
+    action_dim: int = 7
+    diffusion_steps: int = 4
+
+
+@dataclass(frozen=True)
+class TinyVlaCfg:
+    vision: VisionCfg = field(default_factory=VisionCfg)
+    decoder: DecoderCfg = field(default_factory=DecoderCfg)
+    action: ActionCfg = field(default_factory=ActionCfg)
+    prompt_tokens: int = 16
+    decode_tokens: int = 24
+    seed: int = 20260710
+
+    @property
+    def image_tokens(self) -> int:
+        return self.vision.patches
+
+    @property
+    def prefill_len(self) -> int:
+        return self.image_tokens + self.prompt_tokens
+
+
+TINY = TinyVlaCfg()

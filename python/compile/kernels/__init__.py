@@ -1,0 +1,7 @@
+"""L1 Pallas kernels (build-time only) + pure-jnp oracles."""
+
+from .decode_attention import decode_attention
+from .fused_ffn import fused_ffn
+from .ref import decode_attention_ref, fused_ffn_ref
+
+__all__ = ["decode_attention", "fused_ffn", "decode_attention_ref", "fused_ffn_ref"]

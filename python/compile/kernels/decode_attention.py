@@ -1,0 +1,98 @@
+"""Pallas decode-attention kernel — the action-generation hot spot (L1).
+
+This is the operator the paper identifies as the bottleneck's core: one new
+query token attending over the whole KV cache, arithmetic intensity ~1
+FLOP/byte, bounded by how fast K/V (and, at model scale, weights) stream from
+HBM.
+
+TPU adaptation of the GPU kernel the paper profiles (DESIGN.md
+§Hardware-Adaptation): instead of a threadblock per head with shared-memory
+staging, we give each KV head a grid step (BlockSpec schedules its K/V slab
+HBM->VMEM) and stream the cache in `CHUNK`-sized blocks with an online-
+softmax accumulator inside the kernel — the same one-pass structure
+flash-decoding uses, shaped for VMEM residency rather than warp shuffles.
+
+Lowered with `interpret=True`: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers to plain HLO with identical numerics
+(validated against `ref.decode_attention_ref` by pytest).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# KV positions processed per online-softmax iteration. 32 divides every
+# max_seq we emit (128) and keeps the live block small enough that the same
+# kernel tiles into ~16 KiB VMEM working sets at real model scale.
+CHUNK = 32
+
+
+def _decode_attention_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref):
+    """One grid step = one KV head: online softmax over KV chunks."""
+    q = q_ref[0]  # [q_per_kv, head_dim]
+    pos = pos_ref[0]
+    seq = k_ref.shape[1]
+    head_dim = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(head_dim, q.dtype))
+    q_per_kv = q.shape[0]
+
+    neg_big = jnp.finfo(q.dtype).min
+
+    def body(i, carry):
+        m, l, acc = carry
+        start = i * CHUNK
+        k_blk = k_ref[0, pl.dslice(start, CHUNK), :]  # [CHUNK, head_dim]
+        v_blk = v_ref[0, pl.dslice(start, CHUNK), :]
+        s = (q @ k_blk.T) * scale  # [q_per_kv, CHUNK]
+        idx = start + jax.lax.broadcasted_iota(jnp.int32, (1, CHUNK), 1)
+        valid = idx <= pos
+        s = jnp.where(valid, s, neg_big)
+        m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+        # exp of masked lanes must be exactly zero so padding never leaks
+        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1, keepdims=True)
+        acc_new = acc * alpha + p @ v_blk
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((q_per_kv, 1), neg_big, dtype=q.dtype)
+    l0 = jnp.zeros((q_per_kv, 1), dtype=q.dtype)
+    acc0 = jnp.zeros((q_per_kv, head_dim), dtype=q.dtype)
+    n_chunks = seq // CHUNK
+    m, l, acc = jax.lax.fori_loop(0, n_chunks, body, (m0, l0, acc0))
+    o_ref[0] = acc / l
+
+
+@functools.partial(jax.jit, static_argnames=())
+def decode_attention(q, k_cache, v_cache, pos):
+    """Flash-decode attention for one token (see `ref.decode_attention_ref`).
+
+    Args:
+      q: [kv_heads, q_per_kv, head_dim] float32.
+      k_cache / v_cache: [kv_heads, max_seq, head_dim] float32, max_seq a
+        multiple of CHUNK (=32).
+      pos: scalar int32, current token index (attends to positions <= pos).
+
+    Returns:
+      [kv_heads, q_per_kv, head_dim] float32.
+    """
+    kv_heads, max_seq, head_dim = k_cache.shape
+    q_per_kv = q.shape[1]
+    if max_seq % CHUNK != 0:
+        raise ValueError(f"max_seq {max_seq} must be a multiple of {CHUNK}")
+    pos_arr = jnp.reshape(pos.astype(jnp.int32), (1,))
+    return pl.pallas_call(
+        _decode_attention_kernel,
+        grid=(kv_heads,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda h: (0,)),  # pos (broadcast)
+            pl.BlockSpec((1, q_per_kv, head_dim), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, max_seq, head_dim), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, max_seq, head_dim), lambda h: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_per_kv, head_dim), lambda h: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((kv_heads, q_per_kv, head_dim), q.dtype),
+        interpret=True,
+    )(pos_arr, q, k_cache, v_cache)

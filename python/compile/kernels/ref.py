@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness references).
+
+Every Pallas kernel in this package has an exact counterpart here written in
+straightforward jax.numpy. pytest (with hypothesis shape/value sweeps)
+asserts allclose between kernel and oracle; the AOT pipeline refuses to emit
+artifacts if the check fails.
+"""
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos):
+    """Masked single-token decode attention over a padded KV cache.
+
+    Args:
+      q: [kv_heads, q_per_kv, head_dim] query for ONE new token (GQA layout:
+         each of the kv_heads serves q_per_kv query heads).
+      k_cache: [kv_heads, max_seq, head_dim] keys, valid in [0, pos].
+      v_cache: [kv_heads, max_seq, head_dim] values, valid in [0, pos].
+      pos: scalar int32 — index of the CURRENT token (attends to <= pos).
+
+    Returns:
+      [kv_heads, q_per_kv, head_dim] attention output.
+    """
+    head_dim = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(head_dim, q.dtype))
+    # [kv_heads, q_per_kv, max_seq]
+    scores = jnp.einsum("hqd,hsd->hqs", q, k_cache) * scale
+    idx = jnp.arange(k_cache.shape[1])
+    mask = idx[None, None, :] <= pos
+    scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs * mask  # zero out masked lanes exactly
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hqs,hsd->hqd", probs, v_cache)
+
+
+def fused_ffn_ref(x, w_gate, w_up, w_down):
+    """SwiGLU feed-forward: (silu(x @ w_gate) * (x @ w_up)) @ w_down.
+
+    Args:
+      x: [rows, hidden]
+      w_gate, w_up: [hidden, ffn]
+      w_down: [ffn, hidden]
+
+    Returns:
+      [rows, hidden]
+    """
+    g = x @ w_gate
+    u = x @ w_up
+    act = g * jnp.reciprocal(1.0 + jnp.exp(-g)) * u  # silu(g) * u
+    return act @ w_down

@@ -1,0 +1,281 @@
+"""L2: the tiny VLA in JAX (build-time only; never imported at runtime).
+
+Four entry points, each AOT-lowered to an HLO-text artifact by `aot.py`:
+
+  vision_encode(params, patches)              -> visual embeddings
+  prefill(params, embeds, token_ids)          -> (logits, k_cache, v_cache)
+  decode_step(params, token, pos, k, v)       -> (logits, k_cache, v_cache)
+  action_head(params, cond)                   -> action chunk [horizon, dim]
+
+All weights live in ONE flat float32 vector so the rust runtime passes a
+single `params.f32.bin` literal; slices are static (offsets resolved at trace
+time from the manifest built by `ParamBook`). The decode path calls the L1
+Pallas kernels (`decode_attention`, `fused_ffn`), so they lower into the same
+HLO the rust coordinator executes.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .configs import TINY, TinyVlaCfg
+from .kernels import decode_attention, fused_ffn
+
+
+class ParamBook:
+    """Assigns every weight tensor a slice of one flat parameter vector.
+
+    Build-time bookkeeping: `alloc` is called in a fixed order during model
+    construction; the same order produces the same offsets in `init_params`
+    and inside the traced model functions.
+    """
+
+    def __init__(self):
+        self.entries = []  # (name, shape, offset, size)
+        self.total = 0
+
+    def alloc(self, name: str, shape: tuple) -> tuple:
+        size = int(np.prod(shape))
+        self.entries.append((name, tuple(shape), self.total, size))
+        self.total += size
+        return self.entries[-1]
+
+    def manifest(self) -> dict:
+        return {
+            "total": self.total,
+            "entries": [
+                {"name": n, "shape": list(s), "offset": o, "size": z}
+                for (n, s, o, z) in self.entries
+            ],
+        }
+
+
+def build_book(cfg: TinyVlaCfg = TINY) -> ParamBook:
+    """Declare every parameter in deterministic order."""
+    book = ParamBook()
+    v, d, a = cfg.vision, cfg.decoder, cfg.action
+
+    book.alloc("vis.patch_embed", (v.patch_dim, v.hidden))
+    book.alloc("vis.pos_embed", (v.patches, v.hidden))
+    for l in range(v.layers):
+        _alloc_block(book, f"vis.b{l}", v.hidden, v.heads * v.head_dim,
+                     v.heads * v.head_dim, v.ffn, swiglu=False)
+    book.alloc("vis.ln_f", (v.hidden,))
+    book.alloc("proj.fc1", (v.hidden, 2 * v.hidden))
+    book.alloc("proj.fc2", (2 * v.hidden, d.hidden))
+
+    book.alloc("dec.embed", (d.vocab, d.hidden))
+    for l in range(d.layers):
+        _alloc_block(book, f"dec.b{l}", d.hidden, d.q_dim, d.kv_dim, d.ffn,
+                     swiglu=True)
+    book.alloc("dec.ln_f", (d.hidden,))
+    book.alloc("dec.lm_head", (d.hidden, d.vocab))
+
+    book.alloc("act.cond_proj", (d.hidden, a.hidden))
+    book.alloc("act.time_embed", (a.diffusion_steps, a.hidden))
+    book.alloc("act.in_proj", (a.action_dim, a.hidden))
+    for l in range(a.layers):
+        _alloc_block(book, f"act.b{l}", a.hidden, a.heads * a.head_dim,
+                     a.heads * a.head_dim, a.ffn, swiglu=False)
+    book.alloc("act.ln_f", (a.hidden,))
+    book.alloc("act.out_proj", (a.hidden, a.action_dim))
+    return book
+
+
+def _alloc_block(book, prefix, hidden, q_dim, kv_dim, ffn, swiglu):
+    book.alloc(f"{prefix}.ln1", (hidden,))
+    book.alloc(f"{prefix}.wq", (hidden, q_dim))
+    book.alloc(f"{prefix}.wk", (hidden, kv_dim))
+    book.alloc(f"{prefix}.wv", (hidden, kv_dim))
+    book.alloc(f"{prefix}.wo", (q_dim, hidden))
+    book.alloc(f"{prefix}.ln2", (hidden,))
+    if swiglu:
+        book.alloc(f"{prefix}.w_gate", (hidden, ffn))
+        book.alloc(f"{prefix}.w_up", (hidden, ffn))
+        book.alloc(f"{prefix}.w_down", (ffn, hidden))
+    else:
+        book.alloc(f"{prefix}.fc1", (hidden, ffn))
+        book.alloc(f"{prefix}.fc2", (ffn, hidden))
+
+
+def init_params(cfg: TinyVlaCfg = TINY) -> np.ndarray:
+    """Deterministic parameter vector (scaled-normal init, norms at 1)."""
+    book = build_book(cfg)
+    rng = np.random.default_rng(cfg.seed)
+    flat = np.empty(book.total, dtype=np.float32)
+    for name, shape, offset, size in book.entries:
+        if name.endswith((".ln1", ".ln2", ".ln_f")):
+            w = np.ones(size, dtype=np.float32)
+        elif name.endswith(".pos_embed") or name.endswith(".time_embed"):
+            w = 0.02 * rng.standard_normal(size).astype(np.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else size
+            std = 1.0 / np.sqrt(fan_in)
+            w = (std * rng.standard_normal(size)).astype(np.float32)
+        flat[offset:offset + size] = w
+    return flat
+
+
+class Slicer:
+    """Trace-time view of the flat parameter vector."""
+
+    def __init__(self, flat, book: ParamBook):
+        self.flat = flat
+        self.index = {n: (s, o, z) for (n, s, o, z) in book.entries}
+
+    def __call__(self, name: str):
+        shape, offset, size = self.index[name]
+        return jax.lax.dynamic_slice(self.flat, (offset,), (size,)).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# shared blocks
+# ---------------------------------------------------------------------------
+
+
+def _rms_norm(x, w):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * w
+
+
+def _mha(q, k, v, heads, head_dim, causal):
+    """Full-sequence multi-head attention (prefill/vision/action path)."""
+    seq = q.shape[0]
+    qh = q.reshape(seq, heads, head_dim).transpose(1, 0, 2)
+    kh = k.reshape(k.shape[0], -1, head_dim).transpose(1, 0, 2)
+    vh = v.reshape(v.shape[0], -1, head_dim).transpose(1, 0, 2)
+    kv_heads = kh.shape[0]
+    if kv_heads != heads:  # GQA: repeat KV heads
+        rep = heads // kv_heads
+        kh = jnp.repeat(kh, rep, axis=0)
+        vh = jnp.repeat(vh, rep, axis=0)
+    scores = jnp.einsum("hqd,hkd->hqk", qh, kh) / np.sqrt(head_dim)
+    if causal:
+        idx = jnp.arange(seq)
+        mask = idx[None, :, None] >= idx[None, None, :]
+        scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hqk,hkd->hqd", probs, vh)
+    return out.transpose(1, 0, 2).reshape(seq, heads * head_dim)
+
+
+def _encoder_block(p, prefix, x, heads, head_dim, causal=False):
+    """Pre-LN block with GELU MLP (vision & action towers)."""
+    h = _rms_norm(x, p(f"{prefix}.ln1"))
+    q, k, v = h @ p(f"{prefix}.wq"), h @ p(f"{prefix}.wk"), h @ p(f"{prefix}.wv")
+    x = x + _mha(q, k, v, heads, head_dim, causal) @ p(f"{prefix}.wo")
+    h = _rms_norm(x, p(f"{prefix}.ln2"))
+    x = x + jax.nn.gelu(h @ p(f"{prefix}.fc1")) @ p(f"{prefix}.fc2")
+    return x
+
+
+def _decoder_block_prefill(p, prefix, x, cfg):
+    d = cfg.decoder
+    h = _rms_norm(x, p(f"{prefix}.ln1"))
+    q, k, v = h @ p(f"{prefix}.wq"), h @ p(f"{prefix}.wk"), h @ p(f"{prefix}.wv")
+    x = x + _mha(q, k, v, d.heads, d.head_dim, causal=True) @ p(f"{prefix}.wo")
+    h = _rms_norm(x, p(f"{prefix}.ln2"))
+    x = x + fused_ffn(h, p(f"{prefix}.w_gate"), p(f"{prefix}.w_up"),
+                      p(f"{prefix}.w_down"))
+    return x, k, v
+
+
+# ---------------------------------------------------------------------------
+# entry points (AOT-lowered)
+# ---------------------------------------------------------------------------
+
+
+def vision_encode(params, patches, cfg: TinyVlaCfg = TINY):
+    """Vision tower + projector: [patches, patch_dim] -> [patches, dec.hidden]."""
+    v = cfg.vision
+    p = Slicer(params, build_book(cfg))
+    x = patches @ p("vis.patch_embed") + p("vis.pos_embed")
+    for l in range(v.layers):
+        x = _encoder_block(p, f"vis.b{l}", x, v.heads, v.head_dim)
+    x = _rms_norm(x, p("vis.ln_f"))
+    x = jax.nn.gelu(x @ p("proj.fc1")) @ p("proj.fc2")
+    return x
+
+
+def prefill(params, embeds, token_ids, cfg: TinyVlaCfg = TINY):
+    """Prefill over [image_tokens] embeds + [prompt_tokens] token ids.
+
+    Returns (logits[vocab], k_cache, v_cache) with caches
+    [layers, kv_heads, max_seq, head_dim], positions [0, prefill_len) filled.
+    """
+    d = cfg.decoder
+    p = Slicer(params, build_book(cfg))
+    tok = p("dec.embed")[token_ids]
+    x = jnp.concatenate([embeds, tok], axis=0)
+    seq = x.shape[0]
+    k_cache = jnp.zeros((d.layers, d.kv_heads, d.max_seq, d.head_dim), jnp.float32)
+    v_cache = jnp.zeros_like(k_cache)
+    for l in range(d.layers):
+        x, k, v = _decoder_block_prefill(p, f"dec.b{l}", x, cfg)
+        kh = k.reshape(seq, d.kv_heads, d.head_dim).transpose(1, 0, 2)
+        vh = v.reshape(seq, d.kv_heads, d.head_dim).transpose(1, 0, 2)
+        k_cache = k_cache.at[l, :, :seq, :].set(kh)
+        v_cache = v_cache.at[l, :, :seq, :].set(vh)
+    x = _rms_norm(x, p("dec.ln_f"))
+    logits = x[-1] @ p("dec.lm_head")
+    return logits, k_cache, v_cache
+
+
+def decode_step(params, token, pos, k_cache, v_cache, cfg: TinyVlaCfg = TINY):
+    """One autoregressive step at position `pos` (0-based; the index the new
+    token occupies). Uses the L1 Pallas kernels for attention and FFN.
+
+    Returns (logits[vocab], k_cache, v_cache) with position `pos` filled.
+    """
+    d = cfg.decoder
+    p = Slicer(params, build_book(cfg))
+    x = p("dec.embed")[token]  # [hidden]
+    x = x[None, :]  # [1, hidden]
+    q_per_kv = d.heads // d.kv_heads
+    for l in range(d.layers):
+        prefix = f"dec.b{l}"
+        h = _rms_norm(x, p(f"{prefix}.ln1"))
+        q = (h @ p(f"{prefix}.wq")).reshape(d.heads, d.head_dim)
+        k = (h @ p(f"{prefix}.wk")).reshape(d.kv_heads, d.head_dim)
+        v = (h @ p(f"{prefix}.wv")).reshape(d.kv_heads, d.head_dim)
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k[None, :, None, :], (l, 0, pos, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v[None, :, None, :], (l, 0, pos, 0))
+        # GQA layout for the kernel: [kv_heads, q_per_kv, head_dim]
+        qg = q.reshape(d.kv_heads, q_per_kv, d.head_dim)
+        attn = decode_attention(qg, k_cache[l], v_cache[l], pos)
+        attn = attn.reshape(1, d.q_dim)
+        x = x + attn @ p(f"{prefix}.wo")
+        h = _rms_norm(x, p(f"{prefix}.ln2"))
+        x = x + fused_ffn(h, p(f"{prefix}.w_gate"), p(f"{prefix}.w_up"),
+                          p(f"{prefix}.w_down"))
+    x = _rms_norm(x, p("dec.ln_f"))
+    logits = (x @ p("dec.lm_head"))[0]
+    return logits, k_cache, v_cache
+
+
+def action_head(params, cond, cfg: TinyVlaCfg = TINY):
+    """DiT-style action decoder: iterative denoising of an action chunk
+    conditioned on the final decoder state.
+
+    Deterministic DDIM-like schedule (the initial chunk derives from the
+    conditioning vector, so the artifact needs no RNG input). Returns
+    [horizon, action_dim] in [-1, 1].
+    """
+    a = cfg.action
+    p = Slicer(params, build_book(cfg))
+    c = cond @ p("act.cond_proj")  # [act.hidden]
+    # deterministic pseudo-noise seeded by the conditioning vector
+    base = jnp.sin(c)[None, : a.action_dim]
+    x = 0.1 * jnp.tile(base, (a.horizon, 1))
+    x = x + 0.01 * jnp.cos(jnp.arange(a.horizon, dtype=jnp.float32))[:, None]
+    for step in range(a.diffusion_steps):
+        t_emb = p("act.time_embed")[step]
+        h = x @ p("act.in_proj") + c[None, :] + t_emb[None, :]
+        for l in range(a.layers):
+            h = _encoder_block(p, f"act.b{l}", h, a.heads, a.head_dim)
+        h = _rms_norm(h, p("act.ln_f"))
+        eps = h @ p("act.out_proj")  # predicted residual
+        x = x - (1.0 / a.diffusion_steps) * eps
+    return jnp.tanh(x)

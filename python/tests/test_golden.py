@@ -1,0 +1,65 @@
+"""Golden-trace stability: the manifest's recorded outputs must match a
+fresh recomputation — guards against nondeterminism in the AOT pipeline
+(which would silently break the rust golden-replay contract)."""
+
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.configs import TINY
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_golden_patches_file_matches_seed(manifest):
+    raw = np.fromfile(os.path.join(ART, "golden_patches.f32.bin"), dtype="<f4")
+    rng = np.random.default_rng(manifest["golden"]["patch_seed"])
+    expect = rng.standard_normal(
+        (TINY.vision.patches, TINY.vision.patch_dim)).astype(np.float32)
+    np.testing.assert_array_equal(raw.reshape(expect.shape), expect)
+
+
+def test_golden_trace_recomputes_identically(manifest):
+    g = manifest["golden"]
+    params = jnp.asarray(model.init_params())
+    raw = np.fromfile(os.path.join(ART, "golden_patches.f32.bin"), dtype="<f4")
+    patches = jnp.asarray(raw.reshape(TINY.vision.patches, TINY.vision.patch_dim))
+    token_ids = jnp.asarray(np.array(g["prompt_token_ids"], dtype=np.int32))
+
+    embeds = model.vision_encode(params, patches)
+    assert abs(float(embeds.sum()) - g["embeds_sum"]) < 1e-2
+
+    logits, kc, vc = model.prefill(params, embeds, token_ids)
+    tok = jnp.argmax(logits).astype(jnp.int32)
+    pos = TINY.prefill_len
+    out = []
+    for _ in range(len(g["first_tokens"])):
+        out.append(int(tok))
+        logits, kc, vc = model.decode_step(params, tok, jnp.int32(pos), kc, vc)
+        tok = jnp.argmax(logits).astype(jnp.int32)
+        pos += 1
+    assert out == g["first_tokens"]
+    assert int(tok) == g["next_token"]
+
+    actions = model.action_head(params, embeds[-1])
+    assert abs(float(actions.sum()) - g["actions_sum"]) < 1e-3
+    np.testing.assert_allclose(
+        np.asarray(actions[0]), np.array(g["actions_first_row"]), atol=1e-5)
+
+
+def test_params_file_matches_init(manifest):
+    raw = np.fromfile(os.path.join(ART, "params.f32.bin"), dtype="<f4")
+    np.testing.assert_array_equal(raw, model.init_params())

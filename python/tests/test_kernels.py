@@ -1,0 +1,150 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle, hypothesis shape sweeps."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (decode_attention, decode_attention_ref,
+                             fused_ffn, fused_ffn_ref)
+from compile.kernels.decode_attention import CHUNK
+
+
+def _rand(rng, shape, scale=1.0):
+    return jnp.asarray(scale * rng.standard_normal(shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    kv_heads=st.sampled_from([1, 2, 4]),
+    q_per_kv=st.sampled_from([1, 2, 4]),
+    head_dim=st.sampled_from([8, 16, 32]),
+    seq_chunks=st.integers(min_value=1, max_value=4),
+    data=st.data(),
+)
+def test_decode_attention_matches_ref(kv_heads, q_per_kv, head_dim,
+                                      seq_chunks, data):
+    seq = seq_chunks * CHUNK
+    pos = data.draw(st.integers(min_value=0, max_value=seq - 1))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    q = _rand(rng, (kv_heads, q_per_kv, head_dim))
+    k = _rand(rng, (kv_heads, seq, head_dim))
+    v = _rand(rng, (kv_heads, seq, head_dim))
+    got = decode_attention(q, k, v, jnp.int32(pos))
+    want = decode_attention_ref(q, k, v, jnp.int32(pos))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_decode_attention_pos_zero_returns_v0():
+    """With pos=0 only the first KV position is visible: out == v[:, 0]."""
+    rng = np.random.default_rng(0)
+    q = _rand(rng, (2, 3, 16))
+    k = _rand(rng, (2, CHUNK, 16))
+    v = _rand(rng, (2, CHUNK, 16))
+    got = decode_attention(q, k, v, jnp.int32(0))
+    want = jnp.broadcast_to(v[:, None, 0, :], got.shape)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_decode_attention_ignores_padding():
+    """Garbage beyond pos must not affect the result."""
+    rng = np.random.default_rng(1)
+    q = _rand(rng, (2, 2, 16))
+    k = _rand(rng, (2, 2 * CHUNK, 16))
+    v = _rand(rng, (2, 2 * CHUNK, 16))
+    pos = CHUNK - 1
+    out1 = decode_attention(q, k, v, jnp.int32(pos))
+    k2 = k.at[:, pos + 1:, :].set(1e6)
+    v2 = v.at[:, pos + 1:, :].set(-1e6)
+    out2 = decode_attention(q, k2, v2, jnp.int32(pos))
+    np.testing.assert_allclose(out1, out2, rtol=1e-6, atol=1e-6)
+
+
+def test_decode_attention_probabilities_convex():
+    """Output must lie in the convex hull of visible values (softmax mix)."""
+    rng = np.random.default_rng(2)
+    q = _rand(rng, (1, 1, 8))
+    k = _rand(rng, (1, CHUNK, 8))
+    v = _rand(rng, (1, CHUNK, 8))
+    pos = 10
+    out = np.asarray(decode_attention(q, k, v, jnp.int32(pos)))[0, 0]
+    vis = np.asarray(v)[0, : pos + 1]
+    assert (out <= vis.max(axis=0) + 1e-5).all()
+    assert (out >= vis.min(axis=0) - 1e-5).all()
+
+
+def test_decode_attention_rejects_bad_seq():
+    rng = np.random.default_rng(3)
+    q = _rand(rng, (1, 1, 8))
+    k = _rand(rng, (1, CHUNK + 1, 8))
+    v = _rand(rng, (1, CHUNK + 1, 8))
+    with pytest.raises(ValueError, match="multiple"):
+        decode_attention(q, k, v, jnp.int32(0))
+
+
+def test_decode_attention_extreme_scores_stable():
+    """Online softmax must not overflow with large score magnitudes."""
+    rng = np.random.default_rng(4)
+    q = _rand(rng, (1, 1, 8), scale=30.0)
+    k = _rand(rng, (1, CHUNK, 8), scale=30.0)
+    v = _rand(rng, (1, CHUNK, 8))
+    out = decode_attention(q, k, v, jnp.int32(CHUNK - 1))
+    assert np.isfinite(np.asarray(out)).all()
+
+
+# ---------------------------------------------------------------------------
+# fused_ffn
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.sampled_from([1, 2, 8]),
+    hidden=st.sampled_from([16, 64, 256]),
+    ffn_mult=st.sampled_from([1, 2, 4]),
+    data=st.data(),
+)
+def test_fused_ffn_matches_ref(rows, hidden, ffn_mult, data):
+    ffn = 256 * ffn_mult
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    x = _rand(rng, (rows, hidden))
+    wg = _rand(rng, (hidden, ffn), scale=0.05)
+    wu = _rand(rng, (hidden, ffn), scale=0.05)
+    wd = _rand(rng, (ffn, hidden), scale=0.05)
+    got = fused_ffn(x, wg, wu, wd)
+    want = fused_ffn_ref(x, wg, wu, wd)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_fused_ffn_small_ffn_single_block():
+    """ffn smaller than the block size runs as a single grid step."""
+    rng = np.random.default_rng(5)
+    x = _rand(rng, (2, 32))
+    wg = _rand(rng, (32, 64), scale=0.1)
+    wu = _rand(rng, (32, 64), scale=0.1)
+    wd = _rand(rng, (64, 32), scale=0.1)
+    np.testing.assert_allclose(
+        fused_ffn(x, wg, wu, wd), fused_ffn_ref(x, wg, wu, wd),
+        rtol=3e-5, atol=3e-5)
+
+
+def test_fused_ffn_zero_input_gives_zero():
+    x = jnp.zeros((1, 16), jnp.float32)
+    wg = jnp.ones((16, 256), jnp.float32)
+    wu = jnp.ones((16, 256), jnp.float32)
+    wd = jnp.ones((256, 16), jnp.float32)
+    out = fused_ffn(x, wg, wu, wd)
+    np.testing.assert_allclose(out, np.zeros((1, 16)), atol=1e-7)
+
+
+def test_fused_ffn_rejects_ragged_ffn():
+    rng = np.random.default_rng(6)
+    x = _rand(rng, (1, 16))
+    with pytest.raises(ValueError, match="multiple"):
+        fused_ffn(x, _rand(rng, (16, 300)), _rand(rng, (16, 300)),
+                  _rand(rng, (300, 16)))

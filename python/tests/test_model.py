@@ -1,0 +1,125 @@
+"""L2 model correctness: shapes, cache semantics, prefill/decode consistency."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.configs import TINY
+
+
+@pytest.fixture(scope="module")
+def params():
+    return jnp.asarray(model.init_params())
+
+
+@pytest.fixture(scope="module")
+def patches():
+    rng = np.random.default_rng(9)
+    return jnp.asarray(
+        rng.standard_normal((TINY.vision.patches, TINY.vision.patch_dim)),
+        jnp.float32)
+
+
+def test_param_book_is_contiguous():
+    book = model.build_book()
+    expect = 0
+    for _, _, offset, size in book.entries:
+        assert offset == expect
+        expect += size
+    assert book.total == expect
+    names = [e[0] for e in book.entries]
+    assert len(names) == len(set(names)), "duplicate parameter names"
+
+
+def test_init_params_deterministic():
+    a = model.init_params()
+    b = model.init_params()
+    np.testing.assert_array_equal(a, b)
+
+
+def test_vision_shapes(params, patches):
+    out = model.vision_encode(params, patches)
+    assert out.shape == (TINY.image_tokens, TINY.decoder.hidden)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_prefill_fills_cache_prefix(params, patches):
+    d = TINY.decoder
+    emb = model.vision_encode(params, patches)
+    toks = jnp.arange(TINY.prompt_tokens, dtype=jnp.int32)
+    logits, kc, vc = model.prefill(params, emb, toks)
+    assert logits.shape == (d.vocab,)
+    assert kc.shape == (d.layers, d.kv_heads, d.max_seq, d.head_dim)
+    n = TINY.prefill_len
+    # prefix filled, suffix zero
+    assert float(jnp.abs(kc[:, :, :n]).sum()) > 0
+    assert float(jnp.abs(kc[:, :, n:]).sum()) == 0.0
+    assert float(jnp.abs(vc[:, :, n:]).sum()) == 0.0
+
+
+def test_decode_writes_one_position(params, patches):
+    emb = model.vision_encode(params, patches)
+    toks = jnp.arange(TINY.prompt_tokens, dtype=jnp.int32)
+    _, kc, vc = model.prefill(params, emb, toks)
+    pos = TINY.prefill_len
+    _, kc2, vc2 = model.decode_step(params, jnp.int32(7), jnp.int32(pos), kc, vc)
+    diff = jnp.abs(kc2 - kc).sum(axis=(0, 1, 3))
+    changed = np.nonzero(np.asarray(diff) > 0)[0]
+    np.testing.assert_array_equal(changed, [pos])
+
+
+def test_prefill_decode_consistency(params, patches):
+    """Decoding token t at position p must reproduce the logits of a prefill
+    that already contains t — same network, two execution paths."""
+    d = TINY.decoder
+    emb = model.vision_encode(params, patches)
+    toks = jnp.asarray(
+        np.random.default_rng(3).integers(0, d.vocab, TINY.prompt_tokens),
+        jnp.int32)
+    # path A: prefill of [emb; toks] then decode one generated token
+    logits_a, kc, vc = model.prefill(params, emb, toks)
+    tok = jnp.argmax(logits_a).astype(jnp.int32)
+    logits_dec, _, _ = model.decode_step(
+        params, tok, jnp.int32(TINY.prefill_len), kc, vc)
+    # path B: prefill of [emb; toks; tok] directly
+    toks_b = jnp.concatenate([toks, tok[None]])
+    logits_b, _, _ = model.prefill(
+        params, emb, toks_b)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec), np.asarray(logits_b), rtol=2e-4, atol=2e-4)
+
+
+def test_greedy_decode_deterministic(params, patches):
+    emb = model.vision_encode(params, patches)
+    toks = jnp.arange(TINY.prompt_tokens, dtype=jnp.int32)
+
+    def run():
+        logits, kc, vc = model.prefill(params, emb, toks)
+        out = []
+        tok = jnp.argmax(logits).astype(jnp.int32)
+        for i in range(5):
+            out.append(int(tok))
+            logits, kc, vc = model.decode_step(
+                params, tok, jnp.int32(TINY.prefill_len + i), kc, vc)
+            tok = jnp.argmax(logits).astype(jnp.int32)
+        return out
+
+    assert run() == run()
+
+
+def test_action_head_bounded_and_deterministic(params):
+    cond = jnp.linspace(-1, 1, TINY.decoder.hidden, dtype=jnp.float32)
+    a1 = model.action_head(params, cond)
+    a2 = model.action_head(params, cond)
+    assert a1.shape == (TINY.action.horizon, TINY.action.action_dim)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    assert float(jnp.abs(a1).max()) <= 1.0, "tanh-bounded actions"
+
+
+def test_action_head_sensitive_to_condition(params):
+    c1 = jnp.zeros((TINY.decoder.hidden,), jnp.float32)
+    c2 = jnp.ones((TINY.decoder.hidden,), jnp.float32)
+    a1 = model.action_head(params, c1)
+    a2 = model.action_head(params, c2)
+    assert float(jnp.abs(a1 - a2).max()) > 1e-4

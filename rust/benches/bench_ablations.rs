@@ -1,0 +1,11 @@
+//! Bench E-A1..A3: ablation tables (prefetch, CoT length, horizon,
+//! framework overhead) — the design-choice studies DESIGN.md calls out.
+
+use vla_char::report::ablations;
+
+fn main() {
+    println!("{}", ablations::prefetch_ablation().to_markdown());
+    println!("{}", ablations::cot_length_ablation(&[32, 64, 128, 256, 512]).to_markdown());
+    println!("{}", ablations::horizon_ablation(&[1, 4, 8, 16, 32]).to_markdown());
+    println!("{}", ablations::framework_ablation().to_markdown());
+}

@@ -1,0 +1,31 @@
+//! Bench E-F2: regenerate Figure 2 (MolmoAct-7B on Orin/Thor) and report the
+//! modeled phase latencies as the benchmark's primary output, plus the
+//! simulator's wall cost for producing them.
+
+use vla_char::report::{check_fig2, fig2, render};
+use vla_char::sim::SimOptions;
+use vla_char::util::bench::{black_box, BenchSet};
+
+fn main() {
+    let options = SimOptions::default();
+    let f = fig2::run(&options);
+
+    let mut b = BenchSet::new("fig2 (modeled latencies)");
+    for r in [&f.orin, &f.thor] {
+        for s in r.stages() {
+            b.record(&format!("{}/{}", r.platform, s.phase), s.time);
+        }
+        b.record(&format!("{}/total", r.platform), r.total());
+    }
+    let fast = SimOptions { decode_stride: 8, ..Default::default() };
+    b.bench("simulate_fig2_wall(stride=8)", || {
+        black_box(fig2::run(&fast));
+    });
+    b.finish();
+
+    println!("\n{}", f.table().to_markdown());
+    println!("{}", f.summary());
+    let (text, ok) = render(&check_fig2(&f));
+    println!("\n{text}");
+    assert!(ok, "fig2 paper-shape checks failed");
+}

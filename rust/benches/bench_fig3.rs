@@ -1,0 +1,31 @@
+//! Bench E-F3: regenerate Figure 3 (control frequency sweep) and report the
+//! modeled frequencies; time the full sweep as the harness cost.
+
+use vla_char::model::scaling::ANCHOR_SIZES_B;
+use vla_char::report::{check_fig3, fig3, render};
+use vla_char::sim::SimOptions;
+use vla_char::util::bench::{black_box, BenchSet};
+
+fn main() {
+    let options = SimOptions { decode_stride: 4, ..Default::default() };
+    let f = fig3::run(&options, &ANCHOR_SIZES_B);
+
+    let mut b = BenchSet::new("fig3 (modeled control frequency)");
+    for &s in &[7.0, 100.0] {
+        for p in ["Orin", "Thor", "Orin+PIM", "Thor+PIM"] {
+            let c = f.cell(s, p).unwrap();
+            b.record(&format!("{p}@{s:.0}B step latency", ), c.total_latency);
+        }
+    }
+    let fast = SimOptions { decode_stride: 32, ..Default::default() };
+    b.bench("simulate_fig3_sweep_wall(stride=32)", || {
+        black_box(fig3::run(&fast, &ANCHOR_SIZES_B));
+    });
+    b.finish();
+
+    println!("\n{}", f.table(false).to_markdown());
+    println!("{}", f.table(true).to_markdown());
+    let (text, ok) = render(&check_fig3(&f));
+    println!("{text}");
+    assert!(ok, "fig3 paper-shape checks failed");
+}

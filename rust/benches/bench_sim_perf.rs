@@ -1,0 +1,56 @@
+//! Simulator performance (L3 perf target): operator-costing throughput and
+//! end-to-end model-simulation wall time at different decode strides.
+//! This is the hot path of every sweep; §Perf tracks it.
+
+use vla_char::hw::platform;
+use vla_char::model::molmoact::molmoact_7b;
+use vla_char::model::scaling::scaled_vla;
+use vla_char::sim::{cost_op, SimOptions, Simulator};
+use vla_char::util::bench::{black_box, BenchSet};
+
+fn main() {
+    let cfg = molmoact_7b();
+    let plat = platform::orin();
+    let stage = cfg.decode_stage_at(800);
+
+    let mut b = BenchSet::new("sim_perf");
+    b.bench("cost_op_x434(one decode step)", || {
+        for op in &stage.ops {
+            black_box(cost_op(&plat, op, false));
+        }
+    });
+    b.bench("build_decode_stage(7B)", || {
+        black_box(cfg.decode_stage_at(800));
+    });
+    b.bench("simulate_stage(7B decode step)", || {
+        let sim = Simulator::new(plat.clone());
+        black_box(sim.simulate_stage(&stage));
+    });
+    for stride in [1u64, 8, 32] {
+        let sim = Simulator::with_options(
+            plat.clone(),
+            SimOptions { decode_stride: stride, ..Default::default() },
+        );
+        b.bench(&format!("simulate_vla(7B, stride={stride})"), || {
+            black_box(sim.simulate_vla(&cfg));
+        });
+    }
+    let big = scaled_vla(100.0);
+    let sim = Simulator::with_options(
+        plat.clone(),
+        SimOptions { decode_stride: 16, ..Default::default() },
+    );
+    b.bench("simulate_vla(100B, stride=16)", || {
+        black_box(sim.simulate_vla(&big));
+    });
+    let results = b.finish();
+
+    // ops/sec summary for the §Perf log
+    let per_step = results[0].summary.mean;
+    println!(
+        "\noperator costing: {:.0} ops/s ({} ops per decode step in {:.1} us)",
+        stage.ops.len() as f64 / per_step,
+        stage.ops.len(),
+        per_step * 1e6
+    );
+}

@@ -1,0 +1,16 @@
+//! Bench E-T1: regenerate Table 1 and time the platform registry.
+
+use vla_char::hw::platform;
+use vla_char::util::bench::{black_box, BenchSet};
+
+fn main() {
+    let mut b = BenchSet::new("table1");
+    b.bench("platform_registry_build", || {
+        black_box(platform::table1_platforms());
+    });
+    b.bench("table1_render_markdown", || {
+        black_box(platform::table1().to_markdown());
+    });
+    b.finish();
+    println!("\n{}", platform::table1().to_markdown());
+}

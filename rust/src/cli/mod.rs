@@ -1,0 +1,495 @@
+//! Command-line interface of the `vla-char` binary (logic lives here so the
+//! integration suite can drive it without spawning processes).
+
+use crate::engine::{
+    run_batcher, run_control_loop, BatcherConfig, ControlLoopConfig, Policy, StepServer, VlaEngine,
+    VlaModel,
+};
+use crate::hw::platform;
+use crate::model::molmoact::molmoact_7b;
+use crate::model::scaling::ANCHOR_SIZES_B;
+use crate::profile::{top_ops, trace_table, PhaseProfiler};
+use crate::report::{check_fig2, check_fig3, fig2, fig3, render};
+use crate::runtime::Runtime;
+use crate::sim::calibrate::{validate, MeasuredPhases};
+use crate::sim::SimOptions;
+use crate::util::cli::{help_text, Args, OptSpec};
+use crate::util::units::{fmt_hz, fmt_time};
+use std::path::PathBuf;
+
+const ABOUT: &str =
+    "Characterizing VLA models: the action-generation bottleneck on edge AI architectures \
+     (reproduction of CS.PF 2026)";
+
+const SUBCOMMANDS: &[(&str, &str)] = &[
+    ("table1", "emit Table 1 (platform matrix)"),
+    ("characterize", "Fig 2: MolmoAct-7B phase latency on Orin/Thor + claim checks"),
+    ("project", "Fig 3: control frequency for 2-100B models across all platforms"),
+    ("ablate", "ablations: prefetch, CoT length, action horizon, framework"),
+    ("step", "run ONE real control step through the PJRT artifacts (golden-checked)"),
+    ("control-loop", "run the real tiny-VLA control loop and report achieved Hz"),
+    ("serve", "multi-stream serving through the batcher (real engine)"),
+    ("validate", "E-C6: calibrate the simulator against real measurements"),
+    ("codesign", "algorithm-system co-design projections (quantization, speculation, ...)"),
+    ("energy", "energy per step / per action across the platform matrix"),
+    ("batch", "batched multi-robot decode: per-stream vs aggregate throughput"),
+    ("trace-export", "write a Chrome-trace JSON of a simulated control step"),
+    ("report", "run every experiment and write markdown+CSV under --out"),
+];
+
+fn specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "help", value_name: None, help: "show this help", default: None },
+        OptSpec { name: "platform", value_name: Some("NAME"), help: "platform for --trace (orin, thor, orin+pim, ...)", default: Some("orin") },
+        OptSpec { name: "sizes", value_name: Some("LIST"), help: "model sizes in B params for `project`", default: Some("2,7,14,30,70,100") },
+        OptSpec { name: "steps", value_name: Some("N"), help: "control-loop steps", default: Some("20") },
+        OptSpec { name: "decode-tokens", value_name: Some("N"), help: "override generated tokens per step (real engine)", default: None },
+        OptSpec { name: "target-hz", value_name: Some("HZ"), help: "control-loop target frequency", default: Some("10") },
+        OptSpec { name: "streams", value_name: Some("N"), help: "serving streams", default: Some("2") },
+        OptSpec { name: "rate", value_name: Some("HZ"), help: "per-stream request rate", default: Some("2") },
+        OptSpec { name: "policy", value_name: Some("P"), help: "serving policy: fifo | rr", default: Some("rr") },
+        OptSpec { name: "duration", value_name: Some("S"), help: "serving arrival-trace duration (virtual s)", default: Some("5") },
+        OptSpec { name: "stride", value_name: Some("N"), help: "decode-position sampling stride (sim)", default: Some("1") },
+        OptSpec { name: "no-prefetch", value_name: None, help: "disable cross-operator prefetch (sim)", default: None },
+        OptSpec { name: "no-pim", value_name: None, help: "disable PIM offload (sim)", default: None },
+        OptSpec { name: "compiled", value_name: None, help: "idealized compiled runtime (no eager overheads)", default: None },
+        OptSpec { name: "amortized", value_name: None, help: "also print the horizon-amortized Fig 3 table", default: None },
+        OptSpec { name: "trace", value_name: None, help: "print the top-20 operator trace (characterize)", default: None },
+        OptSpec { name: "seed", value_name: Some("N"), help: "workload seed", default: Some("42") },
+        OptSpec { name: "out", value_name: Some("DIR"), help: "output directory for `report`", default: Some("reports") },
+        OptSpec { name: "platform-file", value_name: Some("PATH"), help: "JSON platform description (overrides --platform)", default: None },
+        OptSpec { name: "model-file", value_name: Some("PATH"), help: "JSON VLA model description (overrides MolmoAct-7B)", default: None },
+        OptSpec { name: "size", value_name: Some("B"), help: "model size in B params (codesign/energy/batch/trace-export)", default: Some("7") },
+        OptSpec { name: "batches", value_name: Some("LIST"), help: "batch sizes for `batch`", default: Some("1,2,4,8,16") },
+        OptSpec { name: "trace-out", value_name: Some("PATH"), help: "output path for `trace-export`", default: Some("trace.json") },
+    ]
+}
+
+/// Build simulator options from parsed flags.
+fn sim_options(args: &Args) -> anyhow::Result<SimOptions> {
+    let mut o = if args.flag("compiled") {
+        SimOptions::compiled()
+    } else {
+        SimOptions::default()
+    };
+    o.prefetch = !args.flag("no-prefetch");
+    o.pim = !args.flag("no-pim");
+    o.decode_stride = args.get_usize("stride", 1)? as u64;
+    Ok(o)
+}
+
+/// Entry point; returns the process exit code.
+pub fn run(argv: &[String]) -> anyhow::Result<i32> {
+    crate::util::log::init();
+    let args = Args::parse("vla-char", argv, &specs())?;
+    if args.flag("help") || args.subcommand.is_none() {
+        println!("{}", help_text("vla-char", ABOUT, SUBCOMMANDS, &specs()));
+        return Ok(0);
+    }
+    match args.subcommand.as_deref().unwrap() {
+        "table1" => cmd_table1(),
+        "characterize" => cmd_characterize(&args),
+        "project" => cmd_project(&args),
+        "ablate" => cmd_ablate(),
+        "step" => cmd_step(&args),
+        "control-loop" => cmd_control_loop(&args),
+        "serve" => cmd_serve(&args),
+        "validate" => cmd_validate(&args),
+        "codesign" => cmd_codesign(&args),
+        "energy" => cmd_energy(&args),
+        "batch" => cmd_batch(&args),
+        "trace-export" => cmd_trace_export(&args),
+        "report" => cmd_report(&args),
+        other => {
+            eprintln!("unknown subcommand `{other}` (try --help)");
+            Ok(2)
+        }
+    }
+}
+
+fn cmd_table1() -> anyhow::Result<i32> {
+    println!("{}", platform::table1().to_markdown());
+    Ok(0)
+}
+
+fn cmd_characterize(args: &Args) -> anyhow::Result<i32> {
+    let options = sim_options(args)?;
+    let f = fig2::run(&options);
+    println!("{}", f.table().to_markdown());
+    println!("{}", f.bars());
+    println!("{}\n", f.summary());
+    if args.flag("trace") {
+        let plat = platform::by_name(args.get_or("platform", "orin"))?;
+        let cfg = molmoact_7b();
+        let stage = cfg.decode_stage_at(cfg.shape.prefill_len() + 64);
+        let costs = crate::profile::trace::trace_stage(&plat, &stage, options.pim);
+        println!(
+            "{}",
+            trace_table(
+                &format!("Top decode-step operators on {}", plat.name),
+                &top_ops(costs, 20)
+            )
+            .to_markdown()
+        );
+    }
+    let (text, ok) = render(&check_fig2(&f));
+    println!("{text}");
+    Ok(if ok { 0 } else { 1 })
+}
+
+fn cmd_project(args: &Args) -> anyhow::Result<i32> {
+    let options = sim_options(args)?;
+    let sizes = args.get_f64_list("sizes", &ANCHOR_SIZES_B)?;
+    let f = fig3::run(&options, &sizes);
+    println!("{}", f.table(false).to_markdown());
+    if args.flag("amortized") {
+        println!("{}", f.table(true).to_markdown());
+    }
+    let reaching = f.reaching_target(10.0);
+    println!(
+        "configs reaching 10 Hz (amortized): {}",
+        if reaching.is_empty() {
+            "none".to_string()
+        } else {
+            reaching
+                .iter()
+                .map(|c| format!("{}@{:.0}B", c.platform, c.size_b))
+                .collect::<Vec<_>>()
+                .join(", ")
+        }
+    );
+    let (text, ok) = render(&check_fig3(&f));
+    println!("{text}");
+    Ok(if ok { 0 } else { 1 })
+}
+
+fn cmd_ablate() -> anyhow::Result<i32> {
+    println!("{}", crate::report::ablations::prefetch_ablation().to_markdown());
+    println!(
+        "{}",
+        crate::report::ablations::cot_length_ablation(&[32, 64, 128, 256, 512]).to_markdown()
+    );
+    println!(
+        "{}",
+        crate::report::ablations::horizon_ablation(&[1, 4, 8, 16, 32]).to_markdown()
+    );
+    println!("{}", crate::report::ablations::framework_ablation().to_markdown());
+    Ok(0)
+}
+
+/// Load the real engine (PJRT CPU + artifacts).
+fn load_engine(args: &Args) -> anyhow::Result<VlaEngine> {
+    let rt = Runtime::cpu()?;
+    let model = VlaModel::load(&rt)?;
+    Ok(match args.get("decode-tokens") {
+        Some(_) => {
+            VlaEngine::with_decode_tokens(model, args.get_usize("decode-tokens", 24)?)
+        }
+        None => VlaEngine::new(model),
+    })
+}
+
+fn cmd_step(args: &Args) -> anyhow::Result<i32> {
+    let engine = load_engine(args)?;
+    let m = &engine.model.manifest;
+    let mut frames =
+        crate::engine::FrameSource::new(1, m.vision.patches, m.vision.patch_dim, args.get_usize("seed", 42)? as u64);
+    let prompt = frames.prompt(0, m.workload.prompt_tokens, m.decoder.vocab);
+    let frame = frames.next_frame(0, 0);
+    let r = engine.step(&frame, &prompt)?;
+    println!("tokens: {:?}...", &r.tokens[..r.tokens.len().min(8)]);
+    println!(
+        "actions[0]: {:?}",
+        &r.actions[..m.action.action_dim.min(r.actions.len())]
+    );
+    println!(
+        "phases: vision {} | prefill {} | decode {} ({} tok, {:.1} tok/s) | action {}",
+        fmt_time(r.times.vision.as_secs_f64()),
+        fmt_time(r.times.prefill.as_secs_f64()),
+        fmt_time(r.times.decode.as_secs_f64()),
+        r.tokens.len(),
+        r.decode_tps,
+        fmt_time(r.times.action.as_secs_f64()),
+    );
+    println!(
+        "total {} | generation share {:.1}%",
+        fmt_time(r.times.total().as_secs_f64()),
+        r.times.generation_share() * 100.0
+    );
+    Ok(0)
+}
+
+fn cmd_control_loop(args: &Args) -> anyhow::Result<i32> {
+    let engine = load_engine(args)?;
+    let cfg = ControlLoopConfig {
+        target_hz: args.get_f64("target-hz", 10.0)?,
+        steps: args.get_usize("steps", 20)? as u64,
+        seed: args.get_usize("seed", 42)? as u64,
+    };
+    let r = run_control_loop(&engine, &cfg)?;
+    println!(
+        "steps {} | achieved {} (target {}) | amortized {} | misses {}/{}",
+        r.steps,
+        fmt_hz(r.achieved_hz),
+        fmt_hz(r.target_hz),
+        fmt_hz(r.amortized_hz),
+        r.deadline_misses,
+        r.steps
+    );
+    println!(
+        "latency mean {} p99 {} | x{:.1} over budget | generation share {:.1}%",
+        fmt_time(r.latency.mean),
+        fmt_time(r.latency.p99),
+        r.latency_vs_budget(),
+        r.generation_share * 100.0
+    );
+    println!(
+        "phases mean: vision {} prefill {} decode {} action {} | decode {:.1} tok/s",
+        fmt_time(r.mean_phase[0]),
+        fmt_time(r.mean_phase[1]),
+        fmt_time(r.mean_phase[2]),
+        fmt_time(r.mean_phase[3]),
+        r.decode_tps.mean,
+    );
+    Ok(0)
+}
+
+struct EngineServer<'a>(&'a VlaEngine);
+
+impl StepServer for EngineServer<'_> {
+    fn serve(
+        &mut self,
+        frame: &crate::engine::Frame,
+        prompt: &[i32],
+    ) -> anyhow::Result<std::time::Duration> {
+        Ok(self.0.step(frame, prompt)?.times.total())
+    }
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
+    let engine = load_engine(args)?;
+    let m = engine.model.manifest.clone();
+    let cfg = BatcherConfig {
+        streams: args.get_usize("streams", 2)?,
+        rate_hz: args.get_f64("rate", 2.0)?,
+        duration_s: args.get_f64("duration", 5.0)?,
+        policy: match args.get_or("policy", "rr") {
+            "fifo" => Policy::Fifo,
+            _ => Policy::RoundRobin,
+        },
+        seed: args.get_usize("seed", 42)? as u64,
+    };
+    let frames_prompt =
+        crate::engine::FrameSource::new(1, m.vision.patches, m.vision.patch_dim, cfg.seed);
+    let prompt = frames_prompt.prompt(0, m.workload.prompt_tokens, m.decoder.vocab);
+    let mut server = EngineServer(&engine);
+    let r = run_batcher(&mut server, m.vision.patches, m.vision.patch_dim, &prompt, &cfg)?;
+    println!(
+        "served {} (arrived {:?}) | throughput {:.2} req/s | max burst {}",
+        r.served, r.per_stream_arrived, r.throughput, r.max_burst
+    );
+    println!(
+        "queue delay p50 {} p99 {} | service p50 {} p99 {}",
+        fmt_time(r.queue_delay.p50),
+        fmt_time(r.queue_delay.p99),
+        fmt_time(r.service.p50),
+        fmt_time(r.service.p99),
+    );
+    Ok(0)
+}
+
+/// Measure real per-phase times over `steps` control steps.
+fn measure_phases(engine: &VlaEngine, steps: u64, seed: u64) -> anyhow::Result<MeasuredPhases> {
+    let m = &engine.model.manifest;
+    let mut frames = crate::engine::FrameSource::new(1, m.vision.patches, m.vision.patch_dim, seed);
+    let prompt = frames.prompt(0, m.workload.prompt_tokens, m.decoder.vocab);
+    let mut prof = PhaseProfiler::new();
+    for step in 0..steps {
+        let frame = frames.next_frame(0, step);
+        let r = engine.step(&frame, &prompt)?;
+        prof.record(&r.times);
+    }
+    println!("{}", prof.table("Measured tiny-VLA phase breakdown (PJRT CPU)").to_markdown());
+    Ok(MeasuredPhases {
+        vision: prof.summary(crate::model::Phase::Vision).p50,
+        prefill: prof.summary(crate::model::Phase::Prefill).p50,
+        decode: prof.summary(crate::model::Phase::Decode).p50,
+        action: prof.summary(crate::model::Phase::Action).p50,
+    })
+}
+
+fn cmd_validate(args: &Args) -> anyhow::Result<i32> {
+    let engine = load_engine(args)?;
+    let steps = args.get_usize("steps", 10)? as u64;
+    let measured = measure_phases(&engine, steps, args.get_usize("seed", 42)? as u64)?;
+    let v = validate(&engine.model.manifest, &measured);
+    println!(
+        "calibrated cpu-host: {:.1} GFLOP/s effective, {:.1} GB/s effective",
+        v.eff_gflops,
+        v.eff_bw / 1e9
+    );
+    println!("{}", v.table().to_markdown());
+    let total_acc = v.total_accuracy();
+    let ok = total_acc >= 0.7;
+    println!(
+        "total-latency accuracy {:.1}% (paper's simulator: 70-90%) => {}",
+        total_acc * 100.0,
+        if ok { "PASS" } else { "FAIL" }
+    );
+    Ok(if ok { 0 } else { 1 })
+}
+
+/// Resolve the platform for single-platform commands.
+fn resolve_platform(args: &Args) -> anyhow::Result<crate::hw::Platform> {
+    match args.get("platform-file") {
+        Some(path) => crate::hw::config_file::load_platform(std::path::Path::new(path)),
+        None => platform::by_name(args.get_or("platform", "orin")),
+    }
+}
+
+/// Resolve the model config for single-model commands.
+fn resolve_model(args: &Args) -> anyhow::Result<crate::model::VlaConfig> {
+    match args.get("model-file") {
+        Some(path) => crate::hw::config_file::load_vla(std::path::Path::new(path)),
+        None => Ok(crate::model::scaling::scaled_vla(args.get_f64("size", 7.0)?)),
+    }
+}
+
+fn cmd_codesign(args: &Args) -> anyhow::Result<i32> {
+    let mut options = sim_options(args)?;
+    options.decode_stride = options.decode_stride.max(8);
+    let target = resolve_model(args)?;
+    let draft = crate::model::scaling::scaled_vla(2.0);
+    let plat = resolve_platform(args)?;
+    let results = crate::sim::codesign::codesign_study(&plat, &options, &target, &draft);
+    println!("{}", crate::sim::codesign::codesign_table(&plat.name, &results).to_markdown());
+    // hardware x software matrix: combined technique on every platform
+    let mut t = crate::util::table::Table::new(
+        "Combined co-design across the Table 1 matrix",
+        &["Platform", "baseline actions/s", "combined actions/s", "gain"],
+    )
+    .left_first();
+    for p in platform::table1_platforms() {
+        let r = crate::sim::codesign::codesign_study(&p, &options, &target, &draft);
+        let base = &r[0];
+        let combo = r.last().unwrap();
+        t.row(vec![
+            p.name.clone(),
+            format!("{:.3}", base.amortized_hz),
+            format!("{:.3}", combo.amortized_hz),
+            format!("{:.2}x", combo.speedup_vs_baseline),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    Ok(0)
+}
+
+fn cmd_energy(args: &Args) -> anyhow::Result<i32> {
+    let mut options = sim_options(args)?;
+    options.decode_stride = options.decode_stride.max(8);
+    let cfg = resolve_model(args)?;
+    let mut t = crate::util::table::Table::new(
+        &format!("Energy per control step ({})", cfg.name),
+        &["Platform", "dynamic J", "static J", "total J", "avg W", "J/action"],
+    )
+    .left_first();
+    for p in platform::table1_platforms() {
+        let (_, e) = crate::sim::energy::simulate_energy(&p, &options, &cfg);
+        t.row(vec![
+            p.name.clone(),
+            format!("{:.2}", e.dynamic_total()),
+            format!("{:.2}", e.static_j),
+            format!("{:.2}", e.total_j()),
+            format!("{:.1}", e.avg_watts()),
+            format!("{:.2}", e.j_per_action()),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    Ok(0)
+}
+
+fn cmd_batch(args: &Args) -> anyhow::Result<i32> {
+    let mut options = sim_options(args)?;
+    options.decode_stride = options.decode_stride.max(8);
+    let cfg = resolve_model(args)?;
+    let plat = resolve_platform(args)?;
+    let batches: Vec<u64> = args
+        .get_f64_list("batches", &[1.0, 2.0, 4.0, 8.0, 16.0])?
+        .into_iter()
+        .map(|b| b as u64)
+        .collect();
+    println!(
+        "{}",
+        crate::sim::codesign::batch_study(&plat, &options, &cfg, &batches).to_markdown()
+    );
+    Ok(0)
+}
+
+fn cmd_trace_export(args: &Args) -> anyhow::Result<i32> {
+    let mut options = sim_options(args)?;
+    options.decode_stride = options.decode_stride.max(16);
+    let cfg = resolve_model(args)?;
+    let plat = resolve_platform(args)?;
+    let path = std::path::PathBuf::from(args.get_or("trace-out", "trace.json"));
+    crate::profile::export_chrome_trace(&plat, &options, &cfg, &path)?;
+    println!(
+        "wrote Chrome trace for {} on {} to {} (open in chrome://tracing or ui.perfetto.dev)",
+        cfg.name,
+        plat.name,
+        path.display()
+    );
+    Ok(0)
+}
+
+fn cmd_report(args: &Args) -> anyhow::Result<i32> {
+    let out = PathBuf::from(args.get_or("out", "reports"));
+    std::fs::create_dir_all(&out)?;
+    let options = sim_options(args)?;
+
+    platform::table1().save(&out, "table1")?;
+    let f2 = fig2::run(&options);
+    f2.table().save(&out, "fig2")?;
+    let mut opt3 = options.clone();
+    opt3.decode_stride = opt3.decode_stride.max(4);
+    let f3 = fig3::run(&opt3, &ANCHOR_SIZES_B);
+    f3.table(false).save(&out, "fig3")?;
+    f3.table(true).save(&out, "fig3_amortized")?;
+    crate::report::ablations::prefetch_ablation().save(&out, "ablation_prefetch")?;
+    crate::report::ablations::cot_length_ablation(&[32, 64, 128, 256, 512])
+        .save(&out, "ablation_cot")?;
+    crate::report::ablations::horizon_ablation(&[1, 4, 8, 16, 32]).save(&out, "ablation_horizon")?;
+    crate::report::ablations::framework_ablation().save(&out, "ablation_framework")?;
+
+    // energy + co-design + batching studies
+    let cfg = molmoact_7b();
+    let draft = crate::model::scaling::scaled_vla(2.0);
+    let mut energy_t = crate::util::table::Table::new(
+        "Energy per control step (MolmoAct-7B)",
+        &["Platform", "dynamic J", "static J", "total J", "avg W", "J/action"],
+    )
+    .left_first();
+    for p in platform::table1_platforms() {
+        let (_, e) = crate::sim::energy::simulate_energy(&p, &opt3, &cfg);
+        energy_t.row(vec![
+            p.name.clone(),
+            format!("{:.2}", e.dynamic_total()),
+            format!("{:.2}", e.static_j),
+            format!("{:.2}", e.total_j()),
+            format!("{:.1}", e.avg_watts()),
+            format!("{:.2}", e.j_per_action()),
+        ]);
+    }
+    energy_t.save(&out, "energy")?;
+    let cd = crate::sim::codesign::codesign_study(&platform::orin(), &opt3, &cfg, &draft);
+    crate::sim::codesign::codesign_table("Orin", &cd).save(&out, "codesign_orin")?;
+    crate::sim::codesign::batch_study(&platform::orin(), &opt3, &cfg, &[1, 2, 4, 8, 16])
+        .save(&out, "batch_study")?;
+
+    let mut checks = check_fig2(&f2);
+    checks.extend(check_fig3(&f3));
+    let (text, ok) = render(&checks);
+    std::fs::write(out.join("checks.txt"), &text)?;
+    println!("{text}");
+    println!("wrote reports to {}", out.display());
+    Ok(if ok { 0 } else { 1 })
+}

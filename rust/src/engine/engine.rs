@@ -1,0 +1,157 @@
+//! The VLA engine: executes one full control step (perceive → reason → act)
+//! through the compiled artifacts, with per-phase wall-clock timing matching
+//! the paper's Fig 2 decomposition.
+
+use super::frames::Frame;
+use super::vla_model::VlaModel;
+use crate::model::Phase;
+use std::time::{Duration, Instant};
+
+/// Per-phase wall times for one control step.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseTimes {
+    pub vision: Duration,
+    pub prefill: Duration,
+    pub decode: Duration,
+    pub action: Duration,
+}
+
+impl PhaseTimes {
+    pub fn total(&self) -> Duration {
+        self.vision + self.prefill + self.decode + self.action
+    }
+
+    pub fn get(&self, phase: Phase) -> Duration {
+        match phase {
+            Phase::Vision => self.vision,
+            Phase::Prefill => self.prefill,
+            Phase::Decode => self.decode,
+            Phase::Action => self.action,
+        }
+    }
+
+    /// Generation (prefill + decode) share of the step.
+    pub fn generation_share(&self) -> f64 {
+        let total = self.total().as_secs_f64();
+        if total == 0.0 {
+            return 0.0;
+        }
+        (self.prefill + self.decode).as_secs_f64() / total
+    }
+}
+
+/// Output of one control step.
+#[derive(Debug, Clone)]
+pub struct StepResult {
+    pub stream: usize,
+    pub step: u64,
+    /// Reasoning/action tokens generated this step.
+    pub tokens: Vec<i32>,
+    /// Flattened [horizon, action_dim] action chunk.
+    pub actions: Vec<f32>,
+    pub times: PhaseTimes,
+    /// Decode tokens per second achieved this step.
+    pub decode_tps: f64,
+}
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Tokens to generate per step (defaults to the manifest's workload).
+    pub decode_tokens: usize,
+}
+
+/// The engine: owns the model and executes steps.
+pub struct VlaEngine {
+    pub model: VlaModel,
+    pub config: EngineConfig,
+}
+
+impl VlaEngine {
+    pub fn new(model: VlaModel) -> VlaEngine {
+        let decode_tokens = model.manifest.workload.decode_tokens;
+        VlaEngine {
+            model,
+            config: EngineConfig { decode_tokens },
+        }
+    }
+
+    pub fn with_decode_tokens(model: VlaModel, decode_tokens: usize) -> VlaEngine {
+        VlaEngine {
+            model,
+            config: EngineConfig { decode_tokens },
+        }
+    }
+
+    /// Run one full control step on `frame` with the stream's `prompt`.
+    pub fn step(&self, frame: &Frame, prompt: &[i32]) -> anyhow::Result<StepResult> {
+        let mut times = PhaseTimes::default();
+
+        // --- vision ---
+        let t0 = Instant::now();
+        let (embeds, embeds_host, _) = self.model.encode_vision(&frame.patches)?;
+        times.vision = t0.elapsed();
+
+        // --- prefill ---
+        let t0 = Instant::now();
+        let (mut logits, mut cache, _) = self.model.run_prefill(&embeds, prompt)?;
+        times.prefill = t0.elapsed();
+
+        // --- autoregressive decode (the bottleneck phase) ---
+        let budget = self
+            .config
+            .decode_tokens
+            .min(self.model.manifest.decoder.max_seq - cache.len);
+        let t0 = Instant::now();
+        let mut tokens = Vec::with_capacity(budget);
+        let mut tok = self.model.greedy(&logits);
+        for _ in 0..budget {
+            tokens.push(tok);
+            let (l, c, _) = self.model.run_decode_step(tok, cache)?;
+            logits = l;
+            cache = c;
+            tok = self.model.greedy(&logits);
+        }
+        times.decode = t0.elapsed();
+
+        // --- action head ---
+        let hidden = self.model.manifest.decoder.hidden;
+        let cond = &embeds_host[embeds_host.len() - hidden..];
+        let t0 = Instant::now();
+        let (actions, _) = self.model.run_action(cond)?;
+        times.action = t0.elapsed();
+
+        let decode_tps = budget as f64 / times.decode.as_secs_f64().max(1e-12);
+        Ok(StepResult {
+            stream: frame.stream,
+            step: frame.step,
+            tokens,
+            actions,
+            times,
+            decode_tps,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_times_aggregate() {
+        let t = PhaseTimes {
+            vision: Duration::from_millis(10),
+            prefill: Duration::from_millis(20),
+            decode: Duration::from_millis(60),
+            action: Duration::from_millis(10),
+        };
+        assert_eq!(t.total(), Duration::from_millis(100));
+        assert!((t.generation_share() - 0.8).abs() < 1e-9);
+        assert_eq!(t.get(Phase::Decode), Duration::from_millis(60));
+    }
+
+    #[test]
+    fn zero_times_share_is_zero() {
+        assert_eq!(PhaseTimes::default().generation_share(), 0.0);
+    }
+}

@@ -1,0 +1,132 @@
+//! The runnable VLA model: four compiled PJRT modules + the parameter
+//! literal, with phase-timed entry points mirroring the paper's
+//! vision / prefill / decode / action decomposition.
+
+use crate::runtime::artifacts::{artifacts_dir, load_manifest, load_params, Manifest};
+use crate::runtime::client::{argmax, f32_literal, i32_scalar, i32_vec, to_f32_vec, CompiledModule, Runtime};
+use std::path::Path;
+use std::time::Duration;
+
+/// A loaded tiny-VLA instance (self-contained; python never runs here).
+pub struct VlaModel {
+    pub manifest: Manifest,
+    params: xla::Literal,
+    vision: CompiledModule,
+    prefill: CompiledModule,
+    decode: CompiledModule,
+    action: CompiledModule,
+}
+
+/// The KV cache as host literals, round-tripped through each decode step.
+pub struct KvCache {
+    pub k: xla::Literal,
+    pub v: xla::Literal,
+    /// Next position to write (= number of valid tokens).
+    pub len: usize,
+}
+
+impl VlaModel {
+    /// Load from the standard artifacts directory.
+    pub fn load(rt: &Runtime) -> anyhow::Result<VlaModel> {
+        let dir = artifacts_dir()?;
+        Self::load_from(rt, &dir)
+    }
+
+    pub fn load_from(rt: &Runtime, dir: &Path) -> anyhow::Result<VlaModel> {
+        let manifest = load_manifest(dir)?;
+        let params_host = load_params(dir, manifest.n_params)?;
+        let params = f32_literal(&params_host, &[manifest.n_params as i64])?;
+        Ok(VlaModel {
+            vision: rt.load_hlo_text(&dir.join("vision.hlo.txt"))?,
+            prefill: rt.load_hlo_text(&dir.join("prefill.hlo.txt"))?,
+            decode: rt.load_hlo_text(&dir.join("decode.hlo.txt"))?,
+            action: rt.load_hlo_text(&dir.join("action.hlo.txt"))?,
+            manifest,
+            params,
+        })
+    }
+
+    /// Vision encode: patches [patches * patch_dim] -> embeds literal
+    /// ([image_tokens, hidden]) plus the flattened host copy.
+    pub fn encode_vision(
+        &self,
+        patches: &[f32],
+    ) -> anyhow::Result<(xla::Literal, Vec<f32>, Duration)> {
+        let v = &self.manifest.vision;
+        anyhow::ensure!(patches.len() == v.patches * v.patch_dim, "bad patch buffer");
+        let lit = f32_literal(patches, &[v.patches as i64, v.patch_dim as i64])?;
+        let (mut parts, dt) = self.vision.run(&[&self.params, &lit])?;
+        let embeds = parts.remove(0);
+        let host = to_f32_vec(&embeds)?;
+        Ok((embeds, host, dt))
+    }
+
+    /// Prefill: embeds + prompt token ids -> (logits, cache).
+    pub fn run_prefill(
+        &self,
+        embeds: &xla::Literal,
+        prompt: &[i32],
+    ) -> anyhow::Result<(Vec<f32>, KvCache, Duration)> {
+        anyhow::ensure!(prompt.len() == self.manifest.workload.prompt_tokens, "bad prompt length");
+        let prompt_lit = i32_vec(prompt);
+        let (mut parts, dt) = self.prefill.run(&[&self.params, embeds, &prompt_lit])?;
+        anyhow::ensure!(parts.len() == 3, "prefill returns (logits, k, v)");
+        let logits = to_f32_vec(&parts[0])?;
+        let v = parts.remove(2);
+        let k = parts.remove(1);
+        Ok((
+            logits,
+            KvCache {
+                k,
+                v,
+                len: self.manifest.workload.prefill_len,
+            },
+            dt,
+        ))
+    }
+
+    /// One decode step: writes position `cache.len`, returns logits.
+    pub fn run_decode_step(
+        &self,
+        token: i32,
+        cache: KvCache,
+    ) -> anyhow::Result<(Vec<f32>, KvCache, Duration)> {
+        anyhow::ensure!(
+            cache.len < self.manifest.decoder.max_seq,
+            "KV cache full ({} / {})",
+            cache.len,
+            self.manifest.decoder.max_seq
+        );
+        let tok_lit = i32_scalar(token);
+        let pos_lit = i32_scalar(cache.len as i32);
+        let (mut parts, dt) =
+            self.decode.run(&[&self.params, &tok_lit, &pos_lit, &cache.k, &cache.v])?;
+        anyhow::ensure!(parts.len() == 3, "decode returns (logits, k, v)");
+        let logits = to_f32_vec(&parts[0])?;
+        let v = parts.remove(2);
+        let k = parts.remove(1);
+        Ok((
+            logits,
+            KvCache {
+                k,
+                v,
+                len: cache.len + 1,
+            },
+            dt,
+        ))
+    }
+
+    /// Action head: conditioning vector -> [horizon, action_dim] chunk.
+    pub fn run_action(&self, cond: &[f32]) -> anyhow::Result<(Vec<f32>, Duration)> {
+        anyhow::ensure!(cond.len() == self.manifest.decoder.hidden, "bad cond width");
+        let lit = f32_literal(cond, &[cond.len() as i64])?;
+        let (parts, dt) = self.action.run(&[&self.params, &lit])?;
+        let actions = to_f32_vec(&parts[0])?;
+        Ok((actions, dt))
+    }
+
+    /// Greedy next token from logits.
+    pub fn greedy(&self, logits: &[f32]) -> i32 {
+        argmax(logits) as i32
+    }
+}

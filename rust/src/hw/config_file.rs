@@ -1,0 +1,252 @@
+//! JSON config files for custom platforms and VLA models — lets downstream
+//! users evaluate hardware points and model shapes beyond Table 1 without
+//! recompiling (`vla-char characterize --platform-file my_soc.json`).
+
+use super::mem::{MemDevice, PimSpec};
+use super::platform::Platform;
+use super::soc::SocSpec;
+use crate::hw::DType;
+use crate::model::layer::BlockDims;
+use crate::model::vla::{ActionConfig, DecoderConfig, VitConfig, VlaConfig, WorkloadShape};
+use crate::util::json::Json;
+use crate::util::units::{GB, KIB, MIB, TERA};
+
+/// Parse a platform description. Schema (all bandwidths GB/s, flops TFLOPS):
+/// ```json
+/// {
+///   "name": "MySoC+HBM", "hypothetical": true,
+///   "soc": {"sms": 32, "clock_ghz": 1.5, "tflops_bf16": 250,
+///           "tflops_f32": 15, "smem_kib": 192, "l2_mib": 8,
+///           "l2_bw_gbs": 4000, "reduction_bw_penalty": 1.1,
+///           "launch_overhead_us": 5},
+///   "mem": {"name": "HBM3", "bw_gbs": 800, "capacity_gb": 48,
+///           "stream_efficiency": 0.85,
+///           "pim": {"internal_bw_gbs": 4000, "tflops_bf16": 2000,
+///                    "dispatch_us": 2, "efficiency": 0.85}}
+/// }
+/// ```
+pub fn platform_from_json(text: &str) -> anyhow::Result<Platform> {
+    let j = Json::parse(text)?;
+    let s = j.get("soc").ok_or_else(|| anyhow::anyhow!("missing `soc`"))?;
+    let m = j.get("mem").ok_or_else(|| anyhow::anyhow!("missing `mem`"))?;
+    let soc = SocSpec {
+        name: format!("{} SoC", j.req_str("name")?),
+        sms: s.req_u64("sms")? as u32,
+        clock: s.req_f64("clock_ghz")? * 1e9,
+        flops_bf16: s.req_f64("tflops_bf16")? * TERA,
+        flops_f32: s.req_f64("tflops_f32")? * TERA,
+        smem_per_sm: s.req_f64("smem_kib")? * KIB,
+        l2_bytes: s.req_f64("l2_mib")? * MIB,
+        l2_bw: s.req_f64("l2_bw_gbs")? * GB,
+        mma_m: 16,
+        mma_n: 16,
+        mma_k: 16,
+        reduction_bw_penalty: s.get("reduction_bw_penalty").and_then(|v| v.as_f64()).unwrap_or(1.1),
+        kernel_launch_overhead: s.get("launch_overhead_us").and_then(|v| v.as_f64()).unwrap_or(5.0)
+            * 1e-6,
+    };
+    let pim = match m.get("pim") {
+        Some(p) if *p != Json::Null => Some(PimSpec {
+            internal_bw: p.req_f64("internal_bw_gbs")? * GB,
+            flops_bf16: p.req_f64("tflops_bf16")? * TERA,
+            dispatch_overhead: p.get("dispatch_us").and_then(|v| v.as_f64()).unwrap_or(2.0) * 1e-6,
+            efficiency: p.get("efficiency").and_then(|v| v.as_f64()).unwrap_or(0.85),
+        }),
+        _ => None,
+    };
+    let mem = MemDevice {
+        name: m.req_str("name")?.to_string(),
+        peak_bw: m.req_f64("bw_gbs")? * GB,
+        capacity: m.req_f64("capacity_gb")? * GB,
+        stream_efficiency: m.get("stream_efficiency").and_then(|v| v.as_f64()).unwrap_or(0.8),
+        pim,
+    };
+    Ok(Platform {
+        name: j.req_str("name")?.to_string(),
+        soc,
+        mem,
+        hypothetical: j.get("hypothetical").and_then(|v| v.as_bool()).unwrap_or(true),
+    })
+}
+
+/// Serialize a platform back to the JSON schema above.
+pub fn platform_to_json(p: &Platform) -> Json {
+    let soc = Json::obj(vec![
+        ("sms", Json::Num(p.soc.sms as f64)),
+        ("clock_ghz", Json::Num(p.soc.clock / 1e9)),
+        ("tflops_bf16", Json::Num(p.soc.flops_bf16 / TERA)),
+        ("tflops_f32", Json::Num(p.soc.flops_f32 / TERA)),
+        ("smem_kib", Json::Num(p.soc.smem_per_sm / KIB)),
+        ("l2_mib", Json::Num(p.soc.l2_bytes / MIB)),
+        ("l2_bw_gbs", Json::Num(p.soc.l2_bw / GB)),
+        ("reduction_bw_penalty", Json::Num(p.soc.reduction_bw_penalty)),
+        ("launch_overhead_us", Json::Num(p.soc.kernel_launch_overhead * 1e6)),
+    ]);
+    let pim = match &p.mem.pim {
+        Some(x) => Json::obj(vec![
+            ("internal_bw_gbs", Json::Num(x.internal_bw / GB)),
+            ("tflops_bf16", Json::Num(x.flops_bf16 / TERA)),
+            ("dispatch_us", Json::Num(x.dispatch_overhead * 1e6)),
+            ("efficiency", Json::Num(x.efficiency)),
+        ]),
+        None => Json::Null,
+    };
+    Json::obj(vec![
+        ("name", Json::Str(p.name.clone())),
+        ("hypothetical", Json::Bool(p.hypothetical)),
+        ("soc", soc),
+        (
+            "mem",
+            Json::obj(vec![
+                ("name", Json::Str(p.mem.name.clone())),
+                ("bw_gbs", Json::Num(p.mem.peak_bw / GB)),
+                ("capacity_gb", Json::Num(p.mem.capacity / GB)),
+                ("stream_efficiency", Json::Num(p.mem.stream_efficiency)),
+                ("pim", pim),
+            ]),
+        ),
+    ])
+}
+
+fn block_dims(j: &Json) -> anyhow::Result<BlockDims> {
+    Ok(BlockDims {
+        hidden: j.req_u64("hidden")?,
+        heads: j.req_u64("heads")?,
+        kv_heads: j.get("kv_heads").and_then(|v| v.as_u64()).unwrap_or(j.req_u64("heads")?),
+        head_dim: j.req_u64("head_dim")?,
+        ffn: j.req_u64("ffn")?,
+        dtype: match j.get("dtype").and_then(|v| v.as_str()).unwrap_or("bf16") {
+            "f32" => DType::F32,
+            "f16" => DType::F16,
+            "i8" => DType::I8,
+            _ => DType::BF16,
+        },
+    })
+}
+
+/// Parse a VLA model + workload description.
+pub fn vla_from_json(text: &str) -> anyhow::Result<VlaConfig> {
+    let j = Json::parse(text)?;
+    let mut towers = Vec::new();
+    for t in j
+        .get("towers")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("missing `towers` array"))?
+    {
+        towers.push(VitConfig {
+            name: t.req_str("name")?.to_string(),
+            layers: t.req_u64("layers")?,
+            dims: block_dims(t)?,
+        });
+    }
+    let d = j.get("decoder").ok_or_else(|| anyhow::anyhow!("missing `decoder`"))?;
+    let a = j.get("action").ok_or_else(|| anyhow::anyhow!("missing `action`"))?;
+    let w = j.get("workload").ok_or_else(|| anyhow::anyhow!("missing `workload`"))?;
+    Ok(VlaConfig {
+        name: j.req_str("name")?.to_string(),
+        towers,
+        projector_hidden: j.get("projector_hidden").and_then(|v| v.as_u64()).unwrap_or(4096),
+        decoder: DecoderConfig {
+            layers: d.req_u64("layers")?,
+            dims: block_dims(d)?,
+            vocab: d.req_u64("vocab")?,
+        },
+        action: ActionConfig {
+            layers: a.req_u64("layers")?,
+            dims: block_dims(a)?,
+            horizon: a.req_u64("horizon")?,
+            diffusion_steps: a.req_u64("diffusion_steps")?,
+            action_dim: a.req_u64("action_dim")?,
+        },
+        shape: WorkloadShape {
+            crops: w.get("crops").and_then(|v| v.as_u64()).unwrap_or(1),
+            patches_per_crop: w.req_u64("patches_per_crop")?,
+            image_tokens: w.req_u64("image_tokens")?,
+            prompt_tokens: w.req_u64("prompt_tokens")?,
+            decode_tokens: w.req_u64("decode_tokens")?,
+        },
+    })
+}
+
+/// Load a platform from a JSON file.
+pub fn load_platform(path: &std::path::Path) -> anyhow::Result<Platform> {
+    platform_from_json(&std::fs::read_to_string(path)?)
+}
+
+/// Load a VLA config from a JSON file.
+pub fn load_vla(path: &std::path::Path) -> anyhow::Result<VlaConfig> {
+    vla_from_json(&std::fs::read_to_string(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::platform;
+
+    #[test]
+    fn table1_platforms_roundtrip() {
+        for p in platform::table1_platforms() {
+            let text = platform_to_json(&p).to_string_pretty();
+            let back = platform_from_json(&text).unwrap();
+            assert_eq!(back.name, p.name);
+            assert!((back.mem.peak_bw - p.mem.peak_bw).abs() < 1e6);
+            assert!((back.soc.flops_bf16 - p.soc.flops_bf16).abs() < 1e9);
+            assert_eq!(back.mem.pim.is_some(), p.mem.pim.is_some());
+        }
+    }
+
+    #[test]
+    fn custom_platform_parses() {
+        let text = r#"{
+          "name": "EdgeX", "hypothetical": true,
+          "soc": {"sms": 32, "clock_ghz": 1.5, "tflops_bf16": 250,
+                  "tflops_f32": 15, "smem_kib": 192, "l2_mib": 8,
+                  "l2_bw_gbs": 4000},
+          "mem": {"name": "HBM3", "bw_gbs": 800, "capacity_gb": 48}
+        }"#;
+        let p = platform_from_json(text).unwrap();
+        assert_eq!(p.name, "EdgeX");
+        assert_eq!(p.soc.sms, 32);
+        assert!(p.mem.pim.is_none());
+        // defaults applied
+        assert!((p.mem.stream_efficiency - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        assert!(platform_from_json("{}").is_err());
+        assert!(platform_from_json(r#"{"name": "x", "soc": {}, "mem": {}}"#).is_err());
+    }
+
+    #[test]
+    fn vla_config_parses_and_simulates() {
+        let text = r#"{
+          "name": "custom-3B",
+          "towers": [{"name": "vit", "layers": 12, "hidden": 768,
+                      "heads": 12, "head_dim": 64, "ffn": 3072}],
+          "projector_hidden": 2048,
+          "decoder": {"layers": 26, "hidden": 2560, "heads": 20,
+                      "kv_heads": 4, "head_dim": 128, "ffn": 6912,
+                      "vocab": 152064},
+          "action": {"layers": 4, "hidden": 768, "heads": 12,
+                     "head_dim": 64, "ffn": 3072, "horizon": 8,
+                     "diffusion_steps": 10, "action_dim": 7},
+          "workload": {"crops": 13, "patches_per_crop": 576,
+                       "image_tokens": 1872, "prompt_tokens": 64,
+                       "decode_tokens": 160}
+        }"#;
+        let cfg = vla_from_json(text).unwrap();
+        assert_eq!(cfg.name, "custom-3B");
+        assert!(cfg.params() > 2e9 && cfg.params() < 5e9);
+        let sim = crate::sim::Simulator::with_options(
+            platform::orin(),
+            crate::sim::SimOptions {
+                decode_stride: 16,
+                ..Default::default()
+            },
+        );
+        let r = sim.simulate_vla(&cfg);
+        assert!(r.total() > 0.0);
+        assert!(r.decode.memory_bound());
+    }
+}

@@ -1,0 +1,49 @@
+//! Numeric datatypes used by the workload IR and the cost models.
+
+/// Element datatype of an operator's operands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    BF16,
+    F16,
+    F32,
+    I8,
+}
+
+impl DType {
+    /// Bytes per element.
+    pub fn bytes(self) -> f64 {
+        match self {
+            DType::BF16 | DType::F16 => 2.0,
+            DType::F32 => 4.0,
+            DType::I8 => 1.0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::BF16 => "bf16",
+            DType::F16 => "f16",
+            DType::F32 => "f32",
+            DType::I8 => "i8",
+        }
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes() {
+        assert_eq!(DType::BF16.bytes(), 2.0);
+        assert_eq!(DType::F32.bytes(), 4.0);
+        assert_eq!(DType::I8.bytes(), 1.0);
+        assert_eq!(DType::BF16.to_string(), "bf16");
+    }
+}

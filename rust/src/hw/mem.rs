@@ -1,0 +1,134 @@
+//! Memory-system models: DRAM device families (LPDDR5/5X, GDDR7, LPDDR6X)
+//! and an optional processing-in-memory (PIM) capability modeled on
+//! bank-level compute in commercial DRAM (Lee et al., ISCA'21 — the paper's
+//! reference [3]).
+
+use crate::util::units::GB;
+
+/// Processing-in-memory capability attached to a memory device.
+///
+/// PIM exposes the aggregate *internal* (bank-level) bandwidth to a set of
+/// simple compute units placed in the DRAM dies. It accelerates memory-bound,
+/// streaming operators (GEMV, elementwise, attention-decode) by avoiding the
+/// off-chip link; it does not help compute-bound GEMMs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PimSpec {
+    /// Aggregate internal bandwidth visible to PIM units (bytes/s).
+    pub internal_bw: f64,
+    /// Peak BF16 throughput of the PIM units (FLOP/s).
+    pub flops_bf16: f64,
+    /// Fixed per-operator dispatch/launch overhead (s): mode switch, command
+    /// issue, result collection. Dominates for tiny ops.
+    pub dispatch_overhead: f64,
+    /// Fraction of internal bandwidth achievable in practice (row-activation
+    /// conflicts, refresh).
+    pub efficiency: f64,
+}
+
+impl PimSpec {
+    /// Effective streaming bandwidth for a PIM-executed operator.
+    pub fn effective_bw(&self) -> f64 {
+        self.internal_bw * self.efficiency
+    }
+}
+
+/// A memory device (the off-chip DRAM of an edge SoC).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemDevice {
+    pub name: String,
+    /// Peak off-chip bandwidth (bytes/s).
+    pub peak_bw: f64,
+    /// Capacity in bytes.
+    pub capacity: f64,
+    /// Fraction of peak achievable for large streaming reads (command/refresh
+    /// overheads, bank conflicts). Typical LPDDR: 0.7–0.85.
+    pub stream_efficiency: f64,
+    /// Optional PIM capability.
+    pub pim: Option<PimSpec>,
+}
+
+impl MemDevice {
+    /// Effective streaming bandwidth from the SoC (bytes/s).
+    pub fn effective_bw(&self) -> f64 {
+        self.peak_bw * self.stream_efficiency
+    }
+
+    pub fn lpddr5(capacity_gb: f64) -> MemDevice {
+        MemDevice {
+            name: "LPDDR5".into(),
+            peak_bw: 203.0 * GB,
+            capacity: capacity_gb * GB,
+            stream_efficiency: 0.80,
+            pim: None,
+        }
+    }
+
+    pub fn lpddr5x(capacity_gb: f64) -> MemDevice {
+        MemDevice {
+            name: "LPDDR5X".into(),
+            peak_bw: 273.0 * GB,
+            capacity: capacity_gb * GB,
+            stream_efficiency: 0.80,
+            pim: None,
+        }
+    }
+
+    pub fn gddr7(capacity_gb: f64) -> MemDevice {
+        MemDevice {
+            name: "GDDR7".into(),
+            peak_bw: 1000.0 * GB,
+            capacity: capacity_gb * GB,
+            stream_efficiency: 0.78,
+            pim: None,
+        }
+    }
+
+    /// LPDDR6X with PIM. Table 1 reports 2180 GB/s — that is the aggregate
+    /// *internal* (bank-level) bandwidth visible to the PIM units; the
+    /// off-chip link to the SoC runs at LPDDR6X speed (~546 GB/s). PIM
+    /// TFLOPS is the *additional* compute placed in-memory (platform total
+    /// = SoC + PIM).
+    pub fn lpddr6x_pim(capacity_gb: f64, pim_tflops: f64) -> MemDevice {
+        MemDevice {
+            name: "LPDDR6X PIM".into(),
+            peak_bw: 546.0 * GB,
+            capacity: capacity_gb * GB,
+            stream_efficiency: 0.80,
+            pim: Some(PimSpec {
+                internal_bw: 2180.0 * GB,
+                flops_bf16: pim_tflops * 1e12,
+                dispatch_overhead: 2e-6,
+                efficiency: 0.85,
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn device_presets_match_table1() {
+        assert_eq!(MemDevice::lpddr5(64.0).peak_bw, 203.0 * GB);
+        assert_eq!(MemDevice::lpddr5x(128.0).peak_bw, 273.0 * GB);
+        assert_eq!(MemDevice::gddr7(64.0).peak_bw, 1000.0 * GB);
+        let pim = MemDevice::lpddr6x_pim(64.0, 974.0);
+        assert_eq!(pim.pim.as_ref().unwrap().internal_bw, 2180.0 * GB);
+        assert!(pim.peak_bw < pim.pim.as_ref().unwrap().internal_bw);
+    }
+
+    #[test]
+    fn effective_below_peak() {
+        let m = MemDevice::lpddr5(64.0);
+        assert!(m.effective_bw() < m.peak_bw);
+        assert!(m.effective_bw() > 0.5 * m.peak_bw);
+    }
+
+    #[test]
+    fn pim_effective_bw() {
+        let m = MemDevice::lpddr6x_pim(64.0, 974.0);
+        let p = m.pim.as_ref().unwrap();
+        assert!(p.effective_bw() > m.effective_bw(), "PIM internal BW should exceed off-chip");
+    }
+}

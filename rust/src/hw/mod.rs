@@ -1,0 +1,13 @@
+//! Hardware models: datatypes, memory devices (incl. PIM), SoC compute, and
+//! the Table 1 platform registry.
+
+pub mod config_file;
+pub mod dtype;
+pub mod mem;
+pub mod platform;
+pub mod soc;
+
+pub use dtype::DType;
+pub use mem::{MemDevice, PimSpec};
+pub use platform::Platform;
+pub use soc::SocSpec;

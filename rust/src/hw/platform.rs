@@ -1,0 +1,240 @@
+//! Platform registry: the commercial and hypothetical edge systems of the
+//! paper's Table 1, plus the calibration `cpu-host` target.
+
+use super::mem::MemDevice;
+use super::soc::SocSpec;
+use crate::util::table::Table;
+use crate::util::units::{GB, TERA};
+
+/// A complete edge platform: SoC + memory system.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Platform {
+    pub name: String,
+    pub soc: SocSpec,
+    pub mem: MemDevice,
+    /// Whether this is a commercial part (upper half of Table 1) or a
+    /// hypothetical variant (lower half).
+    pub hypothetical: bool,
+}
+
+impl Platform {
+    /// Total platform BF16 TFLOPS as reported in Table 1 (SoC + PIM).
+    pub fn total_flops_bf16(&self) -> f64 {
+        self.soc.flops_bf16
+            + self
+                .mem
+                .pim
+                .as_ref()
+                .map(|p| p.flops_bf16)
+                .unwrap_or(0.0)
+    }
+
+    /// The "BW (GB/s)" column of Table 1: off-chip bandwidth, or the
+    /// aggregate PIM-internal bandwidth on PIM systems (the paper reports
+    /// the bandwidth the workload can actually exploit).
+    pub fn headline_bw(&self) -> f64 {
+        self.mem
+            .pim
+            .as_ref()
+            .map(|p| p.internal_bw)
+            .unwrap_or(self.mem.peak_bw)
+    }
+}
+
+/// Jetson AGX Orin 64 GB (commercial).
+pub fn orin() -> Platform {
+    Platform {
+        name: "Orin".into(),
+        soc: SocSpec::orin(),
+        mem: MemDevice::lpddr5(64.0),
+        hypothetical: false,
+    }
+}
+
+/// Jetson Thor 128 GB (commercial).
+pub fn thor() -> Platform {
+    Platform {
+        name: "Thor".into(),
+        soc: SocSpec::thor(),
+        mem: MemDevice::lpddr5x(128.0),
+        hypothetical: false,
+    }
+}
+
+/// Orin SoC re-equipped with LPDDR5X (hypothetical).
+pub fn orin_lpddr5x() -> Platform {
+    Platform {
+        name: "Orin+LPDDR5X".into(),
+        soc: SocSpec::orin(),
+        mem: MemDevice::lpddr5x(64.0),
+        hypothetical: true,
+    }
+}
+
+/// Orin SoC with GDDR7 (hypothetical).
+pub fn orin_gddr7() -> Platform {
+    Platform {
+        name: "Orin+GDDR7".into(),
+        soc: SocSpec::orin(),
+        mem: MemDevice::gddr7(64.0),
+        hypothetical: true,
+    }
+}
+
+/// Orin SoC with LPDDR6X-PIM (hypothetical). Table 1 lists 1074 total BF16
+/// TFLOPS = 100 (SoC) + 974 (PIM).
+pub fn orin_pim() -> Platform {
+    Platform {
+        name: "Orin+PIM".into(),
+        soc: SocSpec::orin(),
+        mem: MemDevice::lpddr6x_pim(64.0, 974.0),
+        hypothetical: true,
+    }
+}
+
+/// Thor SoC with GDDR7 (hypothetical).
+pub fn thor_gddr7() -> Platform {
+    Platform {
+        name: "Thor+GDDR7".into(),
+        soc: SocSpec::thor(),
+        mem: MemDevice::gddr7(128.0),
+        hypothetical: true,
+    }
+}
+
+/// Thor SoC with LPDDR6X-PIM (hypothetical). Table 1: 3993 total = 500 + 3493.
+pub fn thor_pim() -> Platform {
+    Platform {
+        name: "Thor+PIM".into(),
+        soc: SocSpec::thor(),
+        mem: MemDevice::lpddr6x_pim(128.0, 3493.0),
+        hypothetical: true,
+    }
+}
+
+/// Calibration target: this machine's CPU running XLA-CPU via PJRT.
+/// Effective GFLOPS/BW are fitted by `sim::calibrate`; the defaults here are
+/// conservative placeholders used before calibration.
+pub fn cpu_host() -> Platform {
+    cpu_host_with(12.0, 12.0 * GB)
+}
+
+/// Calibrated cpu-host with explicit effective compute (GFLOP/s) and
+/// bandwidth (bytes/s).
+pub fn cpu_host_with(eff_gflops: f64, eff_bw: f64) -> Platform {
+    Platform {
+        name: "cpu-host".into(),
+        soc: SocSpec::cpu_host(eff_gflops),
+        mem: MemDevice {
+            name: "DDR".into(),
+            peak_bw: eff_bw,
+            capacity: 32.0 * GB,
+            stream_efficiency: 1.0, // eff_bw is already effective
+            pim: None,
+        },
+        hypothetical: false,
+    }
+}
+
+/// All seven platforms of Table 1, in paper order.
+pub fn table1_platforms() -> Vec<Platform> {
+    vec![
+        orin(),
+        thor(),
+        orin_lpddr5x(),
+        orin_gddr7(),
+        orin_pim(),
+        thor_gddr7(),
+        thor_pim(),
+    ]
+}
+
+/// Look up a platform by (case-insensitive) name.
+pub fn by_name(name: &str) -> anyhow::Result<Platform> {
+    let want = name.to_ascii_lowercase().replace(['_', ' '], "-");
+    for p in table1_platforms().into_iter().chain([cpu_host()]) {
+        if p.name.to_ascii_lowercase().replace(['_', ' '], "-").replace('+', "-") == want.replace('+', "-") {
+            return Ok(p);
+        }
+    }
+    anyhow::bail!(
+        "unknown platform `{name}` (known: orin, thor, orin+lpddr5x, orin+gddr7, orin+pim, thor+gddr7, thor+pim, cpu-host)"
+    )
+}
+
+/// Emit Table 1 exactly in the paper's layout.
+pub fn table1() -> Table {
+    let mut t = Table::new(
+        "Table 1: Commercial edge platforms and hypothetical hardware systems",
+        &["System", "Memory", "BW (GB/s)", "BF16 TFLOPS"],
+    )
+    .left_first();
+    for p in table1_platforms() {
+        t.row(vec![
+            p.name.clone(),
+            p.mem.name.clone(),
+            format!("{:.0}", p.headline_bw() / GB),
+            format!("{:.0}", p.total_flops_bf16() / TERA),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper_values() {
+        // (name, memory, bw GB/s, total TFLOPS) exactly as printed in Table 1
+        let expect = [
+            ("Orin", "LPDDR5", 203.0, 100.0),
+            ("Thor", "LPDDR5X", 273.0, 500.0),
+            ("Orin+LPDDR5X", "LPDDR5X", 273.0, 100.0),
+            ("Orin+GDDR7", "GDDR7", 1000.0, 100.0),
+            ("Orin+PIM", "LPDDR6X PIM", 2180.0, 1074.0),
+            ("Thor+GDDR7", "GDDR7", 1000.0, 500.0),
+            ("Thor+PIM", "LPDDR6X PIM", 2180.0, 3993.0),
+        ];
+        let plats = table1_platforms();
+        assert_eq!(plats.len(), expect.len());
+        for (p, (name, mem, bw, tflops)) in plats.iter().zip(expect.iter()) {
+            assert_eq!(&p.name, name);
+            assert_eq!(&p.mem.name, mem);
+            assert!((p.headline_bw() / GB - bw).abs() < 0.5, "{name} bw");
+            assert!((p.total_flops_bf16() / TERA - tflops).abs() < 0.5, "{name} tflops");
+        }
+    }
+
+    #[test]
+    fn commercial_vs_hypothetical_split() {
+        let plats = table1_platforms();
+        assert!(!plats[0].hypothetical && !plats[1].hypothetical);
+        assert!(plats[2..].iter().all(|p| p.hypothetical));
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(by_name("orin").unwrap().name, "Orin");
+        assert_eq!(by_name("Thor+PIM").unwrap().name, "Thor+PIM");
+        assert_eq!(by_name("thor-gddr7").unwrap().name, "Thor+GDDR7");
+        assert_eq!(by_name("cpu-host").unwrap().name, "cpu-host");
+        assert!(by_name("h100").is_err());
+    }
+
+    #[test]
+    fn table1_renders_seven_rows() {
+        let t = table1();
+        assert_eq!(t.n_rows(), 7);
+        let md = t.to_markdown();
+        assert!(md.contains("2180"));
+        assert!(md.contains("3993"));
+    }
+
+    #[test]
+    fn pim_platforms_have_pim() {
+        assert!(orin_pim().mem.pim.is_some());
+        assert!(thor_pim().mem.pim.is_some());
+        assert!(orin_gddr7().mem.pim.is_none());
+    }
+}

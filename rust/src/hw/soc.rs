@@ -1,0 +1,128 @@
+//! SoC compute model: streaming multiprocessors (SMs), matrix engines, and
+//! on-chip memory — the micro-architectural inputs the paper's simulator
+//! incorporates (§3.2: "number of SMs, tiling strategies, and asymmetric
+//! bandwidth characteristics across different dimensions of the XPU's matrix
+//! engine").
+
+use crate::util::units::{KIB, MIB, TERA};
+
+/// A GPU-like SoC compute description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SocSpec {
+    pub name: String,
+    /// Number of streaming multiprocessors (or equivalent cores).
+    pub sms: u32,
+    /// SM clock (Hz).
+    pub clock: f64,
+    /// Peak dense BF16 matrix-engine throughput (FLOP/s), whole chip.
+    pub flops_bf16: f64,
+    /// Peak FP32 vector (CUDA-core) throughput (FLOP/s), whole chip.
+    pub flops_f32: f64,
+    /// Shared memory / scratchpad per SM (bytes) — bounds the tile working set.
+    pub smem_per_sm: f64,
+    /// L2 cache size (bytes).
+    pub l2_bytes: f64,
+    /// L2 bandwidth (bytes/s).
+    pub l2_bw: f64,
+    /// Matrix-engine native tile (e.g. 16x16 for tensor cores, 128x128 MXU).
+    pub mma_m: u32,
+    pub mma_n: u32,
+    pub mma_k: u32,
+    /// Asymmetric matrix-engine bandwidth: relative cost of streaming the
+    /// stationary/moving dimension. >1 means operand layouts along the
+    /// reduction dimension achieve lower effective bandwidth (strided /
+    /// transposed access penalties).
+    pub reduction_bw_penalty: f64,
+    /// Fixed per-kernel launch overhead (s).
+    pub kernel_launch_overhead: f64,
+}
+
+impl SocSpec {
+    /// Peak matrix FLOP/s per SM.
+    pub fn flops_bf16_per_sm(&self) -> f64 {
+        self.flops_bf16 / self.sms as f64
+    }
+
+    /// Jetson AGX Orin: Ampere iGPU, 16 SMs. Paper Table 1: 100 BF16 TFLOPS.
+    pub fn orin() -> SocSpec {
+        SocSpec {
+            name: "Orin SoC".into(),
+            sms: 16,
+            clock: 1.3e9,
+            flops_bf16: 100.0 * TERA,
+            flops_f32: 5.3 * TERA,
+            smem_per_sm: 164.0 * KIB,
+            l2_bytes: 4.0 * MIB,
+            l2_bw: 1.5e12,
+            mma_m: 16,
+            mma_n: 16,
+            mma_k: 16,
+            reduction_bw_penalty: 1.15,
+            kernel_launch_overhead: 6e-6,
+        }
+    }
+
+    /// Jetson Thor: Blackwell iGPU. Paper Table 1: 500 BF16 TFLOPS (≈5x Orin).
+    pub fn thor() -> SocSpec {
+        SocSpec {
+            name: "Thor SoC".into(),
+            sms: 64,
+            clock: 1.6e9,
+            flops_bf16: 500.0 * TERA,
+            flops_f32: 30.0 * TERA,
+            smem_per_sm: 228.0 * KIB,
+            l2_bytes: 32.0 * MIB,
+            l2_bw: 8.0e12,
+            mma_m: 16,
+            mma_n: 16,
+            mma_k: 16,
+            reduction_bw_penalty: 1.10,
+            kernel_launch_overhead: 5e-6,
+        }
+    }
+
+    /// The host CPU running our PJRT CPU backend — used for simulator
+    /// calibration (E-C6): predicted-vs-measured on the same machine.
+    /// `flops_*` here are *effective* single-stream XLA-CPU throughputs,
+    /// fitted by `sim::calibrate` from microbenchmarks.
+    pub fn cpu_host(eff_gflops: f64) -> SocSpec {
+        SocSpec {
+            name: "cpu-host".into(),
+            sms: 1,
+            clock: 3.0e9,
+            flops_bf16: eff_gflops * 1e9,
+            flops_f32: eff_gflops * 1e9,
+            smem_per_sm: 32.0 * KIB,
+            l2_bytes: 16.0 * MIB,
+            l2_bw: 2.0e11,
+            mma_m: 8,
+            mma_n: 8,
+            mma_k: 8,
+            reduction_bw_penalty: 1.0,
+            kernel_launch_overhead: 3e-6,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thor_is_5x_orin_compute() {
+        let ratio = SocSpec::thor().flops_bf16 / SocSpec::orin().flops_bf16;
+        assert!((ratio - 5.0).abs() < 1e-9, "paper: Thor provides 5x the compute of Orin");
+    }
+
+    #[test]
+    fn per_sm_flops() {
+        let s = SocSpec::orin();
+        assert!((s.flops_bf16_per_sm() * s.sms as f64 - s.flops_bf16).abs() < 1.0);
+    }
+
+    #[test]
+    fn smem_bounds_sane() {
+        assert!(SocSpec::orin().smem_per_sm >= 64.0 * KIB);
+        assert!(SocSpec::thor().smem_per_sm > SocSpec::orin().smem_per_sm);
+    }
+}

@@ -1,0 +1,22 @@
+//! # vla-char
+//!
+//! Reproduction of "Characterizing VLA Models: Identifying the Action
+//! Generation Bottleneck for Edge AI Architectures" (CS.PF 2026).
+//!
+//! Three-layer architecture:
+//! - **L3 (this crate)**: analytical XPU simulator, platform registry,
+//!   VLA workload IR, PJRT runtime, VLA engine + control-loop coordinator,
+//!   profiling and report generation.
+//! - **L2** (`python/compile/model.py`): tiny VLA model in JAX, AOT-lowered
+//!   to HLO text artifacts consumed by `runtime`.
+//! - **L1** (`python/compile/kernels/`): Pallas decode-attention and fused
+//!   FFN kernels (interpret mode), lowered inside the L2 graph.
+pub mod cli;
+pub mod engine;
+pub mod hw;
+pub mod runtime;
+pub mod sim;
+pub mod model;
+pub mod profile;
+pub mod report;
+pub mod util;

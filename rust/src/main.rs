@@ -1,0 +1,13 @@
+//! `vla-char` — leader binary: experiment reproduction CLI over the
+//! simulator, the PJRT runtime, and the control-loop coordinator.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match vla_char::cli::run(&argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! Transformer-layer builders: expand one layer into its operator sequence
+//! for prefill (seq-parallel), decode (single token against a KV cache), and
+//! ViT (bidirectional, no cache) execution modes.
+
+use super::op::Operator;
+use crate::hw::DType;
+
+/// Dimensions of one decoder-only transformer block (GQA + SwiGLU, the
+/// Qwen2/LLaMA family shape used by MolmoAct's reasoning engine).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BlockDims {
+    pub hidden: u64,
+    pub heads: u64,
+    pub kv_heads: u64,
+    pub head_dim: u64,
+    pub ffn: u64,
+    pub dtype: DType,
+}
+
+impl BlockDims {
+    pub fn q_dim(&self) -> u64 {
+        self.heads * self.head_dim
+    }
+
+    pub fn kv_dim(&self) -> u64 {
+        self.kv_heads * self.head_dim
+    }
+
+    /// Parameters in one block (attention + SwiGLU MLP + norms).
+    pub fn params(&self) -> f64 {
+        let h = self.hidden as f64;
+        let attn = h * self.q_dim() as f64      // Wq
+            + 2.0 * h * self.kv_dim() as f64    // Wk, Wv
+            + self.q_dim() as f64 * h;          // Wo
+        let mlp = 3.0 * h * self.ffn as f64; // gate, up, down
+        attn + mlp + 2.0 * h
+    }
+
+    /// KV-cache bytes per token for this block.
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        2.0 * self.kv_dim() as f64 * self.dtype.bytes()
+    }
+}
+
+/// Ops for one decoder block processing `seq` fresh tokens (prefill mode,
+/// causal attention over those tokens plus `past` cached tokens).
+pub fn decoder_block_prefill(prefix: &str, d: &BlockDims, seq: u64, past: u64) -> Vec<Operator> {
+    let dt = d.dtype;
+    let ctx = seq + past;
+    let mut ops = vec![
+        Operator::norm(&format!("{prefix}.ln1"), seq, d.hidden, dt),
+        Operator::matmul_weight(&format!("{prefix}.wq"), 1, seq, d.q_dim(), d.hidden, dt),
+        Operator::matmul_weight(&format!("{prefix}.wk"), 1, seq, d.kv_dim(), d.hidden, dt),
+        Operator::matmul_weight(&format!("{prefix}.wv"), 1, seq, d.kv_dim(), d.hidden, dt),
+        // scores: [heads, seq, hd] x [heads, hd, ctx] — causal ~halves the
+        // effective context; model with ctx/2 + seq/2 average length
+        Operator::matmul_act(
+            &format!("{prefix}.qk"),
+            d.heads,
+            seq,
+            (past + seq / 2).max(1),
+            d.head_dim,
+            dt,
+            false,
+        ),
+        Operator::softmax(&format!("{prefix}.softmax"), d.heads * seq, ctx, dt),
+        Operator::matmul_act(
+            &format!("{prefix}.av"),
+            d.heads,
+            seq,
+            d.head_dim,
+            (past + seq / 2).max(1),
+            dt,
+            false,
+        ),
+        Operator::matmul_weight(&format!("{prefix}.wo"), 1, seq, d.hidden, d.q_dim(), dt),
+        Operator::elementwise(&format!("{prefix}.res1"), seq * d.hidden, 2, 1.0, dt),
+        Operator::norm(&format!("{prefix}.ln2"), seq, d.hidden, dt),
+        Operator::matmul_weight(&format!("{prefix}.w_gate"), 1, seq, d.ffn, d.hidden, dt),
+        Operator::matmul_weight(&format!("{prefix}.w_up"), 1, seq, d.ffn, d.hidden, dt),
+        Operator::elementwise(&format!("{prefix}.silu_mul"), seq * d.ffn, 2, 4.0, dt),
+        Operator::matmul_weight(&format!("{prefix}.w_down"), 1, seq, d.hidden, d.ffn, dt),
+        Operator::elementwise(&format!("{prefix}.res2"), seq * d.hidden, 2, 1.0, dt),
+    ];
+    // GQA repeats kv heads across q heads; no extra traffic modeled.
+    for op in &mut ops {
+        op.name = op.name.clone();
+    }
+    ops
+}
+
+/// Ops for one decoder block decoding ONE token at cache length `kv_len`
+/// (the memory-bound inner loop of the generation phase).
+pub fn decoder_block_decode(prefix: &str, d: &BlockDims, kv_len: u64) -> Vec<Operator> {
+    let dt = d.dtype;
+    vec![
+        Operator::norm(&format!("{prefix}.ln1"), 1, d.hidden, dt),
+        Operator::matmul_weight(&format!("{prefix}.wq"), 1, 1, d.q_dim(), d.hidden, dt),
+        Operator::matmul_weight(&format!("{prefix}.wk"), 1, 1, d.kv_dim(), d.hidden, dt),
+        Operator::matmul_weight(&format!("{prefix}.wv"), 1, 1, d.kv_dim(), d.hidden, dt),
+        // q @ K^T over the whole cache: KV operand streamed from DRAM.
+        // GQA: kv_heads distinct K tensors, each shared by heads/kv_heads
+        // query heads -> batch = kv_heads, m = heads/kv_heads.
+        Operator::matmul_act(
+            &format!("{prefix}.qk"),
+            d.kv_heads,
+            d.heads / d.kv_heads.max(1),
+            kv_len.max(1),
+            d.head_dim,
+            dt,
+            true,
+        ),
+        Operator::softmax(&format!("{prefix}.softmax"), d.heads, kv_len.max(1), dt),
+        Operator::matmul_act(
+            &format!("{prefix}.av"),
+            d.kv_heads,
+            d.heads / d.kv_heads.max(1),
+            d.head_dim,
+            kv_len.max(1),
+            dt,
+            true,
+        ),
+        Operator::matmul_weight(&format!("{prefix}.wo"), 1, 1, d.hidden, d.q_dim(), dt),
+        Operator::elementwise(&format!("{prefix}.res1"), d.hidden, 2, 1.0, dt),
+        Operator::norm(&format!("{prefix}.ln2"), 1, d.hidden, dt),
+        Operator::matmul_weight(&format!("{prefix}.w_gate"), 1, 1, d.ffn, d.hidden, dt),
+        Operator::matmul_weight(&format!("{prefix}.w_up"), 1, 1, d.ffn, d.hidden, dt),
+        Operator::elementwise(&format!("{prefix}.silu_mul"), d.ffn, 2, 4.0, dt),
+        Operator::matmul_weight(&format!("{prefix}.w_down"), 1, 1, d.hidden, d.ffn, dt),
+        Operator::elementwise(&format!("{prefix}.res2"), d.hidden, 2, 1.0, dt),
+    ]
+}
+
+/// Ops for one ViT encoder block over `seq` patch tokens (bidirectional,
+/// GELU MLP, no KV cache).
+pub fn vit_block(prefix: &str, d: &BlockDims, seq: u64) -> Vec<Operator> {
+    let dt = d.dtype;
+    vec![
+        Operator::norm(&format!("{prefix}.ln1"), seq, d.hidden, dt),
+        Operator::matmul_weight(&format!("{prefix}.wqkv"), 1, seq, 3 * d.q_dim(), d.hidden, dt),
+        Operator::matmul_act(&format!("{prefix}.qk"), d.heads, seq, seq, d.head_dim, dt, false),
+        Operator::softmax(&format!("{prefix}.softmax"), d.heads * seq, seq, dt),
+        Operator::matmul_act(&format!("{prefix}.av"), d.heads, seq, d.head_dim, seq, dt, false),
+        Operator::matmul_weight(&format!("{prefix}.wo"), 1, seq, d.hidden, d.q_dim(), dt),
+        Operator::elementwise(&format!("{prefix}.res1"), seq * d.hidden, 2, 1.0, dt),
+        Operator::norm(&format!("{prefix}.ln2"), seq, d.hidden, dt),
+        Operator::matmul_weight(&format!("{prefix}.fc1"), 1, seq, d.ffn, d.hidden, dt),
+        Operator::elementwise(&format!("{prefix}.gelu"), seq * d.ffn, 1, 8.0, dt),
+        Operator::matmul_weight(&format!("{prefix}.fc2"), 1, seq, d.hidden, d.ffn, dt),
+        Operator::elementwise(&format!("{prefix}.res2"), seq * d.hidden, 2, 1.0, dt),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> BlockDims {
+        BlockDims {
+            hidden: 3584,
+            heads: 28,
+            kv_heads: 4,
+            head_dim: 128,
+            ffn: 18944,
+            dtype: DType::BF16,
+        }
+    }
+
+    #[test]
+    fn qwen7b_block_params() {
+        // Qwen2-7B: 28 layers x block params + embeddings ~ 7.6B total
+        let p = dims().params();
+        assert!(p > 2.0e8 && p < 2.7e8, "block params {p}");
+        assert!((28.0 * p - 7.0e9).abs() < 1.0e9, "28 blocks ~ 7B params: {}", 28.0 * p);
+    }
+
+    #[test]
+    fn decode_block_weight_bytes_equals_params() {
+        // During decode every weight is read exactly once: sum of
+        // weight_bytes over matmul_w ops == ~params * 2 bytes.
+        let d = dims();
+        let ops = decoder_block_decode("l0", &d, 640);
+        let wbytes: f64 = ops.iter().map(|o| o.weight_bytes).sum();
+        let expect = d.params() * 2.0;
+        assert!(
+            (wbytes - expect).abs() / expect < 0.01,
+            "wbytes {wbytes} vs params*2 {expect}"
+        );
+    }
+
+    #[test]
+    fn decode_kv_traffic_grows_with_len() {
+        let d = dims();
+        let kv_at = |len: u64| -> f64 {
+            decoder_block_decode("l", &d, len).iter().map(|o| o.kv_bytes).sum()
+        };
+        assert!(kv_at(1000) > kv_at(100));
+        // kv bytes at len L = 2 (K and V) * kv_dim * L * 2 bytes
+        let expect = 2.0 * d.kv_dim() as f64 * 1000.0 * 2.0;
+        assert!((kv_at(1000) - expect).abs() / expect < 0.01);
+    }
+
+    #[test]
+    fn prefill_flops_scale_with_seq() {
+        let d = dims();
+        let f = |seq: u64| -> f64 {
+            decoder_block_prefill("l", &d, seq, 0).iter().map(|o| o.flops).sum()
+        };
+        let r = f(1280) / f(640);
+        assert!(r > 1.9 && r < 2.3, "ratio {r}"); // ~linear in seq (attn slightly super)
+    }
+
+    #[test]
+    fn decode_is_low_intensity_prefill_is_high() {
+        let d = dims();
+        let intensity = |ops: &[Operator]| -> f64 {
+            let f: f64 = ops.iter().map(|o| o.flops).sum();
+            let b: f64 = ops.iter().map(|o| o.total_bytes()).sum();
+            f / b
+        };
+        let dec = decoder_block_decode("l", &d, 640);
+        let pre = decoder_block_prefill("l", &d, 640, 0);
+        assert!(intensity(&dec) < 2.0, "decode intensity {}", intensity(&dec));
+        assert!(intensity(&pre) > 100.0, "prefill intensity {}", intensity(&pre));
+    }
+
+    #[test]
+    fn vit_block_structure() {
+        let d = BlockDims {
+            hidden: 1024,
+            heads: 16,
+            kv_heads: 16,
+            head_dim: 64,
+            ffn: 4096,
+            dtype: DType::BF16,
+        };
+        let ops = vit_block("v0", &d, 576);
+        assert_eq!(ops.len(), 12);
+        assert!(ops.iter().all(|o| o.kv_bytes == 0.0), "ViT has no KV cache");
+    }
+}

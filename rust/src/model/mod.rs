@@ -1,0 +1,14 @@
+//! VLA workload IR: operators, transformer layers, stages, model configs
+//! (MolmoAct-7B and scaled variants), and scaling laws.
+
+pub mod layer;
+pub mod molmoact;
+pub mod op;
+pub mod scaling;
+pub mod stage;
+pub mod vla;
+
+pub use layer::BlockDims;
+pub use op::{OpKind, Operator};
+pub use stage::{Phase, Stage};
+pub use vla::{VlaConfig, VlaWorkload, WorkloadShape};

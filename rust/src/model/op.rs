@@ -1,0 +1,268 @@
+//! Operator-level workload IR.
+//!
+//! The paper's simulator "decomposes the VLA model into its constituent
+//! stages ... each layer is further resolved into a sequence of operators,
+//! primarily high-dimensional einsums" (§3.2). An [`Operator`] carries the
+//! einsum shape plus explicit FLOP and byte counts so the roofline model
+//! needs no further shape reasoning.
+
+use crate::hw::DType;
+
+/// Broad operator class — drives tiling, PIM eligibility and bandwidth
+/// asymmetry decisions in the simulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// Dense matmul with a weight operand resident in DRAM (GEMM when m is
+    /// large, GEMV-like when m == 1).
+    MatmulWeight,
+    /// Matmul between two activation tensors (attention score/context).
+    MatmulAct,
+    /// Elementwise / activation / residual (streaming).
+    Elementwise,
+    /// Softmax (streaming, two passes).
+    Softmax,
+    /// Layer/RMS norm (streaming).
+    Norm,
+    /// Embedding gather / logit sampling.
+    Gather,
+}
+
+impl OpKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::MatmulWeight => "matmul_w",
+            OpKind::MatmulAct => "matmul_a",
+            OpKind::Elementwise => "eltwise",
+            OpKind::Softmax => "softmax",
+            OpKind::Norm => "norm",
+            OpKind::Gather => "gather",
+        }
+    }
+}
+
+/// One operator instance with fully-resolved cost inputs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Operator {
+    pub name: String,
+    pub kind: OpKind,
+    pub dtype: DType,
+    /// Einsum dims of the dominant contraction: batch x (m, n, k).
+    /// Non-matmul ops use (m=elements, n=1, k=1).
+    pub batch: u64,
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+    /// Floating-point operations.
+    pub flops: f64,
+    /// Bytes of weights/parameters streamed from DRAM (reused across tokens
+    /// but NOT across a single inference step).
+    pub weight_bytes: f64,
+    /// Bytes of activations read (DRAM or cache-resident; the memory model
+    /// decides which level serves them).
+    pub act_in_bytes: f64,
+    /// Bytes of activations written.
+    pub act_out_bytes: f64,
+    /// Bytes of KV-cache traffic (reads during decode; grows with position).
+    pub kv_bytes: f64,
+}
+
+impl Operator {
+    /// Total bytes moved (first-order, before cache modeling).
+    pub fn total_bytes(&self) -> f64 {
+        self.weight_bytes + self.act_in_bytes + self.act_out_bytes + self.kv_bytes
+    }
+
+    /// Arithmetic intensity (FLOP per byte moved).
+    pub fn intensity(&self) -> f64 {
+        self.flops / self.total_bytes().max(1.0)
+    }
+
+    /// PIM eligibility: streaming memory-bound shapes — GEMV-like weight
+    /// matmuls (m small), elementwise, norms, softmax, and KV-dominated
+    /// attention ops. Large GEMMs stay on the SoC matrix engine.
+    pub fn pim_eligible(&self) -> bool {
+        match self.kind {
+            OpKind::MatmulWeight => self.m <= 16,
+            OpKind::MatmulAct => self.kv_bytes > 0.0 && self.m <= 16,
+            OpKind::Elementwise | OpKind::Softmax | OpKind::Norm => true,
+            OpKind::Gather => false,
+        }
+    }
+
+    /// Dense matmul `[batch, m, k] x [k, n]` against DRAM-resident weights.
+    pub fn matmul_weight(name: &str, batch: u64, m: u64, n: u64, k: u64, dt: DType) -> Operator {
+        let b = dt.bytes();
+        Operator {
+            name: name.into(),
+            kind: OpKind::MatmulWeight,
+            dtype: dt,
+            batch,
+            m,
+            n,
+            k,
+            flops: 2.0 * batch as f64 * m as f64 * n as f64 * k as f64,
+            weight_bytes: k as f64 * n as f64 * b, // weights shared across batch
+            act_in_bytes: batch as f64 * m as f64 * k as f64 * b,
+            act_out_bytes: batch as f64 * m as f64 * n as f64 * b,
+            kv_bytes: 0.0,
+        }
+    }
+
+    /// Activation-activation matmul `[batch, m, k] x [batch, k, n]`,
+    /// optionally with the second operand served from the KV cache.
+    pub fn matmul_act(
+        name: &str,
+        batch: u64,
+        m: u64,
+        n: u64,
+        k: u64,
+        dt: DType,
+        second_is_kv: bool,
+    ) -> Operator {
+        let b = dt.bytes();
+        let second = batch as f64 * k as f64 * n as f64 * b;
+        Operator {
+            name: name.into(),
+            kind: OpKind::MatmulAct,
+            dtype: dt,
+            batch,
+            m,
+            n,
+            k,
+            flops: 2.0 * batch as f64 * m as f64 * n as f64 * k as f64,
+            weight_bytes: 0.0,
+            act_in_bytes: batch as f64 * m as f64 * k as f64 * b + if second_is_kv { 0.0 } else { second },
+            act_out_bytes: batch as f64 * m as f64 * n as f64 * b,
+            kv_bytes: if second_is_kv { second } else { 0.0 },
+        }
+    }
+
+    /// Streaming elementwise op over `elems` elements with `reads` input
+    /// streams and one output stream; `flops_per_elem` ALU ops each.
+    pub fn elementwise(name: &str, elems: u64, reads: u64, flops_per_elem: f64, dt: DType) -> Operator {
+        let b = dt.bytes();
+        Operator {
+            name: name.into(),
+            kind: OpKind::Elementwise,
+            dtype: dt,
+            batch: 1,
+            m: elems,
+            n: 1,
+            k: 1,
+            flops: elems as f64 * flops_per_elem,
+            weight_bytes: 0.0,
+            act_in_bytes: elems as f64 * reads as f64 * b,
+            act_out_bytes: elems as f64 * b,
+            kv_bytes: 0.0,
+        }
+    }
+
+    /// Softmax over `rows` rows of length `cols` (two streaming passes).
+    pub fn softmax(name: &str, rows: u64, cols: u64, dt: DType) -> Operator {
+        let b = dt.bytes();
+        let elems = rows as f64 * cols as f64;
+        Operator {
+            name: name.into(),
+            kind: OpKind::Softmax,
+            dtype: dt,
+            batch: 1,
+            m: rows,
+            n: cols,
+            k: 1,
+            flops: 5.0 * elems, // max, sub, exp, sum, div
+            weight_bytes: 0.0,
+            act_in_bytes: 2.0 * elems * b,
+            act_out_bytes: elems * b,
+            kv_bytes: 0.0,
+        }
+    }
+
+    /// RMS/LayerNorm over `rows` rows of width `width`.
+    pub fn norm(name: &str, rows: u64, width: u64, dt: DType) -> Operator {
+        let b = dt.bytes();
+        let elems = rows as f64 * width as f64;
+        Operator {
+            name: name.into(),
+            kind: OpKind::Norm,
+            dtype: dt,
+            batch: 1,
+            m: rows,
+            n: width,
+            k: 1,
+            flops: 4.0 * elems,
+            weight_bytes: width as f64 * b, // scale params
+            act_in_bytes: elems * b,
+            act_out_bytes: elems * b,
+            kv_bytes: 0.0,
+        }
+    }
+
+    /// Embedding-table gather of `tokens` rows of width `width` from a table
+    /// of `vocab` rows (reads only the gathered rows).
+    pub fn gather(name: &str, tokens: u64, width: u64, dt: DType) -> Operator {
+        let b = dt.bytes();
+        Operator {
+            name: name.into(),
+            kind: OpKind::Gather,
+            dtype: dt,
+            batch: 1,
+            m: tokens,
+            n: width,
+            k: 1,
+            flops: 0.0,
+            weight_bytes: tokens as f64 * width as f64 * b,
+            act_in_bytes: 0.0,
+            act_out_bytes: tokens as f64 * width as f64 * b,
+            kv_bytes: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_weight_counts() {
+        let op = Operator::matmul_weight("qkv", 1, 128, 512, 256, DType::BF16);
+        assert_eq!(op.flops, 2.0 * 128.0 * 512.0 * 256.0);
+        assert_eq!(op.weight_bytes, 512.0 * 256.0 * 2.0);
+        assert_eq!(op.act_in_bytes, 128.0 * 256.0 * 2.0);
+        assert_eq!(op.act_out_bytes, 128.0 * 512.0 * 2.0);
+    }
+
+    #[test]
+    fn gemv_is_memory_bound_shape() {
+        // decode-time projection: m=1 — intensity ~1 FLOP/byte
+        let op = Operator::matmul_weight("proj", 1, 1, 4096, 4096, DType::BF16);
+        assert!(op.intensity() < 2.0, "intensity {}", op.intensity());
+        assert!(op.pim_eligible());
+        // prefill projection: m=640 — high intensity, not PIM-eligible
+        let op2 = Operator::matmul_weight("proj", 1, 640, 4096, 4096, DType::BF16);
+        assert!(op2.intensity() > 100.0);
+        assert!(!op2.pim_eligible());
+    }
+
+    #[test]
+    fn kv_matmul_attribution() {
+        let op = Operator::matmul_act("qk", 4, 1, 832, 128, DType::BF16, true);
+        assert!(op.kv_bytes > 0.0);
+        assert_eq!(op.weight_bytes, 0.0);
+        let no_kv = Operator::matmul_act("qk", 4, 1, 832, 128, DType::BF16, false);
+        assert_eq!(no_kv.kv_bytes, 0.0);
+        assert_eq!(no_kv.total_bytes(), op.total_bytes());
+    }
+
+    #[test]
+    fn streaming_ops() {
+        let sm = Operator::softmax("sm", 8, 1024, DType::F32);
+        assert!(sm.intensity() < 1.0);
+        let ew = Operator::elementwise("silu", 1 << 20, 2, 4.0, DType::BF16);
+        assert_eq!(ew.act_in_bytes, (1 << 20) as f64 * 2.0 * 2.0);
+        let n = Operator::norm("rms", 1, 4096, DType::BF16);
+        assert!(n.pim_eligible());
+        let g = Operator::gather("embed", 4, 4096, DType::BF16);
+        assert!(!g.pim_eligible());
+        assert_eq!(g.flops, 0.0);
+    }
+}

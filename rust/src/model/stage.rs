@@ -1,0 +1,105 @@
+//! Stages and phases: the paper's three-subsystem decomposition (Fig 1) —
+//! Vision Encoder, Generation Engine (prefill + autoregressive decode), and
+//! Action Transformer.
+
+use super::op::Operator;
+
+/// The phase taxonomy used throughout Fig 2's latency decomposition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    Vision,
+    Prefill,
+    Decode,
+    Action,
+}
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Vision => "vision",
+            Phase::Prefill => "prefill",
+            Phase::Decode => "decode",
+            Phase::Action => "action",
+        }
+    }
+
+    pub const ALL: [Phase; 4] = [Phase::Vision, Phase::Prefill, Phase::Decode, Phase::Action];
+
+    /// The paper reports "generation" = prefill + autoregressive decode.
+    pub fn in_generation(self) -> bool {
+        matches!(self, Phase::Prefill | Phase::Decode)
+    }
+}
+
+impl std::fmt::Display for Phase {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A stage: a named operator sequence executed as a unit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stage {
+    pub name: String,
+    pub phase: Phase,
+    pub ops: Vec<Operator>,
+}
+
+impl Stage {
+    pub fn new(name: &str, phase: Phase, ops: Vec<Operator>) -> Stage {
+        Stage {
+            name: name.into(),
+            phase,
+            ops,
+        }
+    }
+
+    pub fn total_flops(&self) -> f64 {
+        self.ops.iter().map(|o| o.flops).sum()
+    }
+
+    pub fn total_bytes(&self) -> f64 {
+        self.ops.iter().map(|o| o.total_bytes()).sum()
+    }
+
+    pub fn weight_bytes(&self) -> f64 {
+        self.ops.iter().map(|o| o.weight_bytes).sum()
+    }
+
+    pub fn kv_bytes(&self) -> f64 {
+        self.ops.iter().map(|o| o.kv_bytes).sum()
+    }
+
+    /// Stage-level arithmetic intensity (FLOP/byte).
+    pub fn intensity(&self) -> f64 {
+        self.total_flops() / self.total_bytes().max(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::DType;
+
+    #[test]
+    fn phase_names_and_generation() {
+        assert_eq!(Phase::Decode.name(), "decode");
+        assert!(Phase::Decode.in_generation());
+        assert!(Phase::Prefill.in_generation());
+        assert!(!Phase::Vision.in_generation());
+        assert!(!Phase::Action.in_generation());
+        assert_eq!(Phase::ALL.len(), 4);
+    }
+
+    #[test]
+    fn stage_aggregates() {
+        let ops = vec![
+            Operator::matmul_weight("a", 1, 4, 8, 16, DType::BF16),
+            Operator::matmul_weight("b", 1, 4, 8, 16, DType::BF16),
+        ];
+        let s = Stage::new("s", Phase::Vision, ops.clone());
+        assert_eq!(s.total_flops(), 2.0 * ops[0].flops);
+        assert_eq!(s.weight_bytes(), 2.0 * ops[0].weight_bytes);
+        assert!(s.intensity() > 0.0);
+    }
+}

@@ -1,0 +1,531 @@
+//! VLA model configuration and workload construction.
+//!
+//! A [`VlaConfig`] describes the three subsystems of Fig 1 (vision encoder
+//! towers + projector, decoder-only generation engine, action transformer)
+//! plus the per-step workload shape (image tokens, prompt tokens, generated
+//! reasoning/action tokens, diffusion steps). [`VlaWorkload`] expands it into
+//! operator stages for the simulator.
+
+use super::layer::{decoder_block_decode, decoder_block_prefill, vit_block, BlockDims};
+use super::op::Operator;
+use super::stage::{Phase, Stage};
+use crate::hw::DType;
+
+/// One vision tower (MolmoAct fuses SigLIP + DINOv2-class backbones).
+#[derive(Debug, Clone, PartialEq)]
+pub struct VitConfig {
+    pub name: String,
+    pub layers: u64,
+    pub dims: BlockDims,
+}
+
+impl VitConfig {
+    pub fn params(&self) -> f64 {
+        self.layers as f64 * self.dims.params()
+    }
+}
+
+/// The decoder-only reasoning engine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecoderConfig {
+    pub layers: u64,
+    pub dims: BlockDims,
+    pub vocab: u64,
+}
+
+impl DecoderConfig {
+    pub fn params(&self) -> f64 {
+        self.layers as f64 * self.dims.params()
+            + 2.0 * self.vocab as f64 * self.dims.hidden as f64 // embed + lm_head
+    }
+
+    /// KV-cache bytes per token across all layers.
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        self.layers as f64 * self.dims.kv_bytes_per_token()
+    }
+}
+
+/// The action transformer (DiT-style continuous decoder over the action
+/// horizon, run for `diffusion_steps` denoising iterations).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ActionConfig {
+    pub layers: u64,
+    pub dims: BlockDims,
+    /// Action chunk length (tokens over the horizon).
+    pub horizon: u64,
+    /// Denoising iterations per control step.
+    pub diffusion_steps: u64,
+    /// Action dimensionality (e.g. 7-DoF end effector).
+    pub action_dim: u64,
+}
+
+impl ActionConfig {
+    pub fn params(&self) -> f64 {
+        self.layers as f64 * self.dims.params()
+    }
+}
+
+/// Per-control-step workload shape.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkloadShape {
+    /// Image crops fed through the vision towers (Molmo-style multi-crop
+    /// tiling of the camera frame: 12 overlapping crops + 1 global view).
+    pub crops: u64,
+    /// Patch tokens per crop inside the vision towers (336/14 squared = 576).
+    pub patches_per_crop: u64,
+    /// Visual tokens entering the generation engine (after 2x2 pooling in
+    /// the projector).
+    pub image_tokens: u64,
+    /// Text instruction tokens.
+    pub prompt_tokens: u64,
+    /// Autoregressively generated tokens (CoT / spatial reasoning traces /
+    /// discrete action tokens) — the paper's bottleneck phase.
+    pub decode_tokens: u64,
+}
+
+impl WorkloadShape {
+    pub fn prefill_len(&self) -> u64 {
+        self.image_tokens + self.prompt_tokens
+    }
+}
+
+/// Complete VLA model + workload description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VlaConfig {
+    pub name: String,
+    pub towers: Vec<VitConfig>,
+    /// Projector MLP: vision hidden -> decoder hidden (2-layer).
+    pub projector_hidden: u64,
+    pub decoder: DecoderConfig,
+    pub action: ActionConfig,
+    pub shape: WorkloadShape,
+}
+
+impl VlaConfig {
+    /// Total parameter count (all subsystems).
+    pub fn params(&self) -> f64 {
+        let vis: f64 = self.towers.iter().map(|t| t.params()).sum();
+        let proj = self.towers.iter().map(|t| t.dims.hidden).sum::<u64>() as f64
+            * self.projector_hidden as f64
+            + self.projector_hidden as f64 * self.decoder.dims.hidden as f64;
+        vis + proj + self.decoder.params() + self.action.params()
+    }
+
+    /// Model bytes at the decoder dtype (what decode streams per token).
+    pub fn decoder_weight_bytes(&self) -> f64 {
+        self.decoder.layers as f64 * self.decoder.dims.params() * self.decoder.dims.dtype.bytes()
+    }
+
+    /// Build the vision-encoding stage: all towers over every crop's patch
+    /// grid (crops batched), then the projector over the pooled tokens.
+    pub fn vision_stage(&self) -> Stage {
+        let mut ops = Vec::new();
+        let crops = self.shape.crops.max(1);
+        let patches = self.shape.patches_per_crop;
+        for tower in &self.towers {
+            // patch embedding: conv as matmul [crops*patches, 3*14*14] x [.., hidden]
+            ops.push(Operator::matmul_weight(
+                &format!("{}.patch_embed", tower.name),
+                1,
+                crops * patches,
+                tower.dims.hidden,
+                3 * 14 * 14,
+                tower.dims.dtype,
+            ));
+            for l in 0..tower.layers {
+                // attention is per-crop (batch = crops, seq = patches)
+                let mut blk = vit_block(&format!("{}.b{l}", tower.name), &tower.dims, patches);
+                for op in &mut blk {
+                    op.batch *= crops;
+                    op.flops *= crops as f64;
+                    op.act_in_bytes *= crops as f64;
+                    op.act_out_bytes *= crops as f64;
+                    // weights shared across crops: weight_bytes unchanged
+                }
+                ops.extend(blk);
+            }
+        }
+        // projector: concat tower features -> MLP -> decoder hidden
+        let cat: u64 = self.towers.iter().map(|t| t.dims.hidden).sum();
+        let dt = self.decoder.dims.dtype;
+        ops.push(Operator::matmul_weight(
+            "projector.fc1",
+            1,
+            self.shape.image_tokens,
+            self.projector_hidden,
+            cat,
+            dt,
+        ));
+        ops.push(Operator::elementwise(
+            "projector.gelu",
+            self.shape.image_tokens * self.projector_hidden,
+            1,
+            8.0,
+            dt,
+        ));
+        ops.push(Operator::matmul_weight(
+            "projector.fc2",
+            1,
+            self.shape.image_tokens,
+            self.decoder.dims.hidden,
+            self.projector_hidden,
+            dt,
+        ));
+        Stage::new("vision_encode", Phase::Vision, ops)
+    }
+
+    /// Build the prefill stage over image + prompt tokens.
+    pub fn prefill_stage(&self) -> Stage {
+        let seq = self.shape.prefill_len();
+        let dt = self.decoder.dims.dtype;
+        let mut ops = vec![Operator::gather(
+            "embed",
+            self.shape.prompt_tokens,
+            self.decoder.dims.hidden,
+            dt,
+        )];
+        for l in 0..self.decoder.layers {
+            ops.extend(decoder_block_prefill(&format!("d{l}"), &self.decoder.dims, seq, 0));
+        }
+        ops.push(Operator::norm("final_ln", seq, self.decoder.dims.hidden, dt));
+        // lm head on the last position only
+        ops.push(Operator::matmul_weight(
+            "lm_head",
+            1,
+            1,
+            self.decoder.vocab,
+            self.decoder.dims.hidden,
+            dt,
+        ));
+        Stage::new("prefill", Phase::Prefill, ops)
+    }
+
+    /// Build ONE decode step at KV length `kv_len` (cache already holding
+    /// `kv_len` tokens). The full decode phase runs this for positions
+    /// `prefill_len .. prefill_len + decode_tokens`.
+    pub fn decode_stage_at(&self, kv_len: u64) -> Stage {
+        let dt = self.decoder.dims.dtype;
+        let mut ops = vec![Operator::gather("embed", 1, self.decoder.dims.hidden, dt)];
+        for l in 0..self.decoder.layers {
+            ops.extend(decoder_block_decode(&format!("d{l}"), &self.decoder.dims, kv_len));
+        }
+        ops.push(Operator::norm("final_ln", 1, self.decoder.dims.hidden, dt));
+        ops.push(Operator::matmul_weight(
+            "lm_head",
+            1,
+            1,
+            self.decoder.vocab,
+            self.decoder.dims.hidden,
+            dt,
+        ));
+        Stage::new("decode_step", Phase::Decode, ops)
+    }
+
+    /// PERF: update an existing decode stage (built by [`decode_stage_at`])
+    /// in place to a new KV length, touching only the three KV-dependent
+    /// operators per layer (qk, softmax, av). Rebuilding the full stage
+    /// allocates ~430 operator names per position; the sweep harness calls
+    /// this once per decode token instead.
+    ///
+    /// [`decode_stage_at`]: VlaConfig::decode_stage_at
+    pub fn patch_decode_stage_kv(&self, stage: &mut Stage, kv_len: u64) {
+        const OPS_PER_BLOCK: usize = 15;
+        let d = &self.decoder.dims;
+        let dt = d.dtype;
+        let kv = kv_len.max(1);
+        for l in 0..self.decoder.layers as usize {
+            let base = 1 + l * OPS_PER_BLOCK; // ops[0] is the embed gather
+            for (off, rebuilt) in [
+                (4usize, Operator::matmul_act("", d.kv_heads, d.heads / d.kv_heads.max(1), kv, d.head_dim, dt, true)),
+                (5, Operator::softmax("", d.heads, kv, dt)),
+                (6, Operator::matmul_act("", d.kv_heads, d.heads / d.kv_heads.max(1), d.head_dim, kv, dt, true)),
+            ] {
+                let slot = &mut stage.ops[base + off];
+                let name = std::mem::take(&mut slot.name);
+                *slot = rebuilt;
+                slot.name = name;
+            }
+        }
+    }
+
+    /// Build ONE decode step serving `batch` independent streams at the same
+    /// KV length (multi-robot serving): weight streams are shared across the
+    /// batch (read once), while per-stream KV traffic and attention scale
+    /// with `batch`. This is how serving batchers recover compute-boundness
+    /// on datacenter GPUs — and why it does NOT fix per-stream control
+    /// latency at the edge.
+    pub fn decode_stage_batched(&self, kv_len: u64, batch: u64) -> Stage {
+        let dt = self.decoder.dims.dtype;
+        let d = &self.decoder.dims;
+        let b = batch.max(1);
+        let mut ops = vec![Operator::gather("embed", b, d.hidden, dt)];
+        for l in 0..self.decoder.layers {
+            let prefix = format!("d{l}");
+            ops.push(Operator::norm(&format!("{prefix}.ln1"), b, d.hidden, dt));
+            ops.push(Operator::matmul_weight(&format!("{prefix}.wq"), 1, b, d.q_dim(), d.hidden, dt));
+            ops.push(Operator::matmul_weight(&format!("{prefix}.wk"), 1, b, d.kv_dim(), d.hidden, dt));
+            ops.push(Operator::matmul_weight(&format!("{prefix}.wv"), 1, b, d.kv_dim(), d.hidden, dt));
+            // attention: each stream has its own cache
+            ops.push(Operator::matmul_act(
+                &format!("{prefix}.qk"),
+                b * d.kv_heads,
+                d.heads / d.kv_heads.max(1),
+                kv_len.max(1),
+                d.head_dim,
+                dt,
+                true,
+            ));
+            ops.push(Operator::softmax(&format!("{prefix}.softmax"), b * d.heads, kv_len.max(1), dt));
+            ops.push(Operator::matmul_act(
+                &format!("{prefix}.av"),
+                b * d.kv_heads,
+                d.heads / d.kv_heads.max(1),
+                d.head_dim,
+                kv_len.max(1),
+                dt,
+                true,
+            ));
+            ops.push(Operator::matmul_weight(&format!("{prefix}.wo"), 1, b, d.hidden, d.q_dim(), dt));
+            ops.push(Operator::elementwise(&format!("{prefix}.res1"), b * d.hidden, 2, 1.0, dt));
+            ops.push(Operator::norm(&format!("{prefix}.ln2"), b, d.hidden, dt));
+            ops.push(Operator::matmul_weight(&format!("{prefix}.w_gate"), 1, b, d.ffn, d.hidden, dt));
+            ops.push(Operator::matmul_weight(&format!("{prefix}.w_up"), 1, b, d.ffn, d.hidden, dt));
+            ops.push(Operator::elementwise(&format!("{prefix}.silu_mul"), b * d.ffn, 2, 4.0, dt));
+            ops.push(Operator::matmul_weight(&format!("{prefix}.w_down"), 1, b, d.hidden, d.ffn, dt));
+            ops.push(Operator::elementwise(&format!("{prefix}.res2"), b * d.hidden, 2, 1.0, dt));
+        }
+        ops.push(Operator::norm("final_ln", b, self.decoder.dims.hidden, dt));
+        ops.push(Operator::matmul_weight(
+            "lm_head",
+            1,
+            b,
+            self.decoder.vocab,
+            self.decoder.dims.hidden,
+            dt,
+        ));
+        Stage::new("decode_step_batched", Phase::Decode, ops)
+    }
+
+    /// Build the action-transformer stage: DiT denoiser over the action
+    /// horizon, `diffusion_steps` iterations, conditioned on decoder state.
+    pub fn action_stage(&self) -> Stage {
+        let a = &self.action;
+        let dt = a.dims.dtype;
+        let mut ops = Vec::new();
+        // condition projection from decoder hidden
+        ops.push(Operator::matmul_weight(
+            "act.cond_proj",
+            1,
+            1,
+            a.dims.hidden,
+            self.decoder.dims.hidden,
+            dt,
+        ));
+        for step in 0..a.diffusion_steps {
+            for l in 0..a.layers {
+                ops.extend(decoder_block_prefill(
+                    &format!("act.s{step}.b{l}"),
+                    &a.dims,
+                    a.horizon,
+                    0,
+                ));
+            }
+        }
+        ops.push(Operator::matmul_weight(
+            "act.out_proj",
+            1,
+            a.horizon,
+            a.action_dim,
+            a.dims.hidden,
+            dt,
+        ));
+        Stage::new("action_transformer", Phase::Action, ops)
+    }
+
+    /// Expand into the full per-control-step workload.
+    pub fn workload(&self) -> VlaWorkload {
+        VlaWorkload { config: self.clone() }
+    }
+}
+
+/// The expanded per-step workload (stage generators over the config).
+#[derive(Debug, Clone)]
+pub struct VlaWorkload {
+    pub config: VlaConfig,
+}
+
+impl VlaWorkload {
+    /// Iterator over the KV lengths of each decode step.
+    pub fn decode_positions(&self) -> impl Iterator<Item = u64> + '_ {
+        let start = self.config.shape.prefill_len();
+        (0..self.config.shape.decode_tokens).map(move |i| start + i)
+    }
+
+    /// All stages in execution order, decode expanded per token. Mostly for
+    /// tests/inspection — the simulator walks decode positions lazily.
+    pub fn stage_names(&self) -> Vec<String> {
+        let mut v = vec!["vision_encode".to_string(), "prefill".to_string()];
+        v.push(format!("decode x{}", self.config.shape.decode_tokens));
+        v.push("action_transformer".to_string());
+        v
+    }
+}
+
+/// Construct a standard test-scale config (used in unit tests across the
+/// crate; roughly 8M decoder params).
+pub fn tiny_test_config() -> VlaConfig {
+    let dt = DType::BF16;
+    VlaConfig {
+        name: "tiny-test".into(),
+        towers: vec![VitConfig {
+            name: "vit".into(),
+            layers: 2,
+            dims: BlockDims {
+                hidden: 128,
+                heads: 4,
+                kv_heads: 4,
+                head_dim: 32,
+                ffn: 512,
+                dtype: dt,
+            },
+        }],
+        projector_hidden: 256,
+        decoder: DecoderConfig {
+            layers: 4,
+            dims: BlockDims {
+                hidden: 256,
+                heads: 8,
+                kv_heads: 2,
+                head_dim: 32,
+                ffn: 1024,
+                dtype: dt,
+            },
+            vocab: 2048,
+        },
+        action: ActionConfig {
+            layers: 2,
+            dims: BlockDims {
+                hidden: 128,
+                heads: 4,
+                kv_heads: 4,
+                head_dim: 32,
+                ffn: 512,
+                dtype: dt,
+            },
+            horizon: 8,
+            diffusion_steps: 4,
+            action_dim: 7,
+        },
+        shape: WorkloadShape {
+            crops: 1,
+            patches_per_crop: 64,
+            image_tokens: 64,
+            prompt_tokens: 16,
+            decode_tokens: 24,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_config_builds_all_stages() {
+        let c = tiny_test_config();
+        let v = c.vision_stage();
+        let p = c.prefill_stage();
+        let d = c.decode_stage_at(100);
+        let a = c.action_stage();
+        assert_eq!(v.phase, Phase::Vision);
+        assert_eq!(p.phase, Phase::Prefill);
+        assert_eq!(d.phase, Phase::Decode);
+        assert_eq!(a.phase, Phase::Action);
+        assert!(v.total_flops() > 0.0);
+        assert!(p.total_flops() > d.total_flops(), "prefill >> one decode step");
+    }
+
+    #[test]
+    fn decode_positions_cover_decode_tokens() {
+        let c = tiny_test_config();
+        let w = c.workload();
+        let pos: Vec<u64> = w.decode_positions().collect();
+        assert_eq!(pos.len(), c.shape.decode_tokens as usize);
+        assert_eq!(pos[0], c.shape.prefill_len());
+        assert_eq!(*pos.last().unwrap(), c.shape.prefill_len() + c.shape.decode_tokens - 1);
+    }
+
+    #[test]
+    fn decode_weight_traffic_matches_decoder_bytes() {
+        // Every decode step streams (approximately) all decoder weights:
+        // block weights + lm head; embeddings are gathered sparsely.
+        let c = tiny_test_config();
+        let d = c.decode_stage_at(500);
+        let got = d.weight_bytes();
+        let blocks = c.decoder.layers as f64 * c.decoder.dims.params() * 2.0;
+        let lm_head = c.decoder.vocab as f64 * c.decoder.dims.hidden as f64 * 2.0;
+        let expect = blocks + lm_head;
+        assert!(
+            (got - expect).abs() / expect < 0.05,
+            "decode weight bytes {got:.3e} vs expected {expect:.3e}"
+        );
+    }
+
+    #[test]
+    fn params_scale_sane() {
+        let c = tiny_test_config();
+        let p = c.params();
+        assert!(p > 1e6 && p < 1e8, "params {p}");
+    }
+
+    #[test]
+    fn patch_decode_stage_matches_rebuild() {
+        let c = tiny_test_config();
+        let mut patched = c.decode_stage_at(10);
+        for kv in [11u64, 64, 1, 127] {
+            c.patch_decode_stage_kv(&mut patched, kv);
+            let fresh = c.decode_stage_at(kv);
+            assert_eq!(patched.ops.len(), fresh.ops.len());
+            for (a, b) in patched.ops.iter().zip(fresh.ops.iter()) {
+                assert_eq!(a.name, b.name, "names preserved");
+                assert_eq!(a.kind, b.kind);
+                assert_eq!((a.flops, a.weight_bytes, a.kv_bytes), (b.flops, b.weight_bytes, b.kv_bytes), "{}", a.name);
+                assert_eq!((a.batch, a.m, a.n, a.k), (b.batch, b.m, b.n, b.k), "{}", a.name);
+                assert_eq!((a.act_in_bytes, a.act_out_bytes), (b.act_in_bytes, b.act_out_bytes), "{}", a.name);
+            }
+        }
+    }
+
+    #[test]
+    fn batched_decode_amortizes_weights() {
+        let c = tiny_test_config();
+        let b1 = c.decode_stage_batched(100, 1);
+        let b8 = c.decode_stage_batched(100, 8);
+        // weight traffic identical up to the embed gather; flops and kv
+        // scale with batch
+        assert!((b8.weight_bytes() - b1.weight_bytes()) / b1.weight_bytes() < 0.01);
+        assert!(b8.total_flops() > 7.0 * b1.total_flops());
+        assert!(b8.kv_bytes() > 7.0 * b1.kv_bytes());
+        // batched stage intensity is higher -> closer to compute-bound
+        assert!(b8.intensity() > 4.0 * b1.intensity());
+    }
+
+    #[test]
+    fn batch_one_matches_unbatched_decode() {
+        let c = tiny_test_config();
+        let a = c.decode_stage_at(100);
+        let b = c.decode_stage_batched(100, 1);
+        assert!((a.total_flops() - b.total_flops()).abs() / a.total_flops() < 1e-9);
+        assert!((a.weight_bytes() - b.weight_bytes()).abs() < 1.0);
+        assert!((a.kv_bytes() - b.kv_bytes()).abs() < 1.0);
+    }
+
+    #[test]
+    fn action_stage_scales_with_diffusion_steps() {
+        let mut c = tiny_test_config();
+        let f1 = c.action_stage().total_flops();
+        c.action.diffusion_steps *= 2;
+        let f2 = c.action_stage().total_flops();
+        assert!(f2 > 1.8 * f1);
+    }
+}

@@ -1,0 +1,142 @@
+//! Chrome-trace (chrome://tracing / Perfetto) export of a simulated VLA
+//! control step: every operator becomes a complete event on its engine's
+//! track, phases become nested spans — the simulated twin of the Nsight
+//! timeline the paper captures on hardware.
+
+use crate::hw::Platform;
+use crate::model::VlaConfig;
+use crate::sim::{cost_op, Engine, SimOptions};
+use crate::util::json::Json;
+
+/// Build the Chrome-trace JSON document for one simulated control step.
+/// Decode positions are sampled with `options.decode_stride` to keep traces
+/// viewable; timestamps are the simulator's serial-schedule times (µs).
+pub fn chrome_trace(platform: &Platform, options: &SimOptions, cfg: &VlaConfig) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    let mut now_us = 0.0f64;
+
+    let mut emit = |name: &str, cat: &str, ts: f64, dur: f64, tid: u64| {
+        events.push(Json::obj(vec![
+            ("name", Json::Str(name.to_string())),
+            ("cat", Json::Str(cat.to_string())),
+            ("ph", Json::Str("X".into())),
+            ("ts", Json::Num(ts)),
+            ("dur", Json::Num(dur.max(0.01))),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(tid as f64)),
+        ]));
+    };
+
+    let run_stage = |stage: &crate::model::Stage, now_us: &mut f64, emit: &mut dyn FnMut(&str, &str, f64, f64, u64)| {
+        let phase_start = *now_us;
+        for op in &stage.ops {
+            let c = cost_op(platform, op, options.pim);
+            let dur = c.t_serial().max(options.host_dispatch) * 1e6;
+            let tid = match c.engine {
+                Engine::Soc => 1,
+                Engine::Pim => 2,
+            };
+            emit(&c.name, stage.phase.name(), *now_us, dur, tid);
+            *now_us += dur;
+        }
+        let phase_dur = *now_us - phase_start;
+        emit(&format!("PHASE:{}", stage.name), "phase", phase_start, phase_dur, 0);
+    };
+
+    run_stage(&cfg.vision_stage(), &mut now_us, &mut emit);
+    run_stage(&cfg.prefill_stage(), &mut now_us, &mut emit);
+    let stride = options.decode_stride.max(1);
+    let start = cfg.shape.prefill_len();
+    let mut pos = 0u64;
+    while pos < cfg.shape.decode_tokens {
+        run_stage(&cfg.decode_stage_at(start + pos), &mut now_us, &mut emit);
+        pos += stride;
+    }
+    run_stage(&cfg.action_stage(), &mut now_us, &mut emit);
+
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+        (
+            "otherData",
+            Json::obj(vec![
+                ("platform", Json::Str(platform.name.clone())),
+                ("model", Json::Str(cfg.name.clone())),
+                ("note", Json::Str("simulated schedule; decode sampled by stride".into())),
+            ]),
+        ),
+    ])
+}
+
+/// Write the trace to a file.
+pub fn export_chrome_trace(
+    platform: &Platform,
+    options: &SimOptions,
+    cfg: &VlaConfig,
+    path: &std::path::Path,
+) -> anyhow::Result<()> {
+    let doc = chrome_trace(platform, options, cfg);
+    std::fs::write(path, doc.to_string_compact())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::platform;
+    use crate::model::vla::tiny_test_config;
+
+    fn opts() -> SimOptions {
+        SimOptions {
+            decode_stride: 8,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn trace_is_valid_json_with_phases() {
+        let doc = chrome_trace(&platform::orin(), &opts(), &tiny_test_config());
+        let text = doc.to_string_compact();
+        let parsed = Json::parse(&text).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(events.len() > 50);
+        let phases: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("name").and_then(|n| n.as_str()).is_some_and(|n| n.starts_with("PHASE:")))
+            .collect();
+        // vision + prefill + sampled decode steps + action
+        assert!(phases.len() >= 4, "{} phase spans", phases.len());
+    }
+
+    #[test]
+    fn timestamps_monotone_nonoverlapping_on_track() {
+        let doc = chrome_trace(&platform::orin(), &opts(), &tiny_test_config());
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap().to_vec();
+        let mut last_end = 0.0;
+        for e in events.iter().filter(|e| e.get("tid").unwrap().as_f64() == Some(1.0)) {
+            let ts = e.get("ts").unwrap().as_f64().unwrap();
+            let dur = e.get("dur").unwrap().as_f64().unwrap();
+            assert!(ts + 1e-9 >= last_end, "ops overlap on the SoC track");
+            last_end = ts + dur;
+        }
+        assert!(last_end > 0.0);
+    }
+
+    #[test]
+    fn pim_platform_uses_pim_track() {
+        let doc = chrome_trace(&platform::orin_pim(), &opts(), &crate::model::molmoact::molmoact_7b());
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(
+            events.iter().any(|e| e.get("tid").unwrap().as_f64() == Some(2.0)),
+            "PIM track must appear on a PIM platform"
+        );
+    }
+
+    #[test]
+    fn export_writes_file() {
+        let path = std::env::temp_dir().join("vla_char_trace_test.json");
+        export_chrome_trace(&platform::thor(), &opts(), &tiny_test_config(), &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(&text).is_ok());
+    }
+}

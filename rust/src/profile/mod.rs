@@ -1,0 +1,11 @@
+//! Profiling: phase-level accumulation for real runs (the Nsight-style
+//! decomposition of §3.1) and operator-level trace analysis for simulated
+//! runs.
+
+pub mod chrome_trace;
+pub mod phases;
+pub mod trace;
+
+pub use chrome_trace::{chrome_trace, export_chrome_trace};
+pub use phases::PhaseProfiler;
+pub use trace::{top_ops, trace_table};

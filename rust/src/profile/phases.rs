@@ -1,0 +1,110 @@
+//! Phase-level profiler: accumulates `PhaseTimes` across control steps and
+//! renders the Fig 2-style breakdown for real (measured) runs.
+
+use crate::engine::PhaseTimes;
+use crate::model::Phase;
+use crate::util::stats::Summary;
+use crate::util::table::Table;
+
+/// Accumulates per-phase samples across steps.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseProfiler {
+    samples: [Vec<f64>; 4],
+}
+
+impl PhaseProfiler {
+    pub fn new() -> PhaseProfiler {
+        PhaseProfiler::default()
+    }
+
+    pub fn record(&mut self, t: &PhaseTimes) {
+        self.samples[0].push(t.vision.as_secs_f64());
+        self.samples[1].push(t.prefill.as_secs_f64());
+        self.samples[2].push(t.decode.as_secs_f64());
+        self.samples[3].push(t.action.as_secs_f64());
+    }
+
+    pub fn n_steps(&self) -> usize {
+        self.samples[0].len()
+    }
+
+    pub fn summary(&self, phase: Phase) -> Summary {
+        let idx = match phase {
+            Phase::Vision => 0,
+            Phase::Prefill => 1,
+            Phase::Decode => 2,
+            Phase::Action => 3,
+        };
+        Summary::of(&self.samples[idx])
+    }
+
+    /// Mean total step latency.
+    pub fn mean_total(&self) -> f64 {
+        Phase::ALL.iter().map(|p| self.summary(*p).mean).sum()
+    }
+
+    /// Mean generation (prefill+decode) share.
+    pub fn generation_share(&self) -> f64 {
+        let total = self.mean_total();
+        if total == 0.0 {
+            return 0.0;
+        }
+        (self.summary(Phase::Prefill).mean + self.summary(Phase::Decode).mean) / total
+    }
+
+    /// Render the measured phase breakdown.
+    pub fn table(&self, title: &str) -> Table {
+        let mut t = Table::new(
+            title,
+            &["phase", "mean (ms)", "p50 (ms)", "p99 (ms)", "share"],
+        )
+        .left_first();
+        let total = self.mean_total().max(1e-12);
+        for phase in Phase::ALL {
+            let s = self.summary(phase);
+            t.row(vec![
+                phase.to_string(),
+                format!("{:.3}", s.mean * 1e3),
+                format!("{:.3}", s.p50 * 1e3),
+                format!("{:.3}", s.p99 * 1e3),
+                format!("{:.1}%", s.mean / total * 100.0),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn times(v: u64, p: u64, d: u64, a: u64) -> PhaseTimes {
+        PhaseTimes {
+            vision: Duration::from_millis(v),
+            prefill: Duration::from_millis(p),
+            decode: Duration::from_millis(d),
+            action: Duration::from_millis(a),
+        }
+    }
+
+    #[test]
+    fn accumulates_and_summarizes() {
+        let mut prof = PhaseProfiler::new();
+        prof.record(&times(10, 20, 60, 10));
+        prof.record(&times(10, 20, 80, 10));
+        assert_eq!(prof.n_steps(), 2);
+        let d = prof.summary(Phase::Decode);
+        assert!((d.mean - 0.07).abs() < 1e-9);
+        assert!((prof.mean_total() - 0.11).abs() < 1e-9);
+        assert!((prof.generation_share() - 90.0 / 110.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_has_four_phases() {
+        let mut prof = PhaseProfiler::new();
+        prof.record(&times(1, 2, 3, 4));
+        let t = prof.table("measured");
+        assert_eq!(t.n_rows(), 4);
+    }
+}

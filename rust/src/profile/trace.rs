@@ -1,0 +1,80 @@
+//! Operator-level trace analysis (the simulated analogue of an Nsight
+//! kernel trace): cost every op in a stage and report the top-K by time
+//! with roofline attribution.
+
+use crate::hw::Platform;
+use crate::model::Stage;
+use crate::sim::{cost_op, Bound, Engine, OpCost};
+use crate::util::table::Table;
+use crate::util::units::{fmt_bytes, fmt_time};
+
+/// Cost every operator in `stage` on `platform` (no cross-op effects).
+pub fn trace_stage(platform: &Platform, stage: &Stage, allow_pim: bool) -> Vec<OpCost> {
+    stage.ops.iter().map(|op| cost_op(platform, op, allow_pim)).collect()
+}
+
+/// Top-K ops by serial time.
+pub fn top_ops(mut costs: Vec<OpCost>, k: usize) -> Vec<OpCost> {
+    costs.sort_by(|a, b| b.t_serial().partial_cmp(&a.t_serial()).unwrap());
+    costs.truncate(k);
+    costs
+}
+
+/// Render an Nsight-like kernel table.
+pub fn trace_table(title: &str, costs: &[OpCost]) -> Table {
+    let mut t = Table::new(
+        title,
+        &["op", "kind", "engine", "time", "bytes", "bound", "FLOP/byte"],
+    )
+    .left_first();
+    for c in costs {
+        t.row(vec![
+            c.name.clone(),
+            c.kind.name().to_string(),
+            match c.engine {
+                Engine::Soc => "SoC".into(),
+                Engine::Pim => "PIM".into(),
+            },
+            fmt_time(c.t_serial()),
+            fmt_bytes(c.bytes),
+            match c.bound {
+                Bound::Compute => "compute".into(),
+                Bound::Memory => "memory".into(),
+                Bound::Overhead => "overhead".into(),
+            },
+            format!("{:.2}", c.flops / c.bytes.max(1.0)),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::platform;
+    use crate::model::molmoact::molmoact_7b;
+
+    #[test]
+    fn decode_trace_dominated_by_weight_gemvs() {
+        let cfg = molmoact_7b();
+        let stage = cfg.decode_stage_at(800);
+        let costs = trace_stage(&platform::orin(), &stage, false);
+        assert_eq!(costs.len(), stage.ops.len());
+        let top = top_ops(costs, 5);
+        // the heaviest decode ops must be memory-bound weight matmuls
+        for c in &top {
+            assert_eq!(c.bound, Bound::Memory, "{}", c.name);
+        }
+        assert!(top[0].name.contains("lm_head") || top[0].name.contains("w_"));
+    }
+
+    #[test]
+    fn table_renders() {
+        let cfg = molmoact_7b();
+        let stage = cfg.decode_stage_at(100);
+        let costs = top_ops(trace_stage(&platform::orin_pim(), &stage, true), 10);
+        let t = trace_table("top ops", &costs);
+        assert_eq!(t.n_rows(), 10);
+        assert!(t.to_markdown().contains("PIM"));
+    }
+}

@@ -1,0 +1,187 @@
+//! Ablation studies over the simulator's design switches (DESIGN.md E-A1..3):
+//! cross-operator prefetch, PIM offload, batch/serving pressure, and
+//! reasoning-trace (CoT) length.
+
+use crate::hw::platform;
+use crate::model::molmoact::molmoact_7b;
+use crate::sim::{SimOptions, Simulator};
+use crate::util::table::Table;
+
+/// E-A1: cross-operator prefetch on/off, per phase (paper §3.2 calls this
+/// "particularly critical for memory-bound operations").
+pub fn prefetch_ablation() -> Table {
+    let cfg = molmoact_7b();
+    let mut t = Table::new(
+        "Ablation E-A1: cross-operator prefetch (MolmoAct-7B)",
+        &["Platform", "phase", "no prefetch (s)", "prefetch (s)", "gain"],
+    )
+    .left_first();
+    for plat in [platform::orin(), platform::thor()] {
+        let on = Simulator::with_options(
+            plat.clone(),
+            SimOptions {
+                prefetch: true,
+                decode_stride: 8,
+                ..Default::default()
+            },
+        )
+        .simulate_vla(&cfg);
+        let off = Simulator::with_options(
+            plat.clone(),
+            SimOptions {
+                prefetch: false,
+                decode_stride: 8,
+                ..Default::default()
+            },
+        )
+        .simulate_vla(&cfg);
+        for (a, b) in off.stages().iter().zip(on.stages().iter()) {
+            t.row(vec![
+                plat.name.clone(),
+                a.phase.to_string(),
+                format!("{:.3}", a.time),
+                format!("{:.3}", b.time),
+                format!("{:.2}x", a.time / b.time.max(1e-12)),
+            ]);
+        }
+    }
+    t
+}
+
+/// E-A3: how the generated-token budget (CoT / reasoning-trace length) moves
+/// the generation share — why "thinking" models hit the decode wall.
+pub fn cot_length_ablation(lengths: &[u64]) -> Table {
+    let mut t = Table::new(
+        "Ablation E-A3: reasoning-trace length vs generation share (Orin)",
+        &["decode tokens", "decode (s)", "total (s)", "gen share", "Hz"],
+    );
+    for &len in lengths {
+        let mut cfg = molmoact_7b();
+        cfg.shape.decode_tokens = len;
+        let r = Simulator::with_options(
+            platform::orin(),
+            SimOptions {
+                decode_stride: 8,
+                ..Default::default()
+            },
+        )
+        .simulate_vla(&cfg);
+        t.row(vec![
+            format!("{len}"),
+            format!("{:.2}", r.decode.time),
+            format!("{:.2}", r.total()),
+            format!("{:.1}%", r.generation_share() * 100.0),
+            format!("{:.4}", r.control_frequency()),
+        ]);
+    }
+    t
+}
+
+/// E-A2 variant at the simulator level: action-chunk horizon amortization —
+/// executing longer chunks per step raises actions/s at the cost of
+/// staleness (open-loop horizon).
+pub fn horizon_ablation(horizons: &[u64]) -> Table {
+    let mut t = Table::new(
+        "Ablation E-A2: action-chunk horizon amortization (Orin+PIM, 7B)",
+        &["horizon", "step latency (s)", "steps Hz", "actions Hz"],
+    );
+    for &h in horizons {
+        let mut cfg = molmoact_7b();
+        cfg.action.horizon = h;
+        let r = Simulator::with_options(
+            platform::orin_pim(),
+            SimOptions {
+                decode_stride: 8,
+                ..Default::default()
+            },
+        )
+        .simulate_vla(&cfg);
+        t.row(vec![
+            format!("{h}"),
+            format!("{:.3}", r.total()),
+            format!("{:.3}", r.control_frequency()),
+            format!("{:.3}", r.amortized_frequency()),
+        ]);
+    }
+    t
+}
+
+/// Framework ablation: measured PyTorch-eager configuration vs an idealized
+/// compiled runtime — how much of Fig 2 is framework overhead vs physics.
+pub fn framework_ablation() -> Table {
+    let cfg = molmoact_7b();
+    let mut t = Table::new(
+        "Ablation: eager framework overhead vs compiled runtime (MolmoAct-7B)",
+        &["Platform", "eager total (s)", "compiled total (s)", "gap", "compiled gen share"],
+    )
+    .left_first();
+    for plat in [platform::orin(), platform::thor()] {
+        let eager = Simulator::with_options(
+            plat.clone(),
+            SimOptions {
+                decode_stride: 8,
+                ..Default::default()
+            },
+        )
+        .simulate_vla(&cfg);
+        let compiled = Simulator::with_options(
+            plat.clone(),
+            SimOptions {
+                decode_stride: 8,
+                ..SimOptions::compiled()
+            },
+        )
+        .simulate_vla(&cfg);
+        t.row(vec![
+            plat.name.clone(),
+            format!("{:.2}", eager.total()),
+            format!("{:.2}", compiled.total()),
+            format!("{:.2}x", eager.total() / compiled.total()),
+            format!("{:.1}%", compiled.generation_share() * 100.0),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefetch_table_shows_gains() {
+        let t = prefetch_ablation();
+        assert_eq!(t.n_rows(), 8);
+        // every gain cell >= 1.00x
+        for r in 0..t.n_rows() {
+            let gain: f64 = t.cell(r, 4).trim_end_matches('x').parse().unwrap();
+            assert!(gain >= 0.99, "prefetch should never hurt: row {r} gain {gain}");
+        }
+    }
+
+    #[test]
+    fn cot_share_grows_with_length() {
+        let t = cot_length_ablation(&[32, 128, 512]);
+        let share = |r: usize| -> f64 {
+            t.cell(r, 3).trim_end_matches('%').parse().unwrap()
+        };
+        assert!(share(0) < share(1) && share(1) < share(2));
+    }
+
+    #[test]
+    fn horizon_amortizes() {
+        let t = horizon_ablation(&[1, 8, 32]);
+        let actions_hz = |r: usize| -> f64 { t.cell(r, 3).parse().unwrap() };
+        assert!(actions_hz(2) > actions_hz(0) * 8.0);
+    }
+
+    #[test]
+    fn compiled_runtime_faster_but_still_bound() {
+        let t = framework_ablation();
+        for r in 0..t.n_rows() {
+            let gap: f64 = t.cell(r, 3).trim_end_matches('x').parse().unwrap();
+            assert!(gap >= 1.0);
+            let share: f64 = t.cell(r, 4).trim_end_matches('%').parse().unwrap();
+            assert!(share > 60.0, "decode dominates even compiled: {share}%");
+        }
+    }
+}

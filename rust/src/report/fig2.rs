@@ -1,0 +1,113 @@
+//! Figure 2 reproduction: per-phase latency of MolmoAct-7B on the commercial
+//! edge platforms (Orin, Thor), plus the derived claims of §4.1:
+//! latency vs the 10 Hz budget, generation share, and Thor-vs-Orin speedup.
+
+use crate::hw::platform;
+use crate::model::molmoact::molmoact_7b;
+use crate::sim::{SimOptions, Simulator, VlaSimResult};
+use crate::util::table::{ascii_bars, Table};
+use crate::util::units::{fmt_pct, fmt_ratio, fmt_time};
+
+/// All data behind Fig 2.
+#[derive(Debug, Clone)]
+pub struct Fig2 {
+    pub orin: VlaSimResult,
+    pub thor: VlaSimResult,
+}
+
+/// Run the Fig 2 experiment (simulated Jetson platforms, PyTorch-runtime
+/// overhead model — see DESIGN.md §2 for the substitution).
+pub fn run(options: &SimOptions) -> Fig2 {
+    let cfg = molmoact_7b();
+    Fig2 {
+        orin: Simulator::with_options(platform::orin(), options.clone()).simulate_vla(&cfg),
+        thor: Simulator::with_options(platform::thor(), options.clone()).simulate_vla(&cfg),
+    }
+}
+
+impl Fig2 {
+    /// The paper's phase-latency table (one row per platform).
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "Figure 2: MolmoAct-7B latency on current edge platforms",
+            &[
+                "Platform",
+                "vision (s)",
+                "prefill (s)",
+                "decode (s)",
+                "action (s)",
+                "total (s)",
+                "gen share",
+                "vs 10Hz budget",
+            ],
+        )
+        .left_first();
+        for r in [&self.orin, &self.thor] {
+            t.row(vec![
+                r.platform.clone(),
+                format!("{:.2}", r.vision.time),
+                format!("{:.2}", r.prefill.time),
+                format!("{:.2}", r.decode.time),
+                format!("{:.2}", r.action.time),
+                format!("{:.2}", r.total()),
+                fmt_pct(r.generation_share()),
+                format!("{:.0}x", r.total() / 0.1),
+            ]);
+        }
+        t
+    }
+
+    /// ASCII bar chart of the stacked phase decomposition.
+    pub fn bars(&self) -> String {
+        let mut items = Vec::new();
+        for r in [&self.orin, &self.thor] {
+            for s in r.stages() {
+                items.push((format!("{} {}", r.platform, s.phase), s.time));
+            }
+        }
+        ascii_bars("Fig 2: phase latency (s)", &items, "s", 48)
+    }
+
+    /// Headline numbers of §4.1.
+    pub fn summary(&self) -> String {
+        format!(
+            "E2E: Orin {} ({}x over 10 Hz budget), Thor {} ({}x)\n\
+             generation share: Orin {}, Thor {}\n\
+             Thor speedup {} (compute ratio 5.0x -> memory-bound)\n\
+             decode memory-bound: Orin {}, Thor {}",
+            fmt_time(self.orin.total()),
+            (self.orin.total() / 0.1).round(),
+            fmt_time(self.thor.total()),
+            (self.thor.total() / 0.1).round(),
+            fmt_pct(self.orin.generation_share()),
+            fmt_pct(self.thor.generation_share()),
+            fmt_ratio(self.orin.total() / self.thor.total()),
+            self.orin.decode.memory_bound(),
+            self.thor.decode.memory_bound(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_runs_and_renders() {
+        let f = run(&SimOptions::default());
+        let t = f.table();
+        assert_eq!(t.n_rows(), 2);
+        assert!(f.bars().contains("Orin decode"));
+        assert!(f.summary().contains("generation share"));
+    }
+
+    #[test]
+    fn fig2_decode_is_largest_phase() {
+        let f = run(&SimOptions::default());
+        for r in [&f.orin, &f.thor] {
+            assert!(r.decode.time > r.vision.time);
+            assert!(r.decode.time > r.prefill.time);
+            assert!(r.decode.time > r.action.time);
+        }
+    }
+}

@@ -1,0 +1,157 @@
+//! Figure 3 reproduction: control frequency for scaled VLA models
+//! (2 B – 100 B) across the Table 1 platform matrix, against the 10–20 Hz
+//! real-time band.
+
+use crate::hw::platform::table1_platforms;
+use crate::model::scaling::{scaled_vla, ANCHOR_SIZES_B};
+use crate::sim::{SimOptions, Simulator};
+use crate::util::table::Table;
+
+/// One (model size, platform) cell.
+#[derive(Debug, Clone)]
+pub struct Fig3Cell {
+    pub size_b: f64,
+    pub platform: String,
+    /// One-step control frequency (Hz).
+    pub hz: f64,
+    /// Amortized over the action-chunk horizon (actions/s).
+    pub amortized_hz: f64,
+    pub total_latency: f64,
+    pub generation_share: f64,
+}
+
+/// The full sweep.
+#[derive(Debug, Clone)]
+pub struct Fig3 {
+    pub sizes: Vec<f64>,
+    pub platforms: Vec<String>,
+    pub cells: Vec<Fig3Cell>,
+}
+
+/// Run the Fig 3 sweep. `decode_stride` > 1 accelerates the decode-phase
+/// integration with negligible error (see sim tests).
+pub fn run(options: &SimOptions, sizes: &[f64]) -> Fig3 {
+    let platforms = table1_platforms();
+    let mut cells = Vec::new();
+    for &size in sizes {
+        let cfg = scaled_vla(size);
+        for p in &platforms {
+            let sim = Simulator::with_options(p.clone(), options.clone());
+            let r = sim.simulate_vla(&cfg);
+            cells.push(Fig3Cell {
+                size_b: size,
+                platform: p.name.clone(),
+                hz: r.control_frequency(),
+                amortized_hz: r.amortized_frequency(),
+                total_latency: r.total(),
+                generation_share: r.generation_share(),
+            });
+        }
+    }
+    Fig3 {
+        sizes: sizes.to_vec(),
+        platforms: platforms.iter().map(|p| p.name.clone()).collect(),
+        cells,
+    }
+}
+
+/// Default Fig 3 (all anchor sizes).
+pub fn run_default(options: &SimOptions) -> Fig3 {
+    run(options, &ANCHOR_SIZES_B)
+}
+
+impl Fig3 {
+    pub fn cell(&self, size_b: f64, platform: &str) -> Option<&Fig3Cell> {
+        self.cells
+            .iter()
+            .find(|c| (c.size_b - size_b).abs() < 1e-9 && c.platform == platform)
+    }
+
+    /// Control-frequency matrix: rows = platforms, cols = model sizes.
+    pub fn table(&self, amortized: bool) -> Table {
+        let mut headers: Vec<String> = vec!["Platform".into()];
+        headers.extend(self.sizes.iter().map(|s| format!("{s:.0}B (Hz)")));
+        let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let title = if amortized {
+            "Figure 3b: amortized control frequency (action chunks, Hz)"
+        } else {
+            "Figure 3: control frequency across edge system configurations (Hz)"
+        };
+        let mut t = Table::new(title, &hdr_refs).left_first();
+        for p in &self.platforms {
+            let mut row = vec![p.clone()];
+            for &s in &self.sizes {
+                let c = self.cell(s, p).unwrap();
+                let hz = if amortized { c.amortized_hz } else { c.hz };
+                row.push(format!("{hz:.3}"));
+            }
+            t.row(row);
+        }
+        t
+    }
+
+    /// Which cells reach the 10 Hz target (amortized)?
+    pub fn reaching_target(&self, target_hz: f64) -> Vec<&Fig3Cell> {
+        self.cells
+            .iter()
+            .filter(|c| c.amortized_hz >= target_hz)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_sweep() -> Fig3 {
+        let opt = SimOptions {
+            decode_stride: 16,
+            ..Default::default()
+        };
+        run(&opt, &[7.0, 100.0])
+    }
+
+    #[test]
+    fn sweep_covers_matrix() {
+        let f = small_sweep();
+        assert_eq!(f.cells.len(), 2 * 7);
+        assert_eq!(f.table(false).n_rows(), 7);
+    }
+
+    #[test]
+    fn frequency_monotone_in_size() {
+        let f = small_sweep();
+        for p in &f.platforms {
+            let hz7 = f.cell(7.0, p).unwrap().hz;
+            let hz100 = f.cell(100.0, p).unwrap().hz;
+            assert!(hz7 > hz100, "{p}: 7B {hz7} must beat 100B {hz100}");
+        }
+    }
+
+    #[test]
+    fn memory_upgrades_increase_frequency() {
+        let f = small_sweep();
+        for &s in &[7.0, 100.0] {
+            let base = f.cell(s, "Orin").unwrap().hz;
+            let l5x = f.cell(s, "Orin+LPDDR5X").unwrap().hz;
+            let g7 = f.cell(s, "Orin+GDDR7").unwrap().hz;
+            let pim = f.cell(s, "Orin+PIM").unwrap().hz;
+            assert!(l5x > base && g7 > l5x && pim > g7, "{s}B: {base} {l5x} {g7} {pim}");
+        }
+    }
+
+    #[test]
+    fn hundred_b_misses_target_everywhere() {
+        // Paper: "achieving the 10 Hz target ... at larger model sizes
+        // requires new innovations"
+        let f = small_sweep();
+        for p in &f.platforms {
+            let c = f.cell(100.0, p).unwrap();
+            assert!(
+                c.amortized_hz < 10.0,
+                "{p} at 100B should miss 10 Hz: {}",
+                c.amortized_hz
+            );
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Experiment reproduction harness: one module per paper artifact (Table 1,
+//! Fig 2, Fig 3), ablations, and the paper-shape acceptance checks.
+
+pub mod ablations;
+pub mod checks;
+pub mod fig2;
+pub mod fig3;
+
+pub use checks::{check_fig2, check_fig3, render, Check};

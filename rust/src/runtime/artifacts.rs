@@ -1,0 +1,231 @@
+//! Artifact discovery and manifest parsing.
+//!
+//! `make artifacts` (the build-time python path) writes HLO-text modules,
+//! the flat parameter vector, and `manifest.json` into `artifacts/`. This
+//! module locates that directory and exposes the manifest to the runtime —
+//! python is never imported at run time.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub n_params: usize,
+    pub params_sha256: String,
+    pub vision: VisionDims,
+    pub decoder: DecoderDims,
+    pub action: ActionDims,
+    pub workload: WorkloadDims,
+    pub golden: Golden,
+}
+
+#[derive(Debug, Clone)]
+pub struct VisionDims {
+    pub patches: usize,
+    pub patch_dim: usize,
+    pub layers: usize,
+    pub hidden: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct DecoderDims {
+    pub layers: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ActionDims {
+    pub horizon: usize,
+    pub action_dim: usize,
+    pub diffusion_steps: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct WorkloadDims {
+    pub image_tokens: usize,
+    pub prompt_tokens: usize,
+    pub decode_tokens: usize,
+    pub prefill_len: usize,
+}
+
+/// Golden outputs recorded by the AOT pipeline; the rust runtime must
+/// reproduce them bit-for-bit-ish (f32 tolerance) through the artifacts.
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub patch_seed: u64,
+    pub prompt_token_ids: Vec<i32>,
+    pub first_tokens: Vec<i64>,
+    pub next_token: i64,
+    pub embeds_sum: f64,
+    pub actions_sum: f64,
+    pub actions_first_row: Vec<f64>,
+    pub prefill_logits_l2: f64,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> anyhow::Result<Manifest> {
+        let j = Json::parse(text)?;
+        let v = j.get("vision").ok_or_else(|| anyhow::anyhow!("missing vision"))?;
+        let d = j.get("decoder").ok_or_else(|| anyhow::anyhow!("missing decoder"))?;
+        let a = j.get("action").ok_or_else(|| anyhow::anyhow!("missing action"))?;
+        let w = j.get("workload").ok_or_else(|| anyhow::anyhow!("missing workload"))?;
+        let g = j.get("golden").ok_or_else(|| anyhow::anyhow!("missing golden"))?;
+        Ok(Manifest {
+            n_params: j.req_u64("n_params")? as usize,
+            params_sha256: j.req_str("params_sha256")?.to_string(),
+            vision: VisionDims {
+                patches: v.req_u64("patches")? as usize,
+                patch_dim: v.req_u64("patch_dim")? as usize,
+                layers: v.req_u64("layers")? as usize,
+                hidden: v.req_u64("hidden")? as usize,
+            },
+            decoder: DecoderDims {
+                layers: d.req_u64("layers")? as usize,
+                hidden: d.req_u64("hidden")? as usize,
+                heads: d.req_u64("heads")? as usize,
+                kv_heads: d.req_u64("kv_heads")? as usize,
+                head_dim: d.req_u64("head_dim")? as usize,
+                ffn: d.req_u64("ffn")? as usize,
+                vocab: d.req_u64("vocab")? as usize,
+                max_seq: d.req_u64("max_seq")? as usize,
+            },
+            action: ActionDims {
+                horizon: a.req_u64("horizon")? as usize,
+                action_dim: a.req_u64("action_dim")? as usize,
+                diffusion_steps: a.req_u64("diffusion_steps")? as usize,
+            },
+            workload: WorkloadDims {
+                image_tokens: w.req_u64("image_tokens")? as usize,
+                prompt_tokens: w.req_u64("prompt_tokens")? as usize,
+                decode_tokens: w.req_u64("decode_tokens")? as usize,
+                prefill_len: w.req_u64("prefill_len")? as usize,
+            },
+            golden: Golden {
+                patch_seed: g.req_u64("patch_seed")?,
+                prompt_token_ids: g
+                    .get("prompt_token_ids")
+                    .and_then(|x| x.as_arr())
+                    .map(|a| a.iter().filter_map(|t| t.as_u64().map(|u| u as i32)).collect())
+                    .unwrap_or_default(),
+                first_tokens: g
+                    .get("first_tokens")
+                    .and_then(|x| x.as_arr())
+                    .map(|a| a.iter().filter_map(|t| t.as_u64().map(|u| u as i64)).collect())
+                    .unwrap_or_default(),
+                next_token: g.req_u64("next_token")? as i64,
+                embeds_sum: g.req_f64("embeds_sum")?,
+                actions_sum: g.req_f64("actions_sum")?,
+                actions_first_row: g
+                    .get("actions_first_row")
+                    .and_then(|x| x.as_arr())
+                    .map(|a| a.iter().filter_map(|t| t.as_f64()).collect())
+                    .unwrap_or_default(),
+                prefill_logits_l2: g.req_f64("prefill_logits_l2")?,
+            },
+        })
+    }
+}
+
+/// Locate the artifacts directory: `$VLA_ARTIFACTS`, else `artifacts/`
+/// relative to the workspace (walking up from cwd).
+pub fn artifacts_dir() -> anyhow::Result<PathBuf> {
+    if let Ok(dir) = std::env::var("VLA_ARTIFACTS") {
+        let p = PathBuf::from(dir);
+        if p.join("manifest.json").exists() {
+            return Ok(p);
+        }
+        anyhow::bail!("VLA_ARTIFACTS={} has no manifest.json", p.display());
+    }
+    let mut cur = std::env::current_dir()?;
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return Ok(cand);
+        }
+        if !cur.pop() {
+            anyhow::bail!(
+                "artifacts/manifest.json not found (run `make artifacts` or set VLA_ARTIFACTS)"
+            );
+        }
+    }
+}
+
+/// Load + parse the manifest in `dir`.
+pub fn load_manifest(dir: &Path) -> anyhow::Result<Manifest> {
+    let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+    Manifest::parse(&text)
+}
+
+/// Read the little-endian f32 parameter vector.
+pub fn load_params(dir: &Path, expect_n: usize) -> anyhow::Result<Vec<f32>> {
+    let raw = std::fs::read(dir.join("params.f32.bin"))?;
+    anyhow::ensure!(
+        raw.len() == 4 * expect_n,
+        "params.f32.bin has {} bytes, expected {}",
+        raw.len(),
+        4 * expect_n
+    );
+    Ok(raw
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "n_params": 10, "params_sha256": "ab",
+      "vision": {"patches": 64, "patch_dim": 147, "layers": 2, "hidden": 128},
+      "decoder": {"layers": 4, "hidden": 256, "heads": 8, "kv_heads": 2,
+                  "head_dim": 32, "ffn": 1024, "vocab": 2048, "max_seq": 128},
+      "action": {"horizon": 8, "action_dim": 7, "diffusion_steps": 4},
+      "workload": {"image_tokens": 64, "prompt_tokens": 16,
+                   "decode_tokens": 24, "prefill_len": 80},
+      "golden": {"patch_seed": 42, "prompt_token_ids": [9, 8],
+                 "first_tokens": [1, 2],
+                 "next_token": 3, "embeds_sum": 1.5, "actions_sum": -0.25,
+                 "actions_first_row": [0.1, -0.2],
+                 "prefill_logits_l2": 12.25}
+    }"#;
+
+    #[test]
+    fn parse_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.n_params, 10);
+        assert_eq!(m.decoder.vocab, 2048);
+        assert_eq!(m.workload.prefill_len, 80);
+        assert_eq!(m.golden.first_tokens, vec![1, 2]);
+        assert_eq!(m.golden.actions_first_row.len(), 2);
+    }
+
+    #[test]
+    fn parse_rejects_missing_fields() {
+        assert!(Manifest::parse("{}").is_err());
+        let no_vocab = SAMPLE.replace("\"vocab\": 2048,", "");
+        assert!(Manifest::parse(&no_vocab).is_err());
+    }
+
+    #[test]
+    fn params_loader_checks_size() {
+        let dir = std::env::temp_dir().join("vla_char_artifacts_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let vals: [f32; 3] = [1.0, -2.5, 3.25];
+        let mut bytes = Vec::new();
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(dir.join("params.f32.bin"), &bytes).unwrap();
+        let loaded = load_params(&dir, 3).unwrap();
+        assert_eq!(loaded, vals);
+        assert!(load_params(&dir, 4).is_err());
+    }
+}

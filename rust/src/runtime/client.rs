@@ -1,0 +1,151 @@
+//! PJRT runtime wrapper: load HLO-text artifacts, compile once, execute from
+//! the rust hot path with wall-clock phase timing.
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+/// A PJRT client plus compiled executables. One `Runtime` per process.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client (the only backend in this environment).
+    pub fn cpu() -> anyhow::Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(anyhow::Error::msg)?;
+        crate::log_debug!(
+            "PJRT client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime { client })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Clone the underlying PJRT client handle (cheap reference clone) so
+    /// long-lived components can create device buffers.
+    pub fn client_handle(&self) -> xla::PjRtClient {
+        self.client.clone()
+    }
+
+    /// Upload a host literal to a device buffer (done once for weights —
+    /// PERF: keeps the parameter vector resident instead of re-uploading
+    /// ~23 MB on every phase invocation).
+    pub fn buffer_from_literal(&self, lit: &xla::Literal) -> anyhow::Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .map_err(anyhow::Error::msg)
+    }
+
+    /// Load an HLO-text module and compile it. Compilation happens once at
+    /// startup; the request path only executes.
+    pub fn load_hlo_text(&self, path: &Path) -> anyhow::Result<CompiledModule> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(anyhow::Error::msg)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(anyhow::Error::msg)?;
+        let name = path
+            .file_name()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "<module>".into());
+        crate::log_debug!("compiled {} in {:?}", name, t0.elapsed());
+        Ok(CompiledModule { exe, name })
+    }
+}
+
+/// One compiled model entry point.
+pub struct CompiledModule {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl CompiledModule {
+    /// Execute with literal inputs passed BY REFERENCE (PERF: `xla::Literal`
+    /// is deeply cloned by `Clone`; the 23 MB parameter vector must not be
+    /// copied on every decode step). Returns the decomposed output tuple and
+    /// the device wall time. The AOT pipeline lowers with return_tuple=True,
+    /// so the single output buffer is always a tuple.
+    pub fn run(&self, args: &[&xla::Literal]) -> anyhow::Result<(Vec<xla::Literal>, Duration)> {
+        let t0 = Instant::now();
+        let bufs = self.exe.execute::<&xla::Literal>(args).map_err(anyhow::Error::msg)?;
+        let lit = bufs[0][0].to_literal_sync().map_err(anyhow::Error::msg)?;
+        let parts = lit.to_tuple().map_err(anyhow::Error::msg)?;
+        Ok((parts, t0.elapsed()))
+    }
+
+    /// Execute with device-buffer inputs (weights stay resident on device).
+    ///
+    /// CAUTION: with the bundled xla_extension 0.5.1 CPU plugin, repeated
+    /// `execute_b` calls on a multi-output executable abort inside XLA
+    /// (`shape_util.cc: pointer_size > 0`). The engine therefore uses the
+    /// literal-reference [`CompiledModule::run`] path; this entry point is
+    /// kept for single-output modules and future plugin versions (it was
+    /// stable for the single-output vision module across 400+ calls).
+    pub fn run_b(&self, args: &[&xla::PjRtBuffer]) -> anyhow::Result<(Vec<xla::Literal>, Duration)> {
+        let t0 = Instant::now();
+        let bufs = self.exe.execute_b::<&xla::PjRtBuffer>(args).map_err(anyhow::Error::msg)?;
+        let lit = bufs[0][0].to_literal_sync().map_err(anyhow::Error::msg)?;
+        let parts = lit.to_tuple().map_err(anyhow::Error::msg)?;
+        Ok((parts, t0.elapsed()))
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn f32_literal(data: &[f32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/product mismatch");
+    let lit = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        Ok(lit)
+    } else {
+        lit.reshape(dims).map_err(anyhow::Error::msg)
+    }
+}
+
+/// Scalar i32 literal (jax int32 inputs).
+pub fn i32_scalar(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// 1-D i32 literal.
+pub fn i32_vec(vals: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(vals)
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_f32_vec(lit: &xla::Literal) -> anyhow::Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(anyhow::Error::msg)
+}
+
+/// Index of the maximum element (greedy sampling).
+pub fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, x) in v.iter().enumerate() {
+        if *x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[1.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[-5.0]), 0);
+        assert_eq!(argmax(&[2.0, 2.0]), 0, "first max wins");
+    }
+
+    #[test]
+    fn f32_literal_shapes() {
+        let l = f32_literal(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        assert!(f32_literal(&[1.0], &[2]).is_err());
+    }
+}

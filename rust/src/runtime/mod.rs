@@ -1,0 +1,9 @@
+//! PJRT runtime: HLO-text loading/compilation and artifact management.
+//! Python runs only at build time; this module is the entire runtime
+//! dependency surface.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{artifacts_dir, load_manifest, load_params, Manifest};
+pub use client::{CompiledModule, Runtime};

@@ -1,0 +1,290 @@
+//! Algorithm–system co-design projections.
+//!
+//! The paper's conclusion: "Standard memory scaling is insufficient ...
+//! Future research must explore holistic system optimizations — both
+//! hardware and software — to bridge the latency gap." This module models
+//! the leading software-side levers on top of the hardware matrix, each as
+//! a transformation of the workload or of the effective decode cost:
+//!
+//! - **Weight quantization** (W8/W4): decode streams fewer bytes per token.
+//! - **KV-cache quantization**: shrinks cache traffic (matters at long CoT).
+//! - **Speculative decoding**: a small draft model proposes `gamma` tokens,
+//!   the target verifies them in one batched pass (accept rate `alpha`).
+//! - **Reasoning-trace compression**: fewer generated tokens per step.
+//! - **Batched multi-robot serving**: aggregate tokens/s vs per-stream Hz.
+
+use super::simulator::{SimOptions, Simulator};
+use crate::hw::{DType, Platform};
+use crate::model::vla::VlaConfig;
+use crate::util::table::Table;
+
+/// Scale all weight bytes of a config's decoder by using a narrower dtype
+/// (keeps activations in bf16 — W8A16-style inference).
+fn quantize_weights(cfg: &VlaConfig, bits: u32) -> VlaConfig {
+    let mut c = cfg.clone();
+    // model narrower weights by scaling weight_bytes via dtype substitution:
+    // I8 for 8-bit; 4-bit is modeled as I8 with half the layers' bytes, so
+    // instead we scale the stage at simulation time. Simplest faithful knob:
+    // swap the decoder dtype and let bytes follow.
+    c.decoder.dims.dtype = match bits {
+        8 => DType::I8,
+        _ => c.decoder.dims.dtype,
+    };
+    c
+}
+
+/// One co-design configuration and its projected effect.
+#[derive(Debug, Clone)]
+pub struct CodesignResult {
+    pub technique: String,
+    pub step_latency: f64,
+    pub control_hz: f64,
+    pub amortized_hz: f64,
+    pub speedup_vs_baseline: f64,
+}
+
+/// Decode-phase latency of `cfg` on `platform` (helper).
+fn decode_time(platform: &Platform, options: &SimOptions, cfg: &VlaConfig) -> f64 {
+    Simulator::with_options(platform.clone(), options.clone())
+        .simulate_decode(cfg)
+        .time
+}
+
+/// Full-step latency with an overridden decode time.
+fn step_with_decode(platform: &Platform, options: &SimOptions, cfg: &VlaConfig, decode: f64) -> f64 {
+    let sim = Simulator::with_options(platform.clone(), options.clone());
+    let r = sim.simulate_vla(cfg);
+    r.vision.time + r.prefill.time + decode + r.action.time
+}
+
+/// Speculative decoding: draft model of `draft_size_b` proposes `gamma`
+/// tokens per target pass; expected accepted tokens per verify is
+/// E = (1 - alpha^(gamma+1)) / (1 - alpha). Target verification of gamma+1
+/// tokens is one batched pass (weights read once). Returns projected decode
+/// time for the full trace.
+pub fn speculative_decode_time(
+    platform: &Platform,
+    options: &SimOptions,
+    target: &VlaConfig,
+    draft: &VlaConfig,
+    gamma: u64,
+    alpha: f64,
+) -> f64 {
+    let n = target.shape.decode_tokens as f64;
+    let expected_accept = (1.0 - alpha.powi(gamma as i32 + 1)) / (1.0 - alpha).max(1e-9);
+    let rounds = n / expected_accept;
+    // draft runs gamma sequential single-token steps per round
+    let draft_step = decode_time(platform, options, draft) / draft.shape.decode_tokens as f64;
+    // target verifies gamma+1 tokens in one batched pass at mid-trace KV len
+    let kv_mid = target.shape.prefill_len() + target.shape.decode_tokens / 2;
+    let verify = Simulator::with_options(platform.clone(), options.clone())
+        .simulate_stage(&target.decode_stage_batched(kv_mid, gamma + 1))
+        .time;
+    rounds * (gamma as f64 * draft_step + verify)
+}
+
+/// Run the co-design study on one platform.
+pub fn codesign_study(
+    platform: &Platform,
+    options: &SimOptions,
+    target: &VlaConfig,
+    draft: &VlaConfig,
+) -> Vec<CodesignResult> {
+    let horizon = target.action.horizon as f64;
+    let base_decode = decode_time(platform, options, target);
+    let base_total = step_with_decode(platform, options, target, base_decode);
+    let mut out = Vec::new();
+    let mut push = |name: &str, total: f64| {
+        out.push(CodesignResult {
+            technique: name.into(),
+            step_latency: total,
+            control_hz: 1.0 / total,
+            amortized_hz: horizon / total,
+            speedup_vs_baseline: base_total / total,
+        });
+    };
+
+    push("baseline (bf16, full trace)", base_total);
+
+    // W8 weight quantization
+    let w8 = quantize_weights(target, 8);
+    let t = decode_time(platform, options, &w8);
+    push("W8 weight quantization", step_with_decode(platform, options, target, t));
+
+    // KV quantization: decode KV traffic halved — model by rebuilding with
+    // half decode positions' KV (approx: scale kv-heavy ops via shorter len)
+    let mut kv8 = target.clone();
+    kv8.decoder.dims.dtype = target.decoder.dims.dtype; // weights unchanged
+    // approximate: KV bytes halve => same as halving kv_len contribution
+    let kv_t = {
+        let full = decode_time(platform, options, target);
+        let mut short = target.clone();
+        short.shape.prompt_tokens /= 2;
+        short.shape.image_tokens /= 2; // halves kv_len trajectory
+        let less_kv = decode_time(platform, options, &short);
+        // kv traffic is the delta driver; take midpoint as the W16/KV8 estimate
+        (full + less_kv) / 2.0
+    };
+    push("KV-cache 8-bit (approx)", step_with_decode(platform, options, target, kv_t));
+
+    // reasoning-trace compression to half the tokens
+    let mut short_cot = target.clone();
+    short_cot.shape.decode_tokens /= 2;
+    let t = decode_time(platform, options, &short_cot);
+    push("trace compression (0.5x tokens)", step_with_decode(platform, options, target, t));
+
+    // speculative decoding, gamma=4, alpha=0.7
+    let t = speculative_decode_time(platform, options, target, draft, 4, 0.7);
+    push("speculative decode (g=4, a=0.7)", step_with_decode(platform, options, target, t));
+
+    // combined: W8 + trace compression + speculation
+    let mut combo = quantize_weights(target, 8);
+    combo.shape.decode_tokens /= 2;
+    let t = speculative_decode_time(platform, options, &combo, draft, 4, 0.7);
+    push("combined (W8 + 0.5x trace + spec)", step_with_decode(platform, options, target, t));
+
+    out
+}
+
+/// Render the study as a table.
+pub fn codesign_table(platform_name: &str, results: &[CodesignResult]) -> Table {
+    let mut t = Table::new(
+        &format!("Co-design projections on {platform_name} (MolmoAct-7B)"),
+        &["technique", "step (s)", "Hz", "actions/s", "speedup"],
+    )
+    .left_first();
+    for r in results {
+        t.row(vec![
+            r.technique.clone(),
+            format!("{:.2}", r.step_latency),
+            format!("{:.3}", r.control_hz),
+            format!("{:.3}", r.amortized_hz),
+            format!("{:.2}x", r.speedup_vs_baseline),
+        ]);
+    }
+    t
+}
+
+/// Batched serving study: per-stream latency vs aggregate throughput
+/// (E-A2). Shows batching recovers aggregate tokens/s but NOT per-robot
+/// control latency.
+pub fn batch_study(platform: &Platform, options: &SimOptions, cfg: &VlaConfig, batches: &[u64]) -> Table {
+    let mut t = Table::new(
+        &format!("Batched decode on {} ({})", platform.name, cfg.name),
+        &["batch", "step time (ms)", "per-stream tok/s", "aggregate tok/s", "intensity (FLOP/B)"],
+    );
+    let kv = cfg.shape.prefill_len() + cfg.shape.decode_tokens / 2;
+    for &b in batches {
+        let stage = cfg.decode_stage_batched(kv, b);
+        let r = Simulator::with_options(platform.clone(), options.clone()).simulate_stage(&stage);
+        t.row(vec![
+            format!("{b}"),
+            format!("{:.2}", r.time * 1e3),
+            format!("{:.2}", 1.0 / r.time),
+            format!("{:.2}", b as f64 / r.time),
+            format!("{:.2}", stage.intensity()),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::platform;
+    use crate::model::molmoact::molmoact_7b;
+    use crate::model::scaling::scaled_vla;
+
+    fn opts() -> SimOptions {
+        SimOptions {
+            decode_stride: 16,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn every_technique_helps() {
+        let results = codesign_study(&platform::orin(), &opts(), &molmoact_7b(), &scaled_vla(2.0));
+        assert_eq!(results.len(), 6);
+        for r in &results[1..] {
+            // KV quantization is ~neutral at 7B: GQA keeps the cache tiny
+            // relative to 14 GB of weights per token — itself a finding.
+            let floor = if r.technique.starts_with("KV") { 0.99 } else { 1.0 };
+            assert!(
+                r.speedup_vs_baseline > floor,
+                "{} should not slow decode: {}x",
+                r.technique,
+                r.speedup_vs_baseline
+            );
+        }
+    }
+
+    #[test]
+    fn w8_speedup_tracks_bytes() {
+        let results = codesign_study(&platform::orin(), &opts(), &molmoact_7b(), &scaled_vla(2.0));
+        let w8 = results.iter().find(|r| r.technique.starts_with("W8")).unwrap();
+        // halving weight bytes on a BW-bound decode ~ 1.5-2x end-to-end
+        assert!(
+            (1.3..2.2).contains(&w8.speedup_vs_baseline),
+            "W8 speedup {}",
+            w8.speedup_vs_baseline
+        );
+    }
+
+    #[test]
+    fn combined_beats_individuals() {
+        let results = codesign_study(&platform::orin(), &opts(), &molmoact_7b(), &scaled_vla(2.0));
+        let combined = results.last().unwrap().speedup_vs_baseline;
+        for r in &results[1..results.len() - 1] {
+            if r.technique.starts_with("KV") {
+                continue; // ~neutral at 7B, see every_technique_helps
+            }
+            assert!(
+                combined > r.speedup_vs_baseline,
+                "combined {combined} <= {} ({})",
+                r.speedup_vs_baseline,
+                r.technique
+            );
+        }
+    }
+
+    #[test]
+    fn codesign_plus_pim_approaches_target() {
+        // the paper's thesis: hardware OR software alone is insufficient;
+        // together they close most of the gap at 7B
+        let results = codesign_study(&platform::thor_pim(), &opts(), &molmoact_7b(), &scaled_vla(2.0));
+        let combined = results.last().unwrap();
+        assert!(
+            combined.amortized_hz > 2.0,
+            "PIM + co-design should approach the 10 Hz band: {} actions/s",
+            combined.amortized_hz
+        );
+        // and co-design still adds a solid margin on top of PIM hardware
+        let base = &results[0];
+        assert!(combined.amortized_hz > base.amortized_hz * 1.3);
+    }
+
+    #[test]
+    fn batching_raises_aggregate_not_per_stream() {
+        let t = batch_study(&platform::orin(), &opts(), &molmoact_7b(), &[1, 4, 16]);
+        let agg = |r: usize| -> f64 { t.cell(r, 3).parse().unwrap() };
+        let per = |r: usize| -> f64 { t.cell(r, 2).parse().unwrap() };
+        assert!(agg(2) > 3.0 * agg(0), "batching must lift aggregate throughput");
+        assert!(per(2) <= per(0) * 1.05, "per-stream rate cannot improve with batching");
+    }
+
+    #[test]
+    fn speculative_model_sane() {
+        let t_spec = speculative_decode_time(
+            &platform::orin(),
+            &opts(),
+            &molmoact_7b(),
+            &scaled_vla(2.0),
+            4,
+            0.7,
+        );
+        let t_base = decode_time(&platform::orin(), &opts(), &molmoact_7b());
+        assert!(t_spec < t_base, "speculation should help a BW-bound target");
+        assert!(t_spec > t_base / 6.0, "but not unrealistically");
+    }
+}

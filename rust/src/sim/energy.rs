@@ -1,0 +1,210 @@
+//! Energy model for edge deployments.
+//!
+//! Control frequency is only half of the edge story — a mobile manipulator
+//! runs on a battery. This module extends the roofline cost model with an
+//! energy-per-operator estimate (compute pJ/FLOP + data-movement pJ/byte,
+//! DRAM vs PIM vs on-chip), yielding J/step and J/action for every platform
+//! of Table 1. PIM's energy win (no off-chip movement for offloaded ops) is
+//! a first-class result in the HBM/LPDDR-PIM literature the paper cites [3].
+
+use super::roofline::{Engine, OpCost};
+use super::simulator::{SimOptions, Simulator, VlaSimResult};
+use crate::hw::Platform;
+use crate::model::{Stage, VlaConfig};
+
+/// Energy coefficients for a platform (approximate 2024-era edge silicon).
+#[derive(Debug, Clone)]
+pub struct EnergyModel {
+    /// Matrix-engine compute energy (J/FLOP) — bf16 MAC ≈ 0.4 pJ.
+    pub pj_per_flop: f64,
+    /// Off-chip DRAM access energy (J/byte). LPDDR5 ≈ 6 pJ/bit ≈ 48 pJ/B;
+    /// GDDR7 is higher-power per bit moved.
+    pub pj_per_dram_byte: f64,
+    /// PIM-internal access energy (J/byte): bank-local, no PHY/link cost.
+    pub pj_per_pim_byte: f64,
+    /// On-chip (L2/SMEM) access energy (J/byte).
+    pub pj_per_onchip_byte: f64,
+    /// Static/idle platform power (W) charged over elapsed time.
+    pub idle_watts: f64,
+}
+
+impl EnergyModel {
+    /// Coefficients per memory technology.
+    pub fn for_platform(platform: &Platform) -> EnergyModel {
+        let pj_per_dram_byte = match platform.mem.name.as_str() {
+            "LPDDR5" => 48.0,
+            "LPDDR5X" => 44.0,
+            "GDDR7" => 64.0, // faster but hungrier per byte
+            "LPDDR6X PIM" => 40.0,
+            _ => 50.0,
+        };
+        EnergyModel {
+            pj_per_flop: 0.4,
+            pj_per_dram_byte,
+            pj_per_pim_byte: 12.0, // bank-local, ~4x cheaper than off-chip
+            pj_per_onchip_byte: 2.0,
+            idle_watts: if platform.soc.sms >= 32 { 20.0 } else { 10.0 },
+        }
+    }
+
+    /// Energy of one costed operator (J).
+    pub fn op_energy(&self, c: &OpCost) -> f64 {
+        let compute = c.flops * self.pj_per_flop * 1e-12;
+        let movement = match c.engine {
+            Engine::Soc => {
+                let offchip = c.offchip_bytes;
+                let onchip = (c.bytes - c.offchip_bytes).max(0.0);
+                offchip * self.pj_per_dram_byte * 1e-12 + onchip * self.pj_per_onchip_byte * 1e-12
+            }
+            Engine::Pim => c.bytes * self.pj_per_pim_byte * 1e-12,
+        };
+        compute + movement
+    }
+}
+
+/// Per-step energy decomposition.
+#[derive(Debug, Clone)]
+pub struct EnergyResult {
+    pub platform: String,
+    pub model: String,
+    /// Dynamic energy per phase (J): vision, prefill, decode, action.
+    pub phase_dynamic: [f64; 4],
+    /// Idle/static energy over the step (J).
+    pub static_j: f64,
+    pub step_latency: f64,
+    pub action_horizon: u64,
+}
+
+impl EnergyResult {
+    pub fn dynamic_total(&self) -> f64 {
+        self.phase_dynamic.iter().sum()
+    }
+
+    pub fn total_j(&self) -> f64 {
+        self.dynamic_total() + self.static_j
+    }
+
+    /// Average power draw during the step (W).
+    pub fn avg_watts(&self) -> f64 {
+        self.total_j() / self.step_latency.max(1e-12)
+    }
+
+    /// Energy per executed action (J), with chunked execution.
+    pub fn j_per_action(&self) -> f64 {
+        self.total_j() / self.action_horizon.max(1) as f64
+    }
+}
+
+/// Simulate latency AND energy for a full VLA step.
+pub fn simulate_energy(
+    platform: &Platform,
+    options: &SimOptions,
+    config: &VlaConfig,
+) -> (VlaSimResult, EnergyResult) {
+    let sim = Simulator::with_options(platform.clone(), options.clone());
+    let em = EnergyModel::for_platform(platform);
+
+    let stage_energy = |stage: &Stage| -> f64 {
+        stage
+            .ops
+            .iter()
+            .map(|op| em.op_energy(&super::roofline::cost_op(platform, op, options.pim)))
+            .sum()
+    };
+
+    let latency = sim.simulate_vla(config);
+    let vision_j = stage_energy(&config.vision_stage());
+    let prefill_j = stage_energy(&config.prefill_stage());
+    // decode: integrate over sampled positions like the latency path
+    let stride = options.decode_stride.max(1);
+    let start = config.shape.prefill_len();
+    let n = config.shape.decode_tokens;
+    let mut decode_j = 0.0;
+    let mut sampled = 0u64;
+    let mut pos = 0u64;
+    while pos < n {
+        decode_j += stage_energy(&config.decode_stage_at(start + pos));
+        sampled += 1;
+        pos += stride;
+    }
+    decode_j *= n as f64 / sampled as f64;
+    let action_j = stage_energy(&config.action_stage());
+
+    let energy = EnergyResult {
+        platform: platform.name.clone(),
+        model: config.name.clone(),
+        phase_dynamic: [vision_j, prefill_j, decode_j, action_j],
+        static_j: em.idle_watts * latency.total(),
+        step_latency: latency.total(),
+        action_horizon: config.action.horizon,
+    };
+    (latency, energy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::platform;
+    use crate::model::molmoact::molmoact_7b;
+
+    fn opts() -> SimOptions {
+        SimOptions {
+            decode_stride: 16,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn decode_dominates_dynamic_energy() {
+        let (_, e) = simulate_energy(&platform::orin(), &opts(), &molmoact_7b());
+        assert!(
+            e.phase_dynamic[2] > e.phase_dynamic[0] + e.phase_dynamic[1] + e.phase_dynamic[3],
+            "decode moves the most bytes: {:?}",
+            e.phase_dynamic
+        );
+        assert!(e.total_j() > e.dynamic_total());
+    }
+
+    #[test]
+    fn pim_cuts_energy_per_action() {
+        let cfg = molmoact_7b();
+        let (_, base) = simulate_energy(&platform::orin(), &opts(), &cfg);
+        let (_, pim) = simulate_energy(&platform::orin_pim(), &opts(), &cfg);
+        // PIM wins twice: less off-chip movement (dynamic) and a much
+        // shorter step (static energy)
+        assert!(
+            pim.j_per_action() < base.j_per_action(),
+            "PIM {} J/action vs base {}",
+            pim.j_per_action(),
+            base.j_per_action()
+        );
+    }
+
+    #[test]
+    fn power_draw_within_edge_envelope() {
+        // Jetson-class boards run 15-60 W sustained (MAXN); the model should
+        // land in a physically plausible envelope, not a datacenter one.
+        for plat in [platform::orin(), platform::thor()] {
+            let (_, e) = simulate_energy(&plat, &opts(), &molmoact_7b());
+            let w = e.avg_watts();
+            assert!((5.0..120.0).contains(&w), "{}: {w} W", e.platform);
+        }
+    }
+
+    #[test]
+    fn energy_scales_with_decode_tokens() {
+        let mut cfg = molmoact_7b();
+        let (_, e1) = simulate_energy(&platform::thor(), &opts(), &cfg);
+        cfg.shape.decode_tokens *= 2;
+        let (_, e2) = simulate_energy(&platform::thor(), &opts(), &cfg);
+        let ratio = e2.phase_dynamic[2] / e1.phase_dynamic[2];
+        assert!((1.8..2.3).contains(&ratio), "decode energy ratio {ratio}");
+    }
+
+    #[test]
+    fn coefficients_vary_by_memory() {
+        let a = EnergyModel::for_platform(&platform::orin());
+        let b = EnergyModel::for_platform(&platform::orin_gddr7());
+        assert!(b.pj_per_dram_byte > a.pj_per_dram_byte);
+    }
+}

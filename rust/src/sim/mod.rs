@@ -1,0 +1,13 @@
+//! The analytical XPU simulator (paper §3.2): roofline operator costs with
+//! tiling/SM fidelity, asymmetric bandwidth, cross-operator prefetch, and
+//! PIM offload; plus calibration against real measurements.
+
+pub mod calibrate;
+pub mod codesign;
+pub mod energy;
+pub mod roofline;
+pub mod simulator;
+pub mod tiling;
+
+pub use roofline::{cost_on_pim, cost_on_soc, cost_op, Bound, Engine, OpCost};
+pub use simulator::{SimOptions, Simulator, StageResult, VlaSimResult};

@@ -1,0 +1,252 @@
+//! Per-operator roofline cost model: `t = max(t_compute, t_memory)` with
+//! micro-architectural corrections (tiling efficiency, asymmetric
+//! matrix-engine bandwidth, L2 residency, kernel-launch overhead) and
+//! optional PIM execution for eligible memory-bound operators.
+
+use super::tiling::matmul_efficiency;
+use crate::hw::Platform;
+use crate::model::{OpKind, Operator};
+
+/// Which resource bounds the operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bound {
+    Compute,
+    Memory,
+    Overhead,
+}
+
+/// Where the operator executed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    Soc,
+    Pim,
+}
+
+/// Fully-resolved operator cost.
+#[derive(Debug, Clone)]
+pub struct OpCost {
+    pub name: String,
+    pub kind: OpKind,
+    pub engine: Engine,
+    /// Time on the compute units (s).
+    pub t_compute: f64,
+    /// Off-chip time for weight streaming (s) — the component cross-operator
+    /// prefetch can hide.
+    pub t_mem_weights: f64,
+    /// Off-chip/L2 time for activations + KV (s) — on the dependence chain.
+    pub t_mem_other: f64,
+    /// Fixed launch/dispatch overhead (s).
+    pub t_overhead: f64,
+    pub flops: f64,
+    pub bytes: f64,
+    /// Bytes that actually traverse the off-chip DRAM link (weights + KV +
+    /// L2-missing activations). Zero for PIM-executed ops.
+    pub offchip_bytes: f64,
+    pub bound: Bound,
+}
+
+impl OpCost {
+    /// Inline (serial, no cross-op prefetch) duration.
+    pub fn t_serial(&self) -> f64 {
+        self.t_compute.max(self.t_mem_weights + self.t_mem_other) + self.t_overhead
+    }
+
+    /// Inline duration when weight streaming is hidden by the prefetcher
+    /// (weights still consume bandwidth — accounted at stage level).
+    pub fn t_prefetched(&self) -> f64 {
+        self.t_compute.max(self.t_mem_other) + self.t_overhead
+    }
+
+    fn classify(t_compute: f64, t_mem: f64, t_overhead: f64) -> Bound {
+        if t_overhead > t_compute.max(t_mem) {
+            Bound::Overhead
+        } else if t_compute >= t_mem {
+            Bound::Compute
+        } else {
+            Bound::Memory
+        }
+    }
+}
+
+/// Cost an operator on the SoC path of `platform`.
+pub fn cost_on_soc(platform: &Platform, op: &Operator) -> OpCost {
+    cost_on_soc_impl(platform, op, true)
+}
+
+fn cost_on_soc_impl(platform: &Platform, op: &Operator, with_name: bool) -> OpCost {
+    let soc = &platform.soc;
+    let dram_bw = platform.mem.effective_bw();
+
+    // --- compute time ---
+    let t_compute = match op.kind {
+        OpKind::MatmulWeight | OpKind::MatmulAct => {
+            let eff = matmul_efficiency(soc, op.batch, op.m, op.n, op.k, op.dtype);
+            op.flops / (soc.flops_bf16 * eff)
+        }
+        // streaming ops run on the vector units
+        _ => op.flops / (soc.flops_f32 * 0.5),
+    };
+
+    // --- memory time ---
+    // Weights always stream from DRAM; the reduction-dim layout penalty
+    // models the matrix engine's asymmetric bandwidth (§3.2).
+    let weight_penalty = if matches!(op.kind, OpKind::MatmulWeight) {
+        soc.reduction_bw_penalty
+    } else {
+        1.0
+    };
+    let t_mem_weights = op.weight_bytes * weight_penalty / dram_bw;
+    // Activations may be L2-resident between adjacent ops; KV always misses.
+    let act_bytes = op.act_in_bytes + op.act_out_bytes;
+    let l2_resident = act_bytes <= soc.l2_bytes;
+    let act_bw = if l2_resident {
+        soc.l2_bw.min(dram_bw * 4.0) // L2 hit path
+    } else {
+        dram_bw
+    };
+    let t_mem_other = act_bytes / act_bw + op.kv_bytes / dram_bw;
+    let offchip_bytes =
+        op.weight_bytes + op.kv_bytes + if l2_resident { 0.0 } else { act_bytes };
+
+    let t_overhead = soc.kernel_launch_overhead;
+    OpCost {
+        name: if with_name { op.name.clone() } else { String::new() },
+        kind: op.kind,
+        engine: Engine::Soc,
+        t_compute,
+        t_mem_weights,
+        t_mem_other,
+        t_overhead,
+        flops: op.flops,
+        bytes: op.total_bytes(),
+        offchip_bytes,
+        bound: OpCost::classify(t_compute, t_mem_weights + t_mem_other, t_overhead),
+    }
+}
+
+/// Cost an operator on the PIM units, if the platform has PIM.
+pub fn cost_on_pim(platform: &Platform, op: &Operator) -> Option<OpCost> {
+    let pim = platform.mem.pim.as_ref()?;
+    let t_compute = op.flops / pim.flops_bf16;
+    // all operands stream at PIM internal bandwidth; no off-chip traffic
+    let t_mem = op.total_bytes() / pim.effective_bw();
+    let t_overhead = pim.dispatch_overhead;
+    Some(OpCost {
+        name: op.name.clone(),
+        kind: op.kind,
+        engine: Engine::Pim,
+        t_compute,
+        // PIM weights are NOT prefetchable over the off-chip link — they are
+        // already in memory; fold all traffic into the dependence chain.
+        t_mem_weights: 0.0,
+        t_mem_other: t_mem,
+        t_overhead,
+        flops: op.flops,
+        bytes: op.total_bytes(),
+        offchip_bytes: 0.0,
+        bound: OpCost::classify(t_compute, t_mem, t_overhead),
+    })
+}
+
+/// Choose the best engine for `op` under the given options.
+pub fn cost_op(platform: &Platform, op: &Operator, allow_pim: bool) -> OpCost {
+    cost_op_impl(platform, op, allow_pim, true)
+}
+
+/// PERF variant for the aggregation-only simulate path: skips the per-op
+/// name clone (~430 String allocations per decode step otherwise).
+pub fn cost_op_unnamed(platform: &Platform, op: &Operator, allow_pim: bool) -> OpCost {
+    cost_op_impl(platform, op, allow_pim, false)
+}
+
+fn cost_op_impl(platform: &Platform, op: &Operator, allow_pim: bool, with_name: bool) -> OpCost {
+    let soc = cost_on_soc_impl(platform, op, with_name);
+    if !allow_pim || !op.pim_eligible() {
+        return soc;
+    }
+    match cost_on_pim(platform, op) {
+        // offload only when the op is memory-bound on the SoC and PIM wins
+        Some(pim) if soc.bound == Bound::Memory && pim.t_serial() < soc.t_serial() => pim,
+        _ => soc,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::{platform, DType};
+    use crate::model::Operator;
+
+    #[test]
+    fn gemv_memory_bound_gemm_compute_bound() {
+        let p = platform::orin();
+        let gemv = cost_on_soc(&p, &Operator::matmul_weight("v", 1, 1, 18944, 3584, DType::BF16));
+        assert_eq!(gemv.bound, Bound::Memory);
+        let gemm = cost_on_soc(&p, &Operator::matmul_weight("m", 1, 640, 18944, 3584, DType::BF16));
+        assert_eq!(gemm.bound, Bound::Compute);
+    }
+
+    #[test]
+    fn gemv_time_tracks_bandwidth() {
+        // 7B-class GEMV: t ~ weight_bytes / bw
+        let p = platform::orin();
+        let op = Operator::matmul_weight("v", 1, 1, 18944, 3584, DType::BF16);
+        let c = cost_on_soc(&p, &op);
+        let ideal = op.weight_bytes / p.mem.effective_bw();
+        assert!(c.t_mem_weights >= ideal && c.t_mem_weights < 1.5 * ideal);
+        assert!(c.t_serial() < 2.0 * ideal, "GEMV should be near the BW bound");
+    }
+
+    #[test]
+    fn more_bandwidth_reduces_gemv_time() {
+        let op = Operator::matmul_weight("v", 1, 1, 18944, 3584, DType::BF16);
+        let t_orin = cost_on_soc(&platform::orin(), &op).t_serial();
+        let t_gddr7 = cost_on_soc(&platform::orin_gddr7(), &op).t_serial();
+        assert!(t_gddr7 < t_orin / 3.0, "{t_orin} vs {t_gddr7}");
+    }
+
+    #[test]
+    fn more_compute_barely_helps_gemv() {
+        // Thor has 5x compute but only 1.34x bandwidth: GEMV speedup ~ BW ratio
+        let op = Operator::matmul_weight("v", 1, 1, 18944, 3584, DType::BF16);
+        let t_orin = cost_on_soc(&platform::orin(), &op).t_serial();
+        let t_thor = cost_on_soc(&platform::thor(), &op).t_serial();
+        let speedup = t_orin / t_thor;
+        assert!(speedup < 1.8, "memory-bound op speedup {speedup} should track BW not compute");
+    }
+
+    #[test]
+    fn pim_offload_happens_for_memory_bound_only() {
+        let p = platform::orin_pim();
+        let gemv = Operator::matmul_weight("v", 1, 1, 18944, 3584, DType::BF16);
+        assert_eq!(cost_op(&p, &gemv, true).engine, Engine::Pim);
+        assert_eq!(cost_op(&p, &gemv, false).engine, Engine::Soc);
+        let gemm = Operator::matmul_weight("m", 1, 640, 18944, 3584, DType::BF16);
+        assert_eq!(cost_op(&p, &gemm, true).engine, Engine::Soc);
+    }
+
+    #[test]
+    fn pim_speeds_up_gemv_by_bandwidth_ratio() {
+        let pim = platform::orin_pim();
+        let base = platform::orin();
+        let op = Operator::matmul_weight("v", 1, 1, 18944, 3584, DType::BF16);
+        let t_base = cost_op(&base, &op, true).t_serial();
+        let t_pim = cost_op(&pim, &op, true).t_serial();
+        let speedup = t_base / t_pim;
+        // BW ratio 2180*0.85 / (203*0.8) ~ 11.4; allow latency overheads
+        assert!(speedup > 6.0 && speedup < 13.0, "PIM GEMV speedup {speedup}");
+    }
+
+    #[test]
+    fn tiny_op_overhead_bound() {
+        let p = platform::orin();
+        let op = Operator::norm("ln", 1, 64, DType::BF16);
+        let c = cost_on_soc(&p, &op);
+        assert_eq!(c.bound, Bound::Overhead);
+    }
+
+    #[test]
+    fn no_pim_on_non_pim_platform() {
+        assert!(cost_on_pim(&platform::thor(), &Operator::norm("n", 1, 64, DType::BF16)).is_none());
+    }
+}

@@ -1,0 +1,439 @@
+//! Stage- and model-level simulation: walks operator sequences through the
+//! roofline model, applies cross-operator prefetch, integrates the
+//! autoregressive decode loop over KV-cache growth, and aggregates per-phase
+//! latencies and control frequency.
+
+use super::roofline::{cost_op_unnamed, Bound, Engine, OpCost};
+use crate::hw::Platform;
+use crate::model::{Phase, Stage, VlaConfig};
+
+/// Simulation options (ablation switches).
+#[derive(Debug, Clone)]
+pub struct SimOptions {
+    /// Cross-operator prefetch: stream weights of upcoming operators during
+    /// current-op execution (paper §3.2, "cross-operator optimization").
+    pub prefetch: bool,
+    /// Allow PIM offload of eligible memory-bound ops (PIM platforms only).
+    pub pim: bool,
+    /// Simulate every `decode_stride`-th decode position and interpolate.
+    /// 1 = exact. KV traffic is linear in position so error is negligible.
+    pub decode_stride: u64,
+    /// Framework (PyTorch-eager) host dispatch per operator (s). The paper
+    /// profiles the PyTorch runtime on Jetson; eager dispatch serializes with
+    /// GPU work when kernels are short. 0 = ideal compiled runtime.
+    pub host_dispatch: f64,
+    /// CPU image preprocessing (resize/normalize/tile) per crop (s) — part of
+    /// the measured vision-encoding phase.
+    pub preprocess_per_crop: f64,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions {
+            prefetch: true,
+            pim: true,
+            decode_stride: 1,
+            host_dispatch: 25e-6,
+            preprocess_per_crop: 0.08,
+        }
+    }
+}
+
+impl SimOptions {
+    /// An idealized compiled runtime (no eager-framework overheads) — used
+    /// for ablations against the measured PyTorch configuration.
+    pub fn compiled() -> SimOptions {
+        SimOptions {
+            host_dispatch: 0.0,
+            preprocess_per_crop: 0.0,
+            ..Default::default()
+        }
+    }
+}
+
+/// Aggregate execution statistics for one stage.
+#[derive(Debug, Clone)]
+pub struct StageResult {
+    pub name: String,
+    pub phase: Phase,
+    pub time: f64,
+    /// Time if every op ran serially with no inter-op overlap.
+    pub time_serial: f64,
+    pub flops: f64,
+    pub bytes: f64,
+    /// Time attributed to compute-bound / memory-bound / overhead-bound ops.
+    pub t_compute_bound: f64,
+    pub t_memory_bound: f64,
+    pub t_overhead_bound: f64,
+    /// Fraction of ops offloaded to PIM (by time).
+    pub pim_time_frac: f64,
+    pub n_ops: usize,
+}
+
+impl StageResult {
+    /// Achieved FLOP/s over the stage.
+    pub fn achieved_flops(&self) -> f64 {
+        self.flops / self.time.max(1e-30)
+    }
+
+    /// Achieved bytes/s over the stage.
+    pub fn achieved_bw(&self) -> f64 {
+        self.bytes / self.time.max(1e-30)
+    }
+
+    /// Is this stage predominantly memory-bandwidth bound?
+    pub fn memory_bound(&self) -> bool {
+        self.t_memory_bound > self.t_compute_bound + self.t_overhead_bound
+    }
+}
+
+/// Streaming accumulator over operator costs (avoids materializing per-op
+/// cost vectors on the sweep hot path).
+#[derive(Debug, Default, Clone)]
+struct CostAcc {
+    chain: f64,
+    serial: f64,
+    weight_stream: f64,
+    offchip_bytes: f64,
+    t_cb: f64,
+    t_mb: f64,
+    t_ob: f64,
+    pim_time: f64,
+    n_ops: usize,
+}
+
+impl CostAcc {
+    #[inline]
+    fn add(&mut self, c: &OpCost, dispatch: f64) {
+        // eager host dispatch: a kernel cannot start faster than the
+        // framework can issue it — short ops become dispatch-bound
+        self.serial += c.t_serial().max(dispatch);
+        self.chain += c.t_prefetched().max(dispatch);
+        self.weight_stream += c.t_mem_weights;
+        if c.engine == Engine::Soc {
+            self.offchip_bytes += c.offchip_bytes;
+        } else {
+            self.pim_time += c.t_serial();
+        }
+        match c.bound {
+            Bound::Compute => self.t_cb += c.t_serial(),
+            Bound::Memory => self.t_mb += c.t_serial(),
+            Bound::Overhead => self.t_ob += c.t_serial(),
+        }
+        self.n_ops += 1;
+    }
+}
+
+/// The analytical XPU simulator.
+#[derive(Debug, Clone)]
+pub struct Simulator {
+    pub platform: Platform,
+    pub options: SimOptions,
+}
+
+impl Simulator {
+    pub fn new(platform: Platform) -> Simulator {
+        Simulator {
+            platform,
+            options: SimOptions::default(),
+        }
+    }
+
+    pub fn with_options(platform: Platform, options: SimOptions) -> Simulator {
+        Simulator { platform, options }
+    }
+
+    /// Cost every op in a stage and combine with the prefetch model.
+    ///
+    /// Without prefetch: ops serialize; each op's time is
+    /// `max(compute, weights+activations+kv) + launch`.
+    ///
+    /// With prefetch: weight streams are decoupled from the dependence chain
+    /// (operands move early through the hierarchy, §3.2), so stage time is
+    ///   max( Σ max(compute_i, other_mem_i) + launches,   ← dependence chain
+    ///        Σ weight_time_i(SoC ops),                   ← off-chip stream
+    ///        total_offchip_bytes / bw )                  ← link capacity
+    pub fn simulate_stage(&self, stage: &Stage) -> StageResult {
+        // PERF: aggregation does not need per-op names; fold without
+        // collecting an intermediate Vec.
+        let mut acc = CostAcc::default();
+        for op in &stage.ops {
+            acc.add(&cost_op_unnamed(&self.platform, op, self.options.pim), self.options.host_dispatch);
+        }
+        self.finish_stage(stage, acc)
+    }
+
+    fn finish_stage(&self, stage: &Stage, acc: CostAcc) -> StageResult {
+        let CostAcc {
+            chain,
+            serial,
+            weight_stream,
+            offchip_bytes,
+            t_cb,
+            t_mb,
+            t_ob,
+            pim_time,
+            n_ops,
+        } = acc;
+        let link_time = offchip_bytes / self.platform.mem.effective_bw();
+        let time = if self.options.prefetch {
+            chain.max(weight_stream).max(link_time)
+        } else {
+            serial
+        };
+        StageResult {
+            name: stage.name.clone(),
+            phase: stage.phase,
+            time,
+            time_serial: serial,
+            flops: stage.total_flops(),
+            bytes: stage.total_bytes(),
+            t_compute_bound: t_cb,
+            t_memory_bound: t_mb,
+            t_overhead_bound: t_ob,
+            pim_time_frac: if serial > 0.0 { pim_time / serial } else { 0.0 },
+            n_ops,
+        }
+    }
+
+    /// Simulate the full decode phase: one stage per generated token with the
+    /// KV cache growing from `prefill_len` to `prefill_len + decode_tokens`.
+    pub fn simulate_decode(&self, config: &VlaConfig) -> StageResult {
+        let start = config.shape.prefill_len();
+        let n = config.shape.decode_tokens;
+        let stride = self.options.decode_stride.max(1);
+        let mut acc: Option<StageResult> = None;
+        let mut simulated = 0u64;
+        let mut pos = 0u64;
+        // PERF: build the operator sequence once and patch the KV-dependent
+        // ops per position (see VlaConfig::patch_decode_stage_kv) — stage
+        // construction used to dominate the sweep wall time.
+        let mut stage = config.decode_stage_at(start);
+        while pos < n {
+            config.patch_decode_stage_kv(&mut stage, start + pos);
+            let r = self.simulate_stage(&stage);
+            simulated += 1;
+            acc = Some(match acc {
+                None => r,
+                Some(mut a) => {
+                    a.time += r.time;
+                    a.time_serial += r.time_serial;
+                    a.flops += r.flops;
+                    a.bytes += r.bytes;
+                    a.t_compute_bound += r.t_compute_bound;
+                    a.t_memory_bound += r.t_memory_bound;
+                    a.t_overhead_bound += r.t_overhead_bound;
+                    a.pim_time_frac += r.pim_time_frac;
+                    a.n_ops += r.n_ops;
+                    a
+                }
+            });
+            pos += stride;
+        }
+        let mut total = acc.expect("decode_tokens > 0");
+        // scale sampled positions up to the full token count
+        let scale = n as f64 / simulated as f64;
+        total.time *= scale;
+        total.time_serial *= scale;
+        total.flops *= scale;
+        total.bytes *= scale;
+        total.t_compute_bound *= scale;
+        total.t_memory_bound *= scale;
+        total.t_overhead_bound *= scale;
+        total.pim_time_frac /= simulated as f64;
+        total.name = format!("decode x{n}");
+        total
+    }
+
+    /// Simulate a full VLA control step.
+    pub fn simulate_vla(&self, config: &VlaConfig) -> VlaSimResult {
+        let mut vision = self.simulate_stage(&config.vision_stage());
+        // measured vision phase includes CPU-side image preprocessing
+        let prep = self.options.preprocess_per_crop * config.shape.crops as f64;
+        vision.time += prep;
+        vision.time_serial += prep;
+        vision.t_overhead_bound += prep;
+        let prefill = self.simulate_stage(&config.prefill_stage());
+        let decode = self.simulate_decode(config);
+        let action = self.simulate_stage(&config.action_stage());
+        VlaSimResult {
+            model: config.name.clone(),
+            platform: self.platform.name.clone(),
+            action_horizon: config.action.horizon,
+            vision,
+            prefill,
+            decode,
+            action,
+        }
+    }
+}
+
+/// Per-phase latency decomposition of one VLA control step (Fig 2's unit).
+#[derive(Debug, Clone)]
+pub struct VlaSimResult {
+    pub model: String,
+    pub platform: String,
+    pub action_horizon: u64,
+    pub vision: StageResult,
+    pub prefill: StageResult,
+    pub decode: StageResult,
+    pub action: StageResult,
+}
+
+impl VlaSimResult {
+    pub fn stages(&self) -> [&StageResult; 4] {
+        [&self.vision, &self.prefill, &self.decode, &self.action]
+    }
+
+    /// End-to-end latency of one control step.
+    pub fn total(&self) -> f64 {
+        self.stages().iter().map(|s| s.time).sum()
+    }
+
+    /// Generation-phase (prefill + decode) share of total latency — the
+    /// paper's headline ~75% figure.
+    pub fn generation_share(&self) -> f64 {
+        (self.prefill.time + self.decode.time) / self.total().max(1e-30)
+    }
+
+    /// Control frequency if each step produces one action (Hz).
+    pub fn control_frequency(&self) -> f64 {
+        1.0 / self.total().max(1e-30)
+    }
+
+    /// Amortized control frequency when each step emits an action chunk over
+    /// the horizon (actions/s achievable with chunked execution).
+    pub fn amortized_frequency(&self) -> f64 {
+        self.action_horizon as f64 / self.total().max(1e-30)
+    }
+
+    pub fn phase_time(&self, phase: Phase) -> f64 {
+        match phase {
+            Phase::Vision => self.vision.time,
+            Phase::Prefill => self.prefill.time,
+            Phase::Decode => self.decode.time,
+            Phase::Action => self.action.time,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::platform;
+    use crate::model::vla::tiny_test_config;
+    use crate::model::{molmoact::molmoact_7b, Phase};
+
+    #[test]
+    fn stage_times_positive_and_consistent() {
+        let sim = Simulator::new(platform::orin());
+        let c = tiny_test_config();
+        for stage in [c.vision_stage(), c.prefill_stage(), c.decode_stage_at(100), c.action_stage()] {
+            let r = sim.simulate_stage(&stage);
+            assert!(r.time > 0.0, "{}", r.name);
+            assert!(r.time <= r.time_serial * 1.0000001, "prefetch can't exceed serial");
+        }
+    }
+
+    #[test]
+    fn molmoact_on_orin_matches_paper_shape() {
+        // Fig 2 claims: generation ~75% of step latency; E2E 200-300x the
+        // 100 ms (10 Hz) budget.
+        let sim = Simulator::new(platform::orin());
+        let r = sim.simulate_vla(&molmoact_7b());
+        let total = r.total();
+        assert!(
+            total > 10.0 && total < 40.0,
+            "Orin E2E should be tens of seconds (paper: 200-300x over 100ms): {total}"
+        );
+        let share = r.generation_share();
+        assert!(
+            (0.6..0.95).contains(&share),
+            "generation share should be ~75%: {share}"
+        );
+        assert!(r.decode.memory_bound(), "decode must be memory-BW bound");
+        assert!(!r.vision.memory_bound(), "vision encode is compute-bound");
+    }
+
+    #[test]
+    fn thor_speedup_tracks_bandwidth_not_compute() {
+        // Paper: "Thor provides 5x the compute of Orin, the end-to-end
+        // latency only improves by 1.4x".
+        let orin = Simulator::new(platform::orin()).simulate_vla(&molmoact_7b());
+        let thor = Simulator::new(platform::thor()).simulate_vla(&molmoact_7b());
+        let speedup = orin.total() / thor.total();
+        assert!(
+            (1.15..2.0).contains(&speedup),
+            "E2E Thor speedup should be ~1.4x, got {speedup}"
+        );
+        // decode speedup specifically ~ BW ratio (273/203 = 1.34)
+        let dec_speedup = orin.decode.time / thor.decode.time;
+        assert!((1.1..1.7).contains(&dec_speedup), "decode speedup {dec_speedup}");
+    }
+
+    #[test]
+    fn decode_dominated_by_weight_streaming() {
+        let sim = Simulator::new(platform::orin());
+        let r = sim.simulate_decode(&molmoact_7b());
+        // per-token time ~ decoder bytes / effective BW
+        let per_token = r.time / molmoact_7b().shape.decode_tokens as f64;
+        let ideal = molmoact_7b().decoder_weight_bytes() / platform::orin().mem.effective_bw();
+        assert!(
+            per_token > 0.9 * ideal && per_token < 2.0 * ideal,
+            "per-token {per_token} vs weight-stream ideal {ideal}"
+        );
+    }
+
+    #[test]
+    fn prefetch_reduces_decode_time() {
+        let c = molmoact_7b();
+        let on = Simulator::with_options(platform::orin(), SimOptions { prefetch: true, ..Default::default() });
+        let off = Simulator::with_options(platform::orin(), SimOptions { prefetch: false, ..Default::default() });
+        let t_on = on.simulate_decode(&c).time;
+        let t_off = off.simulate_decode(&c).time;
+        assert!(t_on < t_off, "prefetch must help: {t_on} vs {t_off}");
+    }
+
+    #[test]
+    fn pim_offload_accelerates_decode() {
+        let c = molmoact_7b();
+        let base = Simulator::new(platform::orin()).simulate_decode(&c);
+        let pim = Simulator::new(platform::orin_pim()).simulate_decode(&c);
+        let speedup = base.time / pim.time;
+        assert!(speedup > 4.0, "PIM decode speedup {speedup}");
+        assert!(pim.pim_time_frac > 0.3, "most decode time should be on PIM");
+        // disabling pim on the pim platform falls back to off-chip BW only
+        let no_off = Simulator::with_options(
+            platform::orin_pim(),
+            SimOptions { pim: false, ..Default::default() },
+        )
+        .simulate_decode(&c);
+        assert!(no_off.time > pim.time);
+    }
+
+    #[test]
+    fn decode_stride_interpolation_close_to_exact() {
+        let c = molmoact_7b();
+        let exact = Simulator::new(platform::orin()).simulate_decode(&c).time;
+        let strided = Simulator::with_options(
+            platform::orin(),
+            SimOptions { decode_stride: 8, ..Default::default() },
+        )
+        .simulate_decode(&c)
+        .time;
+        assert!(
+            (exact - strided).abs() / exact < 0.02,
+            "stride-8 error {}",
+            (exact - strided).abs() / exact
+        );
+    }
+
+    #[test]
+    fn control_frequency_is_inverse_total() {
+        let sim = Simulator::new(platform::thor());
+        let r = sim.simulate_vla(&tiny_test_config());
+        assert!((r.control_frequency() * r.total() - 1.0).abs() < 1e-9);
+        assert!((r.amortized_frequency() / r.control_frequency() - 8.0).abs() < 1e-9);
+        assert_eq!(r.phase_time(Phase::Decode), r.decode.time);
+    }
+}

@@ -1,0 +1,137 @@
+//! Matmul tiling model: pick an (tm, tn, tk) output tile that fits the SM
+//! scratchpad, then derive matrix-engine efficiency from tile-shape padding
+//! and SM wave quantization — the "number of SMs, tiling strategies"
+//! micro-architectural fidelity the paper's simulator incorporates (§3.2).
+
+use crate::hw::{DType, SocSpec};
+
+/// Result of tile selection for a matmul of logical shape batch x (m, n, k).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TilePlan {
+    pub tm: u64,
+    pub tn: u64,
+    pub tk: u64,
+    /// Total output tiles across the grid (batch included).
+    pub n_tiles: u64,
+    /// Full waves + tail: n_tiles / sms rounded up.
+    pub waves: u64,
+    /// Fraction of matrix-engine peak achieved: padding x wave occupancy.
+    pub efficiency: f64,
+}
+
+/// Candidate output-tile shapes, largest first (bigger tiles amortize operand
+/// traffic but waste more on small problems).
+const CANDIDATES: [(u64, u64); 6] = [(128, 128), (128, 64), (64, 64), (64, 32), (32, 32), (16, 16)];
+
+/// Select a tile plan for `batch x (m,n,k)` einsum on `soc`.
+pub fn plan_matmul(soc: &SocSpec, batch: u64, m: u64, n: u64, k: u64, dt: DType) -> TilePlan {
+    let eb = dt.bytes();
+    let tk: u64 = 64.max(soc.mma_k as u64);
+    let mut best: Option<TilePlan> = None;
+    for (tm, tn) in CANDIDATES {
+        // working set: A tile + B tile + C accumulator (f32), double-buffered
+        // operands
+        let ws = 2.0 * (tm * tk) as f64 * eb + 2.0 * (tk * tn) as f64 * eb + (tm * tn) as f64 * 4.0;
+        if ws > soc.smem_per_sm {
+            continue;
+        }
+        let grid_m = m.div_ceil(tm);
+        let grid_n = n.div_ceil(tn);
+        let n_tiles = batch * grid_m * grid_n;
+        let waves = n_tiles.div_ceil(soc.sms as u64);
+        // padding efficiency: useful fraction of each tile
+        let pad_m = m as f64 / (grid_m * tm) as f64;
+        let pad_n = n as f64 / (grid_n * tn) as f64;
+        let pad_k = k as f64 / (k.div_ceil(tk) * tk) as f64;
+        // wave occupancy: last wave may be partially filled
+        let occupancy = n_tiles as f64 / (waves * soc.sms as u64) as f64;
+        // small-k matmuls can't keep the MMA pipeline full
+        let pipe = (k as f64 / (4.0 * soc.mma_k as f64)).min(1.0);
+        let efficiency = pad_m * pad_n * pad_k * occupancy * pipe;
+        let plan = TilePlan {
+            tm,
+            tn,
+            tk,
+            n_tiles,
+            waves,
+            efficiency,
+        };
+        match &best {
+            Some(b) if b.efficiency >= plan.efficiency => {}
+            _ => best = Some(plan),
+        }
+    }
+    best.unwrap_or(TilePlan {
+        tm: 16,
+        tn: 16,
+        tk: 16,
+        n_tiles: batch * m.div_ceil(16) * n.div_ceil(16),
+        waves: 1,
+        efficiency: 0.05,
+    })
+}
+
+/// Achievable fraction of matrix-engine peak for this matmul, with a
+/// realistic ceiling (sustained-vs-peak gap: issue, epilogue, DRAM stalls
+/// already modeled separately).
+pub fn matmul_efficiency(soc: &SocSpec, batch: u64, m: u64, n: u64, k: u64, dt: DType) -> f64 {
+    const SUSTAINED_CEILING: f64 = 0.72; // typical dense-GEMM fraction of peak
+    (plan_matmul(soc, batch, m, n, k, dt).efficiency * SUSTAINED_CEILING).clamp(0.005, SUSTAINED_CEILING)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::SocSpec;
+
+    #[test]
+    fn big_square_gemm_is_efficient() {
+        let soc = SocSpec::orin();
+        let e = matmul_efficiency(&soc, 1, 4096, 4096, 4096, DType::BF16);
+        assert!(e > 0.55, "large GEMM efficiency {e}");
+    }
+
+    #[test]
+    fn gemv_is_inefficient_on_matrix_engine() {
+        let soc = SocSpec::orin();
+        let e = matmul_efficiency(&soc, 1, 1, 4096, 4096, DType::BF16);
+        assert!(e < 0.08, "m=1 GEMV should waste the MMA tile: {e}");
+    }
+
+    #[test]
+    fn efficiency_monotone_in_m_roughly() {
+        let soc = SocSpec::thor();
+        let e1 = matmul_efficiency(&soc, 1, 1, 8192, 8192, DType::BF16);
+        let e64 = matmul_efficiency(&soc, 1, 64, 8192, 8192, DType::BF16);
+        let e1024 = matmul_efficiency(&soc, 1, 1024, 8192, 8192, DType::BF16);
+        assert!(e1 < e64 && e64 <= e1024 * 1.05, "{e1} {e64} {e1024}");
+    }
+
+    #[test]
+    fn wave_quantization_visible() {
+        let soc = SocSpec::orin(); // 16 SMs
+        // exactly one wave of 128x128 tiles vs one tile spilling to a 2nd wave
+        let full = plan_matmul(&soc, 1, 4 * 128, 4 * 128, 1024, DType::BF16);
+        assert_eq!(full.n_tiles, 16);
+        assert_eq!(full.waves, 1);
+        let spill = plan_matmul(&soc, 1, 4 * 128, 4 * 128 + 1, 1024, DType::BF16);
+        assert!(spill.waves >= 2 || spill.tn < 128, "{spill:?}");
+    }
+
+    #[test]
+    fn tiles_fit_smem() {
+        let soc = SocSpec::orin();
+        let p = plan_matmul(&soc, 1, 2048, 2048, 2048, DType::BF16);
+        let ws = 2.0 * (p.tm * p.tk) as f64 * 2.0 + 2.0 * (p.tk * p.tn) as f64 * 2.0 + (p.tm * p.tn) as f64 * 4.0;
+        assert!(ws <= soc.smem_per_sm);
+    }
+
+    #[test]
+    fn efficiency_bounded() {
+        let soc = SocSpec::cpu_host(10.0);
+        for (m, n, k) in [(1, 1, 1), (1, 100000, 128), (7, 13, 17)] {
+            let e = matmul_efficiency(&soc, 1, m, n, k, DType::F32);
+            assert!((0.005..=0.72).contains(&e), "({m},{n},{k}) -> {e}");
+        }
+    }
+}

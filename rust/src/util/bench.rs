@@ -1,0 +1,196 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + calibrated iteration counts + outlier-robust summary
+//! statistics, and a registry so each `[[bench]]` binary (with
+//! `harness = false`) reads uniformly:
+//!
+//! ```ignore
+//! let mut b = BenchSet::new("fig2");
+//! b.bench("sim_orin", || { simulate(...); });
+//! b.finish();
+//! ```
+
+use super::stats::Summary;
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time summary, in seconds.
+    pub summary: Summary,
+    pub iters_per_sample: u64,
+    pub samples: usize,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<40} {:>12}/iter  (p50 {:>12}, p99 {:>12}, n={} x {})",
+            self.name,
+            super::units::fmt_time(self.summary.mean),
+            super::units::fmt_time(self.summary.p50),
+            super::units::fmt_time(self.summary.p99),
+            self.samples,
+            self.iters_per_sample,
+        )
+    }
+}
+
+/// Configuration for the measurement loop.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Wall-clock budget for warmup.
+    pub warmup: Duration,
+    /// Wall-clock budget for measurement.
+    pub measure: Duration,
+    /// Number of samples to collect within the measurement budget.
+    pub samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        // Fast-mode default keeps full `cargo bench` runs tractable; override
+        // with VLA_BENCH_SLOW=1 for higher-fidelity runs.
+        if std::env::var("VLA_BENCH_SLOW").is_ok() {
+            BenchConfig {
+                warmup: Duration::from_millis(500),
+                measure: Duration::from_secs(2),
+                samples: 50,
+            }
+        } else {
+            BenchConfig {
+                warmup: Duration::from_millis(100),
+                measure: Duration::from_millis(400),
+                samples: 20,
+            }
+        }
+    }
+}
+
+/// A named collection of benchmarks that prints a uniform report.
+pub struct BenchSet {
+    pub title: String,
+    pub config: BenchConfig,
+    pub results: Vec<BenchResult>,
+}
+
+impl BenchSet {
+    pub fn new(title: &str) -> BenchSet {
+        println!("\n=== bench: {title} ===");
+        BenchSet {
+            title: title.to_string(),
+            config: BenchConfig::default(),
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f`, which should perform ONE logical iteration. The harness
+    /// calibrates how many iterations fit a sample, then collects samples.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup and calibration: find iters such that one sample takes
+        // ~measure/samples.
+        let warm_end = Instant::now() + self.config.warmup;
+        let mut one = Duration::ZERO;
+        let mut warm_iters = 0u64;
+        while Instant::now() < warm_end || warm_iters == 0 {
+            let t0 = Instant::now();
+            f();
+            one = t0.elapsed();
+            warm_iters += 1;
+            if warm_iters > 10_000 {
+                break;
+            }
+        }
+        let target_sample = self.config.measure.as_secs_f64() / self.config.samples as f64;
+        let iters = ((target_sample / one.as_secs_f64().max(1e-9)).ceil() as u64).clamp(1, 1_000_000);
+
+        let mut sample_times = Vec::with_capacity(self.config.samples);
+        for _ in 0..self.config.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            sample_times.push(t0.elapsed().as_secs_f64() / iters as f64);
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            summary: Summary::of(&sample_times),
+            iters_per_sample: iters,
+            samples: sample_times.len(),
+        };
+        println!("{}", result.report_line());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Record an externally-computed scalar metric (e.g. a simulated latency
+    /// — the simulator is analytical, its OUTPUT is the benchmark number).
+    pub fn record(&mut self, name: &str, value_secs: f64) {
+        let result = BenchResult {
+            name: name.to_string(),
+            summary: Summary::of(&[value_secs]),
+            iters_per_sample: 1,
+            samples: 1,
+        };
+        println!(
+            "{:<40} {:>12}  (modeled)",
+            name,
+            super::units::fmt_time(value_secs)
+        );
+        self.results.push(result);
+    }
+
+    /// Print a footer; returns results for further inspection.
+    pub fn finish(self) -> Vec<BenchResult> {
+        println!("=== bench: {} done ({} entries) ===", self.title, self.results.len());
+        self.results
+    }
+}
+
+/// Best-effort blackbox to stop the optimizer deleting benched work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut set = BenchSet {
+            title: "t".into(),
+            config: BenchConfig {
+                warmup: Duration::from_millis(5),
+                measure: Duration::from_millis(20),
+                samples: 5,
+            },
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        set.bench("count", || {
+            for i in 0..1000u64 {
+                acc = black_box(acc.wrapping_add(i));
+            }
+        });
+        let r = &set.results[0];
+        assert!(r.summary.mean > 0.0);
+        assert_eq!(r.samples, 5);
+    }
+
+    #[test]
+    fn record_modeled_value() {
+        let mut set = BenchSet {
+            title: "t".into(),
+            config: BenchConfig::default(),
+            results: Vec::new(),
+        };
+        set.record("modeled_latency", 0.123);
+        assert_eq!(set.results[0].summary.mean, 0.123);
+        let out = set.finish();
+        assert_eq!(out.len(), 1);
+    }
+}

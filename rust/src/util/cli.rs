@@ -1,0 +1,253 @@
+//! Minimal command-line argument parser (clap is unavailable offline).
+//!
+//! Supports subcommands with `--flag`, `--key value`, and `--key=value`
+//! options, typed accessors with defaults, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// Declaration of a single option for help text and validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub value_name: Option<&'static str>, // None => boolean flag
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+/// A parsed command line: subcommand, options, and positionals.
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub program: String,
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (excluding the program name) against the known option
+    /// specs. The first non-option token is the subcommand; later non-option
+    /// tokens are positionals.
+    pub fn parse(
+        program: &str,
+        argv: &[String],
+        specs: &[OptSpec],
+    ) -> anyhow::Result<Args> {
+        let is_flag = |name: &str| -> Option<bool> {
+            specs
+                .iter()
+                .find(|s| s.name == name)
+                .map(|s| s.value_name.is_none())
+        };
+        let mut args = Args {
+            program: program.to_string(),
+            subcommand: None,
+            opts: BTreeMap::new(),
+            flags: Vec::new(),
+            positionals: Vec::new(),
+        };
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                match is_flag(&name) {
+                    None => anyhow::bail!("unknown option `--{name}` (try --help)"),
+                    Some(true) => {
+                        if inline_val.is_some() {
+                            anyhow::bail!("flag `--{name}` does not take a value");
+                        }
+                        args.flags.push(name);
+                    }
+                    Some(false) => {
+                        let val = match inline_val {
+                            Some(v) => v,
+                            None => {
+                                i += 1;
+                                argv.get(i)
+                                    .cloned()
+                                    .ok_or_else(|| anyhow::anyhow!("option `--{name}` expects a value"))?
+                            }
+                        };
+                        args.opts.insert(name, val);
+                    }
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok.clone());
+            } else {
+                args.positionals.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("option `--{name}` expects a number, got `{v}`")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("option `--{name}` expects an integer, got `{v}`")),
+        }
+    }
+
+    /// Parse a comma-separated list of f64.
+    pub fn get_f64_list(&self, name: &str, default: &[f64]) -> anyhow::Result<Vec<f64>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad number `{x}` in `--{name}`"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Parse a comma-separated list of strings.
+    pub fn get_str_list(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|x| x.trim().to_string()).collect(),
+        }
+    }
+}
+
+/// Render help text from subcommand descriptions and option specs.
+pub fn help_text(
+    program: &str,
+    about: &str,
+    subcommands: &[(&str, &str)],
+    specs: &[OptSpec],
+) -> String {
+    let mut out = format!("{program} — {about}\n\nUSAGE:\n  {program} <SUBCOMMAND> [OPTIONS]\n\nSUBCOMMANDS:\n");
+    let w = subcommands.iter().map(|(n, _)| n.len()).max().unwrap_or(0);
+    for (name, desc) in subcommands {
+        out.push_str(&format!("  {name:<w$}  {desc}\n"));
+    }
+    out.push_str("\nOPTIONS:\n");
+    let render_name = |s: &OptSpec| match s.value_name {
+        Some(v) => format!("--{} <{v}>", s.name),
+        None => format!("--{}", s.name),
+    };
+    let w = specs.iter().map(|s| render_name(s).len()).max().unwrap_or(0);
+    for s in specs {
+        let mut line = format!("  {:<w$}  {}", render_name(s), s.help);
+        if let Some(d) = s.default {
+            line.push_str(&format!(" [default: {d}]"));
+        }
+        out.push_str(&line);
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "platform", value_name: Some("NAME"), help: "platform", default: Some("orin") },
+            OptSpec { name: "steps", value_name: Some("N"), help: "steps", default: Some("100") },
+            OptSpec { name: "verbose", value_name: None, help: "chatty", default: None },
+            OptSpec { name: "sizes", value_name: Some("LIST"), help: "sizes", default: None },
+        ]
+    }
+
+    fn parse(argv: &[&str]) -> anyhow::Result<Args> {
+        let v: Vec<String> = argv.iter().map(|s| s.to_string()).collect();
+        Args::parse("vla-char", &v, &specs())
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["characterize", "--platform", "thor", "--verbose"]).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("characterize"));
+        assert_eq!(a.get("platform"), Some("thor"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse(&["run", "--steps=250"]).unwrap();
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 250);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["run"]).unwrap();
+        assert_eq!(a.get_or("platform", "orin"), "orin");
+        assert_eq!(a.get_f64("steps", 100.0).unwrap(), 100.0);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(parse(&["run", "--bogus"]).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parse(&["run", "--platform"]).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(parse(&["run", "--verbose=yes"]).is_err());
+    }
+
+    #[test]
+    fn bad_number_rejected() {
+        let a = parse(&["run", "--steps", "abc"]).unwrap();
+        assert!(a.get_usize("steps", 0).is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["run", "--sizes", "7, 30,100"]).unwrap();
+        assert_eq!(a.get_f64_list("sizes", &[]).unwrap(), vec![7.0, 30.0, 100.0]);
+        let b = parse(&["run"]).unwrap();
+        assert_eq!(b.get_f64_list("sizes", &[1.0]).unwrap(), vec![1.0]);
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse(&["run", "alpha", "beta"]).unwrap();
+        assert_eq!(a.positionals, vec!["alpha", "beta"]);
+    }
+
+    #[test]
+    fn help_renders() {
+        let h = help_text("vla-char", "VLA characterization", &[("run", "run it")], &specs());
+        assert!(h.contains("--platform <NAME>"));
+        assert!(h.contains("[default: orin]"));
+        assert!(h.contains("run it"));
+    }
+}

@@ -1,0 +1,14 @@
+//! Foundation utilities built in-repo because the offline environment only
+//! vendors the `xla` crate's dependency closure (no serde/clap/criterion/
+//! proptest/rand): JSON, CLI parsing, statistics, PRNG, tables, a bench
+//! harness, a mini property-testing framework, and logging.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod prng;
+pub mod prop;
+pub mod stats;
+pub mod table;
+pub mod units;

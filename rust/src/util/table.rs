@@ -1,0 +1,237 @@
+//! Table builder with markdown and CSV emitters.
+//!
+//! All reproduced paper tables/figures are emitted as aligned markdown (for
+//! the console and EXPERIMENTS.md) and CSV (for plotting).
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple table: header row + data rows of strings.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            aligns: headers.iter().map(|_| Align::Right).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Set alignment per column (defaults to Right; first column commonly Left).
+    pub fn align(mut self, aligns: &[Align]) -> Table {
+        assert_eq!(aligns.len(), self.headers.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    /// Convenience: left-align the first column only.
+    pub fn left_first(mut self) -> Table {
+        if !self.aligns.is_empty() {
+            self.aligns[0] = Align::Left;
+        }
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.headers.len()
+        );
+        self.rows.push(cells);
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn headers(&self) -> &[String] {
+        &self.headers
+    }
+
+    pub fn rows(&self) -> &[Vec<String>] {
+        &self.rows
+    }
+
+    /// Cell accessor (row, col).
+    pub fn cell(&self, r: usize, c: usize) -> &str {
+        &self.rows[r][c]
+    }
+
+    /// Render as aligned markdown.
+    pub fn to_markdown(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let pad = |s: &str, w: usize, a: Align| -> String {
+            let len = s.chars().count();
+            let fill = " ".repeat(w.saturating_sub(len));
+            match a {
+                Align::Left => format!("{s}{fill}"),
+                Align::Right => format!("{fill}{s}"),
+            }
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("### {}\n\n", self.title));
+        }
+        out.push('|');
+        for i in 0..ncols {
+            out.push_str(&format!(" {} |", pad(&self.headers[i], widths[i], self.aligns[i])));
+        }
+        out.push_str("\n|");
+        for (i, w) in widths.iter().enumerate() {
+            let dashes = "-".repeat(*w);
+            match self.aligns[i] {
+                Align::Left => out.push_str(&format!(" {dashes} |")),
+                Align::Right => out.push_str(&format!(" {dashes}:|")),
+            }
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push('|');
+            for (i, cell) in row.iter().enumerate() {
+                out.push_str(&format!(" {} |", pad(cell, widths[i], self.aligns[i])));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as CSV (RFC-4180-ish quoting).
+    pub fn to_csv(&self) -> String {
+        let quote = |s: &str| -> String {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(
+            &self
+                .headers
+                .iter()
+                .map(|h| quote(h))
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| quote(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write markdown + CSV files under `dir` using a slug of the title.
+    pub fn save(&self, dir: &std::path::Path, slug: &str) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{slug}.md")), self.to_markdown())?;
+        std::fs::write(dir.join(format!("{slug}.csv")), self.to_csv())?;
+        Ok(())
+    }
+}
+
+/// Render an ASCII horizontal bar chart (for figure reproductions on the
+/// console — the paper's Fig 2/3 are bar charts).
+pub fn ascii_bars(title: &str, items: &[(String, f64)], unit: &str, width: usize) -> String {
+    let max = items.iter().map(|(_, v)| *v).fold(f64::MIN, f64::max).max(1e-30);
+    let label_w = items.iter().map(|(l, _)| l.chars().count()).max().unwrap_or(0);
+    let mut out = format!("{title}\n");
+    for (label, v) in items {
+        let n = ((v / max) * width as f64).round() as usize;
+        out.push_str(&format!(
+            "  {:<lw$} | {}{} {:.3} {}\n",
+            label,
+            "#".repeat(n),
+            " ".repeat(width - n),
+            v,
+            unit,
+            lw = label_w
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("Test", &["name", "bw", "tflops"]).left_first();
+        t.row(vec!["orin".into(), "203".into(), "100".into()]);
+        t.row(vec!["thor".into(), "273".into(), "500".into()]);
+        t
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let md = sample().to_markdown();
+        assert!(md.contains("### Test"));
+        assert!(md.contains("| name |"));
+        let lines: Vec<&str> = md.lines().collect();
+        // title, blank, header, separator, 2 rows
+        assert_eq!(lines.len(), 6);
+        // all table lines same width
+        let w = lines[2].len();
+        assert!(lines[3..].iter().all(|l| l.len() == w));
+    }
+
+    #[test]
+    fn csv_quoting() {
+        let mut t = Table::new("q", &["a", "b"]);
+        t.row(vec!["x,y".into(), "he said \"hi\"".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"he said \"\"hi\"\"\""));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn bars_render() {
+        let s = ascii_bars(
+            "fig",
+            &[("a".into(), 1.0), ("bb".into(), 2.0)],
+            "ms",
+            10,
+        );
+        assert!(s.contains("##########")); // max bar is full width
+        assert!(s.contains("#####"));
+        assert!(s.starts_with("fig\n"));
+    }
+
+    #[test]
+    fn save_files() {
+        let dir = std::env::temp_dir().join("vla_char_table_test");
+        sample().save(&dir, "t1").unwrap();
+        let md = std::fs::read_to_string(dir.join("t1.md")).unwrap();
+        assert!(md.contains("orin"));
+        let csv = std::fs::read_to_string(dir.join("t1.csv")).unwrap();
+        assert!(csv.starts_with("name,bw,tflops"));
+    }
+}

@@ -1,0 +1,120 @@
+//! Unit helpers and human-readable formatting for times, bytes, FLOP counts,
+//! bandwidths, and frequencies. All simulator-internal quantities are SI
+//! (seconds, bytes, FLOPs); these helpers format for reports.
+
+pub const KIB: f64 = 1024.0;
+pub const MIB: f64 = 1024.0 * 1024.0;
+pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+pub const GB: f64 = 1e9;
+pub const TERA: f64 = 1e12;
+pub const GIGA: f64 = 1e9;
+pub const MEGA: f64 = 1e6;
+pub const MILLI: f64 = 1e-3;
+pub const MICRO: f64 = 1e-6;
+
+/// Format a duration in seconds with an auto-selected unit.
+pub fn fmt_time(secs: f64) -> String {
+    let a = secs.abs();
+    if a >= 1.0 {
+        format!("{:.3} s", secs)
+    } else if a >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if a >= 1e-6 {
+        format!("{:.3} us", secs * 1e6)
+    } else if a == 0.0 {
+        "0 s".to_string()
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Format a byte count.
+pub fn fmt_bytes(bytes: f64) -> String {
+    let a = bytes.abs();
+    if a >= GIB {
+        format!("{:.2} GiB", bytes / GIB)
+    } else if a >= MIB {
+        format!("{:.2} MiB", bytes / MIB)
+    } else if a >= KIB {
+        format!("{:.2} KiB", bytes / KIB)
+    } else {
+        format!("{:.0} B", bytes)
+    }
+}
+
+/// Format a FLOP count.
+pub fn fmt_flops(flops: f64) -> String {
+    let a = flops.abs();
+    if a >= 1e12 {
+        format!("{:.2} TFLOP", flops / 1e12)
+    } else if a >= 1e9 {
+        format!("{:.2} GFLOP", flops / 1e9)
+    } else if a >= 1e6 {
+        format!("{:.2} MFLOP", flops / 1e6)
+    } else {
+        format!("{:.0} FLOP", flops)
+    }
+}
+
+/// Format a rate in Hz.
+pub fn fmt_hz(hz: f64) -> String {
+    if hz >= 1.0 {
+        format!("{:.2} Hz", hz)
+    } else if hz >= 1e-3 {
+        format!("{:.2} mHz", hz * 1e3)
+    } else {
+        format!("{:.4} mHz", hz * 1e3)
+    }
+}
+
+/// Format a throughput in GB/s.
+pub fn fmt_bw(bytes_per_sec: f64) -> String {
+    format!("{:.0} GB/s", bytes_per_sec / GB)
+}
+
+/// Format a ratio like "1.40x".
+pub fn fmt_ratio(r: f64) -> String {
+    format!("{:.2}x", r)
+}
+
+/// Format a fraction as a percentage.
+pub fn fmt_pct(frac: f64) -> String {
+    format!("{:.1}%", frac * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_units() {
+        assert_eq!(fmt_time(1.5), "1.500 s");
+        assert_eq!(fmt_time(0.0123), "12.300 ms");
+        assert_eq!(fmt_time(45e-6), "45.000 us");
+        assert_eq!(fmt_time(12e-9), "12.0 ns");
+        assert_eq!(fmt_time(0.0), "0 s");
+    }
+
+    #[test]
+    fn byte_units() {
+        assert_eq!(fmt_bytes(512.0), "512 B");
+        assert_eq!(fmt_bytes(2048.0), "2.00 KiB");
+        assert_eq!(fmt_bytes(3.5 * MIB), "3.50 MiB");
+        assert_eq!(fmt_bytes(2.0 * GIB), "2.00 GiB");
+    }
+
+    #[test]
+    fn flop_units() {
+        assert_eq!(fmt_flops(2e12), "2.00 TFLOP");
+        assert_eq!(fmt_flops(5e9), "5.00 GFLOP");
+    }
+
+    #[test]
+    fn rate_units() {
+        assert_eq!(fmt_hz(10.0), "10.00 Hz");
+        assert_eq!(fmt_hz(0.05), "50.00 mHz");
+        assert_eq!(fmt_bw(203e9), "203 GB/s");
+        assert_eq!(fmt_ratio(1.4), "1.40x");
+        assert_eq!(fmt_pct(0.753), "75.3%");
+    }
+}

@@ -1,0 +1,137 @@
+//! CLI surface: every subcommand parses, runs, and returns the right exit
+//! code (simulation-only commands here; PJRT commands are covered by the
+//! integration suite and examples).
+
+use vla_char::cli;
+
+fn run(args: &[&str]) -> anyhow::Result<i32> {
+    let argv: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+    cli::run(&argv)
+}
+
+#[test]
+fn help_exits_zero() {
+    assert_eq!(run(&["--help"]).unwrap(), 0);
+    assert_eq!(run(&[]).unwrap(), 0);
+}
+
+#[test]
+fn unknown_subcommand_exits_two() {
+    assert_eq!(run(&["frobnicate"]).unwrap(), 2);
+}
+
+#[test]
+fn unknown_flag_is_error() {
+    assert!(run(&["table1", "--bogus"]).is_err());
+}
+
+#[test]
+fn table1_ok() {
+    assert_eq!(run(&["table1"]).unwrap(), 0);
+}
+
+#[test]
+fn characterize_passes_checks() {
+    assert_eq!(run(&["characterize", "--stride", "8"]).unwrap(), 0);
+}
+
+#[test]
+fn characterize_with_trace_and_platform() {
+    assert_eq!(
+        run(&["characterize", "--stride", "8", "--trace", "--platform", "thor+pim"]).unwrap(),
+        0
+    );
+}
+
+#[test]
+fn project_passes_checks() {
+    assert_eq!(
+        run(&["project", "--stride", "16", "--sizes", "2,7,30,100", "--amortized"]).unwrap(),
+        0
+    );
+}
+
+#[test]
+fn project_compiled_runtime_also_passes_shape() {
+    // C5 claims hold for the idealized runtime too (physics, not framework)
+    assert_eq!(
+        run(&["project", "--stride", "16", "--sizes", "7,100", "--compiled"]).unwrap(),
+        0
+    );
+}
+
+#[test]
+fn ablate_ok() {
+    assert_eq!(run(&["ablate"]).unwrap(), 0);
+}
+
+#[test]
+fn report_writes_files() {
+    let out = std::env::temp_dir().join("vla_char_cli_report");
+    let _ = std::fs::remove_dir_all(&out);
+    let code = run(&["report", "--stride", "16", "--out", out.to_str().unwrap()]).unwrap();
+    assert_eq!(code, 0);
+    for f in [
+        "table1.md",
+        "table1.csv",
+        "fig2.md",
+        "fig3.md",
+        "fig3_amortized.md",
+        "ablation_prefetch.md",
+        "ablation_cot.md",
+        "ablation_horizon.md",
+        "ablation_framework.md",
+        "checks.txt",
+    ] {
+        assert!(out.join(f).exists(), "missing report file {f}");
+    }
+    let checks = std::fs::read_to_string(out.join("checks.txt")).unwrap();
+    assert!(checks.contains("[PASS]"));
+    assert!(!checks.contains("[FAIL]"), "all checks must pass:\n{checks}");
+}
+
+#[test]
+fn bad_platform_is_error() {
+    assert!(run(&["characterize", "--trace", "--platform", "h100"]).is_err());
+}
+
+#[test]
+fn codesign_energy_batch_ok() {
+    assert_eq!(run(&["codesign", "--stride", "32"]).unwrap(), 0);
+    assert_eq!(run(&["energy", "--stride", "32", "--size", "30"]).unwrap(), 0);
+    assert_eq!(
+        run(&["batch", "--stride", "32", "--platform", "thor", "--batches", "1,8"]).unwrap(),
+        0
+    );
+}
+
+#[test]
+fn trace_export_writes_valid_json() {
+    let out = std::env::temp_dir().join("vla_char_cli_trace.json");
+    let _ = std::fs::remove_file(&out);
+    assert_eq!(
+        run(&["trace-export", "--size", "2", "--trace-out", out.to_str().unwrap()]).unwrap(),
+        0
+    );
+    let text = std::fs::read_to_string(&out).unwrap();
+    assert!(vla_char::util::json::Json::parse(&text).is_ok());
+}
+
+#[test]
+fn custom_platform_and_model_files() {
+    let dir = std::env::temp_dir();
+    let plat = dir.join("vla_char_custom_platform.json");
+    std::fs::write(
+        &plat,
+        r#"{"name": "EdgeX",
+            "soc": {"sms": 32, "clock_ghz": 1.5, "tflops_bf16": 250,
+                    "tflops_f32": 15, "smem_kib": 192, "l2_mib": 8,
+                    "l2_bw_gbs": 4000},
+            "mem": {"name": "HBM3", "bw_gbs": 800, "capacity_gb": 48}}"#,
+    )
+    .unwrap();
+    assert_eq!(
+        run(&["batch", "--stride", "32", "--platform-file", plat.to_str().unwrap()]).unwrap(),
+        0
+    );
+}

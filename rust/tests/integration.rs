@@ -1,0 +1,133 @@
+//! Cross-module integration: engine + control loop + batcher over the real
+//! PJRT artifacts, checked against the paper's qualitative claims.
+
+use std::sync::Mutex;
+use vla_char::engine::{
+    run_batcher, run_control_loop, BatcherConfig, ControlLoopConfig, FrameSource, Policy,
+    StepServer, VlaEngine, VlaModel,
+};
+use vla_char::runtime::Runtime;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn engine(decode_tokens: usize) -> VlaEngine {
+    let rt = Runtime::cpu().expect("PJRT cpu client");
+    let model = VlaModel::load(&rt).expect("run `make artifacts` first");
+    VlaEngine::with_decode_tokens(model, decode_tokens)
+}
+
+#[test]
+fn decode_dominates_real_step() {
+    let _g = LOCK.lock().unwrap();
+    let e = engine(24);
+    let m = e.model.manifest.clone();
+    let mut frames = FrameSource::new(1, m.vision.patches, m.vision.patch_dim, 1);
+    let prompt = frames.prompt(0, m.workload.prompt_tokens, m.decoder.vocab);
+    let r = e.step(&frames.next_frame(0, 0), &prompt).unwrap();
+    assert_eq!(r.tokens.len(), 24);
+    assert!(
+        r.times.decode > r.times.vision + r.times.prefill + r.times.action,
+        "decode must be the dominant phase: {:?}",
+        r.times
+    );
+    assert!(r.times.generation_share() > 0.5);
+}
+
+#[test]
+fn decode_time_scales_with_token_budget() {
+    let _g = LOCK.lock().unwrap();
+    let e = engine(8);
+    let m = e.model.manifest.clone();
+    let mut frames = FrameSource::new(1, m.vision.patches, m.vision.patch_dim, 2);
+    let prompt = frames.prompt(0, m.workload.prompt_tokens, m.decoder.vocab);
+    let frame = frames.next_frame(0, 0);
+    let r8 = e.step(&frame, &prompt).unwrap();
+    let e32 = VlaEngine::with_decode_tokens(
+        {
+            let rt = Runtime::cpu().unwrap();
+            VlaModel::load(&rt).unwrap()
+        },
+        32,
+    );
+    let r32 = e32.step(&frame, &prompt).unwrap();
+    let ratio = r32.times.decode.as_secs_f64() / r8.times.decode.as_secs_f64();
+    assert!(
+        (2.0..8.0).contains(&ratio),
+        "4x tokens should cost ~4x decode time, got {ratio:.2}x"
+    );
+}
+
+#[test]
+fn control_loop_reports_misses_and_phases() {
+    let _g = LOCK.lock().unwrap();
+    let e = engine(16);
+    let r = run_control_loop(
+        &e,
+        &ControlLoopConfig {
+            target_hz: 10.0,
+            steps: 4,
+            seed: 3,
+        },
+    )
+    .unwrap();
+    assert_eq!(r.steps, 4);
+    assert_eq!(r.deadline_misses, 4, "tiny VLA on CPU cannot hit 10 Hz");
+    assert!(r.achieved_hz > 0.0 && r.achieved_hz < 10.0);
+    assert!(r.amortized_hz > r.achieved_hz, "chunking amortizes");
+    assert!(r.mean_phase.iter().all(|t| *t > 0.0));
+    assert!(r.generation_share > 0.5);
+    assert!(r.latency_vs_budget() > 1.0);
+}
+
+struct EngineServer<'a>(&'a VlaEngine);
+
+impl StepServer for EngineServer<'_> {
+    fn serve(
+        &mut self,
+        frame: &vla_char::engine::Frame,
+        prompt: &[i32],
+    ) -> anyhow::Result<std::time::Duration> {
+        Ok(self.0.step(frame, prompt)?.times.total())
+    }
+}
+
+#[test]
+fn serving_real_engine_round_robin() {
+    let _g = LOCK.lock().unwrap();
+    let e = engine(8);
+    let m = e.model.manifest.clone();
+    let frames = FrameSource::new(1, m.vision.patches, m.vision.patch_dim, 5);
+    let prompt = frames.prompt(0, m.workload.prompt_tokens, m.decoder.vocab);
+    let mut server = EngineServer(&e);
+    let r = run_batcher(
+        &mut server,
+        m.vision.patches,
+        m.vision.patch_dim,
+        &prompt,
+        &BatcherConfig {
+            streams: 2,
+            rate_hz: 1.0,
+            duration_s: 2.0,
+            policy: Policy::RoundRobin,
+            seed: 9,
+        },
+    )
+    .unwrap();
+    assert!(r.served >= 2);
+    assert_eq!(r.per_stream_served, r.per_stream_arrived);
+    assert!(r.service.mean > 0.0);
+}
+
+#[test]
+fn steps_are_deterministic() {
+    let _g = LOCK.lock().unwrap();
+    let e = engine(8);
+    let m = e.model.manifest.clone();
+    let mut f1 = FrameSource::new(1, m.vision.patches, m.vision.patch_dim, 11);
+    let prompt = f1.prompt(0, m.workload.prompt_tokens, m.decoder.vocab);
+    let frame = f1.next_frame(0, 0);
+    let a = e.step(&frame, &prompt).unwrap();
+    let b = e.step(&frame, &prompt).unwrap();
+    assert_eq!(a.tokens, b.tokens);
+    assert_eq!(a.actions, b.actions);
+}

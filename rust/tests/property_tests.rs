@@ -1,0 +1,225 @@
+//! Property-based tests over the simulator's invariants, using the in-repo
+//! mini framework (`util::prop`): randomized operators, platforms, and
+//! workload shapes must satisfy physical/monotonicity laws.
+
+use vla_char::hw::{platform, DType};
+use vla_char::model::layer::BlockDims;
+use vla_char::model::molmoact::molmoact_7b;
+use vla_char::model::scaling::{scaled_vla, ANCHOR_SIZES_B};
+use vla_char::model::Operator;
+use vla_char::sim::{cost_on_soc, cost_op, SimOptions, Simulator};
+use vla_char::util::json::Json;
+use vla_char::util::prng::Prng;
+use vla_char::util::prop::{ensure, ensure_close, prop_check};
+
+fn random_matmul(rng: &mut Prng) -> Operator {
+    let batch = rng.uniform_u64(1, 8);
+    let m = rng.uniform_u64(1, 2048);
+    let n = rng.uniform_u64(16, 8192);
+    let k = rng.uniform_u64(16, 8192);
+    Operator::matmul_weight("op", batch, m, n, k, DType::BF16)
+}
+
+#[test]
+fn op_time_at_least_every_bound() {
+    prop_check("t >= max(compute, mem) individually", 300, |rng| {
+        let op = random_matmul(rng);
+        let c = cost_on_soc(&platform::orin(), &op);
+        ensure(
+            c.t_serial() + 1e-15 >= c.t_compute,
+            format!("serial {} < compute {}", c.t_serial(), c.t_compute),
+        )?;
+        ensure(
+            c.t_serial() + 1e-15 >= c.t_mem_weights + c.t_mem_other,
+            "serial below memory time",
+        )?;
+        ensure(c.t_serial().is_finite() && c.t_serial() > 0.0, "non-finite time")
+    });
+}
+
+#[test]
+fn more_bandwidth_never_slower() {
+    prop_check("op time monotone in DRAM bandwidth", 200, |rng| {
+        let op = random_matmul(rng);
+        let t_lo = cost_on_soc(&platform::orin(), &op).t_serial();
+        let t_hi = cost_on_soc(&platform::orin_gddr7(), &op).t_serial();
+        ensure(
+            t_hi <= t_lo * 1.0001,
+            format!("GDDR7 slower than LPDDR5: {t_hi} vs {t_lo}"),
+        )
+    });
+}
+
+#[test]
+fn pim_option_never_hurts() {
+    prop_check("engine choice is a min", 200, |rng| {
+        let op = random_matmul(rng);
+        let plat = platform::orin_pim();
+        let with = cost_op(&plat, &op, true).t_serial();
+        let without = cost_op(&plat, &op, false).t_serial();
+        ensure(
+            with <= without * 1.0001,
+            format!("PIM offload made op slower: {with} vs {without}"),
+        )
+    });
+}
+
+#[test]
+fn prefetch_never_hurts_stages() {
+    prop_check("prefetch <= serial for random decode positions", 40, |rng| {
+        let cfg = molmoact_7b();
+        let pos = rng.uniform_u64(1, 2000);
+        let stage = cfg.decode_stage_at(pos);
+        let plat = rng.uniform_usize(0, 3);
+        let plat = platform::table1_platforms()[plat].clone();
+        let on = Simulator::with_options(plat.clone(), SimOptions::default()).simulate_stage(&stage);
+        let off = Simulator::with_options(
+            plat,
+            SimOptions {
+                prefetch: false,
+                ..Default::default()
+            },
+        )
+        .simulate_stage(&stage);
+        ensure(
+            on.time <= off.time * 1.0001,
+            format!("prefetch hurt at pos {pos}: {} vs {}", on.time, off.time),
+        )
+    });
+}
+
+#[test]
+fn decode_time_monotone_in_kv_length() {
+    prop_check("longer cache never cheaper", 60, |rng| {
+        let cfg = molmoact_7b();
+        let a = rng.uniform_u64(1, 1500);
+        let b = a + rng.uniform_u64(1, 500);
+        let sim = Simulator::new(platform::thor());
+        let ta = sim.simulate_stage(&cfg.decode_stage_at(a)).time;
+        let tb = sim.simulate_stage(&cfg.decode_stage_at(b)).time;
+        ensure(tb + 1e-12 >= ta, format!("kv {a}->{b}: {ta} -> {tb}"))
+    });
+}
+
+#[test]
+fn stage_flop_byte_accounting_consistent() {
+    prop_check("stage totals equal op sums", 60, |rng| {
+        let d = BlockDims {
+            hidden: 64 * rng.uniform_u64(1, 8),
+            heads: 8,
+            kv_heads: 4,
+            head_dim: 32,
+            ffn: 128 * rng.uniform_u64(1, 8),
+            dtype: DType::BF16,
+        };
+        let ops = vla_char::model::layer::decoder_block_decode("x", &d, rng.uniform_u64(1, 512));
+        let stage = vla_char::model::Stage::new("s", vla_char::model::Phase::Decode, ops.clone());
+        let flops: f64 = ops.iter().map(|o| o.flops).sum();
+        let bytes: f64 = ops.iter().map(|o| o.total_bytes()).sum();
+        ensure_close(stage.total_flops(), flops, 1e-12, "flops")?;
+        ensure_close(stage.total_bytes(), bytes, 1e-12, "bytes")
+    });
+}
+
+#[test]
+fn vla_total_is_sum_of_phases() {
+    prop_check("phase decomposition sums to total", 8, |rng| {
+        let size = *rng.choose(&ANCHOR_SIZES_B);
+        let cfg = scaled_vla(size);
+        let sim = Simulator::with_options(
+            platform::thor(),
+            SimOptions {
+                decode_stride: 32,
+                ..Default::default()
+            },
+        );
+        let r = sim.simulate_vla(&cfg);
+        let sum: f64 = r.stages().iter().map(|s| s.time).sum();
+        ensure_close(r.total(), sum, 1e-12, "total")?;
+        ensure((0.0..=1.0).contains(&r.generation_share()), "share in [0,1]")
+    });
+}
+
+#[test]
+fn scaling_latency_superlinear_in_params() {
+    // doubling params should at least not reduce step latency (usually ~2x)
+    prop_check("bigger model never faster", 5, |rng| {
+        let i = rng.uniform_usize(0, ANCHOR_SIZES_B.len() - 2);
+        let small = scaled_vla(ANCHOR_SIZES_B[i]);
+        let big = scaled_vla(ANCHOR_SIZES_B[i + 1]);
+        let sim = Simulator::with_options(
+            platform::orin(),
+            SimOptions {
+                decode_stride: 32,
+                ..Default::default()
+            },
+        );
+        let ts = sim.simulate_vla(&small).total();
+        let tb = sim.simulate_vla(&big).total();
+        ensure(tb > ts, format!("{}B {} vs {}B {}", ANCHOR_SIZES_B[i], ts, ANCHOR_SIZES_B[i + 1], tb))
+    });
+}
+
+#[test]
+fn json_roundtrips_random_documents() {
+    fn random_json(rng: &mut Prng, depth: u32) -> Json {
+        match if depth == 0 { rng.uniform_u64(0, 3) } else { rng.uniform_u64(0, 5) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_f64() < 0.5),
+            2 => Json::Num((rng.uniform_f64(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => Json::Str(format!("s{}-\"quoted\"\n", rng.uniform_u64(0, 999))),
+            4 => Json::Arr((0..rng.uniform_u64(0, 4)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.uniform_u64(0, 4))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    prop_check("parse(serialize(x)) == x", 300, |rng| {
+        let doc = random_json(rng, 3);
+        let compact = Json::parse(&doc.to_string_compact()).map_err(|e| e.to_string())?;
+        let pretty = Json::parse(&doc.to_string_pretty()).map_err(|e| e.to_string())?;
+        ensure(compact == doc, "compact roundtrip")?;
+        ensure(pretty == doc, "pretty roundtrip")
+    });
+}
+
+#[test]
+fn stats_percentiles_ordered() {
+    prop_check("min <= p50 <= p90 <= p99 <= max", 200, |rng| {
+        let n = rng.uniform_usize(1, 200);
+        let samples: Vec<f64> = (0..n).map(|_| rng.normal_ms(10.0, 5.0)).collect();
+        let s = vla_char::util::stats::Summary::of(&samples);
+        ensure(
+            s.min <= s.p50 && s.p50 <= s.p90 && s.p90 <= s.p99 && s.p99 <= s.max,
+            format!("{s:?}"),
+        )?;
+        ensure(s.mean >= s.min && s.mean <= s.max, "mean within range")
+    });
+}
+
+#[test]
+fn decode_stride_interpolation_bounded_error() {
+    prop_check("stride sampling error < 3%", 6, |rng| {
+        let cfg = molmoact_7b();
+        let stride = rng.uniform_u64(2, 32);
+        let plat = platform::table1_platforms()[rng.uniform_usize(0, 6)].clone();
+        let exact = Simulator::with_options(plat.clone(), SimOptions::default())
+            .simulate_decode(&cfg)
+            .time;
+        let approx = Simulator::with_options(
+            plat,
+            SimOptions {
+                decode_stride: stride,
+                ..Default::default()
+            },
+        )
+        .simulate_decode(&cfg)
+        .time;
+        ensure(
+            (exact - approx).abs() / exact < 0.03,
+            format!("stride {stride}: exact {exact} vs {approx}"),
+        )
+    });
+}

@@ -1,0 +1,134 @@
+//! Artifact → PJRT round-trip: every compiled module loads and executes with
+//! the manifest's shapes; numerics match the python-recorded golden trace.
+
+use std::sync::Mutex;
+use vla_char::engine::VlaModel;
+use vla_char::runtime::{artifacts_dir, load_manifest, load_params, Runtime};
+
+// PJRT client creation is serialized across tests.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn require_artifacts() -> std::path::PathBuf {
+    artifacts_dir().expect("run `make artifacts` before `cargo test`")
+}
+
+#[test]
+fn manifest_matches_params_file() {
+    let dir = require_artifacts();
+    let m = load_manifest(&dir).unwrap();
+    let params = load_params(&dir, m.n_params).unwrap();
+    assert_eq!(params.len(), m.n_params);
+    // params are finite and not all zero
+    assert!(params.iter().all(|x| x.is_finite()));
+    assert!(params.iter().any(|x| *x != 0.0));
+}
+
+#[test]
+fn all_modules_compile_and_run() {
+    let _g = LOCK.lock().unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let model = VlaModel::load(&rt).unwrap();
+    let m = model.manifest.clone();
+
+    // vision
+    let patches = vec![0.1f32; m.vision.patches * m.vision.patch_dim];
+    let (embeds, host, _) = model.encode_vision(&patches).unwrap();
+    assert_eq!(host.len(), m.workload.image_tokens * m.decoder.hidden);
+
+    // prefill
+    let prompt: Vec<i32> = (0..m.workload.prompt_tokens as i32).collect();
+    let (logits, cache, _) = model.run_prefill(&embeds, &prompt).unwrap();
+    assert_eq!(logits.len(), m.decoder.vocab);
+    assert_eq!(cache.len, m.workload.prefill_len);
+
+    // decode
+    let (logits2, cache2, _) = model.run_decode_step(3, cache).unwrap();
+    assert_eq!(logits2.len(), m.decoder.vocab);
+    assert_eq!(cache2.len, m.workload.prefill_len + 1);
+
+    // action
+    let cond = vec![0.5f32; m.decoder.hidden];
+    let (actions, _) = model.run_action(&cond).unwrap();
+    assert_eq!(actions.len(), m.action.horizon * m.action.action_dim);
+    assert!(actions.iter().all(|a| a.abs() <= 1.0), "tanh-bounded");
+}
+
+#[test]
+fn bad_inputs_rejected() {
+    let _g = LOCK.lock().unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let model = VlaModel::load(&rt).unwrap();
+    assert!(model.encode_vision(&[0.0; 3]).is_err(), "wrong patch buffer");
+    assert!(model.run_action(&[0.0; 3]).is_err(), "wrong cond width");
+}
+
+#[test]
+fn decode_rejects_full_cache() {
+    let _g = LOCK.lock().unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let model = VlaModel::load(&rt).unwrap();
+    let m = model.manifest.clone();
+    let patches = vec![0.0f32; m.vision.patches * m.vision.patch_dim];
+    let (embeds, _, _) = model.encode_vision(&patches).unwrap();
+    let prompt: Vec<i32> = vec![0; m.workload.prompt_tokens];
+    let (_, mut cache, _) = model.run_prefill(&embeds, &prompt).unwrap();
+    // fill to the brim
+    while cache.len < m.decoder.max_seq {
+        let (_, c, _) = model.run_decode_step(1, cache).unwrap();
+        cache = c;
+    }
+    assert!(model.run_decode_step(1, cache).is_err(), "cache overflow must error");
+}
+
+#[test]
+fn golden_trace_replays_exactly() {
+    let _g = LOCK.lock().unwrap();
+    let dir = require_artifacts();
+    let rt = Runtime::cpu().unwrap();
+    let model = VlaModel::load(&rt).unwrap();
+    let m = model.manifest.clone();
+    let g = &m.golden;
+
+    // the exact inputs python used
+    let raw = std::fs::read(dir.join("golden_patches.f32.bin")).unwrap();
+    let patches: Vec<f32> = raw
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    assert_eq!(patches.len(), m.vision.patches * m.vision.patch_dim);
+
+    let (embeds, host, _) = model.encode_vision(&patches).unwrap();
+    let embeds_sum: f64 = host.iter().map(|x| *x as f64).sum();
+    let rel = (embeds_sum - g.embeds_sum).abs() / g.embeds_sum.abs().max(1e-9);
+    assert!(rel < 1e-3, "embeds_sum {embeds_sum} vs golden {}", g.embeds_sum);
+
+    let (logits, mut cache, _) = model.run_prefill(&embeds, &g.prompt_token_ids).unwrap();
+    let mut tok = model.greedy(&logits);
+    let mut generated = Vec::new();
+    for _ in 0..g.first_tokens.len() {
+        generated.push(tok as i64);
+        let (l, c, _) = model.run_decode_step(tok, cache).unwrap();
+        cache = c;
+        tok = model.greedy(&l);
+    }
+    assert_eq!(generated, g.first_tokens, "greedy decode must replay python exactly");
+    assert_eq!(tok as i64, g.next_token);
+
+    let hidden = m.decoder.hidden;
+    let cond = &host[host.len() - hidden..];
+    let (actions, _) = model.run_action(cond).unwrap();
+    let sum: f64 = actions.iter().map(|x| *x as f64).sum();
+    assert!(
+        (sum - g.actions_sum).abs() < 1e-3,
+        "actions_sum {sum} vs golden {}",
+        g.actions_sum
+    );
+    for (i, want) in g.actions_first_row.iter().enumerate() {
+        assert!(
+            (actions[i] as f64 - want).abs() < 1e-4,
+            "action[0][{i}] {} vs {}",
+            actions[i],
+            want
+        );
+    }
+}

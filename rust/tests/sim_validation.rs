@@ -1,0 +1,80 @@
+//! E-C6: the simulator, calibrated on real PJRT-CPU measurements of the tiny
+//! VLA, must predict phase latencies within the paper's 70-90% accuracy band,
+//! and must agree with reality about WHICH phase dominates.
+
+use std::sync::Mutex;
+use vla_char::engine::{FrameSource, VlaEngine, VlaModel};
+use vla_char::model::Phase;
+use vla_char::profile::PhaseProfiler;
+use vla_char::runtime::Runtime;
+use vla_char::sim::calibrate::{
+    cpu_sim_options, tiny_config_from_manifest, validate, MeasuredPhases,
+};
+use vla_char::sim::Simulator;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn measure(steps: u64) -> (vla_char::runtime::Manifest, MeasuredPhases) {
+    let rt = Runtime::cpu().unwrap();
+    let model = VlaModel::load(&rt).expect("run `make artifacts` first");
+    let m = model.manifest.clone();
+    let engine = VlaEngine::new(model);
+    let mut frames = FrameSource::new(1, m.vision.patches, m.vision.patch_dim, 42);
+    let prompt = frames.prompt(0, m.workload.prompt_tokens, m.decoder.vocab);
+    let mut prof = PhaseProfiler::new();
+    for s in 0..steps {
+        let r = engine.step(&frames.next_frame(0, s), &prompt).unwrap();
+        prof.record(&r.times);
+    }
+    (
+        m,
+        MeasuredPhases {
+            vision: prof.summary(Phase::Vision).p50,
+            prefill: prof.summary(Phase::Prefill).p50,
+            decode: prof.summary(Phase::Decode).p50,
+            action: prof.summary(Phase::Action).p50,
+        },
+    )
+}
+
+#[test]
+fn calibrated_simulator_meets_paper_accuracy_bar() {
+    let _g = LOCK.lock().unwrap();
+    let (manifest, measured) = measure(5);
+    let v = validate(&manifest, &measured);
+    let acc = v.total_accuracy();
+    assert!(
+        acc >= 0.70,
+        "total-latency accuracy {:.1}% below the paper's 70% floor\n{}",
+        acc * 100.0,
+        v.table().to_markdown()
+    );
+    // decode (the paper's focus) must individually clear the floor
+    let decode_acc = v.per_phase_accuracy()[2].3;
+    assert!(decode_acc >= 0.60, "decode accuracy {:.1}%", decode_acc * 100.0);
+}
+
+#[test]
+fn simulator_and_reality_agree_on_dominant_phase() {
+    let _g = LOCK.lock().unwrap();
+    let (manifest, measured) = measure(3);
+    let cfg = tiny_config_from_manifest(&manifest);
+    let v = validate(&manifest, &measured);
+    let sim = Simulator::with_options(
+        vla_char::hw::platform::cpu_host_with(v.eff_gflops, v.eff_bw),
+        cpu_sim_options(),
+    );
+    let pred = sim.simulate_vla(&cfg);
+    // both sides: decode is the largest phase
+    assert!(pred.decode.time > pred.vision.time);
+    assert!(pred.decode.time > pred.prefill.time);
+    assert!(measured.decode > measured.vision);
+    assert!(measured.decode > measured.prefill);
+    // generation share agreement within 20 points
+    let real_share = (measured.prefill + measured.decode) / measured.total();
+    let sim_share = pred.generation_share();
+    assert!(
+        (real_share - sim_share).abs() < 0.2,
+        "generation share: measured {real_share:.2} vs simulated {sim_share:.2}"
+    );
+}
