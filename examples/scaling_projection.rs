@@ -32,7 +32,8 @@ fn main() -> anyhow::Result<()> {
     println!("\ngeneration share on Orin by model size:");
     for &s in &f.sizes {
         let c = f.cell(s, "Orin").unwrap();
-        println!("  {:>4.0}B: {:.1}% of {:.1}s step", s, c.generation_share * 100.0, c.total_latency);
+        let share = c.generation_share * 100.0;
+        println!("  {:>4.0}B: {share:.1}% of {:.1}s step", s, c.total_latency);
     }
 
     let (text, ok) = render(&check_fig3(&f));

@@ -7,8 +7,19 @@ use vla_char::runtime::Runtime;
 use vla_char::util::bench::{black_box, BenchSet};
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::cpu()?;
-    let model = VlaModel::load(&rt)?;
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("skipping runtime bench (PJRT unavailable): {e}");
+            return Ok(());
+        }
+    };
+    let Ok(dir) = vla_char::runtime::artifacts_dir() else {
+        println!("skipping runtime bench: no artifacts (run `make artifacts`)");
+        return Ok(());
+    };
+    // Artifacts are present and a client exists: load failures are real.
+    let model = VlaModel::load_from(&rt, &dir)?;
     let m = model.manifest.clone();
     let mut frames = FrameSource::new(1, m.vision.patches, m.vision.patch_dim, 42);
     let prompt = frames.prompt(0, m.workload.prompt_tokens, m.decoder.vocab);

@@ -37,6 +37,7 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("report", "run every experiment and write markdown+CSV under --out"),
 ];
 
+#[rustfmt::skip]
 fn specs() -> Vec<OptSpec> {
     vec![
         OptSpec { name: "help", value_name: None, help: "show this help", default: None },
@@ -192,8 +193,8 @@ fn load_engine(args: &Args) -> anyhow::Result<VlaEngine> {
 fn cmd_step(args: &Args) -> anyhow::Result<i32> {
     let engine = load_engine(args)?;
     let m = &engine.model.manifest;
-    let mut frames =
-        crate::engine::FrameSource::new(1, m.vision.patches, m.vision.patch_dim, args.get_usize("seed", 42)? as u64);
+    let seed = args.get_usize("seed", 42)? as u64;
+    let mut frames = crate::engine::FrameSource::new(1, m.vision.patches, m.vision.patch_dim, seed);
     let prompt = frames.prompt(0, m.workload.prompt_tokens, m.decoder.vocab);
     let frame = frames.next_frame(0, 0);
     let r = engine.step(&frame, &prompt)?;

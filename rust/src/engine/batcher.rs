@@ -91,7 +91,7 @@ pub fn run_batcher<S: StepServer>(
     // Build per-stream Poisson arrivals.
     let mut arrivals: Vec<Request> = Vec::new();
     for s in 0..cfg.streams {
-        let mut rng = Prng::new(cfg.seed ^ (s as u64) << 17);
+        let mut rng = Prng::new(cfg.seed ^ ((s as u64) << 17));
         let mut t = 0.0;
         let mut step = 0u64;
         loop {

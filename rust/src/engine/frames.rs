@@ -43,7 +43,7 @@ impl FrameSource {
 
     /// Produce the next frame for `stream`.
     pub fn next_frame(&mut self, stream: usize, step: u64) -> Frame {
-        let mut rng = Prng::new(0xF00D ^ (stream as u64) << 32 ^ step);
+        let mut rng = Prng::new(0xF00D ^ ((stream as u64) << 32) ^ step);
         let buf = &mut self.base[stream];
         for x in buf.iter_mut() {
             *x = self.drift * *x + (1.0 - self.drift) * rng.normal() as f32;

@@ -3,7 +3,9 @@
 //! vision / prefill / decode / action decomposition.
 
 use crate::runtime::artifacts::{artifacts_dir, load_manifest, load_params, Manifest};
-use crate::runtime::client::{argmax, f32_literal, i32_scalar, i32_vec, to_f32_vec, CompiledModule, Runtime};
+use crate::runtime::client::{
+    argmax, f32_literal, i32_scalar, i32_vec, to_f32_vec, CompiledModule, Runtime,
+};
 use std::path::Path;
 use std::time::Duration;
 

@@ -151,9 +151,10 @@ pub fn table1_platforms() -> Vec<Platform> {
 
 /// Look up a platform by (case-insensitive) name.
 pub fn by_name(name: &str) -> anyhow::Result<Platform> {
-    let want = name.to_ascii_lowercase().replace(['_', ' '], "-");
+    let canon = |s: &str| s.to_ascii_lowercase().replace(['_', ' ', '+'], "-");
+    let want = canon(name);
     for p in table1_platforms().into_iter().chain([cpu_host()]) {
-        if p.name.to_ascii_lowercase().replace(['_', ' '], "-").replace('+', "-") == want.replace('+', "-") {
+        if canon(&p.name) == want {
             return Ok(p);
         }
     }

@@ -47,7 +47,8 @@ impl BlockDims {
 pub fn decoder_block_prefill(prefix: &str, d: &BlockDims, seq: u64, past: u64) -> Vec<Operator> {
     let dt = d.dtype;
     let ctx = seq + past;
-    let mut ops = vec![
+    // GQA repeats kv heads across q heads; no extra traffic modeled.
+    vec![
         Operator::norm(&format!("{prefix}.ln1"), seq, d.hidden, dt),
         Operator::matmul_weight(&format!("{prefix}.wq"), 1, seq, d.q_dim(), d.hidden, dt),
         Operator::matmul_weight(&format!("{prefix}.wk"), 1, seq, d.kv_dim(), d.hidden, dt),
@@ -81,12 +82,7 @@ pub fn decoder_block_prefill(prefix: &str, d: &BlockDims, seq: u64, past: u64) -
         Operator::elementwise(&format!("{prefix}.silu_mul"), seq * d.ffn, 2, 4.0, dt),
         Operator::matmul_weight(&format!("{prefix}.w_down"), 1, seq, d.hidden, d.ffn, dt),
         Operator::elementwise(&format!("{prefix}.res2"), seq * d.hidden, 2, 1.0, dt),
-    ];
-    // GQA repeats kv heads across q heads; no extra traffic modeled.
-    for op in &mut ops {
-        op.name = op.name.clone();
-    }
-    ops
+    ]
 }
 
 /// Ops for one decoder block decoding ONE token at cache length `kv_len`

@@ -136,7 +136,8 @@ mod tests {
     fn kv_cache_footprint_modest() {
         // KV at end of decode: (640+192) tokens x 28 layers x 2 x 4 x 128 x 2B
         let c = molmoact_7b();
-        let kv = c.decoder.kv_bytes_per_token() * (c.shape.prefill_len() + c.shape.decode_tokens) as f64;
+        let tokens = (c.shape.prefill_len() + c.shape.decode_tokens) as f64;
+        let kv = c.decoder.kv_bytes_per_token() * tokens;
         assert!(kv < 250e6, "GQA keeps the KV cache small: {kv:.3e} B");
     }
 }

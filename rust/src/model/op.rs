@@ -131,15 +131,16 @@ impl Operator {
             k,
             flops: 2.0 * batch as f64 * m as f64 * n as f64 * k as f64,
             weight_bytes: 0.0,
-            act_in_bytes: batch as f64 * m as f64 * k as f64 * b + if second_is_kv { 0.0 } else { second },
+            act_in_bytes: batch as f64 * m as f64 * k as f64 * b
+                + if second_is_kv { 0.0 } else { second },
             act_out_bytes: batch as f64 * m as f64 * n as f64 * b,
             kv_bytes: if second_is_kv { second } else { 0.0 },
         }
     }
 
     /// Streaming elementwise op over `elems` elements with `reads` input
-    /// streams and one output stream; `flops_per_elem` ALU ops each.
-    pub fn elementwise(name: &str, elems: u64, reads: u64, flops_per_elem: f64, dt: DType) -> Operator {
+    /// streams and one output stream; `per_elem` ALU ops each.
+    pub fn elementwise(name: &str, elems: u64, reads: u64, per_elem: f64, dt: DType) -> Operator {
         let b = dt.bytes();
         Operator {
             name: name.into(),
@@ -149,7 +150,7 @@ impl Operator {
             m: elems,
             n: 1,
             k: 1,
-            flops: elems as f64 * flops_per_elem,
+            flops: elems as f64 * per_elem,
             weight_bytes: 0.0,
             act_in_bytes: elems as f64 * reads as f64 * b,
             act_out_bytes: elems as f64 * b,

@@ -36,6 +36,7 @@ enum VisionClass {
     G,
 }
 
+#[rustfmt::skip]
 fn anchors() -> Vec<DecoderAnchor> {
     vec![
         DecoderAnchor { size_b: 2.0, hidden: 2048, layers: 24, heads: 16, kv_heads: 4, ffn: 5504, decode_tokens: 128, vision_class: VisionClass::L, action_layers: 4, action_hidden: 768 },
@@ -193,6 +194,54 @@ mod tests {
     #[test]
     fn powerlaw_monotone() {
         assert!(task_performance_powerlaw(70e9, 0.3) > task_performance_powerlaw(7e9, 0.3));
+    }
+
+    #[test]
+    fn seven_b_matches_molmoact_params_within_1pct() {
+        // the 7 B anchor IS MolmoAct-7B: parameter counts must agree to <1%
+        let scaled = scaled_vla(7.0).params();
+        let molmo = molmoact_7b().params();
+        assert!(
+            (scaled - molmo).abs() / molmo < 0.01,
+            "scaled_vla(7.0) {scaled:.3e} vs molmoact_7b() {molmo:.3e}"
+        );
+    }
+
+    #[test]
+    fn monotone_in_params_and_decoder_bytes() {
+        // Fig 3's x-axis must be strictly ordered in BOTH total parameters
+        // and the bytes decode streams per token (the bottleneck driver).
+        let mut last_params = 0.0;
+        let mut last_bytes = 0.0;
+        for size in ANCHOR_SIZES_B {
+            let c = scaled_vla(size);
+            let p = c.params();
+            let b = c.decoder_weight_bytes();
+            assert!(p > last_params, "{size}B params {p:.3e} <= {last_params:.3e}");
+            assert!(b > last_bytes, "{size}B decoder bytes {b:.3e} <= {last_bytes:.3e}");
+            last_params = p;
+            last_bytes = b;
+        }
+    }
+
+    #[test]
+    fn decode_stays_memory_bound_at_every_scale() {
+        // Paper §3: single-stream decode is a GEMV stream — its arithmetic
+        // intensity must sit far below the machine balance of every Table 1
+        // platform (Orin: 100 TFLOPS / 162 GB/s ≈ 616 FLOP/byte).
+        for size in ANCHOR_SIZES_B {
+            let c = scaled_vla(size);
+            let mid = c.shape.prefill_len() + c.shape.decode_tokens / 2;
+            let stage = c.decode_stage_at(mid);
+            let intensity = stage.intensity();
+            assert!(
+                intensity < 2.0,
+                "{}: decode intensity {intensity:.2} FLOP/byte should be memory-bound",
+                c.name
+            );
+            // and prefill over the same config is the compute-bound contrast
+            assert!(c.prefill_stage().intensity() > 50.0, "{} prefill", c.name);
+        }
     }
 
     #[test]

@@ -27,7 +27,8 @@ pub fn chrome_trace(platform: &Platform, options: &SimOptions, cfg: &VlaConfig) 
         ]));
     };
 
-    let run_stage = |stage: &crate::model::Stage, now_us: &mut f64, emit: &mut dyn FnMut(&str, &str, f64, f64, u64)| {
+    type Emit<'a> = &'a mut dyn FnMut(&str, &str, f64, f64, u64);
+    let run_stage = |stage: &crate::model::Stage, now_us: &mut f64, emit: Emit| {
         let phase_start = *now_us;
         for op in &stage.ops {
             let c = cost_op(platform, op, options.pim);
@@ -100,10 +101,10 @@ mod tests {
         let parsed = Json::parse(&text).unwrap();
         let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
         assert!(events.len() > 50);
-        let phases: Vec<&Json> = events
-            .iter()
-            .filter(|e| e.get("name").and_then(|n| n.as_str()).is_some_and(|n| n.starts_with("PHASE:")))
-            .collect();
+        let is_phase = |e: &&Json| {
+            e.get("name").and_then(|n| n.as_str()).is_some_and(|n| n.starts_with("PHASE:"))
+        };
+        let phases: Vec<&Json> = events.iter().filter(is_phase).collect();
         // vision + prefill + sampled decode steps + action
         assert!(phases.len() >= 4, "{} phase spans", phases.len());
     }
@@ -124,7 +125,8 @@ mod tests {
 
     #[test]
     fn pim_platform_uses_pim_track() {
-        let doc = chrome_trace(&platform::orin_pim(), &opts(), &crate::model::molmoact::molmoact_7b());
+        let cfg = crate::model::molmoact::molmoact_7b();
+        let doc = chrome_trace(&platform::orin_pim(), &opts(), &cfg);
         let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
         assert!(
             events.iter().any(|e| e.get("tid").unwrap().as_f64() == Some(2.0)),

@@ -31,7 +31,11 @@ pub fn check_fig2(f: &Fig2) -> Vec<Check> {
         id: "C2-generation-dominates",
         claim: "generation phase ~75% of full-model step latency",
         passed: (0.60..0.97).contains(&share_o) && (0.60..0.97).contains(&share_t),
-        detail: format!("generation share: Orin {:.1}%, Thor {:.1}%", share_o * 100.0, share_t * 100.0),
+        detail: format!(
+            "generation share: Orin {:.1}%, Thor {:.1}%",
+            share_o * 100.0,
+            share_t * 100.0
+        ),
     });
     let speedup = f.orin.total() / f.thor.total();
     out.push(Check {

@@ -84,7 +84,10 @@ impl CompiledModule {
     /// literal-reference [`CompiledModule::run`] path; this entry point is
     /// kept for single-output modules and future plugin versions (it was
     /// stable for the single-output vision module across 400+ calls).
-    pub fn run_b(&self, args: &[&xla::PjRtBuffer]) -> anyhow::Result<(Vec<xla::Literal>, Duration)> {
+    pub fn run_b(
+        &self,
+        args: &[&xla::PjRtBuffer],
+    ) -> anyhow::Result<(Vec<xla::Literal>, Duration)> {
         let t0 = Instant::now();
         let bufs = self.exe.execute_b::<&xla::PjRtBuffer>(args).map_err(anyhow::Error::msg)?;
         let lit = bufs[0][0].to_literal_sync().map_err(anyhow::Error::msg)?;

@@ -66,7 +66,7 @@ pub fn tiny_config_from_manifest(m: &Manifest) -> VlaConfig {
             vocab: m.decoder.vocab as u64,
         },
         action: ActionConfig {
-            layers: m.action.diffusion_steps as u64 * 0 + 2, // tiny DiT depth
+            layers: 2, // tiny DiT depth (fixed, independent of diffusion steps)
             dims: BlockDims {
                 hidden: 128,
                 heads: 4,

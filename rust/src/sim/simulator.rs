@@ -157,8 +157,9 @@ impl Simulator {
         // PERF: aggregation does not need per-op names; fold without
         // collecting an intermediate Vec.
         let mut acc = CostAcc::default();
+        let dispatch = self.options.host_dispatch;
         for op in &stage.ops {
-            acc.add(&cost_op_unnamed(&self.platform, op, self.options.pim), self.options.host_dispatch);
+            acc.add(&cost_op_unnamed(&self.platform, op, self.options.pim), dispatch);
         }
         self.finish_stage(stage, acc)
     }
@@ -328,7 +329,9 @@ mod tests {
     fn stage_times_positive_and_consistent() {
         let sim = Simulator::new(platform::orin());
         let c = tiny_test_config();
-        for stage in [c.vision_stage(), c.prefill_stage(), c.decode_stage_at(100), c.action_stage()] {
+        let stages =
+            [c.vision_stage(), c.prefill_stage(), c.decode_stage_at(100), c.action_stage()];
+        for stage in stages {
             let r = sim.simulate_stage(&stage);
             assert!(r.time > 0.0, "{}", r.name);
             assert!(r.time <= r.time_serial * 1.0000001, "prefetch can't exceed serial");
@@ -387,8 +390,9 @@ mod tests {
     #[test]
     fn prefetch_reduces_decode_time() {
         let c = molmoact_7b();
-        let on = Simulator::with_options(platform::orin(), SimOptions { prefetch: true, ..Default::default() });
-        let off = Simulator::with_options(platform::orin(), SimOptions { prefetch: false, ..Default::default() });
+        let opts = |prefetch| SimOptions { prefetch, ..Default::default() };
+        let on = Simulator::with_options(platform::orin(), opts(true));
+        let off = Simulator::with_options(platform::orin(), opts(false));
         let t_on = on.simulate_decode(&c).time;
         let t_off = off.simulate_decode(&c).time;
         assert!(t_on < t_off, "prefetch must help: {t_on} vs {t_off}");

@@ -76,7 +76,8 @@ pub fn plan_matmul(soc: &SocSpec, batch: u64, m: u64, n: u64, k: u64, dt: DType)
 /// already modeled separately).
 pub fn matmul_efficiency(soc: &SocSpec, batch: u64, m: u64, n: u64, k: u64, dt: DType) -> f64 {
     const SUSTAINED_CEILING: f64 = 0.72; // typical dense-GEMM fraction of peak
-    (plan_matmul(soc, batch, m, n, k, dt).efficiency * SUSTAINED_CEILING).clamp(0.005, SUSTAINED_CEILING)
+    let raw = plan_matmul(soc, batch, m, n, k, dt).efficiency * SUSTAINED_CEILING;
+    raw.clamp(0.005, SUSTAINED_CEILING)
 }
 
 #[cfg(test)]
@@ -122,7 +123,9 @@ mod tests {
     fn tiles_fit_smem() {
         let soc = SocSpec::orin();
         let p = plan_matmul(&soc, 1, 2048, 2048, 2048, DType::BF16);
-        let ws = 2.0 * (p.tm * p.tk) as f64 * 2.0 + 2.0 * (p.tk * p.tn) as f64 * 2.0 + (p.tm * p.tn) as f64 * 4.0;
+        let ws = 2.0 * (p.tm * p.tk) as f64 * 2.0
+            + 2.0 * (p.tk * p.tn) as f64 * 2.0
+            + (p.tm * p.tn) as f64 * 4.0;
         assert!(ws <= soc.smem_per_sm);
     }
 

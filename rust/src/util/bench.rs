@@ -103,7 +103,8 @@ impl BenchSet {
             }
         }
         let target_sample = self.config.measure.as_secs_f64() / self.config.samples as f64;
-        let iters = ((target_sample / one.as_secs_f64().max(1e-9)).ceil() as u64).clamp(1, 1_000_000);
+        let iters =
+            ((target_sample / one.as_secs_f64().max(1e-9)).ceil() as u64).clamp(1, 1_000_000);
 
         let mut sample_times = Vec::with_capacity(self.config.samples);
         for _ in 0..self.config.samples {

@@ -67,9 +67,10 @@ impl Args {
                             Some(v) => v,
                             None => {
                                 i += 1;
-                                argv.get(i)
-                                    .cloned()
-                                    .ok_or_else(|| anyhow::anyhow!("option `--{name}` expects a value"))?
+                                match argv.get(i) {
+                                    Some(v) => v.clone(),
+                                    None => anyhow::bail!("option `--{name}` expects a value"),
+                                }
                             }
                         };
                         args.opts.insert(name, val);
@@ -146,7 +147,8 @@ pub fn help_text(
     subcommands: &[(&str, &str)],
     specs: &[OptSpec],
 ) -> String {
-    let mut out = format!("{program} — {about}\n\nUSAGE:\n  {program} <SUBCOMMAND> [OPTIONS]\n\nSUBCOMMANDS:\n");
+    let mut out = format!("{program} — {about}\n\nUSAGE:\n  {program} <SUBCOMMAND> [OPTIONS]\n");
+    out.push_str("\nSUBCOMMANDS:\n");
     let w = subcommands.iter().map(|(n, _)| n.len()).max().unwrap_or(0);
     for (name, desc) in subcommands {
         out.push_str(&format!("  {name:<w$}  {desc}\n"));
@@ -172,6 +174,7 @@ pub fn help_text(
 mod tests {
     use super::*;
 
+    #[rustfmt::skip]
     fn specs() -> Vec<OptSpec> {
         vec![
             OptSpec { name: "platform", value_name: Some("NAME"), help: "platform", default: Some("orin") },

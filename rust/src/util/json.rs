@@ -206,9 +206,9 @@ struct Parser<'a> {
     pos: usize,
 }
 
-impl<'a> Parser<'a> {
+impl Parser<'_> {
     fn skip_ws(&mut self) {
-        while self.pos < self.bytes.len() && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r') {
+        while let Some(b' ' | b'\t' | b'\n' | b'\r') = self.bytes.get(self.pos) {
             self.pos += 1;
         }
     }
@@ -241,7 +241,9 @@ impl<'a> Parser<'a> {
             Some(b'f') => self.literal("false", Json::Bool(false)),
             Some(b'n') => self.literal("null", Json::Null),
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
-            other => anyhow::bail!("unexpected {:?} at byte {}", other.map(|c| c as char), self.pos),
+            other => {
+                anyhow::bail!("unexpected {:?} at byte {}", other.map(|c| c as char), self.pos)
+            }
         }
     }
 
@@ -282,7 +284,9 @@ impl<'a> Parser<'a> {
                     self.pos += 1;
                     return Ok(Json::Obj(pairs));
                 }
-                other => anyhow::bail!("expected `,` or `}}`, found {:?}", other.map(|c| c as char)),
+                other => {
+                    anyhow::bail!("expected `,` or `}}`, found {:?}", other.map(|c| c as char))
+                }
             }
         }
     }
@@ -347,12 +351,17 @@ impl<'a> Parser<'a> {
                                 if &rest[0..2] != b"\\u" {
                                     anyhow::bail!("unpaired surrogate");
                                 }
-                                let low = u32::from_str_radix(std::str::from_utf8(&rest[2..6])?, 16)?;
+                                let lo = std::str::from_utf8(&rest[2..6])?;
+                                let low = u32::from_str_radix(lo, 16)?;
                                 let c = 0x10000 + ((code - 0xD800) << 10) + (low - 0xDC00);
-                                s.push(char::from_u32(c).ok_or_else(|| anyhow::anyhow!("bad surrogate pair"))?);
+                                let c = char::from_u32(c)
+                                    .ok_or_else(|| anyhow::anyhow!("bad surrogate pair"))?;
+                                s.push(c);
                                 self.pos += 10;
                             } else {
-                                s.push(char::from_u32(code).ok_or_else(|| anyhow::anyhow!("bad \\u escape"))?);
+                                let c = char::from_u32(code)
+                                    .ok_or_else(|| anyhow::anyhow!("bad \\u escape"))?;
+                                s.push(c);
                                 self.pos += 4;
                             }
                             self.pos += 1;
@@ -364,7 +373,8 @@ impl<'a> Parser<'a> {
                 Some(_) => {
                     // consume one UTF-8 char
                     let rest = &self.bytes[self.pos..];
-                    let text = std::str::from_utf8(rest).map_err(|_| anyhow::anyhow!("invalid utf-8"))?;
+                    let text =
+                        std::str::from_utf8(rest).map_err(|_| anyhow::anyhow!("invalid utf-8"))?;
                     let c = text.chars().next().unwrap();
                     s.push(c);
                     self.pos += c.len_utf8();

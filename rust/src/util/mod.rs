@@ -1,7 +1,8 @@
-//! Foundation utilities built in-repo because the offline environment only
-//! vendors the `xla` crate's dependency closure (no serde/clap/criterion/
-//! proptest/rand): JSON, CLI parsing, statistics, PRNG, tables, a bench
-//! harness, a mini property-testing framework, and logging.
+//! Foundation utilities built in-repo because the offline environment has no
+//! crates.io access (no serde/clap/criterion/proptest/rand; `anyhow` and
+//! `xla` are in-tree shims under `vendor/`): JSON, CLI parsing, statistics,
+//! PRNG, tables, a bench harness, a mini property-testing framework, and
+//! logging.
 
 pub mod bench;
 pub mod cli;

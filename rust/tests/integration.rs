@@ -1,5 +1,9 @@
 //! Cross-module integration: engine + control loop + batcher over the real
 //! PJRT artifacts, checked against the paper's qualitative claims.
+//!
+//! These tests need a working PJRT runtime plus `make artifacts` output. In
+//! environments without either (e.g. the offline `xla` stub build), each test
+//! logs a skip and passes vacuously — the simulation suites still gate CI.
 
 use std::sync::Mutex;
 use vla_char::engine::{
@@ -10,16 +14,28 @@ use vla_char::runtime::Runtime;
 
 static LOCK: Mutex<()> = Mutex::new(());
 
-fn engine(decode_tokens: usize) -> VlaEngine {
-    let rt = Runtime::cpu().expect("PJRT cpu client");
-    let model = VlaModel::load(&rt).expect("run `make artifacts` first");
-    VlaEngine::with_decode_tokens(model, decode_tokens)
+fn engine(decode_tokens: usize) -> Option<VlaEngine> {
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping PJRT integration test: {e}");
+            return None;
+        }
+    };
+    // A real PJRT client exists. Only missing artifacts are a legitimate
+    // skip; present-but-broken artifacts must FAIL, not skip.
+    let Ok(dir) = vla_char::runtime::artifacts_dir() else {
+        eprintln!("skipping PJRT integration test: no artifacts (run `make artifacts`)");
+        return None;
+    };
+    let model = VlaModel::load_from(&rt, &dir).expect("artifacts exist but failed to load");
+    Some(VlaEngine::with_decode_tokens(model, decode_tokens))
 }
 
 #[test]
 fn decode_dominates_real_step() {
     let _g = LOCK.lock().unwrap();
-    let e = engine(24);
+    let Some(e) = engine(24) else { return };
     let m = e.model.manifest.clone();
     let mut frames = FrameSource::new(1, m.vision.patches, m.vision.patch_dim, 1);
     let prompt = frames.prompt(0, m.workload.prompt_tokens, m.decoder.vocab);
@@ -36,19 +52,13 @@ fn decode_dominates_real_step() {
 #[test]
 fn decode_time_scales_with_token_budget() {
     let _g = LOCK.lock().unwrap();
-    let e = engine(8);
+    let Some(e) = engine(8) else { return };
     let m = e.model.manifest.clone();
     let mut frames = FrameSource::new(1, m.vision.patches, m.vision.patch_dim, 2);
     let prompt = frames.prompt(0, m.workload.prompt_tokens, m.decoder.vocab);
     let frame = frames.next_frame(0, 0);
     let r8 = e.step(&frame, &prompt).unwrap();
-    let e32 = VlaEngine::with_decode_tokens(
-        {
-            let rt = Runtime::cpu().unwrap();
-            VlaModel::load(&rt).unwrap()
-        },
-        32,
-    );
+    let Some(e32) = engine(32) else { return };
     let r32 = e32.step(&frame, &prompt).unwrap();
     let ratio = r32.times.decode.as_secs_f64() / r8.times.decode.as_secs_f64();
     assert!(
@@ -60,7 +70,7 @@ fn decode_time_scales_with_token_budget() {
 #[test]
 fn control_loop_reports_misses_and_phases() {
     let _g = LOCK.lock().unwrap();
-    let e = engine(16);
+    let Some(e) = engine(16) else { return };
     let r = run_control_loop(
         &e,
         &ControlLoopConfig {
@@ -94,7 +104,7 @@ impl StepServer for EngineServer<'_> {
 #[test]
 fn serving_real_engine_round_robin() {
     let _g = LOCK.lock().unwrap();
-    let e = engine(8);
+    let Some(e) = engine(8) else { return };
     let m = e.model.manifest.clone();
     let frames = FrameSource::new(1, m.vision.patches, m.vision.patch_dim, 5);
     let prompt = frames.prompt(0, m.workload.prompt_tokens, m.decoder.vocab);
@@ -121,7 +131,7 @@ fn serving_real_engine_round_robin() {
 #[test]
 fn steps_are_deterministic() {
     let _g = LOCK.lock().unwrap();
-    let e = engine(8);
+    let Some(e) = engine(8) else { return };
     let m = e.model.manifest.clone();
     let mut f1 = FrameSource::new(1, m.vision.patches, m.vision.patch_dim, 11);
     let prompt = f1.prompt(0, m.workload.prompt_tokens, m.decoder.vocab);

@@ -72,7 +72,8 @@ fn prefetch_never_hurts_stages() {
         let stage = cfg.decode_stage_at(pos);
         let plat = rng.uniform_usize(0, 3);
         let plat = platform::table1_platforms()[plat].clone();
-        let on = Simulator::with_options(plat.clone(), SimOptions::default()).simulate_stage(&stage);
+        let on =
+            Simulator::with_options(plat.clone(), SimOptions::default()).simulate_stage(&stage);
         let off = Simulator::with_options(
             plat,
             SimOptions {
@@ -156,7 +157,8 @@ fn scaling_latency_superlinear_in_params() {
         );
         let ts = sim.simulate_vla(&small).total();
         let tb = sim.simulate_vla(&big).total();
-        ensure(tb > ts, format!("{}B {} vs {}B {}", ANCHOR_SIZES_B[i], ts, ANCHOR_SIZES_B[i + 1], tb))
+        let msg = format!("{}B {} vs {}B {}", ANCHOR_SIZES_B[i], ts, ANCHOR_SIZES_B[i + 1], tb);
+        ensure(tb > ts, msg)
     });
 }
 
@@ -168,7 +170,9 @@ fn json_roundtrips_random_documents() {
             1 => Json::Bool(rng.next_f64() < 0.5),
             2 => Json::Num((rng.uniform_f64(-1e6, 1e6) * 100.0).round() / 100.0),
             3 => Json::Str(format!("s{}-\"quoted\"\n", rng.uniform_u64(0, 999))),
-            4 => Json::Arr((0..rng.uniform_u64(0, 4)).map(|_| random_json(rng, depth - 1)).collect()),
+            4 => {
+                Json::Arr((0..rng.uniform_u64(0, 4)).map(|_| random_json(rng, depth - 1)).collect())
+            }
             _ => Json::Obj(
                 (0..rng.uniform_u64(0, 4))
                     .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))

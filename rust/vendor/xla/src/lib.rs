@@ -1,0 +1,268 @@
+//! Offline stub of the `xla-rs` PJRT bindings.
+//!
+//! This environment has no XLA/PJRT native library, so the runtime layer is
+//! gated: host-side [`Literal`] construction and manipulation are fully
+//! functional (they are plain tensors), while anything that needs a PJRT
+//! device — [`PjRtClient::cpu`], compilation, execution — returns a clear
+//! [`Error`]. Types that only exist post-client ([`PjRtLoadedExecutable`],
+//! [`PjRtBuffer`]) are uninhabited, so their methods are statically
+//! unreachable yet fully type-checked. Swapping this path dependency for the
+//! real `xla` crate re-enables the runtime without touching any caller.
+
+use std::path::Path;
+
+/// Error type mirroring `xla::Error` as used by the callers
+/// (`Display + Debug + Send + Sync + 'static`).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable() -> Error {
+    Error(
+        "PJRT runtime unavailable: this build uses the in-tree `xla` stub (no XLA native \
+         library in this environment); simulation-only commands are unaffected"
+            .to_string(),
+    )
+}
+
+/// Uninhabited core for post-client types: constructing one is impossible,
+/// so methods can diverge via an empty match while staying type-correct.
+#[derive(Debug, Clone, Copy)]
+enum Void {}
+
+/// Element types a [`Literal`] can hold.
+#[derive(Debug, Clone, PartialEq)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+    Tuple(Vec<Literal>),
+}
+
+/// A host-side tensor (shape + typed buffer), mirroring `xla::Literal`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+/// Sealed-ish helper mapping rust scalars onto [`Data`] buffers.
+pub trait NativeType: Copy {
+    fn wrap(data: Vec<Self>) -> Data
+    where
+        Self: Sized;
+    fn unwrap(data: &Data) -> Option<Vec<Self>>
+    where
+        Self: Sized;
+}
+
+macro_rules! native {
+    ($ty:ty, $variant:ident) => {
+        impl NativeType for $ty {
+            fn wrap(data: Vec<Self>) -> Data {
+                Data::$variant(data)
+            }
+            fn unwrap(data: &Data) -> Option<Vec<Self>> {
+                match data {
+                    Data::$variant(v) => Some(v.clone()),
+                    _ => None,
+                }
+            }
+        }
+    };
+}
+
+native!(f32, F32);
+native!(i32, I32);
+native!(i64, I64);
+
+impl Literal {
+    /// 1-D literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            data: T::wrap(data.to_vec()),
+        }
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar<T: NativeType>(value: T) -> Literal {
+        Literal {
+            dims: Vec::new(),
+            data: T::wrap(vec![value]),
+        }
+    }
+
+    /// Number of elements in the buffer (1 for scalars; for tuples, the sum
+    /// over parts — tuples have no dims of their own).
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::I64(v) => v.len(),
+            Data::Tuple(parts) => parts.iter().map(|p| p.element_count()).sum(),
+        }
+    }
+
+    /// Reinterpret the buffer under new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() || matches!(self.data, Data::Tuple(_)) {
+            return Err(Error(format!(
+                "reshape: {} elements do not fit dims {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    /// Copy out as a typed host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data).ok_or_else(|| Error("to_vec: element type mismatch".to_string()))
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Data::Tuple(parts) => Ok(parts),
+            _ => Err(Error("to_tuple: literal is not a tuple".to_string())),
+        }
+    }
+
+    /// Build a tuple literal (host-side convenience, used by tests). Tuples
+    /// are shapeless containers: `dims()` is empty, elements live in parts.
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal {
+            dims: Vec::new(),
+            data: Data::Tuple(parts),
+        }
+    }
+
+    /// The literal's dimensions.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// PJRT client handle. In this stub, [`PjRtClient::cpu`] always reports the
+/// runtime as unavailable; every other method is therefore unreachable.
+#[derive(Debug, Clone)]
+pub struct PjRtClient(Void);
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        match self.0 {}
+    }
+
+    pub fn device_count(&self) -> usize {
+        match self.0 {}
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        match self.0 {}
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        match self.0 {}
+    }
+}
+
+/// Parsed HLO module. Text parsing needs the native library, so loading
+/// reports the runtime as unavailable.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto(Void);
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation(Void);
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        match proto.0 {}
+    }
+}
+
+/// A compiled executable (unreachable in the stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(Void);
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        match self.0 {}
+    }
+
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        match self.0 {}
+    }
+}
+
+/// A device buffer (unreachable in the stub).
+#[derive(Debug)]
+pub struct PjRtBuffer(Void);
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        match self.0 {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literals_roundtrip_host_side() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn scalars_and_tuples() {
+        let s = Literal::scalar(7i32);
+        assert_eq!(s.element_count(), 1);
+        assert_eq!(s.to_vec::<i32>().unwrap(), vec![7]);
+        let t = Literal::tuple(vec![s.clone(), Literal::vec1(&[1i64, 2])]);
+        assert_eq!(t.element_count(), 3);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(s.to_tuple().is_err());
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("unavailable"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}

@@ -1,0 +1,40 @@
+#!/usr/bin/env bash
+# Local mirror of the CI gate. Run from anywhere inside the repo:
+#
+#   scripts/ci.sh           # tier-1 verify + lint gates + bench compile
+#   scripts/ci.sh --tier1   # only the tier-1 verify (build + test)
+#
+# The tier-1 verify is exactly what the project ROADMAP specifies:
+#   cargo build --release && cargo test -q
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+echo "==> tier-1: cargo build --release"
+cargo build --release
+
+echo "==> tier-1: cargo test -q"
+cargo test -q
+
+if [[ "${1:-}" == "--tier1" ]]; then
+    echo "tier-1 verify PASSED"
+    exit 0
+fi
+
+echo "==> cargo fmt --check"
+cargo fmt --all --check
+
+echo "==> cargo clippy -- -D warnings"
+cargo clippy --workspace -- -D warnings
+
+echo "==> cargo bench --no-run (compile-only smoke)"
+cargo bench --no-run
+
+if command -v pytest >/dev/null 2>&1 || python3 -c 'import pytest' >/dev/null 2>&1; then
+    echo "==> python -m pytest python/tests -q (soft gate until L1/L2 artifacts land)"
+    python3 -m pytest python/tests -q || echo "WARNING: python tests failed (soft gate)"
+else
+    echo "==> skipping python tests (pytest not installed)"
+fi
+
+echo "CI gate PASSED"
