@@ -1,18 +1,22 @@
 //! Command-line interface of the `vla-char` binary (logic lives here so the
 //! integration suite can drive it without spawning processes).
+//!
+//! Simulator-backed subcommands are NOT implemented here: they are
+//! [`Experiment`](crate::experiment::Experiment)s resolved from the static
+//! registry and rendered through a [`ReportSink`]. This module only parses
+//! argv, dispatches, and keeps the PJRT/engine-backed commands (`step`,
+//! `control-loop`, `serve`, `validate`) plus `trace-export` and the
+//! registry-looping `report`.
 
 use crate::engine::{
     run_batcher, run_control_loop, BatcherConfig, ControlLoopConfig, Policy, StepServer, VlaEngine,
     VlaModel,
 };
-use crate::hw::platform;
-use crate::model::molmoact::molmoact_7b;
-use crate::model::scaling::ANCHOR_SIZES_B;
-use crate::profile::{top_ops, trace_table, PhaseProfiler};
-use crate::report::{check_fig2, check_fig3, fig2, fig3, render};
+use crate::experiment::{self, DirSink, ExpContext, ReportSink, StdoutSink};
+use crate::profile::PhaseProfiler;
 use crate::runtime::Runtime;
 use crate::sim::calibrate::{validate, MeasuredPhases};
-use crate::sim::SimOptions;
+use crate::sim::sweep;
 use crate::util::cli::{help_text, Args, OptSpec};
 use crate::util::units::{fmt_hz, fmt_time};
 use std::path::PathBuf;
@@ -21,27 +25,31 @@ const ABOUT: &str =
     "Characterizing VLA models: the action-generation bottleneck on edge AI architectures \
      (reproduction of CS.PF 2026)";
 
-const SUBCOMMANDS: &[(&str, &str)] = &[
-    ("table1", "emit Table 1 (platform matrix)"),
-    ("characterize", "Fig 2: MolmoAct-7B phase latency on Orin/Thor + claim checks"),
-    ("project", "Fig 3: control frequency for 2-100B models across all platforms"),
-    ("ablate", "ablations: prefetch, CoT length, action horizon, framework"),
+/// Subcommands that are NOT registry experiments: the engine/PJRT-backed
+/// flows, the trace exporter, and the registry loop itself.
+const EXTRA_SUBCOMMANDS: &[(&str, &str)] = &[
     ("step", "run ONE real control step through the PJRT artifacts (golden-checked)"),
     ("control-loop", "run the real tiny-VLA control loop and report achieved Hz"),
     ("serve", "multi-stream serving through the batcher (real engine)"),
     ("validate", "E-C6: calibrate the simulator against real measurements"),
-    ("codesign", "algorithm-system co-design projections (quantization, speculation, ...)"),
-    ("energy", "energy per step / per action across the platform matrix"),
-    ("batch", "batched multi-robot decode: per-stream vs aggregate throughput"),
     ("trace-export", "write a Chrome-trace JSON of a simulated control step"),
-    ("report", "run every experiment and write markdown+CSV under --out"),
+    ("report", "run every registered experiment and write markdown+CSV under --out"),
 ];
+
+/// Help-text subcommand table: the experiment registry first, then the
+/// non-registry commands.
+fn subcommand_help() -> Vec<(&'static str, &'static str)> {
+    let mut v: Vec<(&'static str, &'static str)> =
+        experiment::registry().iter().map(|e| (e.name(), e.description())).collect();
+    v.extend_from_slice(EXTRA_SUBCOMMANDS);
+    v
+}
 
 #[rustfmt::skip]
 fn specs() -> Vec<OptSpec> {
     vec![
         OptSpec { name: "help", value_name: None, help: "show this help", default: None },
-        OptSpec { name: "platform", value_name: Some("NAME"), help: "platform for --trace (orin, thor, orin+pim, ...)", default: Some("orin") },
+        OptSpec { name: "platform", value_name: Some("NAME"), help: "focus platform (orin, thor, orin+pim, thor+hbm4, ...)", default: Some("orin") },
         OptSpec { name: "sizes", value_name: Some("LIST"), help: "model sizes in B params for `project`", default: Some("2,7,14,30,70,100") },
         OptSpec { name: "steps", value_name: Some("N"), help: "control-loop steps", default: Some("20") },
         OptSpec { name: "decode-tokens", value_name: Some("N"), help: "override generated tokens per step (real engine)", default: None },
@@ -58,25 +66,12 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "trace", value_name: None, help: "print the top-20 operator trace (characterize)", default: None },
         OptSpec { name: "seed", value_name: Some("N"), help: "workload seed", default: Some("42") },
         OptSpec { name: "out", value_name: Some("DIR"), help: "output directory for `report`", default: Some("reports") },
-        OptSpec { name: "platform-file", value_name: Some("PATH"), help: "JSON platform description (overrides --platform)", default: None },
-        OptSpec { name: "model-file", value_name: Some("PATH"), help: "JSON VLA model description (overrides MolmoAct-7B)", default: None },
+        OptSpec { name: "platform-file", value_name: Some("PATH"), help: "JSON platform file, or a directory of them (swept by `project`)", default: None },
+        OptSpec { name: "model-file", value_name: Some("PATH"), help: "JSON VLA model description (overrides --size)", default: None },
         OptSpec { name: "size", value_name: Some("B"), help: "model size in B params (codesign/energy/batch/trace-export)", default: Some("7") },
         OptSpec { name: "batches", value_name: Some("LIST"), help: "batch sizes for `batch`", default: Some("1,2,4,8,16") },
         OptSpec { name: "trace-out", value_name: Some("PATH"), help: "output path for `trace-export`", default: Some("trace.json") },
     ]
-}
-
-/// Build simulator options from parsed flags.
-fn sim_options(args: &Args) -> anyhow::Result<SimOptions> {
-    let mut o = if args.flag("compiled") {
-        SimOptions::compiled()
-    } else {
-        SimOptions::default()
-    };
-    o.prefetch = !args.flag("no-prefetch");
-    o.pim = !args.flag("no-pim");
-    o.decode_stride = args.get_usize("stride", 1)? as u64;
-    Ok(o)
 }
 
 /// Entry point; returns the process exit code.
@@ -84,21 +79,22 @@ pub fn run(argv: &[String]) -> anyhow::Result<i32> {
     crate::util::log::init();
     let args = Args::parse("vla-char", argv, &specs())?;
     if args.flag("help") || args.subcommand.is_none() {
-        println!("{}", help_text("vla-char", ABOUT, SUBCOMMANDS, &specs()));
+        println!("{}", help_text("vla-char", ABOUT, &subcommand_help(), &specs()));
         return Ok(0);
     }
-    match args.subcommand.as_deref().unwrap() {
-        "table1" => cmd_table1(),
-        "characterize" => cmd_characterize(&args),
-        "project" => cmd_project(&args),
-        "ablate" => cmd_ablate(),
+    let sub = args.subcommand.as_deref().unwrap();
+    // Registry experiments: build the shared context once, run, render.
+    if let Some(exp) = experiment::by_name(sub) {
+        let ctx = ExpContext::from_args(&args)?;
+        let rep = exp.run(&ctx)?;
+        StdoutSink.emit(&rep)?;
+        return Ok(rep.exit_code());
+    }
+    match sub {
         "step" => cmd_step(&args),
         "control-loop" => cmd_control_loop(&args),
         "serve" => cmd_serve(&args),
         "validate" => cmd_validate(&args),
-        "codesign" => cmd_codesign(&args),
-        "energy" => cmd_energy(&args),
-        "batch" => cmd_batch(&args),
         "trace-export" => cmd_trace_export(&args),
         "report" => cmd_report(&args),
         other => {
@@ -108,73 +104,43 @@ pub fn run(argv: &[String]) -> anyhow::Result<i32> {
     }
 }
 
-fn cmd_table1() -> anyhow::Result<i32> {
-    println!("{}", platform::table1().to_markdown());
-    Ok(0)
-}
-
-fn cmd_characterize(args: &Args) -> anyhow::Result<i32> {
-    let options = sim_options(args)?;
-    let f = fig2::run(&options);
-    println!("{}", f.table().to_markdown());
-    println!("{}", f.bars());
-    println!("{}\n", f.summary());
-    if args.flag("trace") {
-        let plat = platform::by_name(args.get_or("platform", "orin"))?;
-        let cfg = molmoact_7b();
-        let stage = cfg.decode_stage_at(cfg.shape.prefill_len() + 64);
-        let costs = crate::profile::trace::trace_stage(&plat, &stage, options.pim);
-        println!(
-            "{}",
-            trace_table(
-                &format!("Top decode-step operators on {}", plat.name),
-                &top_ops(costs, 20)
-            )
-            .to_markdown()
-        );
+/// `report` IS the registry: every experiment runs (in parallel on the
+/// sweep pool — each cell inside an experiment is itself swept), lands in
+/// the directory sink, and the aggregated check block decides the exit
+/// code. No per-experiment table code lives here.
+fn cmd_report(args: &Args) -> anyhow::Result<i32> {
+    let out = PathBuf::from(args.get_or("out", "reports"));
+    let mut ctx = ExpContext::from_args(args)?;
+    // the report always includes the amortized Fig 3 table, and caps the
+    // decode integration cost across the whole registry loop
+    ctx.amortized = true;
+    ctx.options.decode_stride = ctx.options.decode_stride.max(4);
+    // two outer workers only: the heavy experiments already saturate the
+    // machine through their inner sweeps, so wider nesting would just
+    // oversubscribe; two overlaps the cheap experiments with the big grids
+    let results = sweep::parallel_map_with(experiment::registry(), 2, |e| e.run(&ctx));
+    let mut sink = DirSink::new(&out)?;
+    for result in results {
+        sink.emit(&result?)?;
     }
-    let (text, ok) = render(&check_fig2(&f));
+    let (text, ok) = sink.finish()?;
     println!("{text}");
+    println!("wrote reports to {}", out.display());
     Ok(if ok { 0 } else { 1 })
 }
 
-fn cmd_project(args: &Args) -> anyhow::Result<i32> {
-    let options = sim_options(args)?;
-    let sizes = args.get_f64_list("sizes", &ANCHOR_SIZES_B)?;
-    let f = fig3::run(&options, &sizes);
-    println!("{}", f.table(false).to_markdown());
-    if args.flag("amortized") {
-        println!("{}", f.table(true).to_markdown());
-    }
-    let reaching = f.reaching_target(10.0);
+fn cmd_trace_export(args: &Args) -> anyhow::Result<i32> {
+    let ctx = ExpContext::from_args(args)?;
+    let mut options = ctx.options.clone();
+    options.decode_stride = options.decode_stride.max(16);
+    let path = PathBuf::from(args.get_or("trace-out", "trace.json"));
+    crate::profile::export_chrome_trace(&ctx.platform, &options, &ctx.model, &path)?;
     println!(
-        "configs reaching 10 Hz (amortized): {}",
-        if reaching.is_empty() {
-            "none".to_string()
-        } else {
-            reaching
-                .iter()
-                .map(|c| format!("{}@{:.0}B", c.platform, c.size_b))
-                .collect::<Vec<_>>()
-                .join(", ")
-        }
+        "wrote Chrome trace for {} on {} to {} (open in chrome://tracing or ui.perfetto.dev)",
+        ctx.model.name,
+        ctx.platform.name,
+        path.display()
     );
-    let (text, ok) = render(&check_fig3(&f));
-    println!("{text}");
-    Ok(if ok { 0 } else { 1 })
-}
-
-fn cmd_ablate() -> anyhow::Result<i32> {
-    println!("{}", crate::report::ablations::prefetch_ablation().to_markdown());
-    println!(
-        "{}",
-        crate::report::ablations::cot_length_ablation(&[32, 64, 128, 256, 512]).to_markdown()
-    );
-    println!(
-        "{}",
-        crate::report::ablations::horizon_ablation(&[1, 4, 8, 16, 32]).to_markdown()
-    );
-    println!("{}", crate::report::ablations::framework_ablation().to_markdown());
     Ok(0)
 }
 
@@ -183,9 +149,7 @@ fn load_engine(args: &Args) -> anyhow::Result<VlaEngine> {
     let rt = Runtime::cpu()?;
     let model = VlaModel::load(&rt)?;
     Ok(match args.get("decode-tokens") {
-        Some(_) => {
-            VlaEngine::with_decode_tokens(model, args.get_usize("decode-tokens", 24)?)
-        }
+        Some(_) => VlaEngine::with_decode_tokens(model, args.get_usize("decode-tokens", 24)?),
         None => VlaEngine::new(model),
     })
 }
@@ -337,160 +301,5 @@ fn cmd_validate(args: &Args) -> anyhow::Result<i32> {
         total_acc * 100.0,
         if ok { "PASS" } else { "FAIL" }
     );
-    Ok(if ok { 0 } else { 1 })
-}
-
-/// Resolve the platform for single-platform commands.
-fn resolve_platform(args: &Args) -> anyhow::Result<crate::hw::Platform> {
-    match args.get("platform-file") {
-        Some(path) => crate::hw::config_file::load_platform(std::path::Path::new(path)),
-        None => platform::by_name(args.get_or("platform", "orin")),
-    }
-}
-
-/// Resolve the model config for single-model commands.
-fn resolve_model(args: &Args) -> anyhow::Result<crate::model::VlaConfig> {
-    match args.get("model-file") {
-        Some(path) => crate::hw::config_file::load_vla(std::path::Path::new(path)),
-        None => Ok(crate::model::scaling::scaled_vla(args.get_f64("size", 7.0)?)),
-    }
-}
-
-fn cmd_codesign(args: &Args) -> anyhow::Result<i32> {
-    let mut options = sim_options(args)?;
-    options.decode_stride = options.decode_stride.max(8);
-    let target = resolve_model(args)?;
-    let draft = crate::model::scaling::scaled_vla(2.0);
-    let plat = resolve_platform(args)?;
-    let results = crate::sim::codesign::codesign_study(&plat, &options, &target, &draft);
-    println!("{}", crate::sim::codesign::codesign_table(&plat.name, &results).to_markdown());
-    // hardware x software matrix: combined technique on every platform
-    let mut t = crate::util::table::Table::new(
-        "Combined co-design across the Table 1 matrix",
-        &["Platform", "baseline actions/s", "combined actions/s", "gain"],
-    )
-    .left_first();
-    for p in platform::table1_platforms() {
-        let r = crate::sim::codesign::codesign_study(&p, &options, &target, &draft);
-        let base = &r[0];
-        let combo = r.last().unwrap();
-        t.row(vec![
-            p.name.clone(),
-            format!("{:.3}", base.amortized_hz),
-            format!("{:.3}", combo.amortized_hz),
-            format!("{:.2}x", combo.speedup_vs_baseline),
-        ]);
-    }
-    println!("{}", t.to_markdown());
-    Ok(0)
-}
-
-fn cmd_energy(args: &Args) -> anyhow::Result<i32> {
-    let mut options = sim_options(args)?;
-    options.decode_stride = options.decode_stride.max(8);
-    let cfg = resolve_model(args)?;
-    let mut t = crate::util::table::Table::new(
-        &format!("Energy per control step ({})", cfg.name),
-        &["Platform", "dynamic J", "static J", "total J", "avg W", "J/action"],
-    )
-    .left_first();
-    for p in platform::table1_platforms() {
-        let (_, e) = crate::sim::energy::simulate_energy(&p, &options, &cfg);
-        t.row(vec![
-            p.name.clone(),
-            format!("{:.2}", e.dynamic_total()),
-            format!("{:.2}", e.static_j),
-            format!("{:.2}", e.total_j()),
-            format!("{:.1}", e.avg_watts()),
-            format!("{:.2}", e.j_per_action()),
-        ]);
-    }
-    println!("{}", t.to_markdown());
-    Ok(0)
-}
-
-fn cmd_batch(args: &Args) -> anyhow::Result<i32> {
-    let mut options = sim_options(args)?;
-    options.decode_stride = options.decode_stride.max(8);
-    let cfg = resolve_model(args)?;
-    let plat = resolve_platform(args)?;
-    let batches: Vec<u64> = args
-        .get_f64_list("batches", &[1.0, 2.0, 4.0, 8.0, 16.0])?
-        .into_iter()
-        .map(|b| b as u64)
-        .collect();
-    println!(
-        "{}",
-        crate::sim::codesign::batch_study(&plat, &options, &cfg, &batches).to_markdown()
-    );
-    Ok(0)
-}
-
-fn cmd_trace_export(args: &Args) -> anyhow::Result<i32> {
-    let mut options = sim_options(args)?;
-    options.decode_stride = options.decode_stride.max(16);
-    let cfg = resolve_model(args)?;
-    let plat = resolve_platform(args)?;
-    let path = std::path::PathBuf::from(args.get_or("trace-out", "trace.json"));
-    crate::profile::export_chrome_trace(&plat, &options, &cfg, &path)?;
-    println!(
-        "wrote Chrome trace for {} on {} to {} (open in chrome://tracing or ui.perfetto.dev)",
-        cfg.name,
-        plat.name,
-        path.display()
-    );
-    Ok(0)
-}
-
-fn cmd_report(args: &Args) -> anyhow::Result<i32> {
-    let out = PathBuf::from(args.get_or("out", "reports"));
-    std::fs::create_dir_all(&out)?;
-    let options = sim_options(args)?;
-
-    platform::table1().save(&out, "table1")?;
-    let f2 = fig2::run(&options);
-    f2.table().save(&out, "fig2")?;
-    let mut opt3 = options.clone();
-    opt3.decode_stride = opt3.decode_stride.max(4);
-    let f3 = fig3::run(&opt3, &ANCHOR_SIZES_B);
-    f3.table(false).save(&out, "fig3")?;
-    f3.table(true).save(&out, "fig3_amortized")?;
-    crate::report::ablations::prefetch_ablation().save(&out, "ablation_prefetch")?;
-    crate::report::ablations::cot_length_ablation(&[32, 64, 128, 256, 512])
-        .save(&out, "ablation_cot")?;
-    crate::report::ablations::horizon_ablation(&[1, 4, 8, 16, 32]).save(&out, "ablation_horizon")?;
-    crate::report::ablations::framework_ablation().save(&out, "ablation_framework")?;
-
-    // energy + co-design + batching studies
-    let cfg = molmoact_7b();
-    let draft = crate::model::scaling::scaled_vla(2.0);
-    let mut energy_t = crate::util::table::Table::new(
-        "Energy per control step (MolmoAct-7B)",
-        &["Platform", "dynamic J", "static J", "total J", "avg W", "J/action"],
-    )
-    .left_first();
-    for p in platform::table1_platforms() {
-        let (_, e) = crate::sim::energy::simulate_energy(&p, &opt3, &cfg);
-        energy_t.row(vec![
-            p.name.clone(),
-            format!("{:.2}", e.dynamic_total()),
-            format!("{:.2}", e.static_j),
-            format!("{:.2}", e.total_j()),
-            format!("{:.1}", e.avg_watts()),
-            format!("{:.2}", e.j_per_action()),
-        ]);
-    }
-    energy_t.save(&out, "energy")?;
-    let cd = crate::sim::codesign::codesign_study(&platform::orin(), &opt3, &cfg, &draft);
-    crate::sim::codesign::codesign_table("Orin", &cd).save(&out, "codesign_orin")?;
-    crate::sim::codesign::batch_study(&platform::orin(), &opt3, &cfg, &[1, 2, 4, 8, 16])
-        .save(&out, "batch_study")?;
-
-    let mut checks = check_fig2(&f2);
-    checks.extend(check_fig3(&f3));
-    let (text, ok) = render(&checks);
-    std::fs::write(out.join("checks.txt"), &text)?;
-    println!("{text}");
-    println!("wrote reports to {}", out.display());
     Ok(if ok { 0 } else { 1 })
 }

@@ -1,0 +1,169 @@
+//! Shared experiment context: everything an [`Experiment`](super::Experiment)
+//! needs to run, resolved ONCE from the parsed CLI arguments instead of
+//! being re-derived inside each command.
+
+use crate::hw::{config_file, platform, Platform};
+use crate::model::scaling::{scaled_vla, ANCHOR_SIZES_B};
+use crate::model::VlaConfig;
+use crate::sim::SimOptions;
+use crate::util::cli::Args;
+
+/// Resolved inputs for one experiment run.
+#[derive(Debug, Clone)]
+pub struct ExpContext {
+    /// Simulator options (prefetch/PIM/stride/runtime overheads).
+    pub options: SimOptions,
+    /// The platform sweep set: Table 1 + HBM variants by default, or exactly
+    /// the `--platform-file` JSONs when given (a directory loads them all).
+    pub platforms: Vec<Platform>,
+    /// Focus platform for single-platform experiments (`--platform`, or the
+    /// first `--platform-file` entry).
+    pub platform: Platform,
+    /// Target model (`--model-file`, else the scaling law at `--size`).
+    pub model: VlaConfig,
+    /// Draft model for speculative-decoding studies.
+    pub draft: VlaConfig,
+    /// Model sizes (B params) for scaling sweeps.
+    pub sizes: Vec<f64>,
+    /// Batch sizes for the batching study.
+    pub batches: Vec<u64>,
+    /// Workload seed. No registered experiment consumes it yet — the
+    /// simulator is deterministic; it is reserved for the engine-backed
+    /// flows (`step`/`control-loop`/...) when they join the registry
+    /// (ROADMAP "Engine-backed experiments").
+    pub seed: u64,
+    /// `characterize`: also emit the top-operator decode trace.
+    pub trace: bool,
+    /// `project`: also emit the horizon-amortized Fig 3 table.
+    pub amortized: bool,
+    /// True when `--platform-file` supplied the sweep set; `project` then
+    /// sweeps exactly those platforms and skips the paper-shape checks
+    /// (which are statements about the paper's matrix, not arbitrary HW).
+    pub custom_platforms: bool,
+}
+
+impl ExpContext {
+    /// Build a context from parsed CLI arguments.
+    pub fn from_args(args: &Args) -> anyhow::Result<ExpContext> {
+        let mut options = if args.flag("compiled") {
+            SimOptions::compiled()
+        } else {
+            SimOptions::default()
+        };
+        options.prefetch = !args.flag("no-prefetch");
+        options.pim = !args.flag("no-pim");
+        options.decode_stride = args.get_usize("stride", 1)? as u64;
+
+        let (platforms, focus, custom_platforms) = match args.get("platform-file") {
+            Some(path) => {
+                let loaded = config_file::load_platforms(std::path::Path::new(path))?;
+                let focus = loaded[0].clone();
+                (loaded, focus, true)
+            }
+            None => (
+                platform::sweep_platforms(),
+                platform::by_name(args.get_or("platform", "orin"))?,
+                false,
+            ),
+        };
+        let model = match args.get("model-file") {
+            Some(path) => config_file::load_vla(std::path::Path::new(path))?,
+            None => scaled_vla(args.get_f64("size", 7.0)?),
+        };
+        let batch_sizes = args.get_f64_list("batches", &[1.0, 2.0, 4.0, 8.0, 16.0])?;
+        Ok(ExpContext {
+            options,
+            platforms,
+            platform: focus,
+            model,
+            draft: scaled_vla(2.0),
+            sizes: args.get_f64_list("sizes", &ANCHOR_SIZES_B)?,
+            batches: batch_sizes.into_iter().map(|b| b as u64).collect(),
+            seed: args.get_usize("seed", 42)? as u64,
+            trace: args.flag("trace"),
+            amortized: args.flag("amortized"),
+            custom_platforms,
+        })
+    }
+}
+
+impl Default for ExpContext {
+    /// The no-flags context: default simulator options, the full default
+    /// platform matrix, MolmoAct-7B target, 2 B draft, anchor sizes.
+    fn default() -> ExpContext {
+        ExpContext {
+            options: SimOptions::default(),
+            platforms: platform::sweep_platforms(),
+            platform: platform::orin(),
+            model: scaled_vla(7.0),
+            draft: scaled_vla(2.0),
+            sizes: ANCHOR_SIZES_B.to_vec(),
+            batches: vec![1, 2, 4, 8, 16],
+            seed: 42,
+            trace: false,
+            amortized: false,
+            custom_platforms: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli::OptSpec;
+
+    #[rustfmt::skip]
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "platform", value_name: Some("NAME"), help: "", default: None },
+            OptSpec { name: "platform-file", value_name: Some("PATH"), help: "", default: None },
+            OptSpec { name: "model-file", value_name: Some("PATH"), help: "", default: None },
+            OptSpec { name: "size", value_name: Some("B"), help: "", default: None },
+            OptSpec { name: "sizes", value_name: Some("LIST"), help: "", default: None },
+            OptSpec { name: "batches", value_name: Some("LIST"), help: "", default: None },
+            OptSpec { name: "stride", value_name: Some("N"), help: "", default: None },
+            OptSpec { name: "seed", value_name: Some("N"), help: "", default: None },
+            OptSpec { name: "no-prefetch", value_name: None, help: "", default: None },
+            OptSpec { name: "no-pim", value_name: None, help: "", default: None },
+            OptSpec { name: "compiled", value_name: None, help: "", default: None },
+            OptSpec { name: "trace", value_name: None, help: "", default: None },
+            OptSpec { name: "amortized", value_name: None, help: "", default: None },
+        ]
+    }
+
+    fn parse(argv: &[&str]) -> Args {
+        let v: Vec<String> = argv.iter().map(|s| s.to_string()).collect();
+        Args::parse("vla-char", &v, &specs()).unwrap()
+    }
+
+    #[test]
+    fn defaults_resolve_once() {
+        let ctx = ExpContext::from_args(&parse(&["project"])).unwrap();
+        assert_eq!(ctx.platform.name, "Orin");
+        assert_eq!(ctx.platforms.len(), platform::sweep_platforms().len());
+        assert_eq!(ctx.model.name, "MolmoAct-7B");
+        assert_eq!(ctx.sizes, ANCHOR_SIZES_B.to_vec());
+        assert_eq!(ctx.batches, vec![1, 2, 4, 8, 16]);
+        assert!(!ctx.custom_platforms && !ctx.trace && !ctx.amortized);
+        assert_eq!(ctx.options.decode_stride, 1);
+    }
+
+    #[test]
+    fn flags_flow_into_options() {
+        let a = parse(&["project", "--stride", "8", "--no-pim", "--compiled", "--amortized"]);
+        let ctx = ExpContext::from_args(&a).unwrap();
+        assert_eq!(ctx.options.decode_stride, 8);
+        assert!(!ctx.options.pim && ctx.options.prefetch);
+        assert_eq!(ctx.options.host_dispatch, 0.0);
+        assert!(ctx.amortized);
+        let b = parse(&["codesign", "--size", "30", "--platform", "thor+hbm4"]);
+        let ctx = ExpContext::from_args(&b).unwrap();
+        assert_eq!(ctx.model.name, "VLA-30B");
+        assert_eq!(ctx.platform.name, "Thor+HBM4");
+    }
+
+    #[test]
+    fn bad_platform_rejected_at_context_build() {
+        assert!(ExpContext::from_args(&parse(&["table1", "--platform", "h100"])).is_err());
+    }
+}

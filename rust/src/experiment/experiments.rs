@@ -1,0 +1,217 @@
+//! The registered experiments: one unit struct per simulator-backed paper
+//! artifact. Each consumes the shared [`ExpContext`] and returns a
+//! [`Report`]; nothing here prints or touches the filesystem.
+
+use super::{ExpContext, Experiment, Report};
+use crate::hw::platform;
+use crate::model::molmoact::molmoact_7b;
+use crate::profile::{top_ops, trace_table};
+use crate::report::{ablations, check_fig2, check_fig3, fig2, fig3};
+use crate::sim::{codesign, energy};
+
+/// File-slug form of a platform name ("Orin+PIM" → "orin_pim").
+fn slug(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+        .collect()
+}
+
+/// Table 1: the commercial + hypothetical platform matrix.
+pub struct Table1;
+
+impl Experiment for Table1 {
+    fn name(&self) -> &'static str {
+        "table1"
+    }
+
+    fn description(&self) -> &'static str {
+        "emit Table 1 (platform matrix)"
+    }
+
+    fn run(&self, _ctx: &ExpContext) -> anyhow::Result<Report> {
+        let mut rep = Report::new(self.name());
+        rep.push_table("table1", platform::table1());
+        Ok(rep)
+    }
+}
+
+/// Fig 2: MolmoAct-7B phase-latency decomposition + §4.1 claim checks.
+pub struct Characterize;
+
+impl Experiment for Characterize {
+    fn name(&self) -> &'static str {
+        "characterize"
+    }
+
+    fn description(&self) -> &'static str {
+        "Fig 2: MolmoAct-7B phase latency on Orin/Thor + claim checks"
+    }
+
+    fn run(&self, ctx: &ExpContext) -> anyhow::Result<Report> {
+        let f = fig2::run(&ctx.options);
+        let mut rep = Report::new(self.name());
+        rep.push_table("fig2", f.table());
+        rep.note(f.bars());
+        rep.note(format!("{}\n", f.summary()));
+        if ctx.trace {
+            let cfg = molmoact_7b();
+            let stage = cfg.decode_stage_at(cfg.shape.prefill_len() + 64);
+            let costs = crate::profile::trace::trace_stage(&ctx.platform, &stage, ctx.options.pim);
+            rep.push_table(
+                "fig2_trace",
+                trace_table(
+                    &format!("Top decode-step operators on {}", ctx.platform.name),
+                    &top_ops(costs, 20),
+                ),
+            );
+        }
+        rep.metric("orin_total_s", f.orin.total());
+        rep.metric("thor_total_s", f.thor.total());
+        rep.metric("orin_generation_share", f.orin.generation_share());
+        rep.checks = check_fig2(&f);
+        Ok(rep)
+    }
+}
+
+/// Fig 3: control frequency for scaled models across the platform matrix.
+pub struct Project;
+
+impl Experiment for Project {
+    fn name(&self) -> &'static str {
+        "project"
+    }
+
+    fn description(&self) -> &'static str {
+        "Fig 3: control frequency for 2-100B models across all platforms"
+    }
+
+    fn run(&self, ctx: &ExpContext) -> anyhow::Result<Report> {
+        let f = if ctx.custom_platforms {
+            fig3::run_on(&ctx.options, &ctx.sizes, &ctx.platforms)
+        } else {
+            fig3::run(&ctx.options, &ctx.sizes)
+        };
+        let mut rep = Report::new(self.name());
+        rep.push_table("fig3", f.table(false));
+        if ctx.amortized {
+            rep.push_table("fig3_amortized", f.table(true));
+        }
+        let reaching = f.reaching_target(10.0);
+        rep.note(format!(
+            "configs reaching 10 Hz (amortized): {}",
+            if reaching.is_empty() {
+                "none".to_string()
+            } else {
+                reaching
+                    .iter()
+                    .map(|c| format!("{}@{:.0}B", c.platform, c.size_b))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            }
+        ));
+        rep.metric("configs_reaching_10hz_amortized", reaching.len() as f64);
+        if ctx.custom_platforms {
+            rep.note("custom platform sweep: paper-shape checks skipped".to_string());
+        } else {
+            rep.checks = check_fig3(&f);
+        }
+        Ok(rep)
+    }
+}
+
+/// Ablations: prefetch, CoT length, action horizon, framework overhead.
+pub struct Ablate;
+
+impl Experiment for Ablate {
+    fn name(&self) -> &'static str {
+        "ablate"
+    }
+
+    fn description(&self) -> &'static str {
+        "ablations: prefetch, CoT length, action horizon, framework"
+    }
+
+    fn run(&self, _ctx: &ExpContext) -> anyhow::Result<Report> {
+        let mut rep = Report::new(self.name());
+        rep.push_table("ablation_prefetch", ablations::prefetch_ablation());
+        rep.push_table("ablation_cot", ablations::cot_length_ablation(&[32, 64, 128, 256, 512]));
+        rep.push_table("ablation_horizon", ablations::horizon_ablation(&[1, 4, 8, 16, 32]));
+        rep.push_table("ablation_framework", ablations::framework_ablation());
+        Ok(rep)
+    }
+}
+
+/// Algorithm–system co-design projections + the HW × SW combined matrix.
+pub struct Codesign;
+
+impl Experiment for Codesign {
+    fn name(&self) -> &'static str {
+        "codesign"
+    }
+
+    fn description(&self) -> &'static str {
+        "algorithm-system co-design projections (quantization, speculation, ...)"
+    }
+
+    fn run(&self, ctx: &ExpContext) -> anyhow::Result<Report> {
+        let mut options = ctx.options.clone();
+        options.decode_stride = options.decode_stride.max(8);
+        let results = codesign::codesign_study(&ctx.platform, &options, &ctx.model, &ctx.draft);
+        let mut rep = Report::new(self.name());
+        rep.push_table(
+            &format!("codesign_{}", slug(&ctx.platform.name)),
+            codesign::codesign_table(&ctx.platform.name, &ctx.model.name, &results),
+        );
+        rep.push_table(
+            "codesign_matrix",
+            codesign::combined_matrix(&ctx.platforms, &options, &ctx.model, &ctx.draft),
+        );
+        rep.metric("combined_speedup", results.last().unwrap().speedup_vs_baseline);
+        Ok(rep)
+    }
+}
+
+/// Energy per control step / per action across the platform matrix.
+pub struct Energy;
+
+impl Experiment for Energy {
+    fn name(&self) -> &'static str {
+        "energy"
+    }
+
+    fn description(&self) -> &'static str {
+        "energy per step / per action across the platform matrix"
+    }
+
+    fn run(&self, ctx: &ExpContext) -> anyhow::Result<Report> {
+        let mut options = ctx.options.clone();
+        options.decode_stride = options.decode_stride.max(8);
+        let mut rep = Report::new(self.name());
+        rep.push_table("energy", energy::energy_table(&ctx.platforms, &options, &ctx.model));
+        Ok(rep)
+    }
+}
+
+/// Batched multi-robot decode: per-stream vs aggregate throughput.
+pub struct Batch;
+
+impl Experiment for Batch {
+    fn name(&self) -> &'static str {
+        "batch"
+    }
+
+    fn description(&self) -> &'static str {
+        "batched multi-robot decode: per-stream vs aggregate throughput"
+    }
+
+    fn run(&self, ctx: &ExpContext) -> anyhow::Result<Report> {
+        let mut options = ctx.options.clone();
+        options.decode_stride = options.decode_stride.max(8);
+        let mut rep = Report::new(self.name());
+        rep.push_table(
+            "batch_study",
+            codesign::batch_study(&ctx.platform, &options, &ctx.model, &ctx.batches),
+        );
+        Ok(rep)
+    }
+}

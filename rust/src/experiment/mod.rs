@@ -1,0 +1,69 @@
+//! Typed experiment API.
+//!
+//! The paper's contribution is a *matrix* of experiments — phase
+//! characterization (Fig 2), scaling projections (Fig 3), ablations,
+//! co-design, energy. This module makes each of them a value:
+//!
+//! - [`Experiment`]: a named, registry-discoverable unit of work that
+//!   consumes an [`ExpContext`] and returns a structured [`Report`];
+//! - [`ExpContext`]: `SimOptions` + resolved platform/model/size sets,
+//!   built once from the parsed CLI args instead of re-parsed per command;
+//! - [`Report`] + [`ReportSink`]: owned tables/checks/metrics with
+//!   pluggable markdown/CSV/stdout rendering;
+//! - [`REGISTRY`]: the static list the CLI dispatches on and `report`
+//!   loops over (in parallel, on the `sim::sweep` worker pool).
+//!
+//! Adding an experiment = implement the trait on a unit struct and add it
+//! to [`REGISTRY`]; it immediately appears in `--help`, gains a CLI
+//! subcommand, and is included in `report` output.
+
+mod context;
+mod experiments;
+mod report;
+
+pub use context::ExpContext;
+pub use experiments::{Ablate, Batch, Characterize, Codesign, Energy, Project, Table1};
+pub use report::{DirSink, Item, Report, ReportSink, StdoutSink};
+
+/// A named experiment producing a structured report.
+pub trait Experiment: Sync {
+    /// Registry key; doubles as the CLI subcommand name.
+    fn name(&self) -> &'static str;
+    /// One-line help text (shown in `--help` and the README table).
+    fn description(&self) -> &'static str;
+    /// Run against a resolved context.
+    fn run(&self, ctx: &ExpContext) -> anyhow::Result<Report>;
+}
+
+/// Every simulator-backed experiment, in help/report order.
+pub static REGISTRY: &[&dyn Experiment] =
+    &[&Table1, &Characterize, &Project, &Ablate, &Codesign, &Energy, &Batch];
+
+/// The experiment registry.
+pub fn registry() -> &'static [&'static dyn Experiment] {
+    REGISTRY
+}
+
+/// Look up an experiment by its registry key.
+pub fn by_name(name: &str) -> Option<&'static dyn Experiment> {
+    REGISTRY.iter().copied().find(|e| e.name() == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_keys_unique_and_resolvable() {
+        let mut names: Vec<&str> = registry().iter().map(|e| e.name()).collect();
+        let n = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), n, "registry keys must be unique");
+        for e in registry() {
+            assert_eq!(by_name(e.name()).unwrap().name(), e.name());
+            assert!(!e.description().is_empty());
+        }
+        assert!(by_name("frobnicate").is_none());
+    }
+}

@@ -1,0 +1,187 @@
+//! Structured experiment output.
+//!
+//! An [`Experiment`](super::Experiment) returns a [`Report`] — owned tables,
+//! free-form console notes, paper-shape [`Check`]s, and scalar metrics — and
+//! never prints or writes files itself. [`ReportSink`]s decide what a report
+//! becomes: console output ([`StdoutSink`]) or a directory of markdown + CSV
+//! artifacts ([`DirSink`]). This is what lets `report` be a registry loop
+//! instead of a re-implementation of every command.
+
+use crate::report::checks::{render, Check};
+use crate::util::table::Table;
+use std::path::{Path, PathBuf};
+
+/// One renderable item, in emission order (so stdout interleaves tables and
+/// notes exactly as the experiment laid them out).
+#[derive(Debug, Clone)]
+pub enum Item {
+    /// A table plus the file slug its markdown/CSV artifacts are saved under.
+    Table(String, Table),
+    /// A free-form console block (ASCII bar chart, summary lines, ...).
+    Note(String),
+}
+
+/// The structured result of one experiment run.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    /// The producing experiment's registry key.
+    pub name: String,
+    /// Tables and notes, in emission order.
+    pub items: Vec<Item>,
+    /// Paper-shape acceptance checks evaluated by this experiment.
+    pub checks: Vec<Check>,
+    /// Machine-readable headline numbers (`metrics.csv` in the report dir).
+    pub metrics: Vec<(String, f64)>,
+}
+
+impl Report {
+    pub fn new(name: &str) -> Report {
+        Report { name: name.to_string(), ..Default::default() }
+    }
+
+    /// Append a table; `slug` names its `.md`/`.csv` files in a [`DirSink`].
+    pub fn push_table(&mut self, slug: &str, table: Table) {
+        self.items.push(Item::Table(slug.to_string(), table));
+    }
+
+    /// Append a console note (printed verbatim by [`StdoutSink`]).
+    pub fn note(&mut self, text: String) {
+        self.items.push(Item::Note(text));
+    }
+
+    /// Record a scalar metric.
+    pub fn metric(&mut self, key: &str, value: f64) {
+        self.metrics.push((key.to_string(), value));
+    }
+
+    /// The tables in emission order, with their slugs.
+    pub fn tables(&self) -> impl Iterator<Item = (&str, &Table)> {
+        self.items.iter().filter_map(|i| match i {
+            Item::Table(slug, t) => Some((slug.as_str(), t)),
+            Item::Note(_) => None,
+        })
+    }
+
+    /// Did every check pass? (Trivially true for check-free experiments.)
+    pub fn passed(&self) -> bool {
+        self.checks.iter().all(|c| c.passed)
+    }
+
+    /// CLI exit code: 0 when all checks pass, 1 otherwise.
+    pub fn exit_code(&self) -> i32 {
+        if self.passed() { 0 } else { 1 }
+    }
+}
+
+/// Where finished reports go.
+pub trait ReportSink {
+    fn emit(&mut self, report: &Report) -> anyhow::Result<()>;
+}
+
+/// Console sink: tables as aligned markdown, notes verbatim, then the check
+/// block — the same layout the per-command output always had.
+pub struct StdoutSink;
+
+impl ReportSink for StdoutSink {
+    fn emit(&mut self, report: &Report) -> anyhow::Result<()> {
+        for item in &report.items {
+            match item {
+                Item::Table(_, t) => println!("{}", t.to_markdown()),
+                Item::Note(text) => println!("{text}"),
+            }
+        }
+        if !report.checks.is_empty() {
+            let (text, _) = render(&report.checks);
+            println!("{text}");
+        }
+        Ok(())
+    }
+}
+
+/// Directory sink: every table lands as `<slug>.md` + `<slug>.csv`; checks
+/// and metrics are aggregated across all emitted reports and written by
+/// [`DirSink::finish`] as `checks.txt` and `metrics.csv`.
+pub struct DirSink {
+    dir: PathBuf,
+    checks: Vec<Check>,
+    metrics: Vec<(String, String, f64)>,
+}
+
+impl DirSink {
+    pub fn new(dir: &Path) -> anyhow::Result<DirSink> {
+        std::fs::create_dir_all(dir)?;
+        Ok(DirSink { dir: dir.to_path_buf(), checks: Vec::new(), metrics: Vec::new() })
+    }
+
+    /// Write the aggregated `checks.txt` and `metrics.csv`; returns the
+    /// rendered check block and whether every aggregated check passed.
+    pub fn finish(self) -> anyhow::Result<(String, bool)> {
+        let (text, ok) = render(&self.checks);
+        std::fs::write(self.dir.join("checks.txt"), &text)?;
+        let mut m = Table::new("", &["experiment", "metric", "value"]);
+        for (exp, key, v) in &self.metrics {
+            m.row(vec![exp.clone(), key.clone(), format!("{v}")]);
+        }
+        std::fs::write(self.dir.join("metrics.csv"), m.to_csv())?;
+        Ok((text, ok))
+    }
+}
+
+impl ReportSink for DirSink {
+    fn emit(&mut self, report: &Report) -> anyhow::Result<()> {
+        for (slug, t) in report.tables() {
+            t.save(&self.dir, slug)?;
+        }
+        self.checks.extend(report.checks.iter().cloned());
+        for (k, v) in &report.metrics {
+            self.metrics.push((report.name.clone(), k.clone(), *v));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_report() -> Report {
+        let mut t = Table::new("T", &["k", "v"]).left_first();
+        t.row(vec!["a".into(), "1".into()]);
+        let mut rep = Report::new("sample");
+        rep.push_table("sample_t", t);
+        rep.note("a note".to_string());
+        rep.metric("answer", 42.0);
+        rep
+    }
+
+    #[test]
+    fn exit_code_follows_checks() {
+        let mut rep = sample_report();
+        assert!(rep.passed());
+        assert_eq!(rep.exit_code(), 0);
+        rep.checks.push(Check { id: "x", claim: "c", passed: false, detail: String::new() });
+        assert!(!rep.passed());
+        assert_eq!(rep.exit_code(), 1);
+    }
+
+    #[test]
+    fn tables_iterator_skips_notes() {
+        let rep = sample_report();
+        let slugs: Vec<&str> = rep.tables().map(|(s, _)| s).collect();
+        assert_eq!(slugs, vec!["sample_t"]);
+    }
+
+    #[test]
+    fn dir_sink_writes_tables_checks_metrics() {
+        let dir = std::env::temp_dir().join("vla_char_dir_sink_unit");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut sink = DirSink::new(&dir).unwrap();
+        sink.emit(&sample_report()).unwrap();
+        let (text, ok) = sink.finish().unwrap();
+        assert!(ok && text.is_empty());
+        assert!(dir.join("sample_t.md").exists() && dir.join("sample_t.csv").exists());
+        assert!(dir.join("checks.txt").exists());
+        let metrics = std::fs::read_to_string(dir.join("metrics.csv")).unwrap();
+        assert!(metrics.contains("sample,answer,42"));
+    }
+}

@@ -173,6 +173,29 @@ pub fn load_platform(path: &std::path::Path) -> anyhow::Result<Platform> {
     platform_from_json(&std::fs::read_to_string(path)?)
 }
 
+/// Load one platform JSON, or — when `path` is a directory — every `*.json`
+/// inside it, sorted by file name so sweep order (and therefore report
+/// output) is deterministic. `project` sweeps the whole set.
+pub fn load_platforms(path: &std::path::Path) -> anyhow::Result<Vec<Platform>> {
+    if !path.is_dir() {
+        return Ok(vec![load_platform(path)?]);
+    }
+    let mut files: Vec<std::path::PathBuf> = std::fs::read_dir(path)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("json"))
+        .collect();
+    files.sort();
+    anyhow::ensure!(!files.is_empty(), "no *.json platform files in `{}`", path.display());
+    let mut platforms = Vec::with_capacity(files.len());
+    for f in &files {
+        let p = load_platform(f)
+            .map_err(|e| anyhow::anyhow!("bad platform file `{}`: {e}", f.display()))?;
+        platforms.push(p);
+    }
+    Ok(platforms)
+}
+
 /// Load a VLA config from a JSON file.
 pub fn load_vla(path: &std::path::Path) -> anyhow::Result<VlaConfig> {
     vla_from_json(&std::fs::read_to_string(path)?)
@@ -210,6 +233,29 @@ mod tests {
         assert!(p.mem.pim.is_none());
         // defaults applied
         assert!((p.mem.stream_efficiency - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn platform_directory_loads_sorted() {
+        let dir = std::env::temp_dir().join("vla_char_platform_dir_unit");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        for (file, name) in [("b.json", "Beta"), ("a.json", "Alpha")] {
+            let mut p = platform::orin();
+            p.name = name.to_string();
+            std::fs::write(dir.join(file), platform_to_json(&p).to_string_pretty()).unwrap();
+        }
+        std::fs::write(dir.join("notes.txt"), "ignored").unwrap();
+        let loaded = load_platforms(&dir).unwrap();
+        let names: Vec<&str> = loaded.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, vec!["Alpha", "Beta"], "sorted by file name, non-JSON ignored");
+        // a single file still loads as a one-element set
+        let one = load_platforms(&dir.join("a.json")).unwrap();
+        assert_eq!(one.len(), 1);
+        // an empty directory is an error, not an empty sweep
+        let empty = dir.join("empty");
+        std::fs::create_dir_all(&empty).unwrap();
+        assert!(load_platforms(&empty).is_err());
     }
 
     #[test]

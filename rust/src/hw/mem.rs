@@ -83,6 +83,36 @@ impl MemDevice {
         }
     }
 
+    /// HBM3: one 12-high stack on a 1024-bit interface at 6.4 Gbps —
+    /// 819 GB/s. The paper names high-bandwidth memory as a scaling pathway;
+    /// the capacity-cost note is that a single stack tops out around 24 GB
+    /// and costs (die stacking + interposer) several times LPDDR per GB,
+    /// which is why Table 1's commercial edge parts stop at LPDDR5X.
+    pub fn hbm3(capacity_gb: f64) -> MemDevice {
+        MemDevice {
+            name: "HBM3".into(),
+            peak_bw: 819.0 * GB,
+            capacity: capacity_gb * GB,
+            stream_efficiency: 0.85,
+            pim: None,
+        }
+    }
+
+    /// HBM4: the JEDEC 2048-bit interface at 6.4 Gbps — 1638 GB/s per
+    /// stack. Capacity-cost note: 16-high stacks reach ~36-48 GB, but the
+    /// wider base die and hybrid bonding push cost and thermals further
+    /// from an edge power envelope; modeled here as a hypothetical ceiling
+    /// for non-PIM memory scaling.
+    pub fn hbm4(capacity_gb: f64) -> MemDevice {
+        MemDevice {
+            name: "HBM4".into(),
+            peak_bw: 1638.0 * GB,
+            capacity: capacity_gb * GB,
+            stream_efficiency: 0.85,
+            pim: None,
+        }
+    }
+
     /// LPDDR6X with PIM. Table 1 reports 2180 GB/s — that is the aggregate
     /// *internal* (bank-level) bandwidth visible to the PIM units; the
     /// off-chip link to the SoC runs at LPDDR6X speed (~546 GB/s). PIM
@@ -123,6 +153,19 @@ mod tests {
         let m = MemDevice::lpddr5(64.0);
         assert!(m.effective_bw() < m.peak_bw);
         assert!(m.effective_bw() > 0.5 * m.peak_bw);
+    }
+
+    #[test]
+    fn hbm_devices_rank_by_generation() {
+        let h3 = MemDevice::hbm3(24.0);
+        let h4 = MemDevice::hbm4(36.0);
+        assert_eq!(h3.peak_bw, 819.0 * GB);
+        assert_eq!(h4.peak_bw, 1638.0 * GB);
+        assert!(h4.effective_bw() > h3.effective_bw());
+        // HBM3 sits between GDDR7's headline 1000 GB/s and LPDDR5X
+        assert!(h3.peak_bw > MemDevice::lpddr5x(64.0).peak_bw);
+        assert!(h3.peak_bw < MemDevice::gddr7(64.0).peak_bw);
+        assert!(h3.pim.is_none() && h4.pim.is_none());
     }
 
     #[test]

@@ -112,6 +112,30 @@ pub fn thor_pim() -> Platform {
     }
 }
 
+/// Orin SoC with one stack of HBM3 (hypothetical). A high-bandwidth-memory
+/// pathway point below GDDR7's headline bandwidth but with better stream
+/// efficiency; capacity-constrained (one stack ≈ 24 GB — a bf16 30B model
+/// no longer fits uncompressed).
+pub fn orin_hbm3() -> Platform {
+    Platform {
+        name: "Orin+HBM3".into(),
+        soc: SocSpec::orin(),
+        mem: MemDevice::hbm3(24.0),
+        hypothetical: true,
+    }
+}
+
+/// Thor SoC with one stack of HBM4 (hypothetical) — the ceiling of the
+/// non-PIM memory-scaling pathway the paper names.
+pub fn thor_hbm4() -> Platform {
+    Platform {
+        name: "Thor+HBM4".into(),
+        soc: SocSpec::thor(),
+        mem: MemDevice::hbm4(36.0),
+        hypothetical: true,
+    }
+}
+
 /// Calibration target: this machine's CPU running XLA-CPU via PJRT.
 /// Effective GFLOPS/BW are fitted by `sim::calibrate`; the defaults here are
 /// conservative placeholders used before calibration.
@@ -149,17 +173,27 @@ pub fn table1_platforms() -> Vec<Platform> {
     ]
 }
 
+/// The default sweep set: Table 1 plus the HBM pathway variants. This is
+/// what `project`, `codesign`, and `energy` iterate; `table1()` itself stays
+/// exactly the paper's seven rows.
+pub fn sweep_platforms() -> Vec<Platform> {
+    let mut v = table1_platforms();
+    v.push(orin_hbm3());
+    v.push(thor_hbm4());
+    v
+}
+
 /// Look up a platform by (case-insensitive) name.
 pub fn by_name(name: &str) -> anyhow::Result<Platform> {
     let canon = |s: &str| s.to_ascii_lowercase().replace(['_', ' ', '+'], "-");
     let want = canon(name);
-    for p in table1_platforms().into_iter().chain([cpu_host()]) {
+    for p in sweep_platforms().into_iter().chain([cpu_host()]) {
         if canon(&p.name) == want {
             return Ok(p);
         }
     }
     anyhow::bail!(
-        "unknown platform `{name}` (known: orin, thor, orin+lpddr5x, orin+gddr7, orin+pim, thor+gddr7, thor+pim, cpu-host)"
+        "unknown platform `{name}` (known: orin, thor, orin+lpddr5x, orin+gddr7, orin+pim, thor+gddr7, thor+pim, orin+hbm3, thor+hbm4, cpu-host)"
     )
 }
 
@@ -219,8 +253,25 @@ mod tests {
         assert_eq!(by_name("orin").unwrap().name, "Orin");
         assert_eq!(by_name("Thor+PIM").unwrap().name, "Thor+PIM");
         assert_eq!(by_name("thor-gddr7").unwrap().name, "Thor+GDDR7");
+        assert_eq!(by_name("orin_hbm3").unwrap().name, "Orin+HBM3");
+        assert_eq!(by_name("thor+hbm4").unwrap().name, "Thor+HBM4");
         assert_eq!(by_name("cpu-host").unwrap().name, "cpu-host");
         assert!(by_name("h100").is_err());
+    }
+
+    #[test]
+    fn sweep_set_extends_table1() {
+        let sweep = sweep_platforms();
+        assert_eq!(sweep.len(), table1_platforms().len() + 2);
+        assert!(sweep.iter().any(|p| p.name == "Orin+HBM3"));
+        assert!(sweep.iter().any(|p| p.name == "Thor+HBM4"));
+        // HBM variants are hypothetical and PIM-free
+        for p in sweep.iter().filter(|p| p.name.contains("HBM")) {
+            assert!(p.hypothetical);
+            assert!(p.mem.pim.is_none());
+        }
+        // table1() itself must stay exactly the paper's seven rows
+        assert_eq!(table1().n_rows(), 7);
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //!   FFN kernels (interpret mode), lowered inside the L2 graph.
 pub mod cli;
 pub mod engine;
+pub mod experiment;
 pub mod hw;
 pub mod runtime;
 pub mod sim;

@@ -1,10 +1,14 @@
 //! Figure 3 reproduction: control frequency for scaled VLA models
-//! (2 B – 100 B) across the Table 1 platform matrix, against the 10–20 Hz
-//! real-time band.
+//! (2 B – 100 B) across the platform matrix (Table 1 plus the HBM pathway
+//! variants), against the 10–20 Hz real-time band. The sizes × platforms
+//! grid is embarrassingly parallel and runs on the `sim::sweep` worker
+//! pool; every cell is a pure function of (size, platform, options), so the
+//! parallel sweep is bitwise-identical to the serial path.
 
-use crate::hw::platform::table1_platforms;
+use crate::hw::platform::sweep_platforms;
+use crate::hw::Platform;
 use crate::model::scaling::{scaled_vla, ANCHOR_SIZES_B};
-use crate::sim::{SimOptions, Simulator};
+use crate::sim::{sweep, SimOptions, Simulator};
 use crate::util::table::Table;
 
 /// One (model size, platform) cell.
@@ -28,26 +32,36 @@ pub struct Fig3 {
     pub cells: Vec<Fig3Cell>,
 }
 
-/// Run the Fig 3 sweep. `decode_stride` > 1 accelerates the decode-phase
-/// integration with negligible error (see sim tests).
+/// Run the Fig 3 sweep over the default platform matrix. `decode_stride` > 1
+/// accelerates the decode-phase integration with negligible error (see sim
+/// tests).
 pub fn run(options: &SimOptions, sizes: &[f64]) -> Fig3 {
-    let platforms = table1_platforms();
-    let mut cells = Vec::new();
+    run_on(options, sizes, &sweep_platforms())
+}
+
+/// Run the Fig 3 sweep over an explicit platform set (e.g. a directory of
+/// `--platform-file` JSONs). Cells are evaluated on the parallel sweep
+/// runner in size-major, platform-minor order.
+pub fn run_on(options: &SimOptions, sizes: &[f64], platforms: &[Platform]) -> Fig3 {
+    let mut grid: Vec<(f64, &Platform)> = Vec::with_capacity(sizes.len() * platforms.len());
     for &size in sizes {
-        let cfg = scaled_vla(size);
-        for p in &platforms {
-            let sim = Simulator::with_options(p.clone(), options.clone());
-            let r = sim.simulate_vla(&cfg);
-            cells.push(Fig3Cell {
-                size_b: size,
-                platform: p.name.clone(),
-                hz: r.control_frequency(),
-                amortized_hz: r.amortized_frequency(),
-                total_latency: r.total(),
-                generation_share: r.generation_share(),
-            });
+        for p in platforms {
+            grid.push((size, p));
         }
     }
+    let cells = sweep::parallel_map(&grid, |&(size, p)| {
+        let cfg = scaled_vla(size);
+        let sim = Simulator::with_options(p.clone(), options.clone());
+        let r = sim.simulate_vla(&cfg);
+        Fig3Cell {
+            size_b: size,
+            platform: p.name.clone(),
+            hz: r.control_frequency(),
+            amortized_hz: r.amortized_frequency(),
+            total_latency: r.total(),
+            generation_share: r.generation_share(),
+        }
+    });
     Fig3 {
         sizes: sizes.to_vec(),
         platforms: platforms.iter().map(|p| p.name.clone()).collect(),
@@ -114,8 +128,28 @@ mod tests {
     #[test]
     fn sweep_covers_matrix() {
         let f = small_sweep();
-        assert_eq!(f.cells.len(), 2 * 7);
-        assert_eq!(f.table(false).n_rows(), 7);
+        // Table 1's seven platforms plus the two HBM pathway variants
+        assert_eq!(f.platforms.len(), 9);
+        assert_eq!(f.cells.len(), 2 * 9);
+        assert_eq!(f.table(false).n_rows(), 9);
+    }
+
+    #[test]
+    fn hbm_variants_beat_their_base_socs() {
+        let f = small_sweep();
+        for &s in &[7.0, 100.0] {
+            assert!(f.cell(s, "Orin+HBM3").unwrap().hz > f.cell(s, "Orin").unwrap().hz);
+            assert!(f.cell(s, "Thor+HBM4").unwrap().hz > f.cell(s, "Thor").unwrap().hz);
+        }
+    }
+
+    #[test]
+    fn explicit_platform_set_is_respected() {
+        let opt = SimOptions { decode_stride: 16, ..Default::default() };
+        let plats = vec![crate::hw::platform::orin(), crate::hw::platform::thor()];
+        let f = run_on(&opt, &[7.0], &plats);
+        assert_eq!(f.platforms, vec!["Orin".to_string(), "Thor".to_string()]);
+        assert_eq!(f.cells.len(), 2);
     }
 
     #[test]

@@ -150,9 +150,9 @@ pub fn codesign_study(
 }
 
 /// Render the study as a table.
-pub fn codesign_table(platform_name: &str, results: &[CodesignResult]) -> Table {
+pub fn codesign_table(platform_name: &str, model_name: &str, results: &[CodesignResult]) -> Table {
     let mut t = Table::new(
-        &format!("Co-design projections on {platform_name} (MolmoAct-7B)"),
+        &format!("Co-design projections on {platform_name} ({model_name})"),
         &["technique", "step (s)", "Hz", "actions/s", "speedup"],
     )
     .left_first();
@@ -164,6 +164,37 @@ pub fn codesign_table(platform_name: &str, results: &[CodesignResult]) -> Table 
             format!("{:.3}", r.amortized_hz),
             format!("{:.2}x", r.speedup_vs_baseline),
         ]);
+    }
+    t
+}
+
+/// Hardware × software matrix: the combined co-design technique evaluated
+/// on every platform of `platforms`, in parallel on the sweep runner. The
+/// single source of the matrix that `codesign` and `report` both emit.
+pub fn combined_matrix(
+    platforms: &[Platform],
+    options: &SimOptions,
+    target: &VlaConfig,
+    draft: &VlaConfig,
+) -> Table {
+    let mut t = Table::new(
+        "Combined co-design across the platform matrix",
+        &["Platform", "baseline actions/s", "combined actions/s", "gain"],
+    )
+    .left_first();
+    let rows = super::sweep::parallel_map(platforms, |p| {
+        let r = codesign_study(p, options, target, draft);
+        let base = &r[0];
+        let combo = r.last().unwrap();
+        vec![
+            p.name.clone(),
+            format!("{:.3}", base.amortized_hz),
+            format!("{:.3}", combo.amortized_hz),
+            format!("{:.2}x", combo.speedup_vs_baseline),
+        ]
+    });
+    for row in rows {
+        t.row(row);
     }
     t
 }
@@ -280,6 +311,21 @@ mod tests {
         let per = |r: usize| -> f64 { t.cell(r, 2).parse().unwrap() };
         assert!(agg(2) > 3.0 * agg(0), "batching must lift aggregate throughput");
         assert!(per(2) <= per(0) * 1.05, "per-stream rate cannot improve with batching");
+    }
+
+    #[test]
+    fn combined_matrix_gains_everywhere() {
+        let t = combined_matrix(
+            &platform::sweep_platforms(),
+            &opts(),
+            &molmoact_7b(),
+            &scaled_vla(2.0),
+        );
+        assert_eq!(t.n_rows(), platform::sweep_platforms().len());
+        for r in 0..t.n_rows() {
+            let gain: f64 = t.cell(r, 3).trim_end_matches('x').parse().unwrap();
+            assert!(gain > 1.0, "combined co-design must help on every platform: row {r}");
+        }
     }
 
     #[test]

@@ -11,6 +11,7 @@ use super::roofline::{Engine, OpCost};
 use super::simulator::{SimOptions, Simulator, VlaSimResult};
 use crate::hw::Platform;
 use crate::model::{Stage, VlaConfig};
+use crate::util::table::Table;
 
 /// Energy coefficients for a platform (approximate 2024-era edge silicon).
 #[derive(Debug, Clone)]
@@ -35,6 +36,8 @@ impl EnergyModel {
             "LPDDR5" => 48.0,
             "LPDDR5X" => 44.0,
             "GDDR7" => 64.0, // faster but hungrier per byte
+            "HBM3" => 31.0,  // short TSV paths beat off-package PHYs
+            "HBM4" => 26.0,
             "LPDDR6X PIM" => 40.0,
             _ => 50.0,
         };
@@ -141,6 +144,32 @@ pub fn simulate_energy(
     (latency, energy)
 }
 
+/// The per-platform energy table (one row per platform), evaluated on the
+/// parallel sweep runner. The single source of the table that `energy` and
+/// `report` both emit.
+pub fn energy_table(platforms: &[Platform], options: &SimOptions, cfg: &VlaConfig) -> Table {
+    let mut t = Table::new(
+        &format!("Energy per control step ({})", cfg.name),
+        &["Platform", "dynamic J", "static J", "total J", "avg W", "J/action"],
+    )
+    .left_first();
+    let rows = super::sweep::parallel_map(platforms, |p| {
+        let (_, e) = simulate_energy(p, options, cfg);
+        vec![
+            p.name.clone(),
+            format!("{:.2}", e.dynamic_total()),
+            format!("{:.2}", e.static_j),
+            format!("{:.2}", e.total_j()),
+            format!("{:.1}", e.avg_watts()),
+            format!("{:.2}", e.j_per_action()),
+        ]
+    });
+    for row in rows {
+        t.row(row);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -206,5 +235,24 @@ mod tests {
         let a = EnergyModel::for_platform(&platform::orin());
         let b = EnergyModel::for_platform(&platform::orin_gddr7());
         assert!(b.pj_per_dram_byte > a.pj_per_dram_byte);
+        // stacked HBM moves bytes cheaper than any off-package DRAM here
+        let h3 = EnergyModel::for_platform(&platform::orin_hbm3());
+        let h4 = EnergyModel::for_platform(&platform::thor_hbm4());
+        assert!(h3.pj_per_dram_byte < a.pj_per_dram_byte);
+        assert!(h4.pj_per_dram_byte < h3.pj_per_dram_byte);
+    }
+
+    #[test]
+    fn energy_table_covers_sweep_set() {
+        let t = energy_table(&platform::sweep_platforms(), &opts(), &molmoact_7b());
+        assert_eq!(t.n_rows(), platform::sweep_platforms().len());
+        assert!(t.to_markdown().contains("Orin+HBM3"));
+        // every row parses: total = dynamic + static (within print rounding)
+        for r in 0..t.n_rows() {
+            let dynamic: f64 = t.cell(r, 1).parse().unwrap();
+            let static_j: f64 = t.cell(r, 2).parse().unwrap();
+            let total: f64 = t.cell(r, 3).parse().unwrap();
+            assert!((dynamic + static_j - total).abs() < 0.02, "row {r}");
+        }
     }
 }

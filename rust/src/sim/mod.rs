@@ -7,6 +7,7 @@ pub mod codesign;
 pub mod energy;
 pub mod roofline;
 pub mod simulator;
+pub mod sweep;
 pub mod tiling;
 
 pub use roofline::{cost_on_pim, cost_on_soc, cost_op, Bound, Engine, OpCost};

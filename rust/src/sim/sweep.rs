@@ -1,0 +1,122 @@
+//! Worker-pool parallel sweep runner for embarrassingly-parallel grids
+//! (Fig 3 sizes × platforms, the co-design platform matrix, the report's
+//! registry loop).
+//!
+//! Design constraints:
+//! - **no external deps**: a scoped `std::thread` pool, nothing else;
+//! - **deterministic**: results come back in input order regardless of
+//!   scheduling, and every work item is a pure function of its inputs, so
+//!   the parallel sweep is bitwise-identical to the serial path
+//!   (`parallel_map_with(items, 1, f)`);
+//! - **work stealing by index**: workers pull the next item off a shared
+//!   atomic counter, which load-balances the heavy large-model cells
+//!   without any channel machinery.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Worker count for a sweep of `items` work items: the smaller of the
+/// machine's available parallelism and the item count, overridable with
+/// `VLA_SWEEP_THREADS` (useful to force the serial path or to bound CI
+/// machines). Always at least 1.
+pub fn default_workers(items: usize) -> usize {
+    if items == 0 {
+        return 1;
+    }
+    let configured = std::env::var("VLA_SWEEP_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0);
+    let workers = configured
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+    workers.min(items)
+}
+
+/// Map `f` over `items` on a scoped worker pool with the default worker
+/// count. Results are returned in input order.
+pub fn parallel_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    parallel_map_with(items, default_workers(items.len()), f)
+}
+
+/// Map `f` over `items` on `workers` scoped threads. `workers <= 1` (or a
+/// single item) runs the plain serial path; any worker count produces the
+/// same result in the same (input) order.
+pub fn parallel_map_with<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if workers <= 1 || n <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(workers.min(n));
+        for _ in 0..workers.min(n) {
+            handles.push(scope.spawn(|| {
+                let mut local: Vec<(usize, R)> = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local.push((i, f(&items[i])));
+                }
+                local
+            }));
+        }
+        let mut indexed: Vec<(usize, R)> = Vec::with_capacity(n);
+        for h in handles {
+            indexed.extend(h.join().expect("sweep worker panicked"));
+        }
+        indexed.sort_by_key(|&(i, _)| i);
+        indexed.into_iter().map(|(_, r)| r).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<u64> = (0..97).collect();
+        let out = parallel_map_with(&items, 8, |&x| x * x);
+        let want: Vec<u64> = items.iter().map(|&x| x * x).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise() {
+        let items: Vec<f64> = (0..33).map(|i| i as f64 * 0.37 + 0.01).collect();
+        let f = |x: &f64| x.sin() / x.sqrt() + x.ln();
+        assert_eq!(parallel_map_with(&items, 1, f), parallel_map_with(&items, 7, f));
+    }
+
+    #[test]
+    fn empty_and_single_item() {
+        let none: Vec<u32> = Vec::new();
+        assert!(parallel_map(&none, |&x| x).is_empty());
+        assert_eq!(parallel_map(&[5u32], |&x| x + 1), vec![6]);
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        let items = [1u32, 2, 3];
+        assert_eq!(parallel_map_with(&items, 64, |&x| x * 10), vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn default_workers_bounded_by_items() {
+        assert_eq!(default_workers(0), 1);
+        let w = default_workers(4);
+        assert!((1..=4).contains(&w));
+        assert!(default_workers(100_000) >= 1);
+    }
+}

@@ -119,7 +119,7 @@ impl Table {
     /// Render as CSV (RFC-4180-ish quoting).
     pub fn to_csv(&self) -> String {
         let quote = |s: &str| -> String {
-            if s.contains(',') || s.contains('"') || s.contains('\n') {
+            if s.contains(',') || s.contains('"') || s.contains('\n') || s.contains('\r') {
                 format!("\"{}\"", s.replace('"', "\"\""))
             } else {
                 s.to_string()
@@ -140,6 +140,61 @@ impl Table {
             out.push('\n');
         }
         out
+    }
+
+    /// Parse a CSV produced by [`Table::to_csv`] back into a table (the
+    /// title is not stored in the CSV, so the caller supplies it). Used by
+    /// the report-sink round-trip tests to prove files are lossless.
+    pub fn from_csv(title: &str, text: &str) -> anyhow::Result<Table> {
+        let mut records: Vec<Vec<String>> = Vec::new();
+        let mut record: Vec<String> = Vec::new();
+        let mut field = String::new();
+        let mut in_quotes = false;
+        let mut chars = text.chars().peekable();
+        while let Some(c) = chars.next() {
+            if in_quotes {
+                if c == '"' {
+                    if chars.peek() == Some(&'"') {
+                        chars.next();
+                        field.push('"');
+                    } else {
+                        in_quotes = false;
+                    }
+                } else {
+                    field.push(c);
+                }
+            } else {
+                match c {
+                    '"' => in_quotes = true,
+                    ',' => record.push(std::mem::take(&mut field)),
+                    '\n' => {
+                        record.push(std::mem::take(&mut field));
+                        records.push(std::mem::take(&mut record));
+                    }
+                    '\r' => {}
+                    _ => field.push(c),
+                }
+            }
+        }
+        anyhow::ensure!(!in_quotes, "unterminated quoted CSV field");
+        if !field.is_empty() || !record.is_empty() {
+            record.push(field);
+            records.push(record);
+        }
+        anyhow::ensure!(!records.is_empty(), "empty CSV");
+        let headers = records.remove(0);
+        let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(title, &hdr_refs);
+        for r in records {
+            anyhow::ensure!(
+                r.len() == t.headers.len(),
+                "CSV row width {} != header width {}",
+                r.len(),
+                t.headers.len()
+            );
+            t.row(r);
+        }
+        Ok(t)
     }
 
     /// Write markdown + CSV files under `dir` using a slug of the title.
@@ -203,6 +258,19 @@ mod tests {
         let csv = t.to_csv();
         assert!(csv.contains("\"x,y\""));
         assert!(csv.contains("\"he said \"\"hi\"\"\""));
+    }
+
+    #[test]
+    fn csv_round_trips() {
+        let mut t = Table::new("rt", &["a", "b"]);
+        t.row(vec!["x,y".into(), "he said \"hi\"".into()]);
+        t.row(vec!["plain".into(), "multi\nline".into()]);
+        t.row(vec!["cr\rcell".into(), "3".into()]);
+        let back = Table::from_csv("rt", &t.to_csv()).unwrap();
+        assert_eq!(back.headers(), t.headers());
+        assert_eq!(back.rows(), t.rows());
+        assert!(Table::from_csv("bad", "a,b\nonly-one\n").is_err());
+        assert!(Table::from_csv("bad", "").is_err());
     }
 
     #[test]

@@ -118,6 +118,38 @@ fn trace_export_writes_valid_json() {
 }
 
 #[test]
+fn hbm_platforms_reachable_from_cli() {
+    assert_eq!(run(&["codesign", "--stride", "32", "--platform", "thor+hbm4"]).unwrap(), 0);
+    assert_eq!(run(&["batch", "--stride", "32", "--platform", "orin+hbm3"]).unwrap(), 0);
+}
+
+#[test]
+fn project_sweeps_platform_directory() {
+    let dir = std::env::temp_dir().join("vla_char_cli_platform_dir");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    for (file, name, bw) in [("a.json", "EdgeA", 400), ("b.json", "EdgeB", 900)] {
+        std::fs::write(
+            dir.join(file),
+            format!(
+                r#"{{"name": "{name}",
+                    "soc": {{"sms": 16, "clock_ghz": 1.3, "tflops_bf16": 100,
+                            "tflops_f32": 10, "smem_kib": 192, "l2_mib": 4,
+                            "l2_bw_gbs": 2000}},
+                    "mem": {{"name": "HBM3", "bw_gbs": {bw}, "capacity_gb": 24}}}}"#
+            ),
+        )
+        .unwrap();
+    }
+    // a directory of platform JSONs is swept by `project` (checks are
+    // paper-shape statements about the default matrix, so they're skipped
+    // and the run exits 0)
+    let pf = dir.to_str().unwrap();
+    let args = ["project", "--stride", "16", "--sizes", "7", "--platform-file", pf];
+    assert_eq!(run(&args).unwrap(), 0);
+}
+
+#[test]
 fn custom_platform_and_model_files() {
     let dir = std::env::temp_dir();
     let plat = dir.join("vla_char_custom_platform.json");

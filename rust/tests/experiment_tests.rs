@@ -1,0 +1,122 @@
+//! Experiment-API surface: registry completeness (every simulator-backed
+//! subcommand is a registered experiment), report-sink round-trips, and the
+//! parallel-sweep determinism guarantee (parallel == serial, result for
+//! result).
+
+use vla_char::experiment::{self, DirSink, ExpContext, Report, ReportSink, StdoutSink};
+use vla_char::hw::{platform, Platform};
+use vla_char::model::scaling::scaled_vla;
+use vla_char::sim::{sweep, SimOptions, Simulator};
+use vla_char::util::table::Table;
+
+/// Every simulator-backed subcommand of the CLI must resolve to a
+/// registered experiment (the CLI dispatches on `experiment::by_name`).
+#[test]
+fn registry_covers_every_simulator_subcommand() {
+    let names: Vec<&str> = experiment::registry().iter().map(|e| e.name()).collect();
+    for want in ["table1", "characterize", "project", "ablate", "codesign", "energy", "batch"] {
+        assert!(names.contains(&want), "subcommand `{want}` has no registered experiment");
+        assert!(experiment::by_name(want).is_some());
+    }
+    assert_eq!(names.len(), 7, "new experiments must be added to this completeness list");
+}
+
+/// Every registered experiment runs against one shared context, passes its
+/// own checks, and renders through both sinks.
+#[test]
+fn every_experiment_runs_and_emits() {
+    let ctx = ExpContext {
+        options: SimOptions { decode_stride: 32, ..Default::default() },
+        sizes: vec![7.0, 100.0],
+        batches: vec![1, 8],
+        ..Default::default()
+    };
+    let dir = std::env::temp_dir().join("vla_char_experiment_suite");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut sink = DirSink::new(&dir).unwrap();
+    for e in experiment::registry() {
+        let rep = e.run(&ctx).unwrap();
+        assert_eq!(rep.name, e.name());
+        assert!(rep.passed(), "{}: checks failed", e.name());
+        assert!(rep.tables().count() > 0, "{}: no tables", e.name());
+        StdoutSink.emit(&rep).unwrap();
+        sink.emit(&rep).unwrap();
+    }
+    let (_, ok) = sink.finish().unwrap();
+    assert!(ok);
+    for f in ["table1.md", "fig2.csv", "fig3.md", "codesign_matrix.md", "energy.csv"] {
+        assert!(dir.join(f).exists(), "missing {f}");
+    }
+}
+
+/// The markdown/CSV directory sink round-trips a table losslessly
+/// (including commas, quotes, and the header row).
+#[test]
+fn report_sink_round_trip() {
+    let dir = std::env::temp_dir().join("vla_char_sink_round_trip");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut t = Table::new("Round trip", &["name", "value"]).left_first();
+    t.row(vec!["a,b".into(), "1.5".into()]);
+    t.row(vec!["he said \"hi\"".into(), "2".into()]);
+    let mut rep = Report::new("rt");
+    rep.push_table("rt_table", t.clone());
+    rep.note("a console note".to_string());
+    rep.metric("answer", 42.0);
+    let mut sink = DirSink::new(&dir).unwrap();
+    sink.emit(&rep).unwrap();
+    let (text, ok) = sink.finish().unwrap();
+    assert!(ok && text.is_empty(), "no checks -> empty check block");
+    let md = std::fs::read_to_string(dir.join("rt_table.md")).unwrap();
+    assert!(md.contains("### Round trip"));
+    let csv = std::fs::read_to_string(dir.join("rt_table.csv")).unwrap();
+    let back = Table::from_csv("Round trip", &csv).unwrap();
+    assert_eq!(back.headers(), t.headers());
+    assert_eq!(back.rows(), t.rows());
+    let metrics = std::fs::read_to_string(dir.join("metrics.csv")).unwrap();
+    assert!(metrics.contains("rt,answer,42"));
+}
+
+/// The worker pool must be a pure reordering of the serial path: same
+/// work, same results, same order — bitwise, over real simulator cells.
+#[test]
+fn parallel_sweep_matches_serial_result_for_result() {
+    let platforms = platform::sweep_platforms();
+    let mut grid: Vec<(f64, Platform)> = Vec::new();
+    for &s in &[2.0, 7.0, 30.0] {
+        for p in &platforms {
+            grid.push((s, p.clone()));
+        }
+    }
+    let opt = SimOptions { decode_stride: 16, ..Default::default() };
+    let eval = |(s, p): &(f64, Platform)| {
+        let r = Simulator::with_options(p.clone(), opt.clone()).simulate_vla(&scaled_vla(*s));
+        (r.total(), r.control_frequency(), r.amortized_frequency(), r.generation_share())
+    };
+    let serial = sweep::parallel_map_with(&grid, 1, eval);
+    let parallel = sweep::parallel_map_with(&grid, 8, eval);
+    assert_eq!(serial.len(), grid.len());
+    assert_eq!(serial, parallel, "parallel sweep must be bitwise-identical to serial");
+}
+
+/// `fig3::run` (which routes through the pool) must agree cell-for-cell
+/// with an inline serial reference in the documented grid order.
+#[test]
+fn fig3_sweep_matches_serial_reference() {
+    let opt = SimOptions { decode_stride: 16, ..Default::default() };
+    let sizes = [7.0, 100.0];
+    let f = vla_char::report::fig3::run(&opt, &sizes);
+    let mut k = 0;
+    for &s in &sizes {
+        for p in platform::sweep_platforms() {
+            let r = Simulator::with_options(p.clone(), opt.clone()).simulate_vla(&scaled_vla(s));
+            let c = &f.cells[k];
+            assert_eq!(c.platform, p.name);
+            assert_eq!(c.size_b, s);
+            assert_eq!(c.hz, r.control_frequency(), "{s}B on {}", p.name);
+            assert_eq!(c.amortized_hz, r.amortized_frequency());
+            assert_eq!(c.total_latency, r.total());
+            k += 1;
+        }
+    }
+    assert_eq!(k, f.cells.len());
+}
