@@ -1,11 +1,20 @@
 //! Bench E-A1..A3: ablation tables (prefetch, CoT length, horizon,
 //! framework overhead) — the design-choice studies DESIGN.md calls out.
+//! The four tables are independent grids, so they run as work items on the
+//! sweep pool, with the per-worker scaling summary line.
 
 use vla_char::report::ablations;
+use vla_char::sim::sweep;
 
 fn main() {
-    println!("{}", ablations::prefetch_ablation().to_markdown());
-    println!("{}", ablations::cot_length_ablation(&[32, 64, 128, 256, 512]).to_markdown());
-    println!("{}", ablations::horizon_ablation(&[1, 4, 8, 16, 32]).to_markdown());
-    println!("{}", ablations::framework_ablation().to_markdown());
+    let kinds = ["prefetch", "cot", "horizon", "framework"];
+    let tables = sweep::bench_scaling("ablation tables", &kinds, |kind| match *kind {
+        "prefetch" => ablations::prefetch_ablation(),
+        "cot" => ablations::cot_length_ablation(&[32, 64, 128, 256, 512]),
+        "horizon" => ablations::horizon_ablation(&[1, 4, 8, 16, 32]),
+        _ => ablations::framework_ablation(),
+    });
+    for t in &tables {
+        println!("{}", t.to_markdown());
+    }
 }

@@ -2,8 +2,10 @@
 //! modeled phase latencies as the benchmark's primary output, plus the
 //! simulator's wall cost for producing them.
 
+use vla_char::hw::platform;
+use vla_char::model::molmoact::molmoact_7b;
 use vla_char::report::{check_fig2, fig2, render};
-use vla_char::sim::SimOptions;
+use vla_char::sim::{sweep, SimOptions, Simulator};
 use vla_char::util::bench::{black_box, BenchSet};
 
 fn main() {
@@ -22,6 +24,12 @@ fn main() {
         black_box(fig2::run(&fast));
     });
     b.finish();
+
+    // Fig 2's unit (one MolmoAct-7B step) over the full platform grid, on
+    // the sweep pool — prints the per-worker scaling summary line.
+    sweep::bench_scaling("fig2 molmoact step x platforms", &platform::sweep_platforms(), |p| {
+        black_box(Simulator::with_options(p.clone(), fast.clone()).simulate_vla(&molmoact_7b()));
+    });
 
     println!("\n{}", f.table().to_markdown());
     println!("{}", f.summary());

@@ -1,9 +1,10 @@
 //! Bench E-F3: regenerate Figure 3 (control frequency sweep) and report the
 //! modeled frequencies; time the full sweep as the harness cost.
 
-use vla_char::model::scaling::ANCHOR_SIZES_B;
+use vla_char::hw::{platform, Platform};
+use vla_char::model::scaling::{scaled_vla, ANCHOR_SIZES_B};
 use vla_char::report::{check_fig3, fig3, render};
-use vla_char::sim::SimOptions;
+use vla_char::sim::{sweep, SimOptions, Simulator};
 use vla_char::util::bench::{black_box, BenchSet};
 
 fn main() {
@@ -22,6 +23,18 @@ fn main() {
         black_box(fig3::run(&fast, &ANCHOR_SIZES_B));
     });
     b.finish();
+
+    // the full sizes x platforms cell grid on the sweep pool, with the
+    // per-worker scaling summary line
+    let mut grid: Vec<(f64, Platform)> = Vec::new();
+    for &s in &ANCHOR_SIZES_B {
+        for p in platform::sweep_platforms() {
+            grid.push((s, p));
+        }
+    }
+    sweep::bench_scaling("fig3 cells (sizes x platforms)", &grid, |(s, p)| {
+        black_box(Simulator::with_options(p.clone(), fast.clone()).simulate_vla(&scaled_vla(*s)));
+    });
 
     println!("\n{}", f.table(false).to_markdown());
     println!("{}", f.table(true).to_markdown());

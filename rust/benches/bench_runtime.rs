@@ -7,6 +7,15 @@ use vla_char::runtime::Runtime;
 use vla_char::util::bench::{black_box, BenchSet};
 
 fn main() -> anyhow::Result<()> {
+    // the simulated counterpart of the measured phases, per platform, on
+    // the sweep pool — always available, even when the PJRT runtime is not
+    let tiny = vla_char::model::vla::tiny_test_config();
+    vla_char::sim::sweep::bench_scaling(
+        "tiny-vla sim x platforms",
+        &vla_char::hw::platform::sweep_platforms(),
+        |p| black_box(vla_char::sim::Simulator::new(p.clone()).simulate_vla(&tiny)),
+    );
+
     let rt = match Runtime::cpu() {
         Ok(rt) => rt,
         Err(e) => {

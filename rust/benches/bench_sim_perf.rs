@@ -5,7 +5,7 @@
 use vla_char::hw::platform;
 use vla_char::model::molmoact::molmoact_7b;
 use vla_char::model::scaling::scaled_vla;
-use vla_char::sim::{cost_op, SimOptions, Simulator};
+use vla_char::sim::{cost_op, sweep, SimOptions, Simulator};
 use vla_char::util::bench::{black_box, BenchSet};
 
 fn main() {
@@ -44,6 +44,13 @@ fn main() {
         black_box(sim.simulate_vla(&big));
     });
     let results = b.finish();
+
+    // the sweep-shaped workload (7B step per platform) on the worker pool,
+    // with the per-worker scaling summary line
+    sweep::bench_scaling("simulate_vla(7B) x platforms", &platform::sweep_platforms(), |p| {
+        let opts = SimOptions { decode_stride: 16, ..Default::default() };
+        black_box(Simulator::with_options(p.clone(), opts).simulate_vla(&cfg));
+    });
 
     // ops/sec summary for the §Perf log
     let per_step = results[0].summary.mean;

@@ -1,6 +1,7 @@
 //! Bench E-T1: regenerate Table 1 and time the platform registry.
 
 use vla_char::hw::platform;
+use vla_char::sim::sweep;
 use vla_char::util::bench::{black_box, BenchSet};
 
 fn main() {
@@ -12,5 +13,12 @@ fn main() {
         black_box(platform::table1().to_markdown());
     });
     b.finish();
+
+    // headline-number derivation per platform on the sweep pool (trivial
+    // cells — the scaling line mostly shows the pool's fixed overhead)
+    sweep::bench_scaling("table1 rows", &platform::table1_platforms(), |p| {
+        black_box((p.headline_bw(), p.total_flops_bf16()));
+    });
+
     println!("\n{}", platform::table1().to_markdown());
 }

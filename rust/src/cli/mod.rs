@@ -1,37 +1,25 @@
 //! Command-line interface of the `vla-char` binary (logic lives here so the
 //! integration suite can drive it without spawning processes).
 //!
-//! Simulator-backed subcommands are NOT implemented here: they are
-//! [`Experiment`](crate::experiment::Experiment)s resolved from the static
-//! registry and rendered through a [`ReportSink`]. This module only parses
-//! argv, dispatches, and keeps the PJRT/engine-backed commands (`step`,
-//! `control-loop`, `serve`, `validate`) plus `trace-export` and the
-//! registry-looping `report`.
+//! Subcommands are NOT implemented here: every simulator- AND engine-backed
+//! flow is an [`Experiment`](crate::experiment::Experiment) resolved from
+//! the static registry and rendered through a [`ReportSink`] (engine-backed
+//! experiments report "skipped: no PJRT runtime" where no real runtime
+//! exists). This module only parses argv, dispatches, and keeps
+//! `trace-export` plus the registry-looping `report`.
 
-use crate::engine::{
-    run_batcher, run_control_loop, BatcherConfig, ControlLoopConfig, Policy, StepServer, VlaEngine,
-    VlaModel,
-};
 use crate::experiment::{self, DirSink, ExpContext, ReportSink, StdoutSink};
-use crate::profile::PhaseProfiler;
-use crate::runtime::Runtime;
-use crate::sim::calibrate::{validate, MeasuredPhases};
 use crate::sim::sweep;
 use crate::util::cli::{help_text, Args, OptSpec};
-use crate::util::units::{fmt_hz, fmt_time};
 use std::path::PathBuf;
 
 const ABOUT: &str =
     "Characterizing VLA models: the action-generation bottleneck on edge AI architectures \
      (reproduction of CS.PF 2026)";
 
-/// Subcommands that are NOT registry experiments: the engine/PJRT-backed
-/// flows, the trace exporter, and the registry loop itself.
+/// Subcommands that are NOT registry experiments: the trace exporter and
+/// the registry loop itself.
 const EXTRA_SUBCOMMANDS: &[(&str, &str)] = &[
-    ("step", "run ONE real control step through the PJRT artifacts (golden-checked)"),
-    ("control-loop", "run the real tiny-VLA control loop and report achieved Hz"),
-    ("serve", "multi-stream serving through the batcher (real engine)"),
-    ("validate", "E-C6: calibrate the simulator against real measurements"),
     ("trace-export", "write a Chrome-trace JSON of a simulated control step"),
     ("report", "run every registered experiment and write markdown+CSV under --out"),
 ];
@@ -49,9 +37,11 @@ fn subcommand_help() -> Vec<(&'static str, &'static str)> {
 fn specs() -> Vec<OptSpec> {
     vec![
         OptSpec { name: "help", value_name: None, help: "show this help", default: None },
-        OptSpec { name: "platform", value_name: Some("NAME"), help: "focus platform (orin, thor, orin+pim, thor+hbm4, ...)", default: Some("orin") },
+        OptSpec { name: "platform", value_name: Some("NAME"), help: "focus platform (orin, thor, orin+pim, thor+hbm4-pim, ...)", default: Some("orin") },
         OptSpec { name: "sizes", value_name: Some("LIST"), help: "model sizes in B params for `project`", default: Some("2,7,14,30,70,100") },
-        OptSpec { name: "steps", value_name: Some("N"), help: "control-loop steps", default: Some("20") },
+        OptSpec { name: "pim-sizes", value_name: Some("LIST"), help: "model sizes in B params swept by `pim`", default: Some("7,30") },
+        OptSpec { name: "top", value_name: Some("N"), help: "rows printed from the ranked scenario matrix (`pim`; 0 = all)", default: Some("10") },
+        OptSpec { name: "steps", value_name: Some("N"), help: "control-loop / validate steps", default: Some("20") },
         OptSpec { name: "decode-tokens", value_name: Some("N"), help: "override generated tokens per step (real engine)", default: None },
         OptSpec { name: "target-hz", value_name: Some("HZ"), help: "control-loop target frequency", default: Some("10") },
         OptSpec { name: "streams", value_name: Some("N"), help: "serving streams", default: Some("2") },
@@ -91,10 +81,6 @@ pub fn run(argv: &[String]) -> anyhow::Result<i32> {
         return Ok(rep.exit_code());
     }
     match sub {
-        "step" => cmd_step(&args),
-        "control-loop" => cmd_control_loop(&args),
-        "serve" => cmd_serve(&args),
-        "validate" => cmd_validate(&args),
         "trace-export" => cmd_trace_export(&args),
         "report" => cmd_report(&args),
         other => {
@@ -144,162 +130,3 @@ fn cmd_trace_export(args: &Args) -> anyhow::Result<i32> {
     Ok(0)
 }
 
-/// Load the real engine (PJRT CPU + artifacts).
-fn load_engine(args: &Args) -> anyhow::Result<VlaEngine> {
-    let rt = Runtime::cpu()?;
-    let model = VlaModel::load(&rt)?;
-    Ok(match args.get("decode-tokens") {
-        Some(_) => VlaEngine::with_decode_tokens(model, args.get_usize("decode-tokens", 24)?),
-        None => VlaEngine::new(model),
-    })
-}
-
-fn cmd_step(args: &Args) -> anyhow::Result<i32> {
-    let engine = load_engine(args)?;
-    let m = &engine.model.manifest;
-    let seed = args.get_usize("seed", 42)? as u64;
-    let mut frames = crate::engine::FrameSource::new(1, m.vision.patches, m.vision.patch_dim, seed);
-    let prompt = frames.prompt(0, m.workload.prompt_tokens, m.decoder.vocab);
-    let frame = frames.next_frame(0, 0);
-    let r = engine.step(&frame, &prompt)?;
-    println!("tokens: {:?}...", &r.tokens[..r.tokens.len().min(8)]);
-    println!(
-        "actions[0]: {:?}",
-        &r.actions[..m.action.action_dim.min(r.actions.len())]
-    );
-    println!(
-        "phases: vision {} | prefill {} | decode {} ({} tok, {:.1} tok/s) | action {}",
-        fmt_time(r.times.vision.as_secs_f64()),
-        fmt_time(r.times.prefill.as_secs_f64()),
-        fmt_time(r.times.decode.as_secs_f64()),
-        r.tokens.len(),
-        r.decode_tps,
-        fmt_time(r.times.action.as_secs_f64()),
-    );
-    println!(
-        "total {} | generation share {:.1}%",
-        fmt_time(r.times.total().as_secs_f64()),
-        r.times.generation_share() * 100.0
-    );
-    Ok(0)
-}
-
-fn cmd_control_loop(args: &Args) -> anyhow::Result<i32> {
-    let engine = load_engine(args)?;
-    let cfg = ControlLoopConfig {
-        target_hz: args.get_f64("target-hz", 10.0)?,
-        steps: args.get_usize("steps", 20)? as u64,
-        seed: args.get_usize("seed", 42)? as u64,
-    };
-    let r = run_control_loop(&engine, &cfg)?;
-    println!(
-        "steps {} | achieved {} (target {}) | amortized {} | misses {}/{}",
-        r.steps,
-        fmt_hz(r.achieved_hz),
-        fmt_hz(r.target_hz),
-        fmt_hz(r.amortized_hz),
-        r.deadline_misses,
-        r.steps
-    );
-    println!(
-        "latency mean {} p99 {} | x{:.1} over budget | generation share {:.1}%",
-        fmt_time(r.latency.mean),
-        fmt_time(r.latency.p99),
-        r.latency_vs_budget(),
-        r.generation_share * 100.0
-    );
-    println!(
-        "phases mean: vision {} prefill {} decode {} action {} | decode {:.1} tok/s",
-        fmt_time(r.mean_phase[0]),
-        fmt_time(r.mean_phase[1]),
-        fmt_time(r.mean_phase[2]),
-        fmt_time(r.mean_phase[3]),
-        r.decode_tps.mean,
-    );
-    Ok(0)
-}
-
-struct EngineServer<'a>(&'a VlaEngine);
-
-impl StepServer for EngineServer<'_> {
-    fn serve(
-        &mut self,
-        frame: &crate::engine::Frame,
-        prompt: &[i32],
-    ) -> anyhow::Result<std::time::Duration> {
-        Ok(self.0.step(frame, prompt)?.times.total())
-    }
-}
-
-fn cmd_serve(args: &Args) -> anyhow::Result<i32> {
-    let engine = load_engine(args)?;
-    let m = engine.model.manifest.clone();
-    let cfg = BatcherConfig {
-        streams: args.get_usize("streams", 2)?,
-        rate_hz: args.get_f64("rate", 2.0)?,
-        duration_s: args.get_f64("duration", 5.0)?,
-        policy: match args.get_or("policy", "rr") {
-            "fifo" => Policy::Fifo,
-            _ => Policy::RoundRobin,
-        },
-        seed: args.get_usize("seed", 42)? as u64,
-    };
-    let frames_prompt =
-        crate::engine::FrameSource::new(1, m.vision.patches, m.vision.patch_dim, cfg.seed);
-    let prompt = frames_prompt.prompt(0, m.workload.prompt_tokens, m.decoder.vocab);
-    let mut server = EngineServer(&engine);
-    let r = run_batcher(&mut server, m.vision.patches, m.vision.patch_dim, &prompt, &cfg)?;
-    println!(
-        "served {} (arrived {:?}) | throughput {:.2} req/s | max burst {}",
-        r.served, r.per_stream_arrived, r.throughput, r.max_burst
-    );
-    println!(
-        "queue delay p50 {} p99 {} | service p50 {} p99 {}",
-        fmt_time(r.queue_delay.p50),
-        fmt_time(r.queue_delay.p99),
-        fmt_time(r.service.p50),
-        fmt_time(r.service.p99),
-    );
-    Ok(0)
-}
-
-/// Measure real per-phase times over `steps` control steps.
-fn measure_phases(engine: &VlaEngine, steps: u64, seed: u64) -> anyhow::Result<MeasuredPhases> {
-    let m = &engine.model.manifest;
-    let mut frames = crate::engine::FrameSource::new(1, m.vision.patches, m.vision.patch_dim, seed);
-    let prompt = frames.prompt(0, m.workload.prompt_tokens, m.decoder.vocab);
-    let mut prof = PhaseProfiler::new();
-    for step in 0..steps {
-        let frame = frames.next_frame(0, step);
-        let r = engine.step(&frame, &prompt)?;
-        prof.record(&r.times);
-    }
-    println!("{}", prof.table("Measured tiny-VLA phase breakdown (PJRT CPU)").to_markdown());
-    Ok(MeasuredPhases {
-        vision: prof.summary(crate::model::Phase::Vision).p50,
-        prefill: prof.summary(crate::model::Phase::Prefill).p50,
-        decode: prof.summary(crate::model::Phase::Decode).p50,
-        action: prof.summary(crate::model::Phase::Action).p50,
-    })
-}
-
-fn cmd_validate(args: &Args) -> anyhow::Result<i32> {
-    let engine = load_engine(args)?;
-    let steps = args.get_usize("steps", 10)? as u64;
-    let measured = measure_phases(&engine, steps, args.get_usize("seed", 42)? as u64)?;
-    let v = validate(&engine.model.manifest, &measured);
-    println!(
-        "calibrated cpu-host: {:.1} GFLOP/s effective, {:.1} GB/s effective",
-        v.eff_gflops,
-        v.eff_bw / 1e9
-    );
-    println!("{}", v.table().to_markdown());
-    let total_acc = v.total_accuracy();
-    let ok = total_acc >= 0.7;
-    println!(
-        "total-latency accuracy {:.1}% (paper's simulator: 70-90%) => {}",
-        total_acc * 100.0,
-        if ok { "PASS" } else { "FAIL" }
-    );
-    Ok(if ok { 0 } else { 1 })
-}

@@ -27,11 +27,26 @@ pub struct ExpContext {
     pub sizes: Vec<f64>,
     /// Batch sizes for the batching study.
     pub batches: Vec<u64>,
-    /// Workload seed. No registered experiment consumes it yet — the
-    /// simulator is deterministic; it is reserved for the engine-backed
-    /// flows (`step`/`control-loop`/...) when they join the registry
-    /// (ROADMAP "Engine-backed experiments").
+    /// Model sizes (B params) the `pim` scenario matrix sweeps.
+    pub pim_sizes: Vec<f64>,
+    /// Rows to print from the `pim` ranked matrix (0 = all).
+    pub top: usize,
+    /// Workload seed (engine-backed experiments).
     pub seed: u64,
+    /// Control-loop / validate steps (engine-backed experiments).
+    pub steps: u64,
+    /// Control-loop target frequency (Hz).
+    pub target_hz: f64,
+    /// Serving streams (`serve`).
+    pub streams: usize,
+    /// Per-stream request rate (`serve`, Hz).
+    pub rate_hz: f64,
+    /// Serving arrival-trace duration (`serve`, virtual seconds).
+    pub duration_s: f64,
+    /// Serving policy: "fifo" or "rr".
+    pub policy: String,
+    /// Override for generated tokens per step (engine-backed experiments).
+    pub decode_tokens: Option<usize>,
     /// `characterize`: also emit the top-operator decode trace.
     pub trace: bool,
     /// `project`: also emit the horizon-amortized Fig 3 table.
@@ -79,7 +94,19 @@ impl ExpContext {
             draft: scaled_vla(2.0),
             sizes: args.get_f64_list("sizes", &ANCHOR_SIZES_B)?,
             batches: batch_sizes.into_iter().map(|b| b as u64).collect(),
+            pim_sizes: args.get_f64_list("pim-sizes", &[7.0, 30.0])?,
+            top: args.get_usize("top", 10)?,
             seed: args.get_usize("seed", 42)? as u64,
+            steps: args.get_usize("steps", 20)? as u64,
+            target_hz: args.get_f64("target-hz", 10.0)?,
+            streams: args.get_usize("streams", 2)?,
+            rate_hz: args.get_f64("rate", 2.0)?,
+            duration_s: args.get_f64("duration", 5.0)?,
+            policy: args.get_or("policy", "rr").to_string(),
+            decode_tokens: match args.get("decode-tokens") {
+                Some(_) => Some(args.get_usize("decode-tokens", 24)?),
+                None => None,
+            },
             trace: args.flag("trace"),
             amortized: args.flag("amortized"),
             custom_platforms,
@@ -99,7 +126,16 @@ impl Default for ExpContext {
             draft: scaled_vla(2.0),
             sizes: ANCHOR_SIZES_B.to_vec(),
             batches: vec![1, 2, 4, 8, 16],
+            pim_sizes: vec![7.0, 30.0],
+            top: 10,
             seed: 42,
+            steps: 20,
+            target_hz: 10.0,
+            streams: 2,
+            rate_hz: 2.0,
+            duration_s: 5.0,
+            policy: "rr".to_string(),
+            decode_tokens: None,
             trace: false,
             amortized: false,
             custom_platforms: false,
@@ -165,5 +201,16 @@ mod tests {
     #[test]
     fn bad_platform_rejected_at_context_build() {
         assert!(ExpContext::from_args(&parse(&["table1", "--platform", "h100"])).is_err());
+    }
+
+    #[test]
+    fn engine_and_pim_defaults() {
+        let ctx = ExpContext::from_args(&parse(&["pim"])).unwrap();
+        assert_eq!(ctx.pim_sizes, vec![7.0, 30.0]);
+        assert_eq!(ctx.top, 10);
+        assert_eq!(ctx.steps, 20);
+        assert_eq!(ctx.target_hz, 10.0);
+        assert_eq!(ctx.policy, "rr");
+        assert!(ctx.decode_tokens.is_none());
     }
 }

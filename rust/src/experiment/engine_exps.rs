@@ -1,0 +1,331 @@
+//! Engine-backed experiments: the PJRT flows (`step`, `control-loop`,
+//! `serve`, `validate`) as registry members.
+//!
+//! Unlike the simulator-backed experiments these need a real runtime plus
+//! compiled artifacts. When either is missing the experiment still returns
+//! a passing report whose status table and check read "skipped: no PJRT
+//! runtime" — so `report` covers the whole registry on any machine and CI
+//! exit codes stay meaningful (closes the ROADMAP "Engine-backed
+//! experiments" item).
+
+use super::experiments::slug;
+use super::{ExpContext, Experiment, Report};
+use crate::engine::{
+    run_batcher, run_control_loop, BatcherConfig, ControlLoopConfig, FrameSource, Policy,
+    StepServer, VlaEngine, VlaModel,
+};
+use crate::profile::PhaseProfiler;
+use crate::report::checks::Check;
+use crate::runtime::Runtime;
+use crate::sim::calibrate::{validate, MeasuredPhases};
+use crate::util::table::Table;
+use crate::util::units::{fmt_hz, fmt_time};
+
+const STEP_CHECK: &str = "R-step-runtime";
+const LOOP_CHECK: &str = "R-loop-runtime";
+const SERVE_CHECK: &str = "R-serve-runtime";
+const VALIDATE_CHECK: &str = "R-validate-runtime";
+
+/// Outcome of trying to stand the real engine up.
+enum EngineLoad {
+    Ready(Box<VlaEngine>),
+    /// A legitimate skip: no PJRT client, or no compiled artifacts.
+    Unavailable(String),
+}
+
+/// Load the real engine (PJRT CPU + artifacts). Missing runtime/artifacts
+/// is a skip; artifacts that exist but fail to load are a REAL error and
+/// propagate (same policy as the integration suite).
+fn load_engine(ctx: &ExpContext) -> anyhow::Result<EngineLoad> {
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => return Ok(EngineLoad::Unavailable(format!("no PJRT runtime ({e})"))),
+    };
+    let dir = match crate::runtime::artifacts_dir() {
+        Ok(dir) => dir,
+        Err(e) => {
+            return Ok(EngineLoad::Unavailable(format!(
+                "no artifacts ({e}) — run `make artifacts`"
+            )))
+        }
+    };
+    let model = VlaModel::load_from(&rt, &dir)?;
+    Ok(EngineLoad::Ready(Box::new(match ctx.decode_tokens {
+        Some(n) => VlaEngine::with_decode_tokens(model, n),
+        None => VlaEngine::new(model),
+    })))
+}
+
+fn status_table(status: &str, detail: &str) -> Table {
+    let mut t = Table::new("Engine status", &["status", "detail"]).left_first();
+    t.row(vec![status.to_string(), detail.to_string()]);
+    t
+}
+
+/// The passing "skipped" report every engine experiment returns when no
+/// PJRT runtime (or no artifacts) is available.
+fn skipped(name: &'static str, check_id: &'static str, why: &str) -> Report {
+    let mut rep = Report::new(name);
+    let detail = format!("skipped: {why}");
+    rep.push_table(&format!("{}_status", slug(name)), status_table("SKIPPED", &detail));
+    rep.note(format!("{name}: {detail}"));
+    rep.checks.push(Check {
+        id: check_id,
+        claim: "engine-backed experiment runs when a PJRT runtime is present",
+        passed: true,
+        detail,
+    });
+    rep
+}
+
+fn ran(rep: &mut Report, name: &str, check_id: &'static str) {
+    rep.push_table(
+        &format!("{}_status", slug(name)),
+        status_table("RAN", "PJRT runtime + artifacts available"),
+    );
+    rep.checks.push(Check {
+        id: check_id,
+        claim: "engine-backed experiment runs when a PJRT runtime is present",
+        passed: true,
+        detail: "ran against the real engine".to_string(),
+    });
+}
+
+/// One real control step through the compiled artifacts.
+pub struct StepOnce;
+
+impl Experiment for StepOnce {
+    fn name(&self) -> &'static str {
+        "step"
+    }
+
+    fn description(&self) -> &'static str {
+        "run ONE real control step through the PJRT artifacts"
+    }
+
+    fn run(&self, ctx: &ExpContext) -> anyhow::Result<Report> {
+        let engine = match load_engine(ctx)? {
+            EngineLoad::Ready(engine) => engine,
+            EngineLoad::Unavailable(why) => return Ok(skipped(self.name(), STEP_CHECK, &why)),
+        };
+        let mut rep = Report::new(self.name());
+        ran(&mut rep, self.name(), STEP_CHECK);
+        let m = &engine.model.manifest;
+        let mut frames = FrameSource::new(1, m.vision.patches, m.vision.patch_dim, ctx.seed);
+        let prompt = frames.prompt(0, m.workload.prompt_tokens, m.decoder.vocab);
+        let r = engine.step(&frames.next_frame(0, 0), &prompt)?;
+        let mut t = Table::new("Real control step (PJRT CPU)", &["phase", "time"]).left_first();
+        for (phase, d) in [
+            ("vision", r.times.vision),
+            ("prefill", r.times.prefill),
+            ("decode", r.times.decode),
+            ("action", r.times.action),
+        ] {
+            t.row(vec![phase.to_string(), fmt_time(d.as_secs_f64())]);
+        }
+        t.row(vec!["total".to_string(), fmt_time(r.times.total().as_secs_f64())]);
+        rep.push_table("step_phases", t);
+        rep.note(format!(
+            "tokens: {:?}... | actions[0]: {:?} | decode {:.1} tok/s | generation share {:.1}%",
+            &r.tokens[..r.tokens.len().min(8)],
+            &r.actions[..m.action.action_dim.min(r.actions.len())],
+            r.decode_tps,
+            r.times.generation_share() * 100.0
+        ));
+        rep.metric("total_s", r.times.total().as_secs_f64());
+        rep.metric("generation_share", r.times.generation_share());
+        rep.metric("decode_tps", r.decode_tps);
+        Ok(rep)
+    }
+}
+
+/// The real tiny-VLA control loop at a target frequency.
+pub struct ControlLoop;
+
+impl Experiment for ControlLoop {
+    fn name(&self) -> &'static str {
+        "control-loop"
+    }
+
+    fn description(&self) -> &'static str {
+        "run the real tiny-VLA control loop and report achieved Hz"
+    }
+
+    fn run(&self, ctx: &ExpContext) -> anyhow::Result<Report> {
+        let engine = match load_engine(ctx)? {
+            EngineLoad::Ready(engine) => engine,
+            EngineLoad::Unavailable(why) => return Ok(skipped(self.name(), LOOP_CHECK, &why)),
+        };
+        let mut rep = Report::new(self.name());
+        ran(&mut rep, self.name(), LOOP_CHECK);
+        let cfg = ControlLoopConfig {
+            target_hz: ctx.target_hz,
+            steps: ctx.steps,
+            seed: ctx.seed,
+        };
+        let r = run_control_loop(&engine, &cfg)?;
+        let mut t = Table::new("Control loop (real engine)", &["metric", "value"]).left_first();
+        for (k, v) in [
+            ("steps", format!("{}", r.steps)),
+            ("achieved", fmt_hz(r.achieved_hz)),
+            ("target", fmt_hz(r.target_hz)),
+            ("amortized", fmt_hz(r.amortized_hz)),
+            ("deadline misses", format!("{}/{}", r.deadline_misses, r.steps)),
+            ("latency mean", fmt_time(r.latency.mean)),
+            ("latency p99", fmt_time(r.latency.p99)),
+            ("over budget", format!("x{:.1}", r.latency_vs_budget())),
+            ("generation share", format!("{:.1}%", r.generation_share * 100.0)),
+        ] {
+            t.row(vec![k.to_string(), v]);
+        }
+        rep.push_table("control_loop", t);
+        rep.note(format!(
+            "phases mean: vision {} prefill {} decode {} action {} | decode {:.1} tok/s",
+            fmt_time(r.mean_phase[0]),
+            fmt_time(r.mean_phase[1]),
+            fmt_time(r.mean_phase[2]),
+            fmt_time(r.mean_phase[3]),
+            r.decode_tps.mean,
+        ));
+        rep.metric("achieved_hz", r.achieved_hz);
+        rep.metric("amortized_hz", r.amortized_hz);
+        rep.metric("deadline_misses", r.deadline_misses as f64);
+        Ok(rep)
+    }
+}
+
+struct EngineServer<'a>(&'a VlaEngine);
+
+impl StepServer for EngineServer<'_> {
+    fn serve(
+        &mut self,
+        frame: &crate::engine::Frame,
+        prompt: &[i32],
+    ) -> anyhow::Result<std::time::Duration> {
+        Ok(self.0.step(frame, prompt)?.times.total())
+    }
+}
+
+/// Multi-stream serving through the batcher (real engine).
+pub struct Serve;
+
+impl Experiment for Serve {
+    fn name(&self) -> &'static str {
+        "serve"
+    }
+
+    fn description(&self) -> &'static str {
+        "multi-stream serving through the batcher (real engine)"
+    }
+
+    fn run(&self, ctx: &ExpContext) -> anyhow::Result<Report> {
+        let engine = match load_engine(ctx)? {
+            EngineLoad::Ready(engine) => engine,
+            EngineLoad::Unavailable(why) => return Ok(skipped(self.name(), SERVE_CHECK, &why)),
+        };
+        let mut rep = Report::new(self.name());
+        ran(&mut rep, self.name(), SERVE_CHECK);
+        let m = engine.model.manifest.clone();
+        let cfg = BatcherConfig {
+            streams: ctx.streams,
+            rate_hz: ctx.rate_hz,
+            duration_s: ctx.duration_s,
+            policy: match ctx.policy.as_str() {
+                "fifo" => Policy::Fifo,
+                _ => Policy::RoundRobin,
+            },
+            seed: ctx.seed,
+        };
+        let frames = FrameSource::new(1, m.vision.patches, m.vision.patch_dim, cfg.seed);
+        let prompt = frames.prompt(0, m.workload.prompt_tokens, m.decoder.vocab);
+        let mut server = EngineServer(&engine);
+        let r = run_batcher(&mut server, m.vision.patches, m.vision.patch_dim, &prompt, &cfg)?;
+        let mut t = Table::new("Serving (real engine)", &["metric", "value"]).left_first();
+        for (k, v) in [
+            ("served", format!("{}", r.served)),
+            ("throughput", format!("{:.2} req/s", r.throughput)),
+            ("max burst", format!("{}", r.max_burst)),
+            ("queue delay p50", fmt_time(r.queue_delay.p50)),
+            ("queue delay p99", fmt_time(r.queue_delay.p99)),
+            ("service p50", fmt_time(r.service.p50)),
+            ("service p99", fmt_time(r.service.p99)),
+        ] {
+            t.row(vec![k.to_string(), v]);
+        }
+        rep.push_table("serve", t);
+        rep.note(format!(
+            "per-stream arrived: {:?} | served: {:?}",
+            r.per_stream_arrived, r.per_stream_served
+        ));
+        rep.metric("throughput_req_s", r.throughput);
+        rep.metric("served", r.served as f64);
+        Ok(rep)
+    }
+}
+
+/// Measure real per-phase times over `steps` control steps.
+fn measure_phases(
+    engine: &VlaEngine,
+    steps: u64,
+    seed: u64,
+) -> anyhow::Result<(MeasuredPhases, Table)> {
+    let m = &engine.model.manifest;
+    let mut frames = FrameSource::new(1, m.vision.patches, m.vision.patch_dim, seed);
+    let prompt = frames.prompt(0, m.workload.prompt_tokens, m.decoder.vocab);
+    let mut prof = PhaseProfiler::new();
+    for step in 0..steps {
+        let frame = frames.next_frame(0, step);
+        let r = engine.step(&frame, &prompt)?;
+        prof.record(&r.times);
+    }
+    let table = prof.table("Measured tiny-VLA phase breakdown (PJRT CPU)");
+    Ok((
+        MeasuredPhases {
+            vision: prof.summary(crate::model::Phase::Vision).p50,
+            prefill: prof.summary(crate::model::Phase::Prefill).p50,
+            decode: prof.summary(crate::model::Phase::Decode).p50,
+            action: prof.summary(crate::model::Phase::Action).p50,
+        },
+        table,
+    ))
+}
+
+/// E-C6: calibrate the simulator against real measurements.
+pub struct Validate;
+
+impl Experiment for Validate {
+    fn name(&self) -> &'static str {
+        "validate"
+    }
+
+    fn description(&self) -> &'static str {
+        "E-C6: calibrate the simulator against real measurements"
+    }
+
+    fn run(&self, ctx: &ExpContext) -> anyhow::Result<Report> {
+        let engine = match load_engine(ctx)? {
+            EngineLoad::Ready(engine) => engine,
+            EngineLoad::Unavailable(why) => return Ok(skipped(self.name(), VALIDATE_CHECK, &why)),
+        };
+        let mut rep = Report::new(self.name());
+        ran(&mut rep, self.name(), VALIDATE_CHECK);
+        let (measured, measured_table) = measure_phases(&engine, ctx.steps, ctx.seed)?;
+        rep.push_table("validate_measured", measured_table);
+        let v = validate(&engine.model.manifest, &measured);
+        rep.note(format!(
+            "calibrated cpu-host: {:.1} GFLOP/s effective, {:.1} GB/s effective",
+            v.eff_gflops,
+            v.eff_bw / 1e9
+        ));
+        rep.push_table("validate_accuracy", v.table());
+        let total_acc = v.total_accuracy();
+        rep.metric("total_accuracy", total_acc);
+        rep.checks.push(Check {
+            id: "R-validate-accuracy",
+            claim: "simulator total-latency accuracy within the paper's 70-90% band",
+            passed: total_acc >= 0.7,
+            detail: format!("total-latency accuracy {:.1}%", total_acc * 100.0),
+        });
+        Ok(rep)
+    }
+}

@@ -18,11 +18,13 @@
 //! subcommand, and is included in `report` output.
 
 mod context;
+mod engine_exps;
 mod experiments;
 mod report;
 
 pub use context::ExpContext;
-pub use experiments::{Ablate, Batch, Characterize, Codesign, Energy, Project, Table1};
+pub use engine_exps::{ControlLoop, Serve, StepOnce, Validate};
+pub use experiments::{Ablate, Batch, Characterize, Codesign, Energy, PimScenarios, Project, Table1};
 pub use report::{DirSink, Item, Report, ReportSink, StdoutSink};
 
 /// A named experiment producing a structured report.
@@ -35,9 +37,23 @@ pub trait Experiment: Sync {
     fn run(&self, ctx: &ExpContext) -> anyhow::Result<Report>;
 }
 
-/// Every simulator-backed experiment, in help/report order.
-pub static REGISTRY: &[&dyn Experiment] =
-    &[&Table1, &Characterize, &Project, &Ablate, &Codesign, &Energy, &Batch];
+/// Every registered experiment, in help/report order: the simulator-backed
+/// paper artifacts first, then the engine-backed (PJRT) flows, which report
+/// "skipped: no PJRT runtime" where no real runtime is available.
+pub static REGISTRY: &[&dyn Experiment] = &[
+    &Table1,
+    &Characterize,
+    &Project,
+    &Ablate,
+    &Codesign,
+    &PimScenarios,
+    &Energy,
+    &Batch,
+    &StepOnce,
+    &ControlLoop,
+    &Serve,
+    &Validate,
+];
 
 /// The experiment registry.
 pub fn registry() -> &'static [&'static dyn Experiment] {

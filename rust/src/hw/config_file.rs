@@ -150,6 +150,7 @@ pub fn vla_from_json(text: &str) -> anyhow::Result<VlaConfig> {
             layers: d.req_u64("layers")?,
             dims: block_dims(d)?,
             vocab: d.req_u64("vocab")?,
+            weight_scale: d.get("weight_scale").and_then(|v| v.as_f64()).unwrap_or(1.0),
         },
         action: ActionConfig {
             layers: a.req_u64("layers")?,

@@ -132,6 +132,27 @@ impl MemDevice {
             }),
         }
     }
+
+    /// HBM4 with bank-level PIM (Samsung HBM-PIM / Aquabolt-XL lineage
+    /// scaled to the HBM4 interface). The 2048-bit stack interface moves
+    /// 1638 GB/s to the SoC; the per-bank compute units see ~4x that
+    /// internally — the same internal:external ratio LPDDR6X-PIM exhibits.
+    /// This is the ceiling of the memory-scaling pathway: stacked bandwidth
+    /// AND in-memory execution.
+    pub fn hbm4_pim(capacity_gb: f64, pim_tflops: f64) -> MemDevice {
+        MemDevice {
+            name: "HBM4 PIM".into(),
+            peak_bw: 1638.0 * GB,
+            capacity: capacity_gb * GB,
+            stream_efficiency: 0.85,
+            pim: Some(PimSpec {
+                internal_bw: 6553.0 * GB,
+                flops_bf16: pim_tflops * 1e12,
+                dispatch_overhead: 2e-6,
+                efficiency: 0.85,
+            }),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -173,5 +194,16 @@ mod tests {
         let m = MemDevice::lpddr6x_pim(64.0, 974.0);
         let p = m.pim.as_ref().unwrap();
         assert!(p.effective_bw() > m.effective_bw(), "PIM internal BW should exceed off-chip");
+    }
+
+    #[test]
+    fn hbm4_pim_tops_the_bandwidth_ladder() {
+        let h = MemDevice::hbm4_pim(36.0, 4000.0);
+        let p = h.pim.as_ref().unwrap();
+        // stack interface matches plain HBM4; internal BW ~4x, like LPDDR6X-PIM
+        assert_eq!(h.peak_bw, MemDevice::hbm4(36.0).peak_bw);
+        assert!((p.internal_bw / h.peak_bw - 4.0).abs() < 0.01);
+        let l = MemDevice::lpddr6x_pim(64.0, 974.0);
+        assert!(p.internal_bw > l.pim.as_ref().unwrap().internal_bw);
     }
 }

@@ -136,6 +136,19 @@ pub fn thor_hbm4() -> Platform {
     }
 }
 
+/// Thor SoC with an HBM4-PIM stack (hypothetical): the combined ceiling —
+/// stacked off-chip bandwidth AND in-memory execution. Third PIM-capable
+/// point of the sweep set, so PIM co-design scenarios are evaluated across
+/// a bandwidth range rather than at a single device class.
+pub fn thor_hbm4_pim() -> Platform {
+    Platform {
+        name: "Thor+HBM4-PIM".into(),
+        soc: SocSpec::thor(),
+        mem: MemDevice::hbm4_pim(36.0, 4000.0),
+        hypothetical: true,
+    }
+}
+
 /// Calibration target: this machine's CPU running XLA-CPU via PJRT.
 /// Effective GFLOPS/BW are fitted by `sim::calibrate`; the defaults here are
 /// conservative placeholders used before calibration.
@@ -173,14 +186,22 @@ pub fn table1_platforms() -> Vec<Platform> {
     ]
 }
 
-/// The default sweep set: Table 1 plus the HBM pathway variants. This is
-/// what `project`, `codesign`, and `energy` iterate; `table1()` itself stays
-/// exactly the paper's seven rows.
+/// The default sweep set: Table 1 plus the HBM pathway variants (HBM3/HBM4
+/// and the HBM4-PIM combined ceiling). This is what `project`, `codesign`,
+/// `energy`, and `pim` iterate; `table1()` itself stays exactly the paper's
+/// seven rows.
 pub fn sweep_platforms() -> Vec<Platform> {
     let mut v = table1_platforms();
     v.push(orin_hbm3());
     v.push(thor_hbm4());
+    v.push(thor_hbm4_pim());
     v
+}
+
+/// The PIM-capable subset of the sweep set (what the `pim` scenario matrix
+/// exercises its PIM levers on).
+pub fn pim_platforms() -> Vec<Platform> {
+    sweep_platforms().into_iter().filter(|p| p.mem.pim.is_some()).collect()
 }
 
 /// Look up a platform by (case-insensitive) name.
@@ -193,7 +214,7 @@ pub fn by_name(name: &str) -> anyhow::Result<Platform> {
         }
     }
     anyhow::bail!(
-        "unknown platform `{name}` (known: orin, thor, orin+lpddr5x, orin+gddr7, orin+pim, thor+gddr7, thor+pim, orin+hbm3, thor+hbm4, cpu-host)"
+        "unknown platform `{name}` (known: orin, thor, orin+lpddr5x, orin+gddr7, orin+pim, thor+gddr7, thor+pim, orin+hbm3, thor+hbm4, thor+hbm4-pim, cpu-host)"
     )
 }
 
@@ -255,6 +276,7 @@ mod tests {
         assert_eq!(by_name("thor-gddr7").unwrap().name, "Thor+GDDR7");
         assert_eq!(by_name("orin_hbm3").unwrap().name, "Orin+HBM3");
         assert_eq!(by_name("thor+hbm4").unwrap().name, "Thor+HBM4");
+        assert_eq!(by_name("thor+hbm4-pim").unwrap().name, "Thor+HBM4-PIM");
         assert_eq!(by_name("cpu-host").unwrap().name, "cpu-host");
         assert!(by_name("h100").is_err());
     }
@@ -262,16 +284,28 @@ mod tests {
     #[test]
     fn sweep_set_extends_table1() {
         let sweep = sweep_platforms();
-        assert_eq!(sweep.len(), table1_platforms().len() + 2);
+        assert_eq!(sweep.len(), table1_platforms().len() + 3);
         assert!(sweep.iter().any(|p| p.name == "Orin+HBM3"));
         assert!(sweep.iter().any(|p| p.name == "Thor+HBM4"));
-        // HBM variants are hypothetical and PIM-free
+        assert!(sweep.iter().any(|p| p.name == "Thor+HBM4-PIM"));
+        // plain HBM variants are hypothetical and PIM-free; the HBM4-PIM
+        // ceiling is hypothetical WITH bank-level compute
         for p in sweep.iter().filter(|p| p.name.contains("HBM")) {
             assert!(p.hypothetical);
-            assert!(p.mem.pim.is_none());
+            assert_eq!(p.mem.pim.is_some(), p.name.contains("HBM4-PIM"));
         }
         // table1() itself must stay exactly the paper's seven rows
         assert_eq!(table1().n_rows(), 7);
+    }
+
+    #[test]
+    fn pim_subset_has_three_capable_platforms() {
+        let pims = pim_platforms();
+        assert!(pims.len() >= 3, "the scenario matrix needs >= 3 PIM-capable platforms");
+        assert!(pims.iter().all(|p| p.mem.pim.is_some()));
+        for name in ["Orin+PIM", "Thor+PIM", "Thor+HBM4-PIM"] {
+            assert!(pims.iter().any(|p| p.name == name), "missing {name}");
+        }
     }
 
     #[test]

@@ -56,6 +56,7 @@ pub fn molmoact_7b() -> VlaConfig {
                 dtype: dt,
             },
             vocab: 152_064,
+            weight_scale: 1.0,
         },
         action: ActionConfig {
             layers: 6,

@@ -110,6 +110,7 @@ pub fn scaled_vla(size_b: f64) -> VlaConfig {
                 dtype: dt,
             },
             vocab: 152_064,
+            weight_scale: 1.0,
         },
         action: ActionConfig {
             layers: anchor.action_layers,

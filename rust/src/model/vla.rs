@@ -31,6 +31,11 @@ pub struct DecoderConfig {
     pub layers: u64,
     pub dims: BlockDims,
     pub vocab: u64,
+    /// Storage scale of the decoder weights relative to `dims.dtype`.
+    /// Sub-byte quantization has no native datatype in the cost model: W4
+    /// is I8 arithmetic with `weight_scale = 0.5` — the packed nibbles
+    /// stream half the bytes per token. 1.0 everywhere else.
+    pub weight_scale: f64,
 }
 
 impl DecoderConfig {
@@ -113,7 +118,21 @@ impl VlaConfig {
 
     /// Model bytes at the decoder dtype (what decode streams per token).
     pub fn decoder_weight_bytes(&self) -> f64 {
-        self.decoder.layers as f64 * self.decoder.dims.params() * self.decoder.dims.dtype.bytes()
+        self.decoder.layers as f64
+            * self.decoder.dims.params()
+            * self.decoder.dims.dtype.bytes()
+            * self.decoder.weight_scale
+    }
+
+    /// Apply the decoder's sub-byte weight-storage scale to a built stage's
+    /// weight streams (KV and activation traffic keep the dtype's width).
+    fn scale_decoder_weight_bytes(&self, ops: &mut [Operator]) {
+        let s = self.decoder.weight_scale;
+        if s != 1.0 {
+            for op in ops {
+                op.weight_bytes *= s;
+            }
+        }
     }
 
     /// Build the vision-encoding stage: all towers over every crop's patch
@@ -197,6 +216,7 @@ impl VlaConfig {
             self.decoder.dims.hidden,
             dt,
         ));
+        self.scale_decoder_weight_bytes(&mut ops);
         Stage::new("prefill", Phase::Prefill, ops)
     }
 
@@ -218,6 +238,7 @@ impl VlaConfig {
             self.decoder.dims.hidden,
             dt,
         ));
+        self.scale_decoder_weight_bytes(&mut ops);
         Stage::new("decode_step", Phase::Decode, ops)
     }
 
@@ -304,6 +325,7 @@ impl VlaConfig {
             self.decoder.dims.hidden,
             dt,
         ));
+        self.scale_decoder_weight_bytes(&mut ops);
         Stage::new("decode_step_batched", Phase::Decode, ops)
     }
 
@@ -402,6 +424,7 @@ pub fn tiny_test_config() -> VlaConfig {
                 dtype: dt,
             },
             vocab: 2048,
+            weight_scale: 1.0,
         },
         action: ActionConfig {
             layers: 2,
@@ -470,6 +493,28 @@ mod tests {
             (got - expect).abs() / expect < 0.05,
             "decode weight bytes {got:.3e} vs expected {expect:.3e}"
         );
+    }
+
+    #[test]
+    fn weight_scale_halves_weight_streams_only() {
+        let base = tiny_test_config();
+        let mut packed = tiny_test_config();
+        packed.decoder.weight_scale = 0.5;
+        for (full, half) in [
+            (base.decode_stage_at(100), packed.decode_stage_at(100)),
+            (base.prefill_stage(), packed.prefill_stage()),
+            (base.decode_stage_batched(100, 4), packed.decode_stage_batched(100, 4)),
+        ] {
+            assert!(
+                (half.weight_bytes() / full.weight_bytes() - 0.5).abs() < 1e-9,
+                "{}: weight bytes must halve",
+                full.name
+            );
+            // KV and activation traffic keep the dtype's width
+            assert_eq!(half.kv_bytes().to_bits(), full.kv_bytes().to_bits());
+            assert_eq!(half.total_flops().to_bits(), full.total_flops().to_bits());
+        }
+        assert!((packed.decoder_weight_bytes() / base.decoder_weight_bytes() - 0.5).abs() < 1e-9);
     }
 
     #[test]

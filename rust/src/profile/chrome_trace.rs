@@ -5,7 +5,7 @@
 
 use crate::hw::Platform;
 use crate::model::VlaConfig;
-use crate::sim::{cost_op, Engine, SimOptions};
+use crate::sim::{cost_op_scoped, Engine, SimOptions};
 use crate::util::json::Json;
 
 /// Build the Chrome-trace JSON document for one simulated control step.
@@ -31,8 +31,8 @@ pub fn chrome_trace(platform: &Platform, options: &SimOptions, cfg: &VlaConfig) 
     let run_stage = |stage: &crate::model::Stage, now_us: &mut f64, emit: Emit| {
         let phase_start = *now_us;
         for op in &stage.ops {
-            let c = cost_op(platform, op, options.pim);
-            let dur = c.t_serial().max(options.host_dispatch) * 1e6;
+            let c = cost_op_scoped(platform, op, options.effective_pim_scope());
+            let dur = c.t_serial().max(options.dispatch_for(c.engine)) * 1e6;
             let tid = match c.engine {
                 Engine::Soc => 1,
                 Engine::Pim => 2,

@@ -64,6 +64,7 @@ pub fn tiny_config_from_manifest(m: &Manifest) -> VlaConfig {
                 dtype: dt,
             },
             vocab: m.decoder.vocab as u64,
+            weight_scale: 1.0,
         },
         action: ActionConfig {
             layers: 2, // tiny DiT depth (fixed, independent of diffusion steps)
@@ -98,6 +99,7 @@ pub fn cpu_sim_options() -> SimOptions {
         decode_stride: 1,
         host_dispatch: 0.0,
         preprocess_per_crop: 0.0,
+        ..Default::default()
     }
 }
 

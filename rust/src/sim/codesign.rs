@@ -12,26 +12,22 @@
 //!   the target verifies them in one batched pass (accept rate `alpha`).
 //! - **Reasoning-trace compression**: fewer generated tokens per step.
 //! - **Batched multi-robot serving**: aggregate tokens/s vs per-stream Hz.
+//!
+//! The levers themselves now live in [`sim::scenario`](super::scenario) as
+//! [`Lever`]s; the study below is a fixed stack of scenarios evaluated with
+//! ambient options passed through unchanged, which keeps every number this
+//! module has always produced bitwise-identical to the pre-scenario
+//! implementation (pinned by `experiment_tests`).
 
+use super::scenario::{Evaluator, Lever, Scenario};
 use super::simulator::{SimOptions, Simulator};
-use crate::hw::{DType, Platform};
+use crate::hw::Platform;
 use crate::model::vla::VlaConfig;
 use crate::util::table::Table;
 
-/// Scale all weight bytes of a config's decoder by using a narrower dtype
-/// (keeps activations in bf16 — W8A16-style inference).
-fn quantize_weights(cfg: &VlaConfig, bits: u32) -> VlaConfig {
-    let mut c = cfg.clone();
-    // model narrower weights by scaling weight_bytes via dtype substitution:
-    // I8 for 8-bit; 4-bit is modeled as I8 with half the layers' bytes, so
-    // instead we scale the stage at simulation time. Simplest faithful knob:
-    // swap the decoder dtype and let bytes follow.
-    c.decoder.dims.dtype = match bits {
-        8 => DType::I8,
-        _ => c.decoder.dims.dtype,
-    };
-    c
-}
+// The canonical weight-quantization transform lives with the levers; this
+// module keeps its historical entry point as a re-export.
+pub use super::scenario::quantize_weights;
 
 /// One co-design configuration and its projected effect.
 #[derive(Debug, Clone)]
@@ -43,30 +39,12 @@ pub struct CodesignResult {
     pub speedup_vs_baseline: f64,
 }
 
-/// Decode-phase latency of `cfg` on `platform` (helper).
-fn decode_time(platform: &Platform, options: &SimOptions, cfg: &VlaConfig) -> f64 {
-    Simulator::with_options(platform.clone(), options.clone())
-        .simulate_decode(cfg)
-        .time
-}
-
-/// Full-step latency with an overridden decode time.
-fn step_with_decode(
-    platform: &Platform,
-    options: &SimOptions,
-    cfg: &VlaConfig,
-    decode: f64,
-) -> f64 {
-    let sim = Simulator::with_options(platform.clone(), options.clone());
-    let r = sim.simulate_vla(cfg);
-    r.vision.time + r.prefill.time + decode + r.action.time
-}
-
-/// Speculative decoding: draft model of `draft_size_b` proposes `gamma`
-/// tokens per target pass; expected accepted tokens per verify is
+/// Speculative decoding: draft model proposes `gamma` tokens per target
+/// pass; expected accepted tokens per verify is
 /// E = (1 - alpha^(gamma+1)) / (1 - alpha). Target verification of gamma+1
 /// tokens is one batched pass (weights read once). Returns projected decode
-/// time for the full trace.
+/// time for the full trace. (The canonical formula lives in
+/// [`scenario::speculative_decode`](super::scenario::speculative_decode).)
 pub fn speculative_decode_time(
     platform: &Platform,
     options: &SimOptions,
@@ -75,78 +53,57 @@ pub fn speculative_decode_time(
     gamma: u64,
     alpha: f64,
 ) -> f64 {
-    let n = target.shape.decode_tokens as f64;
-    let expected_accept = (1.0 - alpha.powi(gamma as i32 + 1)) / (1.0 - alpha).max(1e-9);
-    let rounds = n / expected_accept;
-    // draft runs gamma sequential single-token steps per round
-    let draft_step = decode_time(platform, options, draft) / draft.shape.decode_tokens as f64;
-    // target verifies gamma+1 tokens in one batched pass at mid-trace KV len
-    let kv_mid = target.shape.prefill_len() + target.shape.decode_tokens / 2;
-    let verify = Simulator::with_options(platform.clone(), options.clone())
-        .simulate_stage(&target.decode_stage_batched(kv_mid, gamma + 1))
-        .time;
-    rounds * (gamma as f64 * draft_step + verify)
+    super::scenario::speculative_decode(platform, options, target, draft, gamma, alpha).0
 }
 
-/// Run the co-design study on one platform.
+/// The fixed lever stacks of the classic study, with their legacy labels.
+fn study_scenarios() -> [(Scenario, &'static str); 6] {
+    [
+        (Scenario::baseline(), "baseline (bf16, full trace)"),
+        (Scenario::of(vec![Lever::QuantizeWeights { bits: 8 }]), "W8 weight quantization"),
+        (Scenario::of(vec![Lever::QuantizeKv]), "KV-cache 8-bit (approx)"),
+        (
+            Scenario::of(vec![Lever::CompressTrace { factor: 0.5 }]),
+            "trace compression (0.5x tokens)",
+        ),
+        (
+            Scenario::of(vec![Lever::Speculate { gamma: 4, alpha: 0.7 }]),
+            "speculative decode (g=4, a=0.7)",
+        ),
+        (
+            Scenario::of(vec![
+                Lever::QuantizeWeights { bits: 8 },
+                Lever::CompressTrace { factor: 0.5 },
+                Lever::Speculate { gamma: 4, alpha: 0.7 },
+            ]),
+            "combined (W8 + 0.5x trace + spec)",
+        ),
+    ]
+}
+
+/// Run the co-design study on one platform: the classic six rows, evaluated
+/// through the scenario engine with the ambient options passed through
+/// unchanged (so PIM platforms keep their auto-offload baseline).
 pub fn codesign_study(
     platform: &Platform,
     options: &SimOptions,
     target: &VlaConfig,
     draft: &VlaConfig,
 ) -> Vec<CodesignResult> {
-    let horizon = target.action.horizon as f64;
-    let base_decode = decode_time(platform, options, target);
-    let base_total = step_with_decode(platform, options, target, base_decode);
-    let mut out = Vec::new();
-    let mut push = |name: &str, total: f64| {
-        out.push(CodesignResult {
-            technique: name.into(),
-            step_latency: total,
-            control_hz: 1.0 / total,
-            amortized_hz: horizon / total,
-            speedup_vs_baseline: base_total / total,
-        });
-    };
-
-    push("baseline (bf16, full trace)", base_total);
-
-    // W8 weight quantization
-    let w8 = quantize_weights(target, 8);
-    let t = decode_time(platform, options, &w8);
-    push("W8 weight quantization", step_with_decode(platform, options, target, t));
-
-    // KV quantization: decode KV traffic halved — model by rebuilding with
-    // half decode positions' KV (approx: scale kv-heavy ops via shorter len);
-    // weights stay bf16, only the cache narrows.
-    let kv_t = {
-        let full = decode_time(platform, options, target);
-        let mut short = target.clone();
-        short.shape.prompt_tokens /= 2;
-        short.shape.image_tokens /= 2; // halves kv_len trajectory
-        let less_kv = decode_time(platform, options, &short);
-        // kv traffic is the delta driver; take midpoint as the W16/KV8 estimate
-        (full + less_kv) / 2.0
-    };
-    push("KV-cache 8-bit (approx)", step_with_decode(platform, options, target, kv_t));
-
-    // reasoning-trace compression to half the tokens
-    let mut short_cot = target.clone();
-    short_cot.shape.decode_tokens /= 2;
-    let t = decode_time(platform, options, &short_cot);
-    push("trace compression (0.5x tokens)", step_with_decode(platform, options, target, t));
-
-    // speculative decoding, gamma=4, alpha=0.7
-    let t = speculative_decode_time(platform, options, target, draft, 4, 0.7);
-    push("speculative decode (g=4, a=0.7)", step_with_decode(platform, options, target, t));
-
-    // combined: W8 + trace compression + speculation
-    let mut combo = quantize_weights(target, 8);
-    combo.shape.decode_tokens /= 2;
-    let t = speculative_decode_time(platform, options, &combo, draft, 4, 0.7);
-    push("combined (W8 + 0.5x trace + spec)", step_with_decode(platform, options, target, t));
-
-    out
+    let ev = Evaluator::new(platform, options, target, draft);
+    study_scenarios()
+        .into_iter()
+        .map(|(scenario, technique)| {
+            let r = ev.eval(&scenario).expect("study levers are platform-agnostic");
+            CodesignResult {
+                technique: technique.into(),
+                step_latency: r.step_latency,
+                control_hz: r.control_hz,
+                amortized_hz: r.amortized_hz,
+                speedup_vs_baseline: r.speedup_vs_baseline,
+            }
+        })
+        .collect()
 }
 
 /// Render the study as a table.
@@ -230,7 +187,7 @@ pub fn batch_study(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::hw::platform;
+    use crate::hw::{platform, DType};
     use crate::model::molmoact::molmoact_7b;
     use crate::model::scaling::scaled_vla;
 
@@ -338,8 +295,33 @@ mod tests {
             4,
             0.7,
         );
-        let t_base = decode_time(&platform::orin(), &opts(), &molmoact_7b());
+        let t_base = Simulator::with_options(platform::orin(), opts())
+            .simulate_decode(&molmoact_7b())
+            .time;
         assert!(t_spec < t_base, "speculation should help a BW-bound target");
         assert!(t_spec > t_base / 6.0, "but not unrealistically");
+    }
+
+    #[test]
+    fn w4_decode_bytes_half_of_w8() {
+        // regression: the 4-bit arm used to fall through to the unquantized
+        // dtype, so W4 results silently equaled bf16
+        let base = molmoact_7b();
+        let w8 = quantize_weights(&base, 8);
+        let w4 = quantize_weights(&base, 4);
+        assert_eq!(w8.decoder.dims.dtype, DType::I8);
+        assert_eq!(w4.decoder.dims.dtype, DType::I8);
+        let kv = base.shape.prefill_len() + 64;
+        let ratio = w4.decode_stage_at(kv).weight_bytes() / w8.decode_stage_at(kv).weight_bytes();
+        assert!((ratio - 0.5).abs() < 0.01, "W4 decode weight bytes ratio {ratio}");
+        assert!(
+            (w4.decoder_weight_bytes() / w8.decoder_weight_bytes() - 0.5).abs() < 1e-9,
+            "decoder bytes must halve"
+        );
+        // and W4 decode is strictly faster than W8 on a BW-bound platform
+        let sim = Simulator::with_options(platform::orin(), opts());
+        assert!(sim.simulate_decode(&w4).time < sim.simulate_decode(&w8).time);
+        // unknown widths still pass through unchanged
+        assert_eq!(quantize_weights(&base, 16), base);
     }
 }

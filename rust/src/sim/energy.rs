@@ -38,6 +38,7 @@ impl EnergyModel {
             "GDDR7" => 64.0, // faster but hungrier per byte
             "HBM3" => 31.0,  // short TSV paths beat off-package PHYs
             "HBM4" => 26.0,
+            "HBM4 PIM" => 26.0,
             "LPDDR6X PIM" => 40.0,
             _ => 50.0,
         };
@@ -107,11 +108,14 @@ pub fn simulate_energy(
     let sim = Simulator::with_options(platform.clone(), options.clone());
     let em = EnergyModel::for_platform(platform);
 
+    // op placement must match what the simulator's latency path chooses,
+    // scoped PIM residency included
+    let scope = options.effective_pim_scope();
     let stage_energy = |stage: &Stage| -> f64 {
         stage
             .ops
             .iter()
-            .map(|op| em.op_energy(&super::roofline::cost_op(platform, op, options.pim)))
+            .map(|op| em.op_energy(&super::roofline::cost_op_scoped(platform, op, scope)))
             .sum()
     };
 

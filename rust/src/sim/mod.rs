@@ -6,9 +6,12 @@ pub mod calibrate;
 pub mod codesign;
 pub mod energy;
 pub mod roofline;
+pub mod scenario;
 pub mod simulator;
 pub mod sweep;
 pub mod tiling;
 
-pub use roofline::{cost_on_pim, cost_on_soc, cost_op, Bound, Engine, OpCost};
+pub use roofline::{
+    cost_on_pim, cost_on_soc, cost_op, cost_op_scoped, Bound, Engine, OpCost, PimScope,
+};
 pub use simulator::{SimOptions, Simulator, StageResult, VlaSimResult};

@@ -15,6 +15,52 @@ pub enum Bound {
     Overhead,
 }
 
+impl Bound {
+    /// Human-readable classification label (scenario/report tables).
+    pub fn label(self) -> &'static str {
+        match self {
+            Bound::Compute => "compute",
+            Bound::Memory => "memory",
+            Bound::Overhead => "overhead",
+        }
+    }
+}
+
+/// Which operator classes PIM execution may take.
+///
+/// `Auto` is the simulator's profitability heuristic: offload any
+/// PIM-eligible op that is memory-bound on the SoC when the PIM path is
+/// faster. `Resident` is the scenario engine's *placement* semantic: the
+/// named operand class (decoder weights and/or the KV cache) lives in the
+/// PIM banks, so its admitted operators execute there unconditionally —
+/// residency is a data-layout decision, not a per-op dispatch choice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PimScope {
+    /// No PIM execution.
+    None,
+    /// Heuristic offload of every PIM-eligible op (the ambient default).
+    Auto,
+    /// Forced residency of decoder weights and/or the KV cache.
+    Resident { weights: bool, kv: bool },
+}
+
+impl PimScope {
+    /// Does this scope send `op` down the PIM path at all?
+    pub fn admits(self, op: &Operator) -> bool {
+        if !op.pim_eligible() {
+            return false;
+        }
+        match self {
+            PimScope::None => false,
+            PimScope::Auto => true,
+            PimScope::Resident { weights, kv } => {
+                (weights && matches!(op.kind, OpKind::MatmulWeight))
+                    || (kv && (op.kv_bytes > 0.0 || matches!(op.kind, OpKind::Softmax)))
+            }
+        }
+    }
+}
+
 /// Where the operator executed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Engine {
@@ -150,23 +196,44 @@ pub fn cost_on_pim(platform: &Platform, op: &Operator) -> Option<OpCost> {
 
 /// Choose the best engine for `op` under the given options.
 pub fn cost_op(platform: &Platform, op: &Operator, allow_pim: bool) -> OpCost {
-    cost_op_impl(platform, op, allow_pim, true)
+    cost_op_scoped_impl(platform, op, bool_scope(allow_pim), true)
 }
 
-/// PERF variant for the aggregation-only simulate path: skips the per-op
-/// name clone (~430 String allocations per decode step otherwise).
-pub fn cost_op_unnamed(platform: &Platform, op: &Operator, allow_pim: bool) -> OpCost {
-    cost_op_impl(platform, op, allow_pim, false)
+/// Scope-aware engine choice (the scenario engine's entry point).
+pub fn cost_op_scoped(platform: &Platform, op: &Operator, scope: PimScope) -> OpCost {
+    cost_op_scoped_impl(platform, op, scope, true)
 }
 
-fn cost_op_impl(platform: &Platform, op: &Operator, allow_pim: bool, with_name: bool) -> OpCost {
+/// PERF variant for the aggregation-only simulate hot path: skips the
+/// per-op name clone (~430 String allocations per decode step otherwise).
+pub fn cost_op_scoped_unnamed(platform: &Platform, op: &Operator, scope: PimScope) -> OpCost {
+    cost_op_scoped_impl(platform, op, scope, false)
+}
+
+fn bool_scope(allow_pim: bool) -> PimScope {
+    if allow_pim { PimScope::Auto } else { PimScope::None }
+}
+
+fn cost_op_scoped_impl(
+    platform: &Platform,
+    op: &Operator,
+    scope: PimScope,
+    with_name: bool,
+) -> OpCost {
     let soc = cost_on_soc_impl(platform, op, with_name);
-    if !allow_pim || !op.pim_eligible() {
+    if !scope.admits(op) {
         return soc;
     }
-    match cost_on_pim(platform, op) {
-        // offload only when the op is memory-bound on the SoC and PIM wins
-        Some(pim) if soc.bound == Bound::Memory && pim.t_serial() < soc.t_serial() => pim,
+    let pim = match cost_on_pim(platform, op) {
+        Some(pim) => pim,
+        None => return soc,
+    };
+    match scope {
+        // residency: the operands live in the PIM banks — admitted ops run
+        // there whether or not the per-op heuristic would have chosen to
+        PimScope::Resident { .. } => pim,
+        // auto: offload only when the op is memory-bound on the SoC and PIM wins
+        _ if soc.bound == Bound::Memory && pim.t_serial() < soc.t_serial() => pim,
         _ => soc,
     }
 }
@@ -248,5 +315,49 @@ mod tests {
     #[test]
     fn no_pim_on_non_pim_platform() {
         assert!(cost_on_pim(&platform::thor(), &Operator::norm("n", 1, 64, DType::BF16)).is_none());
+    }
+
+    #[test]
+    fn resident_scope_forces_admitted_ops_onto_pim() {
+        let p = platform::orin_pim();
+        // a small attention read: launch-overhead-bound on the SoC, so the
+        // Auto heuristic keeps it there — residency forces the PIM path
+        let qk = Operator::matmul_act("qk", 4, 7, 800, 128, DType::BF16, true);
+        assert_eq!(cost_op(&p, &qk, true).engine, Engine::Soc);
+        let kv_scope = PimScope::Resident { weights: false, kv: true };
+        assert_eq!(cost_op_scoped(&p, &qk, kv_scope).engine, Engine::Pim);
+        // ...but a weights-only residency does not admit attention ops
+        let w_scope = PimScope::Resident { weights: true, kv: false };
+        assert_eq!(cost_op_scoped(&p, &qk, w_scope).engine, Engine::Soc);
+        let gemv = Operator::matmul_weight("v", 1, 1, 18944, 3584, DType::BF16);
+        assert_eq!(cost_op_scoped(&p, &gemv, w_scope).engine, Engine::Pim);
+        assert_eq!(cost_op_scoped(&p, &gemv, kv_scope).engine, Engine::Soc);
+    }
+
+    #[test]
+    fn scoped_none_and_auto_match_bool_api() {
+        let p = platform::orin_pim();
+        let gemv = Operator::matmul_weight("v", 1, 1, 18944, 3584, DType::BF16);
+        for (scope, allow) in [(PimScope::None, false), (PimScope::Auto, true)] {
+            let a = cost_op_scoped(&p, &gemv, scope);
+            let b = cost_op(&p, &gemv, allow);
+            assert_eq!(a.engine, b.engine);
+            assert_eq!(a.t_serial().to_bits(), b.t_serial().to_bits());
+        }
+    }
+
+    #[test]
+    fn resident_scope_is_noop_without_pim_hardware() {
+        let p = platform::thor();
+        let gemv = Operator::matmul_weight("v", 1, 1, 18944, 3584, DType::BF16);
+        let scope = PimScope::Resident { weights: true, kv: true };
+        assert_eq!(cost_op_scoped(&p, &gemv, scope).engine, Engine::Soc);
+    }
+
+    #[test]
+    fn bound_labels() {
+        assert_eq!(Bound::Memory.label(), "memory");
+        assert_eq!(Bound::Compute.label(), "compute");
+        assert_eq!(Bound::Overhead.label(), "overhead");
     }
 }

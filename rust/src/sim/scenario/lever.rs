@@ -1,0 +1,204 @@
+//! The co-design levers: each one transformation of the workload config,
+//! the simulation options, or the decode-phase cost model.
+//!
+//! A lever is deliberately small: `apply_config` rewrites the
+//! [`VlaConfig`], `apply_options` rewrites the [`SimOptions`] (that is how
+//! the PIM-residency levers reach the roofline's forced-placement scopes),
+//! and the speculation levers are interpreted by the evaluator because they
+//! replace the decode integration itself. The five software levers are the
+//! ones `sim::codesign` has always modeled; the three `Pim*` levers are the
+//! paper's forward-looking hardware/software co-design points.
+
+use crate::hw::{DType, Platform};
+use crate::model::vla::VlaConfig;
+use crate::sim::simulator::SimOptions;
+
+/// Scale the decoder's weight storage to a narrower width (activations and
+/// KV keep their dtype semantics — W8A16-style inference). W8 swaps the
+/// decoder dtype to I8; W4 has no native datatype in the cost model, so it
+/// is I8 arithmetic with `weight_scale = 0.5` — the packed nibbles stream
+/// half the bytes per token. Other widths pass through unchanged.
+pub fn quantize_weights(cfg: &VlaConfig, bits: u32) -> VlaConfig {
+    let mut c = cfg.clone();
+    match bits {
+        8 => c.decoder.dims.dtype = DType::I8,
+        4 => {
+            c.decoder.dims.dtype = DType::I8;
+            c.decoder.weight_scale = 0.5;
+        }
+        _ => {}
+    }
+    c
+}
+
+/// Exclusivity group: a scenario holds at most one lever per group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LeverGroup {
+    /// Weight storage/placement (quantization, PIM residency).
+    Weights,
+    /// KV-cache storage/placement.
+    Kv,
+    /// Reasoning-trace length.
+    Trace,
+    /// Speculative decoding.
+    Speculation,
+    /// Multi-robot batching.
+    Batching,
+}
+
+/// One co-design lever.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Lever {
+    /// W8/W4 weight quantization on the SoC streaming path.
+    QuantizeWeights { bits: u32 },
+    /// Weight-streaming on PIM: W8/W4 decoder weights resident in the PIM
+    /// banks; decoder GEMVs are costed via `cost_on_pim` (forced residency)
+    /// and issued by the PIM command queue instead of the eager host.
+    PimWeightStream { bits: u32 },
+    /// KV-cache 8-bit quantization (midpoint approximation, as in the
+    /// original codesign study).
+    QuantizeKv,
+    /// KV cache resident in PIM: attention byte traffic (qk/softmax/av) is
+    /// served at PIM internal bandwidth from the banks that hold it.
+    PimKvAttention,
+    /// Reasoning-trace compression to `factor` of the generated tokens.
+    CompressTrace { factor: f64 },
+    /// Speculative decoding: the draft proposes `gamma` tokens per target
+    /// verification pass (acceptance rate `alpha`). The draft runs on the
+    /// ambient SoC path — any PIM residency in the stack belongs to the
+    /// target; a PIM-hosted draft is [`Lever::PimDraft`]'s job.
+    Speculate { gamma: u64, alpha: f64 },
+    /// Draft-model-on-PIM speculation: the draft decodes on the PIM units
+    /// while the SoC verifies the previous proposal — the engines pipeline.
+    PimDraft { gamma: u64, alpha: f64 },
+    /// Batched multi-robot serving: `streams` robots decode in lockstep;
+    /// weights are read once per step, per-stream latency is the metric.
+    Batch { streams: u64 },
+}
+
+impl Lever {
+    /// Compact tag used to compose scenario names.
+    pub fn short(&self) -> String {
+        match self {
+            Lever::QuantizeWeights { bits } => format!("W{bits}"),
+            Lever::PimWeightStream { bits } => format!("W{bits}@PIM"),
+            Lever::QuantizeKv => "KV8".to_string(),
+            Lever::PimKvAttention => "KV@PIM".to_string(),
+            Lever::CompressTrace { factor } => format!("{factor}xCoT"),
+            Lever::Speculate { gamma, alpha } => format!("spec(g{gamma},a{alpha})"),
+            Lever::PimDraft { gamma, alpha } => format!("spec@PIM(g{gamma},a{alpha})"),
+            Lever::Batch { streams } => format!("b{streams}"),
+        }
+    }
+
+    pub fn group(&self) -> LeverGroup {
+        match self {
+            Lever::QuantizeWeights { .. } | Lever::PimWeightStream { .. } => LeverGroup::Weights,
+            Lever::QuantizeKv | Lever::PimKvAttention => LeverGroup::Kv,
+            Lever::CompressTrace { .. } => LeverGroup::Trace,
+            Lever::Speculate { .. } | Lever::PimDraft { .. } => LeverGroup::Speculation,
+            Lever::Batch { .. } => LeverGroup::Batching,
+        }
+    }
+
+    /// Does this lever need PIM hardware on the platform?
+    pub fn requires_pim(&self) -> bool {
+        matches!(
+            self,
+            Lever::PimWeightStream { .. } | Lever::PimKvAttention | Lever::PimDraft { .. }
+        )
+    }
+
+    /// Multiplicative bound on how much this lever's modeled overhead may
+    /// slow a step down in the worst case (the `speedup >= 1/overhead`
+    /// sanity invariant). Quantization/compression/residency never add
+    /// modeled cost (1.02 covers approximation slack); speculation can lose
+    /// up to the mis-speculated draft work — bounded by 2x at our
+    /// gamma/draft scale (γ·t_draft ≤ t_verify on every modeled platform);
+    /// lockstep batching multiplies per-stream KV/activation traffic, so
+    /// per-stream latency is bounded by `streams`x the single-stream step
+    /// (weights are read once, everything else scales at worst linearly).
+    pub fn modeled_overhead(&self) -> f64 {
+        match self {
+            Lever::Speculate { .. } | Lever::PimDraft { .. } => 2.0,
+            Lever::Batch { streams } => (*streams).max(1) as f64,
+            _ => 1.02,
+        }
+    }
+
+    /// Rewrite the workload config (weight dtype/scale, trace length).
+    pub fn apply_config(&self, cfg: &mut VlaConfig) {
+        match self {
+            Lever::QuantizeWeights { bits } | Lever::PimWeightStream { bits } => {
+                *cfg = quantize_weights(cfg, *bits);
+            }
+            Lever::CompressTrace { factor } => {
+                // truncate, not round: factor 0.5 must match the legacy
+                // integer halving (`decode_tokens /= 2`) bit for bit, odd
+                // token counts included
+                cfg.shape.decode_tokens =
+                    ((cfg.shape.decode_tokens as f64 * factor) as u64).max(1);
+            }
+            _ => {}
+        }
+    }
+
+    /// Rewrite the simulation options (PIM residency scopes).
+    pub fn apply_options(&self, options: &mut SimOptions) {
+        match self {
+            Lever::PimWeightStream { .. } => options.enable_pim_residency(true, false),
+            Lever::PimKvAttention => options.enable_pim_residency(false, true),
+            _ => {}
+        }
+    }
+
+    /// Is this lever applicable to `platform`?
+    pub fn valid_on(&self, platform: &Platform) -> bool {
+        !self.requires_pim() || platform.mem.pim.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::platform;
+    use crate::model::vla::tiny_test_config;
+    use crate::sim::roofline::PimScope;
+
+    #[test]
+    fn groups_and_pim_requirements() {
+        assert_eq!(Lever::QuantizeWeights { bits: 8 }.group(), LeverGroup::Weights);
+        assert_eq!(Lever::PimWeightStream { bits: 4 }.group(), LeverGroup::Weights);
+        assert_eq!(Lever::QuantizeKv.group(), LeverGroup::Kv);
+        assert_eq!(Lever::PimKvAttention.group(), LeverGroup::Kv);
+        assert!(Lever::PimDraft { gamma: 4, alpha: 0.7 }.requires_pim());
+        assert!(!Lever::Speculate { gamma: 4, alpha: 0.7 }.requires_pim());
+        assert!(Lever::PimKvAttention.valid_on(&platform::orin_pim()));
+        assert!(!Lever::PimKvAttention.valid_on(&platform::orin()));
+    }
+
+    #[test]
+    fn config_transforms() {
+        let mut c = tiny_test_config();
+        Lever::QuantizeWeights { bits: 8 }.apply_config(&mut c);
+        assert_eq!(c.decoder.dims.dtype, DType::I8);
+        assert_eq!(c.decoder.weight_scale, 1.0);
+        let mut c4 = tiny_test_config();
+        Lever::PimWeightStream { bits: 4 }.apply_config(&mut c4);
+        assert_eq!(c4.decoder.dims.dtype, DType::I8);
+        assert_eq!(c4.decoder.weight_scale, 0.5);
+        let mut t = tiny_test_config();
+        Lever::CompressTrace { factor: 0.5 }.apply_config(&mut t);
+        assert_eq!(t.shape.decode_tokens, tiny_test_config().shape.decode_tokens / 2);
+    }
+
+    #[test]
+    fn residency_options_union() {
+        let mut o = SimOptions { pim: false, ..Default::default() };
+        Lever::PimWeightStream { bits: 8 }.apply_options(&mut o);
+        assert!(o.pim && o.pim_stream_dispatch);
+        assert_eq!(o.pim_scope, PimScope::Resident { weights: true, kv: false });
+        Lever::PimKvAttention.apply_options(&mut o);
+        assert_eq!(o.pim_scope, PimScope::Resident { weights: true, kv: true });
+    }
+}

@@ -1,0 +1,126 @@
+//! The scenario matrix: cartesian product of the lever axes under the
+//! validity rules.
+//!
+//! Axes (canonical parameter points):
+//!
+//! | axis   | values                                          |
+//! |--------|-------------------------------------------------|
+//! | weight | — · W8 · W4 · W8@PIM · W4@PIM                   |
+//! | kv     | — · KV8 · KV@PIM                                |
+//! | trace  | — · 0.5x                                        |
+//! | spec   | — · spec(4, 0.7) · spec@PIM(4, 0.7)             |
+//!
+//! Validity rules (enforced by [`Scenario::validate`]): the `@PIM` values
+//! need a PIM device, and a PIM-resident draft claims the PIM units, so it
+//! excludes the weight/KV residency values. Closed form of the valid count:
+//!
+//! - non-PIM platform: `3 (weights) x 2 (kv) x 2 (trace) x 2 (spec)` = 24
+//! - PIM platform:     `5 x 3 x 2 x 2` (SoC-draft branch)
+//!                     `+ 3 x 2 x 2`   (PIM-draft branch)  = 72
+//!
+//! [`matrix_size`] is that closed form; the tests pin it against the
+//! enumeration so an axis or rule change cannot silently shrink coverage.
+
+use super::{Lever, Scenario};
+use crate::hw::Platform;
+
+/// Canonical speculation depth of the matrix (tokens drafted per round).
+pub const SPEC_GAMMA: u64 = 4;
+/// Canonical draft acceptance rate of the matrix.
+pub const SPEC_ALPHA: f64 = 0.7;
+/// Canonical trace-compression factor of the matrix.
+pub const TRACE_FACTOR: f64 = 0.5;
+
+fn weight_axis() -> Vec<Option<Lever>> {
+    vec![
+        None,
+        Some(Lever::QuantizeWeights { bits: 8 }),
+        Some(Lever::QuantizeWeights { bits: 4 }),
+        Some(Lever::PimWeightStream { bits: 8 }),
+        Some(Lever::PimWeightStream { bits: 4 }),
+    ]
+}
+
+fn kv_axis() -> Vec<Option<Lever>> {
+    vec![None, Some(Lever::QuantizeKv), Some(Lever::PimKvAttention)]
+}
+
+fn trace_axis() -> Vec<Option<Lever>> {
+    vec![None, Some(Lever::CompressTrace { factor: TRACE_FACTOR })]
+}
+
+fn spec_axis() -> Vec<Option<Lever>> {
+    vec![
+        None,
+        Some(Lever::Speculate { gamma: SPEC_GAMMA, alpha: SPEC_ALPHA }),
+        Some(Lever::PimDraft { gamma: SPEC_GAMMA, alpha: SPEC_ALPHA }),
+    ]
+}
+
+/// Every valid scenario for `platform`, in deterministic axis order. The
+/// first entry is always the baseline (all axes at `None`).
+pub fn scenario_matrix(platform: &Platform) -> Vec<Scenario> {
+    let mut out = Vec::new();
+    for w in &weight_axis() {
+        for k in &kv_axis() {
+            for t in &trace_axis() {
+                for s in &spec_axis() {
+                    let levers: Vec<Lever> = [w, k, t, s].into_iter().cloned().flatten().collect();
+                    let scenario = Scenario::of(levers);
+                    if scenario.validate(platform).is_ok() {
+                        out.push(scenario);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Closed-form size of the valid matrix (see the module docs for the
+/// derivation). The tests assert this equals `scenario_matrix(p).len()`.
+pub fn matrix_size(platform: &Platform) -> usize {
+    if platform.mem.pim.is_some() { 5 * 3 * 2 * 2 + 3 * 2 * 2 } else { 3 * 2 * 2 * 2 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::platform;
+
+    #[test]
+    fn enumeration_matches_closed_form_everywhere() {
+        for p in platform::sweep_platforms() {
+            let m = scenario_matrix(&p);
+            assert_eq!(m.len(), matrix_size(&p), "{}", p.name);
+            let expect = if p.mem.pim.is_some() { 72 } else { 24 };
+            assert_eq!(m.len(), expect, "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn matrix_leads_with_baseline_and_names_are_unique() {
+        let m = scenario_matrix(&platform::orin_pim());
+        assert_eq!(m[0].name, "baseline");
+        let mut names: Vec<&str> = m.iter().map(|s| s.name.as_str()).collect();
+        let n = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), n, "scenario names must be unique");
+    }
+
+    #[test]
+    fn non_pim_matrix_has_no_pim_levers() {
+        for s in scenario_matrix(&platform::orin()) {
+            assert!(!s.requires_pim(), "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn every_generated_scenario_validates() {
+        let p = platform::thor_hbm4_pim();
+        for s in scenario_matrix(&p) {
+            assert!(s.validate(&p).is_ok(), "{}", s.name);
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! Composable PIM co-design scenarios.
+//!
+//! The paper's conclusion calls for *holistic* hardware/software co-design:
+//! neither memory scaling nor any single software technique closes the
+//! action-generation latency gap alone. This subsystem makes that search
+//! space a value:
+//!
+//! - a [`Lever`] is one technique — weight quantization, KV quantization,
+//!   trace compression, speculative decoding, batching, and the three
+//!   PIM-residency levers (weight-streaming on PIM, KV-resident-in-PIM
+//!   attention, draft-model-on-PIM speculation);
+//! - a [`Scenario`] is a named stack of levers (at most one per
+//!   [`LeverGroup`]) that *lowers* to a transformed
+//!   [`VlaConfig`](crate::model::VlaConfig) + [`SimOptions`] + a decode-cost
+//!   override, evaluated against the existing
+//!   [`Simulator`](crate::sim::Simulator) by an [`Evaluator`];
+//! - [`scenario_matrix`] enumerates the cartesian product of the lever axes
+//!   under the validity rules (PIM levers need a PIM device; a PIM-resident
+//!   draft claims the PIM units exclusively), with a closed-form size
+//!   ([`matrix_size`]) the tests pin against the enumeration.
+//!
+//! Placement semantics: within the scenario engine, exploiting PIM is an
+//! explicit *software mapping decision* (a lever), not an ambient simulator
+//! option — SoC-only scenarios cost the stock off-chip path even on
+//! PIM-equipped platforms, so the matrix shows exactly what each residency
+//! buys. The legacy `sim::codesign` entry points keep their ambient-PIM
+//! behavior (and their numbers, bitwise) by passing their options through
+//! unchanged.
+
+mod eval;
+mod lever;
+mod matrix;
+
+pub use eval::{pim_speculative_decode, speculative_decode, Evaluator, ScenarioResult};
+pub use lever::{quantize_weights, Lever, LeverGroup};
+pub use matrix::{matrix_size, scenario_matrix, SPEC_ALPHA, SPEC_GAMMA, TRACE_FACTOR};
+
+use crate::hw::Platform;
+
+/// A named stack of co-design levers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    /// Display name, composed from the lever tags ("W8@PIM + 0.5xCoT + ...").
+    pub name: String,
+    pub levers: Vec<Lever>,
+}
+
+impl Scenario {
+    /// The empty scenario: the unmodified workload on the stock SoC path.
+    pub fn baseline() -> Scenario {
+        Scenario { name: "baseline".into(), levers: Vec::new() }
+    }
+
+    /// Build a scenario named after its lever tags.
+    pub fn of(levers: Vec<Lever>) -> Scenario {
+        let name = if levers.is_empty() {
+            "baseline".to_string()
+        } else {
+            levers.iter().map(|l| l.short()).collect::<Vec<_>>().join(" + ")
+        };
+        Scenario { name, levers }
+    }
+
+    /// The lever of `group`, if the stack holds one.
+    pub fn lever(&self, group: LeverGroup) -> Option<&Lever> {
+        self.levers.iter().find(|l| l.group() == group)
+    }
+
+    /// Does any lever in the stack need PIM hardware?
+    pub fn requires_pim(&self) -> bool {
+        self.levers.iter().any(|l| l.requires_pim())
+    }
+
+    /// Worst-case multiplicative overhead the stack's cost models may add
+    /// (product of the per-lever bounds): every evaluated scenario must
+    /// satisfy `speedup >= 1 / modeled_overhead()`.
+    pub fn modeled_overhead(&self) -> f64 {
+        self.levers.iter().map(|l| l.modeled_overhead()).product()
+    }
+
+    /// Validity rules for `platform`:
+    /// - at most one lever per exclusivity group;
+    /// - PIM levers require a PIM-capable memory device;
+    /// - a PIM-resident draft claims the PIM units, excluding the other
+    ///   PIM-residency levers;
+    /// - batching does not compose with speculation (verification already
+    ///   batches the target pass).
+    pub fn validate(&self, platform: &Platform) -> anyhow::Result<()> {
+        for (i, a) in self.levers.iter().enumerate() {
+            for b in &self.levers[i + 1..] {
+                anyhow::ensure!(
+                    a.group() != b.group(),
+                    "scenario `{}`: `{}` and `{}` are in the same lever group",
+                    self.name,
+                    a.short(),
+                    b.short()
+                );
+            }
+        }
+        for l in &self.levers {
+            anyhow::ensure!(
+                l.valid_on(platform),
+                "scenario `{}`: `{}` requires a PIM device, `{}` has none",
+                self.name,
+                l.short(),
+                platform.name
+            );
+        }
+        let pim_draft = matches!(self.lever(LeverGroup::Speculation), Some(Lever::PimDraft { .. }));
+        if pim_draft {
+            let other_pim = self
+                .levers
+                .iter()
+                .any(|l| l.requires_pim() && l.group() != LeverGroup::Speculation);
+            anyhow::ensure!(
+                !other_pim,
+                "scenario `{}`: a PIM-resident draft claims the PIM units exclusively",
+                self.name
+            );
+        }
+        if self.lever(LeverGroup::Batching).is_some() {
+            anyhow::ensure!(
+                self.lever(LeverGroup::Speculation).is_none(),
+                "scenario `{}`: batching does not compose with speculative decoding",
+                self.name
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::platform;
+
+    #[test]
+    fn names_compose_from_lever_tags() {
+        assert_eq!(Scenario::baseline().name, "baseline");
+        assert_eq!(Scenario::of(vec![]).name, "baseline");
+        let s = Scenario::of(vec![
+            Lever::QuantizeWeights { bits: 8 },
+            Lever::CompressTrace { factor: 0.5 },
+        ]);
+        assert_eq!(s.name, "W8 + 0.5xCoT");
+    }
+
+    #[test]
+    fn duplicate_group_rejected() {
+        let s = Scenario::of(vec![
+            Lever::QuantizeWeights { bits: 8 },
+            Lever::PimWeightStream { bits: 4 },
+        ]);
+        assert!(s.validate(&platform::orin_pim()).is_err());
+    }
+
+    #[test]
+    fn pim_levers_need_pim_hardware() {
+        let s = Scenario::of(vec![Lever::PimKvAttention]);
+        assert!(s.validate(&platform::orin_pim()).is_ok());
+        assert!(s.validate(&platform::orin()).is_err());
+        assert!(s.requires_pim());
+    }
+
+    #[test]
+    fn pim_draft_claims_the_pim_units() {
+        let alone = Scenario::of(vec![Lever::PimDraft { gamma: 4, alpha: 0.7 }]);
+        assert!(alone.validate(&platform::thor_pim()).is_ok());
+        let contended = Scenario::of(vec![
+            Lever::PimWeightStream { bits: 8 },
+            Lever::PimDraft { gamma: 4, alpha: 0.7 },
+        ]);
+        assert!(contended.validate(&platform::thor_pim()).is_err());
+    }
+
+    #[test]
+    fn batching_excludes_speculation() {
+        let s = Scenario::of(vec![
+            Lever::Batch { streams: 8 },
+            Lever::Speculate { gamma: 4, alpha: 0.7 },
+        ]);
+        assert!(s.validate(&platform::orin()).is_err());
+    }
+
+    #[test]
+    fn modeled_overhead_compounds() {
+        let s = Scenario::of(vec![
+            Lever::QuantizeWeights { bits: 8 },
+            Lever::Speculate { gamma: 4, alpha: 0.7 },
+        ]);
+        assert!((s.modeled_overhead() - 1.02 * 2.0).abs() < 1e-12);
+        assert_eq!(Scenario::baseline().modeled_overhead(), 1.0);
+        // per-stream batching is bounded by streams-x (KV/activations scale)
+        assert_eq!(Scenario::of(vec![Lever::Batch { streams: 8 }]).modeled_overhead(), 8.0);
+    }
+}

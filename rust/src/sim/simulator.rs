@@ -3,7 +3,7 @@
 //! autoregressive decode loop over KV-cache growth, and aggregates per-phase
 //! latencies and control frequency.
 
-use super::roofline::{cost_op_unnamed, Bound, Engine, OpCost};
+use super::roofline::{cost_op_scoped_unnamed, Bound, Engine, OpCost, PimScope};
 use crate::hw::Platform;
 use crate::model::{Phase, Stage, VlaConfig};
 
@@ -15,6 +15,17 @@ pub struct SimOptions {
     pub prefetch: bool,
     /// Allow PIM offload of eligible memory-bound ops (PIM platforms only).
     pub pim: bool,
+    /// Which operator classes the PIM path may take when `pim` is true.
+    /// `Auto` (the default) is the simulator's own profitability heuristic
+    /// over every eligible op; the `sim::scenario` levers narrow it to
+    /// forced weight/KV residency.
+    pub pim_scope: PimScope,
+    /// PIM command streams are issued ahead by the in-memory controller
+    /// (fused, queued) rather than per-op by the eager host framework, so
+    /// PIM-executed ops bypass `host_dispatch`. Off by default — the
+    /// measured PyTorch runtime dispatches every op — and enabled by the
+    /// PIM-residency levers of `sim::scenario`.
+    pub pim_stream_dispatch: bool,
     /// Simulate every `decode_stride`-th decode position and interpolate.
     /// 1 = exact. KV traffic is linear in position so error is negligible.
     pub decode_stride: u64,
@@ -32,6 +43,8 @@ impl Default for SimOptions {
         SimOptions {
             prefetch: true,
             pim: true,
+            pim_scope: PimScope::Auto,
+            pim_stream_dispatch: false,
             decode_stride: 1,
             host_dispatch: 25e-6,
             preprocess_per_crop: 0.08,
@@ -48,6 +61,32 @@ impl SimOptions {
             preprocess_per_crop: 0.0,
             ..Default::default()
         }
+    }
+
+    /// The PIM scope after the master `pim` switch.
+    pub fn effective_pim_scope(&self) -> PimScope {
+        if self.pim { self.pim_scope } else { PimScope::None }
+    }
+
+    /// Host-dispatch floor for an op executed on `engine`: PIM command
+    /// streams issued by the in-memory controller bypass the eager host.
+    /// The single source of this rule for every cost path (simulate,
+    /// Chrome-trace export).
+    pub fn dispatch_for(&self, engine: Engine) -> f64 {
+        if self.pim_stream_dispatch && engine == Engine::Pim { 0.0 } else { self.host_dispatch }
+    }
+
+    /// Turn on forced PIM residency for the given operand classes (the
+    /// scenario levers compose through this: residencies union).
+    pub fn enable_pim_residency(&mut self, weights: bool, kv: bool) {
+        self.pim = true;
+        self.pim_stream_dispatch = true;
+        self.pim_scope = match self.pim_scope {
+            PimScope::Resident { weights: w, kv: k } => {
+                PimScope::Resident { weights: w || weights, kv: k || kv }
+            }
+            _ => PimScope::Resident { weights, kv },
+        };
     }
 }
 
@@ -157,9 +196,10 @@ impl Simulator {
         // PERF: aggregation does not need per-op names; fold without
         // collecting an intermediate Vec.
         let mut acc = CostAcc::default();
-        let dispatch = self.options.host_dispatch;
+        let scope = self.options.effective_pim_scope();
         for op in &stage.ops {
-            acc.add(&cost_op_unnamed(&self.platform, op, self.options.pim), dispatch);
+            let c = cost_op_scoped_unnamed(&self.platform, op, scope);
+            acc.add(&c, self.options.dispatch_for(c.engine));
         }
         self.finish_stage(stage, acc)
     }

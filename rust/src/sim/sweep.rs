@@ -80,6 +80,38 @@ where
     })
 }
 
+/// Bench harness hook: map `f` over `items` serially and on the default
+/// worker pool, timing both, and print the shared per-worker scaling
+/// summary line (workers, wall time, speedup). Returns the parallel results
+/// (identical to the serial ones — see [`parallel_map`]'s determinism
+/// guarantee). The six `harness = false` benches route their grids through
+/// this so every bench reports how the sweep pool scales on the host.
+pub fn bench_scaling<T, R, F>(label: &str, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let t0 = std::time::Instant::now();
+    let serial = parallel_map_with(items, 1, &f);
+    let t_serial = t0.elapsed().as_secs_f64();
+    drop(serial);
+    let workers = default_workers(items.len());
+    let t1 = std::time::Instant::now();
+    let out = parallel_map_with(items, workers, &f);
+    let t_parallel = t1.elapsed().as_secs_f64();
+    println!(
+        "sweep scaling[{label}]: {} items | 1 worker {:.1} ms | {} workers {:.1} ms \
+         | speedup {:.2}x",
+        items.len(),
+        t_serial * 1e3,
+        workers,
+        t_parallel * 1e3,
+        t_serial / t_parallel.max(1e-12)
+    );
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,6 +142,14 @@ mod tests {
     fn more_workers_than_items() {
         let items = [1u32, 2, 3];
         assert_eq!(parallel_map_with(&items, 64, |&x| x * 10), vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn bench_scaling_returns_parallel_results() {
+        let items: Vec<u64> = (0..40).collect();
+        let out = bench_scaling("unit", &items, |&x| x * 3);
+        let want: Vec<u64> = items.iter().map(|&x| x * 3).collect();
+        assert_eq!(out, want);
     }
 
     #[test]

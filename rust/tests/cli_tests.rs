@@ -81,6 +81,12 @@ fn report_writes_files() {
         "ablation_cot.md",
         "ablation_horizon.md",
         "ablation_framework.md",
+        "pim_matrix.md",
+        "pim_matrix.csv",
+        "step_status.md",
+        "control_loop_status.md",
+        "serve_status.md",
+        "validate_status.md",
         "checks.txt",
     ] {
         assert!(out.join(f).exists(), "missing report file {f}");
@@ -103,6 +109,23 @@ fn codesign_energy_batch_ok() {
         run(&["batch", "--stride", "32", "--platform", "thor", "--batches", "1,8"]).unwrap(),
         0
     );
+}
+
+#[test]
+fn pim_scenario_matrix_ok() {
+    // the full matrix at one scale, top-5 rows; checks gate the exit code
+    assert_eq!(run(&["pim", "--stride", "32", "--pim-sizes", "7", "--top", "5"]).unwrap(), 0);
+    // --top 0 prints every ranked row
+    assert_eq!(run(&["pim", "--stride", "32", "--pim-sizes", "7", "--top", "0"]).unwrap(), 0);
+}
+
+#[test]
+fn engine_subcommands_skip_without_runtime_or_run() {
+    // engine-backed experiments are registry members now: without a PJRT
+    // runtime they report "skipped" and exit 0; with one they run for real
+    // (and `step` exits 0 on success too) — either way the exit code is 0.
+    assert_eq!(run(&["step"]).unwrap(), 0);
+    assert_eq!(run(&["serve", "--duration", "1"]).unwrap(), 0);
 }
 
 #[test]

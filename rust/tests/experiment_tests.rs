@@ -4,31 +4,50 @@
 //! result).
 
 use vla_char::experiment::{self, DirSink, ExpContext, Report, ReportSink, StdoutSink};
-use vla_char::hw::{platform, Platform};
+use vla_char::hw::{platform, DType, Platform};
+use vla_char::model::molmoact::molmoact_7b;
 use vla_char::model::scaling::scaled_vla;
-use vla_char::sim::{sweep, SimOptions, Simulator};
+use vla_char::model::VlaConfig;
+use vla_char::sim::{codesign, sweep, SimOptions, Simulator};
 use vla_char::util::table::Table;
 
-/// Every simulator-backed subcommand of the CLI must resolve to a
-/// registered experiment (the CLI dispatches on `experiment::by_name`).
+/// Every subcommand of the CLI — simulator- AND engine-backed — must
+/// resolve to a registered experiment (the CLI dispatches on
+/// `experiment::by_name`).
 #[test]
-fn registry_covers_every_simulator_subcommand() {
+fn registry_covers_every_subcommand() {
     let names: Vec<&str> = experiment::registry().iter().map(|e| e.name()).collect();
-    for want in ["table1", "characterize", "project", "ablate", "codesign", "energy", "batch"] {
+    for want in [
+        "table1",
+        "characterize",
+        "project",
+        "ablate",
+        "codesign",
+        "pim",
+        "energy",
+        "batch",
+        "step",
+        "control-loop",
+        "serve",
+        "validate",
+    ] {
         assert!(names.contains(&want), "subcommand `{want}` has no registered experiment");
         assert!(experiment::by_name(want).is_some());
     }
-    assert_eq!(names.len(), 7, "new experiments must be added to this completeness list");
+    assert_eq!(names.len(), 12, "new experiments must be added to this completeness list");
 }
 
 /// Every registered experiment runs against one shared context, passes its
-/// own checks, and renders through both sinks.
+/// own checks, and renders through both sinks. Engine-backed experiments
+/// without a PJRT runtime must still emit a (skipped) status table and a
+/// passing check.
 #[test]
 fn every_experiment_runs_and_emits() {
     let ctx = ExpContext {
         options: SimOptions { decode_stride: 32, ..Default::default() },
         sizes: vec![7.0, 100.0],
         batches: vec![1, 8],
+        pim_sizes: vec![7.0],
         ..Default::default()
     };
     let dir = std::env::temp_dir().join("vla_char_experiment_suite");
@@ -44,8 +63,89 @@ fn every_experiment_runs_and_emits() {
     }
     let (_, ok) = sink.finish().unwrap();
     assert!(ok);
-    for f in ["table1.md", "fig2.csv", "fig3.md", "codesign_matrix.md", "energy.csv"] {
+    let expect_files =
+        ["table1.md", "fig2.csv", "fig3.md", "codesign_matrix.md", "energy.csv", "pim_matrix.csv"];
+    for f in expect_files {
         assert!(dir.join(f).exists(), "missing {f}");
+    }
+}
+
+/// The refactor of `sim::codesign` onto the scenario engine must reproduce
+/// the pre-scenario (PR 2) numbers BITWISE: here the original pipeline is
+/// spelled out with raw simulator calls and compared to `codesign_study`
+/// bit for bit, on a plain platform and on a PIM platform (where the
+/// ambient auto-offload baseline must also be preserved).
+#[test]
+fn codesign_refactor_reproduces_legacy_numbers_bitwise() {
+    let target = molmoact_7b();
+    let draft = scaled_vla(2.0);
+    let opt = SimOptions { decode_stride: 16, ..Default::default() };
+    for p in [platform::orin(), platform::thor_pim()] {
+        let decode_time = |cfg: &VlaConfig| -> f64 {
+            Simulator::with_options(p.clone(), opt.clone()).simulate_decode(cfg).time
+        };
+        let step_with = |decode: f64| -> f64 {
+            let r = Simulator::with_options(p.clone(), opt.clone()).simulate_vla(&target);
+            r.vision.time + r.prefill.time + decode + r.action.time
+        };
+        // the PR 2 codesign pipeline, inlined
+        let base_total = step_with(decode_time(&target));
+        let mut w8 = target.clone();
+        w8.decoder.dims.dtype = DType::I8;
+        let t_w8 = step_with(decode_time(&w8));
+        let t_kv = {
+            let full = decode_time(&target);
+            let mut short = target.clone();
+            short.shape.prompt_tokens /= 2;
+            short.shape.image_tokens /= 2;
+            step_with((full + decode_time(&short)) / 2.0)
+        };
+        let mut short_cot = target.clone();
+        short_cot.shape.decode_tokens /= 2;
+        let t_cot = step_with(decode_time(&short_cot));
+        let t_spec =
+            step_with(codesign::speculative_decode_time(&p, &opt, &target, &draft, 4, 0.7));
+        let mut combo = w8.clone();
+        combo.shape.decode_tokens /= 2;
+        let t_combo =
+            step_with(codesign::speculative_decode_time(&p, &opt, &combo, &draft, 4, 0.7));
+
+        let results = codesign::codesign_study(&p, &opt, &target, &draft);
+        let want = [base_total, t_w8, t_kv, t_cot, t_spec, t_combo];
+        assert_eq!(results.len(), want.len());
+        for (r, w) in results.iter().zip(want) {
+            assert_eq!(
+                r.step_latency.to_bits(),
+                w.to_bits(),
+                "{} on {}: {} vs {}",
+                r.technique,
+                p.name,
+                r.step_latency,
+                w
+            );
+            assert_eq!(r.speedup_vs_baseline.to_bits(), (base_total / w).to_bits());
+        }
+    }
+}
+
+/// `combined_matrix` row formatting over the scenario-backed study matches
+/// the same table built from the inlined legacy pipeline.
+#[test]
+fn combined_matrix_rows_match_legacy_format() {
+    let target = molmoact_7b();
+    let draft = scaled_vla(2.0);
+    let opt = SimOptions { decode_stride: 16, ..Default::default() };
+    let plats = [platform::orin(), platform::thor_pim()];
+    let t = codesign::combined_matrix(&plats, &opt, &target, &draft);
+    assert_eq!(t.n_rows(), plats.len());
+    for (i, p) in plats.iter().enumerate() {
+        let results = codesign::codesign_study(p, &opt, &target, &draft);
+        let base = &results[0];
+        let combo = results.last().unwrap();
+        assert_eq!(t.cell(i, 0), p.name);
+        assert_eq!(t.cell(i, 1), format!("{:.3}", base.amortized_hz));
+        assert_eq!(t.cell(i, 2), format!("{:.3}", combo.amortized_hz));
+        assert_eq!(t.cell(i, 3), format!("{:.2}x", combo.speedup_vs_baseline));
     }
 }
 

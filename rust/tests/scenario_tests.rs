@@ -1,0 +1,173 @@
+//! Scenario-matrix acceptance suite: validity rules, the closed-form
+//! matrix size, parallel==serial determinism over scenario evaluation,
+//! the speedup sanity bound, and the PIM-vs-SoC counterpart dominance the
+//! paper's co-design thesis predicts.
+
+use vla_char::hw::platform;
+use vla_char::model::molmoact::molmoact_7b;
+use vla_char::model::scaling::scaled_vla;
+use vla_char::sim::scenario::{
+    matrix_size, scenario_matrix, Evaluator, Lever, Scenario, SPEC_ALPHA, SPEC_GAMMA,
+};
+use vla_char::sim::{sweep, SimOptions};
+
+/// Scenario-engine options: ambient PIM off — exploiting PIM is a lever.
+fn opts() -> SimOptions {
+    SimOptions { decode_stride: 32, pim: false, ..Default::default() }
+}
+
+fn evaluator(p: &vla_char::hw::Platform) -> Evaluator {
+    Evaluator::new(p, &opts(), &molmoact_7b(), &scaled_vla(2.0))
+}
+
+#[test]
+fn matrix_size_matches_documented_closed_form() {
+    for p in platform::sweep_platforms() {
+        let m = scenario_matrix(&p);
+        assert_eq!(m.len(), matrix_size(&p), "{}: closed form diverged", p.name);
+        let expect = if p.mem.pim.is_some() { 72 } else { 24 };
+        assert_eq!(m.len(), expect, "{}", p.name);
+        for s in &m {
+            assert!(s.validate(&p).is_ok(), "{}: `{}` invalid", p.name, s.name);
+        }
+    }
+    // the acceptance floor: >= 24 valid scenarios on >= 3 PIM-capable platforms
+    let pim_capable = platform::pim_platforms();
+    assert!(pim_capable.len() >= 3);
+    for p in &pim_capable {
+        assert!(scenario_matrix(p).len() >= 24, "{}", p.name);
+    }
+}
+
+#[test]
+fn validity_rules_reject_impossible_combos() {
+    let orin = platform::orin();
+    // PIM levers on a non-PIM platform
+    for lever in [
+        Lever::PimWeightStream { bits: 8 },
+        Lever::PimKvAttention,
+        Lever::PimDraft { gamma: SPEC_GAMMA, alpha: SPEC_ALPHA },
+    ] {
+        let sc = Scenario::of(vec![lever]);
+        assert!(sc.validate(&orin).is_err(), "{} must need PIM", sc.name);
+        assert!(evaluator(&orin).eval(&sc).is_err());
+    }
+    // ...and the generated matrix never contains them
+    assert!(scenario_matrix(&orin).iter().all(|s| !s.requires_pim()));
+    // two levers of one group
+    let dup = Scenario::of(vec![
+        Lever::QuantizeWeights { bits: 8 },
+        Lever::QuantizeWeights { bits: 4 },
+    ]);
+    assert!(dup.validate(&orin).is_err());
+    // a PIM-resident draft claims the PIM units exclusively
+    let contended = Scenario::of(vec![
+        Lever::PimKvAttention,
+        Lever::PimDraft { gamma: SPEC_GAMMA, alpha: SPEC_ALPHA },
+    ]);
+    assert!(contended.validate(&platform::orin_pim()).is_err());
+}
+
+/// The scenario sweep must be a pure reordering of the serial path —
+/// bitwise, over every (scenario, platform) cell of a PIM platform.
+#[test]
+fn parallel_scenario_sweep_matches_serial_bitwise() {
+    let p = platform::orin_pim();
+    let ev = evaluator(&p);
+    let matrix = scenario_matrix(&p);
+    let eval = |sc: &Scenario| {
+        let r = ev.eval(sc).unwrap();
+        (
+            r.step_latency.to_bits(),
+            r.control_hz.to_bits(),
+            r.amortized_hz.to_bits(),
+            r.speedup_vs_baseline.to_bits(),
+            r.pim_util.to_bits(),
+        )
+    };
+    let serial = sweep::parallel_map_with(&matrix, 1, eval);
+    let parallel = sweep::parallel_map_with(&matrix, 8, eval);
+    assert_eq!(serial, parallel, "scenario evaluation must be deterministic under the pool");
+}
+
+/// No scenario may slow a step beyond its modeled lever overhead:
+/// speedup >= 1 / modeled_overhead() for every cell of the matrix.
+#[test]
+fn every_scenario_within_sanity_bound() {
+    for p in [platform::orin(), platform::thor_hbm4(), platform::orin_pim()] {
+        let ev = evaluator(&p);
+        for sc in scenario_matrix(&p) {
+            let r = ev.eval(&sc).unwrap();
+            let floor = 1.0 / sc.modeled_overhead();
+            assert!(
+                r.speedup_vs_baseline >= floor,
+                "{} on {}: speedup {} < floor {}",
+                sc.name,
+                p.name,
+                r.speedup_vs_baseline,
+                floor
+            );
+        }
+    }
+}
+
+/// The paper's co-design thesis, as dominance checks: on the LPDDR6X-PIM
+/// platforms (and the HBM4-PIM ceiling) each PIM lever must beat its SoC
+/// counterpart. The KV pair is compared at the weights-on-PIM operating
+/// point — with bf16 weights streaming off-chip, decode is weight-bound
+/// and KV placement cannot show.
+#[test]
+fn pim_levers_beat_soc_counterparts_on_pim_platforms() {
+    let spec = Lever::Speculate { gamma: SPEC_GAMMA, alpha: SPEC_ALPHA };
+    let pim_spec = Lever::PimDraft { gamma: SPEC_GAMMA, alpha: SPEC_ALPHA };
+    for p in platform::pim_platforms() {
+        let ev = evaluator(&p);
+        let hz = |levers: Vec<Lever>| ev.eval(&Scenario::of(levers)).unwrap().control_hz;
+        let pairs = [
+            (
+                "weight streaming",
+                hz(vec![Lever::PimWeightStream { bits: 8 }]),
+                hz(vec![Lever::QuantizeWeights { bits: 8 }]),
+            ),
+            (
+                "kv residency",
+                hz(vec![Lever::PimWeightStream { bits: 8 }, Lever::PimKvAttention]),
+                hz(vec![Lever::PimWeightStream { bits: 8 }, Lever::QuantizeKv]),
+            ),
+            ("draft on pim", hz(vec![pim_spec.clone()]), hz(vec![spec.clone()])),
+        ];
+        for (tag, pim_hz, soc_hz) in pairs {
+            assert!(pim_hz > soc_hz, "{}: {tag} PIM {pim_hz} Hz <= SoC {soc_hz} Hz", p.name);
+        }
+    }
+}
+
+/// W4 regression (the 4-bit arm used to silently equal bf16): through the
+/// scenario engine, W4 must halve the decode weight stream vs W8 and rank
+/// strictly ahead of it on a bandwidth-bound platform.
+#[test]
+fn w4_scenario_streams_half_of_w8() {
+    let ev = evaluator(&platform::orin());
+    let w8 = ev.eval(&Scenario::of(vec![Lever::QuantizeWeights { bits: 8 }])).unwrap();
+    let w4 = ev.eval(&Scenario::of(vec![Lever::QuantizeWeights { bits: 4 }])).unwrap();
+    assert!(w4.decode_time < w8.decode_time);
+    // decode is BW-bound on Orin: halving the stream lands near half the time
+    let ratio = w4.decode_time / w8.decode_time;
+    assert!((0.4..0.75).contains(&ratio), "W4/W8 decode ratio {ratio}");
+}
+
+/// Every scenario of the matrix reports a sane classification and a
+/// PIM utilization only when PIM levers are present.
+#[test]
+fn classification_and_pim_util_are_consistent() {
+    let p = platform::thor_pim();
+    let ev = evaluator(&p);
+    for sc in scenario_matrix(&p) {
+        let r = ev.eval(&sc).unwrap();
+        assert!((0.0..=1.0).contains(&r.pim_util), "{}: pim_util {}", sc.name, r.pim_util);
+        if !sc.requires_pim() {
+            assert_eq!(r.pim_util, 0.0, "{}: SoC scenario cannot use PIM", sc.name);
+        }
+        assert!(r.step_latency > 0.0 && r.control_hz > 0.0);
+    }
+}

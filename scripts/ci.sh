@@ -30,6 +30,10 @@ cargo clippy --workspace -- -D warnings
 echo "==> cargo bench --no-run (compile-only smoke)"
 cargo bench --no-run
 
+echo "==> vla-char pim smoke (ranked scenario matrix, top 10)"
+mkdir -p reports
+cargo run --release -- pim --top 10 | tee reports/pim_top10.txt
+
 if command -v pytest >/dev/null 2>&1 || python3 -c 'import pytest' >/dev/null 2>&1; then
     echo "==> python -m pytest python/tests -q (soft gate until L1/L2 artifacts land)"
     python3 -m pytest python/tests -q || echo "WARNING: python tests failed (soft gate)"
