@@ -1,10 +1,16 @@
 //! Bench E-A1..A3: ablation tables (prefetch, CoT length, horizon,
 //! framework overhead) — the design-choice studies DESIGN.md calls out.
 //! The four tables are independent grids, so they run as work items on the
-//! sweep pool, with the per-worker scaling summary line.
+//! sweep pool, with the per-worker scaling summary line. Phase 2 adds a
+//! scenario-grid scaling line: the γ×α lever grid evaluated on the PIM
+//! ceiling, the hot loop of the `pim` experiment.
 
+use vla_char::hw::platform;
+use vla_char::model::molmoact::molmoact_7b;
+use vla_char::model::scaling::scaled_vla;
 use vla_char::report::ablations;
-use vla_char::sim::sweep;
+use vla_char::sim::scenario::{scenario_matrix_grid, Evaluator, LeverGrid};
+use vla_char::sim::{sweep, SimOptions};
 
 fn main() {
     let kinds = ["prefetch", "cot", "horizon", "framework"];
@@ -17,4 +23,22 @@ fn main() {
     for t in &tables {
         println!("{}", t.to_markdown());
     }
+
+    // scenario-grid scaling: an expanded γ×α grid (plus trace and batch
+    // axes) on the HBM4-PIM ceiling, one eval per matrix cell
+    let p = platform::thor_hbm4_pim();
+    let grid = LeverGrid {
+        spec_gammas: vec![2, 4, 8],
+        spec_alphas: vec![0.5, 0.7, 0.9],
+        trace_factors: vec![0.5],
+        batch_streams: vec![8],
+    };
+    let options = SimOptions { decode_stride: 32, pim: false, ..Default::default() };
+    let ev = Evaluator::new(&p, &options, &molmoact_7b(), &scaled_vla(2.0));
+    let matrix = scenario_matrix_grid(&p, &grid);
+    let hz = sweep::bench_scaling("pim lever grid (γxα)", &matrix, |sc| {
+        ev.eval(sc).expect("grid scenarios are valid").control_hz
+    });
+    let best = hz.iter().cloned().fold(f64::MIN, f64::max);
+    println!("grid cells: {} | best control Hz {best:.3}", matrix.len());
 }

@@ -52,6 +52,19 @@ fn main() {
         black_box(Simulator::with_options(p.clone(), opts).simulate_vla(&cfg));
     });
 
+    // phase-2 grid scaling: the default `pim` lever grid (102 scenarios,
+    // latency + energy + capacity per eval) on one PIM platform
+    {
+        use vla_char::sim::scenario::{scenario_matrix_grid, Evaluator, LeverGrid};
+        let p = platform::thor_hbm4_pim();
+        let opts = SimOptions { decode_stride: 32, pim: false, ..Default::default() };
+        let ev = Evaluator::new(&p, &opts, &cfg, &scaled_vla(2.0));
+        let matrix = scenario_matrix_grid(&p, &LeverGrid::default_phase2());
+        sweep::bench_scaling("scenario grid eval (Thor+HBM4-PIM)", &matrix, |sc| {
+            black_box(ev.eval(sc).expect("grid scenarios are valid"));
+        });
+    }
+
     // ops/sec summary for the §Perf log
     let per_step = results[0].summary.mean;
     println!(

@@ -40,6 +40,10 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "platform", value_name: Some("NAME"), help: "focus platform (orin, thor, orin+pim, thor+hbm4-pim, ...)", default: Some("orin") },
         OptSpec { name: "sizes", value_name: Some("LIST"), help: "model sizes in B params for `project`", default: Some("2,7,14,30,70,100") },
         OptSpec { name: "pim-sizes", value_name: Some("LIST"), help: "model sizes in B params swept by `pim`", default: Some("7,30") },
+        OptSpec { name: "spec-grid", value_name: Some("GxA"), help: "speculation lever grid for `pim`: gammas x alphas (e.g. 2,4,8x0.5,0.7,0.9)", default: Some("4x0.7") },
+        OptSpec { name: "trace-factors", value_name: Some("LIST"), help: "trace-compression factors in the `pim` lever grid", default: Some("0.5") },
+        OptSpec { name: "pim-batches", value_name: Some("LIST"), help: "batched-stream values in the `pim` lever grid (`none` drops the axis)", default: Some("8") },
+        OptSpec { name: "pareto", value_name: None, help: "rank `pim` Pareto-front-first (Hz vs J/action) and emit the front table", default: None },
         OptSpec { name: "top", value_name: Some("N"), help: "rows printed from the ranked scenario matrix (`pim`; 0 = all)", default: Some("10") },
         OptSpec { name: "steps", value_name: Some("N"), help: "control-loop / validate steps", default: Some("20") },
         OptSpec { name: "decode-tokens", value_name: Some("N"), help: "override generated tokens per step (real engine)", default: None },

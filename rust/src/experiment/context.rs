@@ -5,8 +5,40 @@
 use crate::hw::{config_file, platform, Platform};
 use crate::model::scaling::{scaled_vla, ANCHOR_SIZES_B};
 use crate::model::VlaConfig;
+use crate::sim::scenario::{LeverGrid, BATCH_STREAMS, SPEC_ALPHA, SPEC_GAMMA, TRACE_FACTOR};
 use crate::sim::SimOptions;
 use crate::util::cli::Args;
+
+/// Parse a `--spec-grid` value: `G1,G2,..xA1,A2,..` — comma-separated
+/// speculation depths crossed with comma-separated acceptance rates, e.g.
+/// `2,4,8x0.5,0.7,0.9`. Both sides must be non-empty; rates must lie in
+/// (0, 1).
+pub fn parse_spec_grid(value: &str) -> anyhow::Result<(Vec<u64>, Vec<f64>)> {
+    let (g, a) = value.split_once('x').ok_or_else(|| {
+        anyhow::anyhow!(
+            "`--spec-grid` expects `GAMMAS x ALPHAS` (e.g. `2,4,8x0.5,0.7,0.9`), got `{value}`"
+        )
+    })?;
+    let mut gammas: Vec<u64> = Vec::new();
+    for x in g.split(',') {
+        let v = x.trim().parse::<u64>();
+        gammas.push(v.map_err(|_| anyhow::anyhow!("bad gamma `{x}` in `--spec-grid`"))?);
+    }
+    let mut alphas: Vec<f64> = Vec::new();
+    for x in a.split(',') {
+        let v = x.trim().parse::<f64>();
+        alphas.push(v.map_err(|_| anyhow::anyhow!("bad alpha `{x}` in `--spec-grid`"))?);
+    }
+    anyhow::ensure!(
+        !gammas.is_empty() && gammas.iter().all(|&g| g >= 1),
+        "`--spec-grid` gammas must be >= 1"
+    );
+    anyhow::ensure!(
+        !alphas.is_empty() && alphas.iter().all(|&a| 0.0 < a && a < 1.0),
+        "`--spec-grid` alphas must lie in (0, 1)"
+    );
+    Ok((gammas, alphas))
+}
 
 /// Resolved inputs for one experiment run.
 #[derive(Debug, Clone)]
@@ -29,6 +61,18 @@ pub struct ExpContext {
     pub batches: Vec<u64>,
     /// Model sizes (B params) the `pim` scenario matrix sweeps.
     pub pim_sizes: Vec<f64>,
+    /// Speculation depths of the `pim` lever grid (`--spec-grid`, left of
+    /// the `x`).
+    pub spec_gammas: Vec<u64>,
+    /// Draft acceptance rates of the `pim` lever grid (right of the `x`).
+    pub spec_alphas: Vec<f64>,
+    /// Trace-compression factors of the `pim` lever grid.
+    pub trace_factors: Vec<f64>,
+    /// Batched-stream values of the `pim` lever grid (empty = no batch
+    /// axis; `--pim-batches none`).
+    pub pim_batches: Vec<u64>,
+    /// `pim`: rank the matrix Pareto-front-first and emit the front table.
+    pub pareto: bool,
     /// Rows to print from the `pim` ranked matrix (0 = all).
     pub top: usize,
     /// Workload seed (engine-backed experiments).
@@ -86,6 +130,21 @@ impl ExpContext {
             None => scaled_vla(args.get_f64("size", 7.0)?),
         };
         let batch_sizes = args.get_f64_list("batches", &[1.0, 2.0, 4.0, 8.0, 16.0])?;
+        let (spec_gammas, spec_alphas) = match args.get("spec-grid") {
+            None => (vec![SPEC_GAMMA], vec![SPEC_ALPHA]),
+            Some(v) => parse_spec_grid(v)?,
+        };
+        let pim_batches: Vec<u64> = match args.get("pim-batches") {
+            Some("none") | Some("") => Vec::new(),
+            _ => {
+                let v = args.get_f64_list("pim-batches", &[BATCH_STREAMS as f64])?;
+                anyhow::ensure!(
+                    v.iter().all(|&b| b >= 1.0 && b.fract() == 0.0),
+                    "`--pim-batches` expects whole stream counts >= 1 (or `none`), got {v:?}"
+                );
+                v.into_iter().map(|b| b as u64).collect()
+            }
+        };
         Ok(ExpContext {
             options,
             platforms,
@@ -95,6 +154,11 @@ impl ExpContext {
             sizes: args.get_f64_list("sizes", &ANCHOR_SIZES_B)?,
             batches: batch_sizes.into_iter().map(|b| b as u64).collect(),
             pim_sizes: args.get_f64_list("pim-sizes", &[7.0, 30.0])?,
+            spec_gammas,
+            spec_alphas,
+            trace_factors: args.get_f64_list("trace-factors", &[TRACE_FACTOR])?,
+            pim_batches,
+            pareto: args.flag("pareto"),
             top: args.get_usize("top", 10)?,
             seed: args.get_usize("seed", 42)? as u64,
             steps: args.get_usize("steps", 20)? as u64,
@@ -112,6 +176,19 @@ impl ExpContext {
             custom_platforms,
         })
     }
+
+    /// The `pim` scenario matrix's lever grid, assembled from the resolved
+    /// γ/α, trace-factor, and batch-stream lists. With no grid flags this
+    /// is [`LeverGrid::default_phase2`] (the legacy points plus a b8 batch
+    /// value).
+    pub fn lever_grid(&self) -> LeverGrid {
+        LeverGrid {
+            spec_gammas: self.spec_gammas.clone(),
+            spec_alphas: self.spec_alphas.clone(),
+            trace_factors: self.trace_factors.clone(),
+            batch_streams: self.pim_batches.clone(),
+        }
+    }
 }
 
 impl Default for ExpContext {
@@ -127,6 +204,11 @@ impl Default for ExpContext {
             sizes: ANCHOR_SIZES_B.to_vec(),
             batches: vec![1, 2, 4, 8, 16],
             pim_sizes: vec![7.0, 30.0],
+            spec_gammas: vec![SPEC_GAMMA],
+            spec_alphas: vec![SPEC_ALPHA],
+            trace_factors: vec![TRACE_FACTOR],
+            pim_batches: vec![BATCH_STREAMS],
+            pareto: false,
             top: 10,
             seed: 42,
             steps: 20,
@@ -164,6 +246,10 @@ mod tests {
             OptSpec { name: "compiled", value_name: None, help: "", default: None },
             OptSpec { name: "trace", value_name: None, help: "", default: None },
             OptSpec { name: "amortized", value_name: None, help: "", default: None },
+            OptSpec { name: "spec-grid", value_name: Some("GxA"), help: "", default: None },
+            OptSpec { name: "trace-factors", value_name: Some("LIST"), help: "", default: None },
+            OptSpec { name: "pim-batches", value_name: Some("LIST"), help: "", default: None },
+            OptSpec { name: "pareto", value_name: None, help: "", default: None },
         ]
     }
 
@@ -212,5 +298,53 @@ mod tests {
         assert_eq!(ctx.target_hz, 10.0);
         assert_eq!(ctx.policy, "rr");
         assert!(ctx.decode_tokens.is_none());
+        // no grid flags -> the phase-2 default grid (legacy points + b8)
+        assert_eq!(ctx.lever_grid(), LeverGrid::default_phase2());
+        assert!(!ctx.pareto);
+    }
+
+    #[test]
+    fn spec_grid_flag_expands_the_lever_grid() {
+        let a = parse(&[
+            "pim",
+            "--spec-grid",
+            "2,4,8x0.5,0.7,0.9",
+            "--trace-factors",
+            "0.25,0.5",
+            "--pim-batches",
+            "4,16",
+            "--pareto",
+        ]);
+        let ctx = ExpContext::from_args(&a).unwrap();
+        assert_eq!(ctx.spec_gammas, vec![2, 4, 8]);
+        assert_eq!(ctx.spec_alphas, vec![0.5, 0.7, 0.9]);
+        assert_eq!(ctx.trace_factors, vec![0.25, 0.5]);
+        assert_eq!(ctx.pim_batches, vec![4, 16]);
+        assert!(ctx.pareto);
+        let grid = ctx.lever_grid();
+        assert_eq!(grid.spec_gammas, vec![2, 4, 8]);
+        assert_eq!(grid.batch_streams, vec![4, 16]);
+        // `none` drops the batch axis entirely
+        let b = parse(&["pim", "--pim-batches", "none"]);
+        assert!(ExpContext::from_args(&b).unwrap().pim_batches.is_empty());
+        // zero / negative / fractional stream counts are rejected
+        for bad in ["0", "-2", "4.5", "8,0"] {
+            let args = parse(&["pim", "--pim-batches", bad]);
+            assert!(ExpContext::from_args(&args).is_err(), "`{bad}` must be rejected");
+        }
+    }
+
+    #[test]
+    fn bad_spec_grids_rejected() {
+        assert!(parse_spec_grid("4x0.7").is_ok());
+        assert!(parse_spec_grid("2,4,8x0.5,0.7,0.9").is_ok());
+        assert!(parse_spec_grid("4").is_err(), "missing the alpha side");
+        assert!(parse_spec_grid("0x0.7").is_err(), "gamma must be >= 1");
+        assert!(parse_spec_grid("4x1.5").is_err(), "alpha must be < 1");
+        assert!(parse_spec_grid("4x0").is_err(), "alpha must be > 0");
+        assert!(parse_spec_grid("axb").is_err());
+        for bad in ["4x0.7,oops", "x0.7", "4x"] {
+            assert!(parse_spec_grid(bad).is_err(), "`{bad}` must be rejected");
+        }
     }
 }

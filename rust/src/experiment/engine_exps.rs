@@ -299,7 +299,7 @@ impl Experiment for Validate {
     }
 
     fn description(&self) -> &'static str {
-        "E-C6: calibrate the simulator against real measurements"
+        "E-C6: calibrate the simulator against real measurements over --steps steps (default 20)"
     }
 
     fn run(&self, ctx: &ExpContext) -> anyhow::Result<Report> {

@@ -10,8 +10,8 @@ use crate::profile::{top_ops, trace_table};
 use crate::report::checks::Check;
 use crate::report::{ablations, check_fig2, check_fig3, fig2, fig3};
 use crate::sim::scenario::{
-    matrix_size, scenario_matrix, Evaluator, Lever, Scenario, ScenarioResult, SPEC_ALPHA,
-    SPEC_GAMMA,
+    matrix_size_grid, pareto_front, scenario_matrix_grid, Evaluator, Lever, Scenario,
+    ScenarioResult,
 };
 use crate::sim::{codesign, energy, sweep};
 use crate::util::table::Table;
@@ -178,20 +178,25 @@ impl Experiment for Codesign {
     }
 }
 
-/// The PIM co-design scenario matrix: every valid lever stack on every
-/// platform at every `pim_sizes` scale, ranked by projected control-loop Hz.
+/// The PIM co-design scenario matrix: every valid lever stack at every
+/// [`LeverGrid`](crate::sim::scenario::LeverGrid) parameter point on every
+/// platform at every `pim_sizes` scale — ranked by projected control-loop
+/// Hz with capacity-valid rows first, J/action and avg-W columns from the
+/// energy model, and an energy-aware Hz-vs-J/action Pareto front
+/// (aggregate AND per-stream for the batched rows).
 pub struct PimScenarios;
 
 impl PimScenarios {
     /// The counterpart pairs the dominance check compares on each
-    /// PIM-capable platform. The KV pair is compared at the
+    /// PIM-capable platform, at the grid's FIRST γ/α point (always a matrix
+    /// member, whatever `--spec-grid` says). The KV pair is compared at the
     /// weights-on-PIM operating point: with bf16 weights streaming
     /// off-chip, decode is weight-bound and KV placement is invisible —
     /// KV residency only pays once the weight stream leaves the off-chip
     /// link, which is itself a finding the ranked matrix surfaces.
-    fn counterpart_pairs() -> [(&'static str, Vec<Lever>, Vec<Lever>); 3] {
-        let spec = Lever::Speculate { gamma: SPEC_GAMMA, alpha: SPEC_ALPHA };
-        let pim_spec = Lever::PimDraft { gamma: SPEC_GAMMA, alpha: SPEC_ALPHA };
+    fn counterpart_pairs(gamma: u64, alpha: f64) -> [(&'static str, Vec<Lever>, Vec<Lever>); 3] {
+        let spec = Lever::Speculate { gamma, alpha };
+        let pim_spec = Lever::PimDraft { gamma, alpha };
         [
             (
                 "weights",
@@ -206,6 +211,48 @@ impl PimScenarios {
             ("draft", vec![pim_spec], vec![spec]),
         ]
     }
+
+    /// One formatted row of the ranked matrix (the golden-report test pins
+    /// this exact layout through the `Table::from_csv` round-trip).
+    fn matrix_row(rank: usize, r: &ScenarioResult) -> Vec<String> {
+        vec![
+            format!("{rank}"),
+            r.platform.clone(),
+            r.model.clone(),
+            r.scenario.clone(),
+            format!("{:.2}", r.step_latency),
+            format!("{:.3}", r.control_hz),
+            format!("{:.3}", r.amortized_hz),
+            format!("{:.3}", r.aggregate_hz),
+            format!("{:.2}", r.j_per_action),
+            format!("{:.1}", r.avg_watts),
+            format!("{:.2}x", r.speedup_vs_baseline),
+            r.bound.label().to_string(),
+            format!("{:.0}%", 100.0 * r.pim_util),
+            format!("{:.1}", r.footprint_gb),
+            if r.fits_capacity { "yes".to_string() } else { "no".to_string() },
+        ]
+    }
+
+    /// Header of the ranked matrix (kept next to [`PimScenarios::matrix_row`]
+    /// so the two cannot drift apart).
+    const MATRIX_HEADERS: [&'static str; 15] = [
+        "#",
+        "Platform",
+        "model",
+        "scenario",
+        "step (s)",
+        "Hz",
+        "actions/s",
+        "agg act/s",
+        "J/action",
+        "avg W",
+        "speedup",
+        "bound",
+        "PIM util",
+        "mem GB",
+        "fits",
+    ];
 }
 
 impl Experiment for PimScenarios {
@@ -214,7 +261,7 @@ impl Experiment for PimScenarios {
     }
 
     fn description(&self) -> &'static str {
-        "PIM co-design scenario matrix ranked by projected control-loop Hz"
+        "PIM co-design scenario matrix: lever grids, capacity rules, energy-aware Pareto ranking"
     }
 
     fn run(&self, ctx: &ExpContext) -> anyhow::Result<Report> {
@@ -225,6 +272,7 @@ impl Experiment for PimScenarios {
         // off-chip path even on PIM-equipped platforms, so the ranked rows
         // show exactly what each residency buys.
         options.pim = false;
+        let grid = ctx.lever_grid();
 
         let mut cells: Vec<(Platform, f64)> = Vec::new();
         for &size in &ctx.pim_sizes {
@@ -236,7 +284,7 @@ impl Experiment for PimScenarios {
             sweep::parallel_map(&cells, |(p, size)| {
                 let model = scaled_vla(*size);
                 let ev = Evaluator::new(p, &options, &model, &ctx.draft);
-                scenario_matrix(p)
+                scenario_matrix_grid(p, &grid)
                     .into_iter()
                     .map(|sc| {
                         let r = ev.eval(&sc).expect("matrix scenarios are valid");
@@ -247,43 +295,60 @@ impl Experiment for PimScenarios {
         let mut ranked: Vec<(f64, Scenario, ScenarioResult)> =
             per_cell.into_iter().flatten().collect();
         let n_total = ranked.len();
-        ranked.sort_by(|a, b| b.2.control_hz.partial_cmp(&a.2.control_hz).unwrap());
         anyhow::ensure!(n_total > 0, "empty scenario sweep (no platforms or sizes)");
+        // capacity-valid rows first, control-loop Hz within each class —
+        // over-capacity rows sink to the bottom but are REPORTED, not
+        // dropped (check S4 pins the no-silent-drop invariant)
+        ranked.sort_by(|a, b| {
+            b.2.fits_capacity
+                .cmp(&a.2.fits_capacity)
+                .then(b.2.control_hz.partial_cmp(&a.2.control_hz).unwrap())
+        });
+        let n_valid = ranked.iter().filter(|c| c.2.fits_capacity).count();
+        let n_invalid = n_total - n_valid;
+
+        // energy-aware Pareto fronts over the capacity-valid rows: Hz up,
+        // J/action down — per-stream and (for the batched rows) aggregate
+        let valid_idx: Vec<usize> =
+            (0..ranked.len()).filter(|&i| ranked[i].2.fits_capacity).collect();
+        let ps_points: Vec<(f64, f64)> = valid_idx
+            .iter()
+            .map(|&i| (ranked[i].2.control_hz, ranked[i].2.j_per_action))
+            .collect();
+        let agg_points: Vec<(f64, f64)> = valid_idx
+            .iter()
+            .map(|&i| (ranked[i].2.aggregate_hz, ranked[i].2.j_per_action))
+            .collect();
+        let front_ps: Vec<usize> =
+            pareto_front(&ps_points).into_iter().map(|k| valid_idx[k]).collect();
+        let front_agg: Vec<usize> =
+            pareto_front(&agg_points).into_iter().map(|k| valid_idx[k]).collect();
+        let on_front = |i: usize| front_ps.contains(&i) || front_agg.contains(&i);
+
+        // --pareto replaces the single-key ranking: front members first
+        // (Hz-ordered within each class), dominated rows after
+        let order: Vec<usize> = if ctx.pareto {
+            let (front, rest): (Vec<usize>, Vec<usize>) =
+                (0..ranked.len()).partition(|&i| on_front(i));
+            front.into_iter().chain(rest).collect()
+        } else {
+            (0..ranked.len()).collect()
+        };
 
         let mut rep = Report::new(self.name());
         let top = if ctx.top == 0 { n_total } else { ctx.top.min(n_total) };
+        let ranking = if ctx.pareto {
+            "Pareto-front-first (Hz vs J/action), then projected control-loop Hz"
+        } else {
+            "projected control-loop Hz, capacity-valid rows first"
+        };
         let mut t = Table::new(
-            &format!(
-                "PIM co-design scenario matrix (top {top} of {n_total}, ranked by projected \
-                 control-loop Hz)"
-            ),
-            &[
-                "#",
-                "Platform",
-                "model",
-                "scenario",
-                "step (s)",
-                "Hz",
-                "actions/s",
-                "speedup",
-                "bound",
-                "PIM util",
-            ],
+            &format!("PIM co-design scenario matrix (top {top} of {n_total}, ranked by {ranking})"),
+            &Self::MATRIX_HEADERS,
         )
         .left_first();
-        for (i, (_, _, r)) in ranked.iter().take(top).enumerate() {
-            t.row(vec![
-                format!("{}", i + 1),
-                r.platform.clone(),
-                r.model.clone(),
-                r.scenario.clone(),
-                format!("{:.2}", r.step_latency),
-                format!("{:.3}", r.control_hz),
-                format!("{:.3}", r.amortized_hz),
-                format!("{:.2}x", r.speedup_vs_baseline),
-                r.bound.label().to_string(),
-                format!("{:.0}%", 100.0 * r.pim_util),
-            ]);
+        for (rank, &i) in order.iter().take(top).enumerate() {
+            t.row(Self::matrix_row(rank + 1, &ranked[i].2));
         }
         rep.push_table("pim_matrix", t);
         if top < n_total {
@@ -292,7 +357,71 @@ impl Experiment for PimScenarios {
             ));
         }
 
-        let (best_size, best_sc, best) = ranked[0].clone();
+        // the Pareto front is always computed (and checked); the dedicated
+        // table is emitted on --pareto
+        rep.note(format!(
+            "Pareto front (per-stream): {} of {n_valid} valid scenarios; (aggregate): {}",
+            front_ps.len(),
+            front_agg.len()
+        ));
+        rep.metric("pareto_front_size", front_ps.len() as f64);
+        if ctx.pareto {
+            let headers = [
+                "#", "front", "Platform", "model", "scenario", "Hz", "agg act/s", "J/action",
+                "avg W",
+            ];
+            let mut pt = Table::new(
+                "Energy-aware Pareto front (Hz vs J/action; capacity-valid rows)",
+                &headers,
+            )
+            .left_first();
+            let mut members: Vec<usize> = (0..ranked.len()).filter(|&i| on_front(i)).collect();
+            members.sort_by(|&a, &b| {
+                ranked[b].2.control_hz.partial_cmp(&ranked[a].2.control_hz).unwrap()
+            });
+            for (rank, &i) in members.iter().enumerate() {
+                let r = &ranked[i].2;
+                let tag = match (front_ps.contains(&i), front_agg.contains(&i)) {
+                    (true, true) => "both",
+                    (true, false) => "per-stream",
+                    _ => "aggregate",
+                };
+                pt.row(vec![
+                    format!("{}", rank + 1),
+                    tag.to_string(),
+                    r.platform.clone(),
+                    r.model.clone(),
+                    r.scenario.clone(),
+                    format!("{:.3}", r.control_hz),
+                    format!("{:.3}", r.aggregate_hz),
+                    format!("{:.2}", r.j_per_action),
+                    format!("{:.1}", r.avg_watts),
+                ]);
+            }
+            rep.push_table("pim_pareto", pt);
+        }
+
+        // capacity-invalid rows, reported in full (never silently dropped)
+        if n_invalid > 0 {
+            let mut ct = Table::new(
+                "Capacity-invalid scenarios (lowered weights + KV exceed device memory)",
+                &["Platform", "model", "scenario", "mem GB", "capacity GB"],
+            )
+            .left_first();
+            for (_, _, r) in ranked.iter().filter(|c| !c.2.fits_capacity) {
+                ct.row(vec![
+                    r.platform.clone(),
+                    r.model.clone(),
+                    r.scenario.clone(),
+                    format!("{:.1}", r.footprint_gb),
+                    format!("{:.0}", r.capacity_gb),
+                ]);
+            }
+            rep.push_table("pim_capacity", ct);
+        }
+        rep.metric("capacity_invalid", n_invalid as f64);
+
+        let (best_size, best_sc, best) = ranked[order[0]].clone();
         rep.note(format!(
             "evaluated {n_total} scenarios across {} platforms x {:?}B; best: `{}` on {} \
              ({}) — {:.2} Hz, {:.2} actions/s ({:.1}x over its SoC baseline)",
@@ -345,7 +474,7 @@ impl Experiment for PimScenarios {
             return Ok(rep);
         }
 
-        // S1: the enumerated matrix matches its closed form on every
+        // S1: the enumerated grid matrix matches its closed form on every
         // platform, and the sweep offers enough PIM-capable hardware for
         // the residency levers to be meaningfully compared
         let pim_count = ctx.platforms.iter().filter(|p| p.mem.pim.is_some()).count();
@@ -353,14 +482,14 @@ impl Experiment for PimScenarios {
             .platforms
             .iter()
             .filter_map(|p| {
-                let n = scenario_matrix(p).len();
-                let want = matrix_size(p);
+                let n = scenario_matrix_grid(p, &grid).len();
+                let want = matrix_size_grid(p, &grid);
                 (n != want).then(|| format!("{} ({n} != {want})", p.name))
             })
             .collect();
         rep.checks.push(Check {
             id: "S1-matrix-closed-form",
-            claim: "scenario matrix matches its closed form; >= 3 PIM-capable platforms swept",
+            claim: "grid scenario matrix matches its closed form; >= 3 PIM-capable platforms swept",
             passed: mismatched.is_empty() && pim_count >= 3,
             detail: if mismatched.is_empty() {
                 format!("{} platforms, {pim_count} PIM-capable", ctx.platforms.len())
@@ -370,29 +499,35 @@ impl Experiment for PimScenarios {
         });
 
         // S2: each PIM lever beats its SoC counterpart on every PIM
-        // platform. Every counterpart scenario is a matrix member, so the
-        // comparison is a lookup into the sweep that already ran — nothing
-        // is re-simulated.
+        // platform, at the grid's first γ/α point. Every counterpart
+        // scenario is a matrix member, so the comparison is a lookup into
+        // the sweep that already ran — nothing is re-simulated.
         let focus = ctx.pim_sizes.first().copied().unwrap_or(7.0);
+        let gamma0 = grid.spec_gammas.first().copied();
+        let alpha0 = grid.spec_alphas.first().copied();
         let mut all_beat = true;
         let mut details = Vec::new();
-        for p in ctx.platforms.iter().filter(|p| p.mem.pim.is_some()) {
-            let hz = |levers: Vec<Lever>| -> anyhow::Result<f64> {
-                let name = Scenario::of(levers).name;
-                ranked
-                    .iter()
-                    .find(|(s, sc, r)| *s == focus && r.platform == p.name && sc.name == name)
-                    .map(|(_, _, r)| r.control_hz)
-                    .ok_or_else(|| anyhow::anyhow!("`{name}` missing from the scenario matrix"))
-            };
-            for (tag, pim_levers, soc_levers) in Self::counterpart_pairs() {
-                let pim_hz = hz(pim_levers)?;
-                let soc_hz = hz(soc_levers)?;
-                if pim_hz <= soc_hz {
-                    all_beat = false;
+        if let (Some(g0), Some(a0)) = (gamma0, alpha0) {
+            for p in ctx.platforms.iter().filter(|p| p.mem.pim.is_some()) {
+                let hz = |levers: Vec<Lever>| -> anyhow::Result<f64> {
+                    let name = Scenario::of(levers).name;
+                    ranked
+                        .iter()
+                        .find(|(s, sc, r)| *s == focus && r.platform == p.name && sc.name == name)
+                        .map(|(_, _, r)| r.control_hz)
+                        .ok_or_else(|| anyhow::anyhow!("`{name}` missing from the scenario matrix"))
+                };
+                for (tag, pim_levers, soc_levers) in Self::counterpart_pairs(g0, a0) {
+                    let pim_hz = hz(pim_levers)?;
+                    let soc_hz = hz(soc_levers)?;
+                    if pim_hz <= soc_hz {
+                        all_beat = false;
+                    }
+                    details.push(format!("{}/{tag} {:.2}x", p.name, pim_hz / soc_hz));
                 }
-                details.push(format!("{}/{tag} {:.2}x", p.name, pim_hz / soc_hz));
             }
+        } else {
+            details.push("no speculation points in the grid".to_string());
         }
         rep.checks.push(Check {
             id: "S2-pim-beats-soc",
@@ -411,6 +546,40 @@ impl Experiment for PimScenarios {
             claim: "every scenario's speedup >= 1/(modeled lever overhead)",
             passed: worst >= 1.0,
             detail: format!("worst speedup x overhead-bound = {worst:.3} (>= 1 required)"),
+        });
+
+        // S4: capacity rules report, never drop — every enumerated cell of
+        // every (platform, size) pair is present in the ranked output, the
+        // over-capacity ones flagged invalid
+        let per_platform: usize = ctx.platforms.iter().map(|p| matrix_size_grid(p, &grid)).sum();
+        let expect_total = per_platform * ctx.pim_sizes.len();
+        rep.checks.push(Check {
+            id: "S4-no-silent-drops",
+            claim: "capacity-invalid scenarios are reported, not dropped from the matrix",
+            passed: n_total == expect_total,
+            detail: format!("{n_total}/{expect_total} rows present, {n_invalid} flagged invalid"),
+        });
+
+        // S5: the energy-aware front is sane — non-empty whenever any row
+        // fits, and mutually non-dominated by construction (re-verified)
+        let mut front_ok = n_valid == 0 || !front_ps.is_empty();
+        for &i in &front_ps {
+            for &j in &front_ps {
+                let (a, b) = (&ranked[i].2, &ranked[j].2);
+                if i != j
+                    && a.control_hz >= b.control_hz
+                    && a.j_per_action <= b.j_per_action
+                    && (a.control_hz > b.control_hz || a.j_per_action < b.j_per_action)
+                {
+                    front_ok = false;
+                }
+            }
+        }
+        rep.checks.push(Check {
+            id: "S5-pareto-front",
+            claim: "Pareto-front members are mutually non-dominated (Hz vs J/action)",
+            passed: front_ok,
+            detail: format!("{} front members over {n_valid} valid rows", front_ps.len()),
         });
 
         Ok(rep)

@@ -54,10 +54,16 @@ pub fn platform_from_json(text: &str) -> anyhow::Result<Platform> {
         }),
         _ => None,
     };
+    let capacity_gb = m.req_f64("capacity_gb")?;
+    anyhow::ensure!(
+        capacity_gb > 0.0,
+        "`mem.capacity_gb` must be positive (the scenario engine's capacity-validity \
+         rules need a real memory budget), got {capacity_gb}"
+    );
     let mem = MemDevice {
         name: m.req_str("name")?.to_string(),
         peak_bw: m.req_f64("bw_gbs")? * GB,
-        capacity: m.req_f64("capacity_gb")? * GB,
+        capacity: capacity_gb * GB,
         stream_efficiency: m.get("stream_efficiency").and_then(|v| v.as_f64()).unwrap_or(0.8),
         pim,
     };
@@ -263,6 +269,22 @@ mod tests {
     fn missing_fields_rejected() {
         assert!(platform_from_json("{}").is_err());
         assert!(platform_from_json(r#"{"name": "x", "soc": {}, "mem": {}}"#).is_err());
+    }
+
+    #[test]
+    fn non_positive_capacity_rejected() {
+        let text = |gb: f64| {
+            format!(
+                r#"{{"name": "EdgeX",
+                    "soc": {{"sms": 32, "clock_ghz": 1.5, "tflops_bf16": 250,
+                            "tflops_f32": 15, "smem_kib": 192, "l2_mib": 8,
+                            "l2_bw_gbs": 4000}},
+                    "mem": {{"name": "HBM3", "bw_gbs": 800, "capacity_gb": {gb}}}}}"#
+            )
+        };
+        assert!(platform_from_json(&text(0.0)).is_err());
+        assert!(platform_from_json(&text(-4.0)).is_err());
+        assert!(platform_from_json(&text(48.0)).is_ok());
     }
 
     #[test]

@@ -53,6 +53,14 @@ impl MemDevice {
         self.peak_bw * self.stream_efficiency
     }
 
+    /// Capacity in GB — the `capacity_gb` knob of the platform-JSON schema
+    /// and the budget the scenario engine's capacity-validity rule checks
+    /// lowered model + KV footprints against. Every registry platform
+    /// populates it through its constructor (`lpddr5(64.0)` is 64 GB).
+    pub fn capacity_gb(&self) -> f64 {
+        self.capacity / GB
+    }
+
     pub fn lpddr5(capacity_gb: f64) -> MemDevice {
         MemDevice {
             name: "LPDDR5".into(),
@@ -167,6 +175,13 @@ mod tests {
         let pim = MemDevice::lpddr6x_pim(64.0, 974.0);
         assert_eq!(pim.pim.as_ref().unwrap().internal_bw, 2180.0 * GB);
         assert!(pim.peak_bw < pim.pim.as_ref().unwrap().internal_bw);
+    }
+
+    #[test]
+    fn capacity_round_trips_through_gb() {
+        assert_eq!(MemDevice::lpddr5(64.0).capacity_gb(), 64.0);
+        assert_eq!(MemDevice::hbm3(24.0).capacity_gb(), 24.0);
+        assert_eq!(MemDevice::hbm4_pim(36.0, 4000.0).capacity_gb(), 36.0);
     }
 
     #[test]

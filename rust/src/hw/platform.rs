@@ -299,6 +299,31 @@ mod tests {
     }
 
     #[test]
+    fn every_sweep_platform_has_a_populated_capacity() {
+        // the scenario engine's capacity-validity rule needs a real budget
+        // on all 10 platforms: the commercial parts at their shipped
+        // capacities, HBM stacks at the single-stack ceiling
+        let expect = [
+            ("Orin", 64.0),
+            ("Thor", 128.0),
+            ("Orin+LPDDR5X", 64.0),
+            ("Orin+GDDR7", 64.0),
+            ("Orin+PIM", 64.0),
+            ("Thor+GDDR7", 128.0),
+            ("Thor+PIM", 128.0),
+            ("Orin+HBM3", 24.0),
+            ("Thor+HBM4", 36.0),
+            ("Thor+HBM4-PIM", 36.0),
+        ];
+        let sweep = sweep_platforms();
+        assert_eq!(sweep.len(), expect.len());
+        for (p, (name, gb)) in sweep.iter().zip(expect.iter()) {
+            assert_eq!(&p.name, name);
+            assert!((p.mem.capacity_gb() - gb).abs() < 1e-9, "{name}: {}", p.mem.capacity_gb());
+        }
+    }
+
+    #[test]
     fn pim_subset_has_three_capable_platforms() {
         let pims = pim_platforms();
         assert!(pims.len() >= 3, "the scenario matrix needs >= 3 PIM-capable platforms");

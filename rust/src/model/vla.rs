@@ -107,13 +107,36 @@ pub struct VlaConfig {
 }
 
 impl VlaConfig {
+    /// Projector MLP parameter count (concatenated tower features →
+    /// projector hidden → decoder hidden) — the single source shared by
+    /// [`params`](VlaConfig::params) and
+    /// [`weight_footprint_bytes`](VlaConfig::weight_footprint_bytes), so
+    /// the capacity rule cannot drift from the canonical count.
+    pub fn projector_params(&self) -> f64 {
+        self.towers.iter().map(|t| t.dims.hidden).sum::<u64>() as f64
+            * self.projector_hidden as f64
+            + self.projector_hidden as f64 * self.decoder.dims.hidden as f64
+    }
+
     /// Total parameter count (all subsystems).
     pub fn params(&self) -> f64 {
         let vis: f64 = self.towers.iter().map(|t| t.params()).sum();
-        let proj = self.towers.iter().map(|t| t.dims.hidden).sum::<u64>() as f64
-            * self.projector_hidden as f64
-            + self.projector_hidden as f64 * self.decoder.dims.hidden as f64;
-        vis + proj + self.decoder.params() + self.action.params()
+        vis + self.projector_params() + self.decoder.params() + self.action.params()
+    }
+
+    /// Resident weight bytes of the WHOLE model at its configured storage
+    /// widths: vision towers and the action expert at their own dtypes, the
+    /// projector and decoder (blocks + embeddings + lm head) at the decoder
+    /// dtype times `weight_scale` (W4 packs nibbles into I8 storage). This
+    /// is the weights term of the scenario engine's capacity-validity rule
+    /// — what must FIT in device memory, as opposed to
+    /// [`decoder_weight_bytes`](VlaConfig::decoder_weight_bytes), which is
+    /// what decode STREAMS per token.
+    pub fn weight_footprint_bytes(&self) -> f64 {
+        let vis: f64 = self.towers.iter().map(|t| t.params() * t.dims.dtype.bytes()).sum();
+        let dec_bytes = self.decoder.dims.dtype.bytes() * self.decoder.weight_scale;
+        let act = self.action.params() * self.action.dims.dtype.bytes();
+        vis + self.projector_params() * dec_bytes + self.decoder.params() * dec_bytes + act
     }
 
     /// Model bytes at the decoder dtype (what decode streams per token).
@@ -515,6 +538,32 @@ mod tests {
             assert_eq!(half.total_flops().to_bits(), full.total_flops().to_bits());
         }
         assert!((packed.decoder_weight_bytes() / base.decoder_weight_bytes() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weight_footprint_tracks_params_and_quantization() {
+        let c = tiny_test_config();
+        // everything is bf16 at the default config: footprint == 2 * params
+        let full = c.weight_footprint_bytes();
+        assert!((full / (2.0 * c.params()) - 1.0).abs() < 1e-9, "bf16 footprint = 2B/param");
+        // W8 shrinks only the projector+decoder share; W4 halves it again
+        let mut w8 = c.clone();
+        w8.decoder.dims.dtype = crate::hw::DType::I8;
+        let mut w4 = w8.clone();
+        w4.decoder.weight_scale = 0.5;
+        assert!(w8.weight_footprint_bytes() < full);
+        assert!(w4.weight_footprint_bytes() < w8.weight_footprint_bytes());
+        // W8 drops exactly one byte per decoder+projector parameter
+        let proj = {
+            let cat = c.towers.iter().map(|t| t.dims.hidden).sum::<u64>() as f64;
+            cat * c.projector_hidden as f64
+                + c.projector_hidden as f64 * c.decoder.dims.hidden as f64
+        };
+        let expect_drop = c.decoder.params() + proj;
+        assert!(
+            ((full - w8.weight_footprint_bytes()) / expect_drop - 1.0).abs() < 1e-9,
+            "W8 must drop exactly one byte per decoder+projector param"
+        );
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! of Table 1. PIM's energy win (no off-chip movement for offloaded ops) is
 //! a first-class result in the HBM/LPDDR-PIM literature the paper cites [3].
 
-use super::roofline::{Engine, OpCost};
+use super::roofline::{Engine, OpCost, PimScope};
 use super::simulator::{SimOptions, Simulator, VlaSimResult};
 use crate::hw::Platform;
 use crate::model::{Stage, VlaConfig};
@@ -99,6 +99,42 @@ impl EnergyResult {
     }
 }
 
+/// Dynamic energy of one stage under `scope` (J). Op placement matches what
+/// the simulator's latency path chooses for the same scope, forced PIM
+/// residency included — the single energy-accounting primitive shared by
+/// [`simulate_energy`] and the scenario
+/// [`Evaluator`](super::scenario::Evaluator).
+pub fn stage_dynamic_energy(platform: &Platform, scope: PimScope, stage: &Stage) -> f64 {
+    let em = EnergyModel::for_platform(platform);
+    stage
+        .ops
+        .iter()
+        .map(|op| em.op_energy(&super::roofline::cost_op_scoped(platform, op, scope)))
+        .sum()
+}
+
+/// Dynamic energy of the full decode phase (J): the same strided
+/// KV-position integration as the latency path, on patched stages (the
+/// KV-dependent ops are rebuilt in place per position — identical operator
+/// costs to a fresh build, without the per-position stage allocation).
+pub fn decode_dynamic_energy(platform: &Platform, options: &SimOptions, config: &VlaConfig) -> f64 {
+    let scope = options.effective_pim_scope();
+    let stride = options.decode_stride.max(1);
+    let start = config.shape.prefill_len();
+    let n = config.shape.decode_tokens;
+    let mut stage = config.decode_stage_at(start);
+    let mut decode_j = 0.0;
+    let mut sampled = 0u64;
+    let mut pos = 0u64;
+    while pos < n {
+        config.patch_decode_stage_kv(&mut stage, start + pos);
+        decode_j += stage_dynamic_energy(platform, scope, &stage);
+        sampled += 1;
+        pos += stride;
+    }
+    decode_j * n as f64 / sampled as f64
+}
+
 /// Simulate latency AND energy for a full VLA step.
 pub fn simulate_energy(
     platform: &Platform,
@@ -107,35 +143,13 @@ pub fn simulate_energy(
 ) -> (VlaSimResult, EnergyResult) {
     let sim = Simulator::with_options(platform.clone(), options.clone());
     let em = EnergyModel::for_platform(platform);
-
-    // op placement must match what the simulator's latency path chooses,
-    // scoped PIM residency included
     let scope = options.effective_pim_scope();
-    let stage_energy = |stage: &Stage| -> f64 {
-        stage
-            .ops
-            .iter()
-            .map(|op| em.op_energy(&super::roofline::cost_op_scoped(platform, op, scope)))
-            .sum()
-    };
 
     let latency = sim.simulate_vla(config);
-    let vision_j = stage_energy(&config.vision_stage());
-    let prefill_j = stage_energy(&config.prefill_stage());
-    // decode: integrate over sampled positions like the latency path
-    let stride = options.decode_stride.max(1);
-    let start = config.shape.prefill_len();
-    let n = config.shape.decode_tokens;
-    let mut decode_j = 0.0;
-    let mut sampled = 0u64;
-    let mut pos = 0u64;
-    while pos < n {
-        decode_j += stage_energy(&config.decode_stage_at(start + pos));
-        sampled += 1;
-        pos += stride;
-    }
-    decode_j *= n as f64 / sampled as f64;
-    let action_j = stage_energy(&config.action_stage());
+    let vision_j = stage_dynamic_energy(platform, scope, &config.vision_stage());
+    let prefill_j = stage_dynamic_energy(platform, scope, &config.prefill_stage());
+    let decode_j = decode_dynamic_energy(platform, options, config);
+    let action_j = stage_dynamic_energy(platform, scope, &config.action_stage());
 
     let energy = EnergyResult {
         platform: platform.name.clone(),
@@ -244,6 +258,29 @@ mod tests {
         let h4 = EnergyModel::for_platform(&platform::thor_hbm4());
         assert!(h3.pj_per_dram_byte < a.pj_per_dram_byte);
         assert!(h4.pj_per_dram_byte < h3.pj_per_dram_byte);
+    }
+
+    #[test]
+    fn decode_energy_patch_matches_fresh_build() {
+        // the patched-stage integration must be BITWISE the fresh-build
+        // integration (patch_decode_stage_kv rebuilds identical op costs)
+        use crate::model::vla::tiny_test_config;
+        let cfg = tiny_test_config();
+        let p = platform::orin_pim();
+        let o = SimOptions { decode_stride: 3, ..Default::default() };
+        let fast = decode_dynamic_energy(&p, &o, &cfg);
+        let scope = o.effective_pim_scope();
+        let start = cfg.shape.prefill_len();
+        let mut j = 0.0;
+        let mut sampled = 0u64;
+        let mut pos = 0u64;
+        while pos < cfg.shape.decode_tokens {
+            j += stage_dynamic_energy(&p, scope, &cfg.decode_stage_at(start + pos));
+            sampled += 1;
+            pos += 3;
+        }
+        let want = j * cfg.shape.decode_tokens as f64 / sampled as f64;
+        assert_eq!(fast.to_bits(), want.to_bits());
     }
 
     #[test]

@@ -13,6 +13,16 @@ use crate::hw::{DType, Platform};
 use crate::model::vla::VlaConfig;
 use crate::sim::simulator::SimOptions;
 
+/// Expected accepted tokens per speculation round:
+/// `E = (1 - alpha^(gamma+1)) / (1 - alpha)`. The single source of the
+/// acceptance expectation — the evaluator's round count and the lever's
+/// modeled-overhead bound must agree on it, or the S3 sanity invariant
+/// (`speedup >= 1/overhead`) drifts when the γ/α grid moves off the
+/// canonical point.
+pub(crate) fn expected_accepted(gamma: u64, alpha: f64) -> f64 {
+    (1.0 - alpha.powi(gamma as i32 + 1)) / (1.0 - alpha).max(1e-9)
+}
+
 /// Scale the decoder's weight storage to a narrower width (activations and
 /// KV keep their dtype semantics — W8A16-style inference). W8 swaps the
 /// decoder dtype to I8; W4 has no native datatype in the cost model, so it
@@ -113,14 +123,20 @@ impl Lever {
     /// slow a step down in the worst case (the `speedup >= 1/overhead`
     /// sanity invariant). Quantization/compression/residency never add
     /// modeled cost (1.02 covers approximation slack); speculation can lose
-    /// up to the mis-speculated draft work — bounded by 2x at our
-    /// gamma/draft scale (γ·t_draft ≤ t_verify on every modeled platform);
-    /// lockstep batching multiplies per-stream KV/activation traffic, so
-    /// per-stream latency is bounded by `streams`x the single-stream step
-    /// (weights are read once, everything else scales at worst linearly).
+    /// up to the mis-speculated draft work — per round at most `gamma`
+    /// draft steps (each ≤ one target step: the draft is the smaller model)
+    /// plus one batched verify pass (≤ 2 target steps), amortized over the
+    /// `E(gamma, alpha)` tokens a round is expected to accept, so the bound
+    /// is `(gamma + 2) / E`, floored at 1 — parametric, because the phase-2
+    /// γ/α grids leave the canonical `(4, 0.7)` operating point; lockstep
+    /// batching multiplies per-stream KV/activation traffic, so per-stream
+    /// latency is bounded by `streams`x the single-stream step (weights are
+    /// read once, everything else scales at worst linearly).
     pub fn modeled_overhead(&self) -> f64 {
         match self {
-            Lever::Speculate { .. } | Lever::PimDraft { .. } => 2.0,
+            Lever::Speculate { gamma, alpha } | Lever::PimDraft { gamma, alpha } => {
+                ((*gamma as f64 + 2.0) / expected_accepted(*gamma, *alpha)).max(1.0)
+            }
             Lever::Batch { streams } => (*streams).max(1) as f64,
             _ => 1.02,
         }
@@ -190,6 +206,25 @@ mod tests {
         let mut t = tiny_test_config();
         Lever::CompressTrace { factor: 0.5 }.apply_config(&mut t);
         assert_eq!(t.shape.decode_tokens, tiny_test_config().shape.decode_tokens / 2);
+    }
+
+    #[test]
+    fn spec_overhead_tracks_the_acceptance_expectation() {
+        // canonical point: (4 + 2) / E(4, 0.7) ~ 2.17
+        let e = expected_accepted(4, 0.7);
+        let spec = Lever::Speculate { gamma: 4, alpha: 0.7 };
+        assert!((spec.modeled_overhead() - 6.0 / e).abs() < 1e-12);
+        assert_eq!(
+            spec.modeled_overhead(),
+            Lever::PimDraft { gamma: 4, alpha: 0.7 }.modeled_overhead()
+        );
+        // a hostile grid point (deep draft, low acceptance) loosens the
+        // bound instead of silently violating the S3 invariant
+        let hostile = Lever::Speculate { gamma: 8, alpha: 0.3 };
+        assert!(hostile.modeled_overhead() > 5.0);
+        // near-perfect acceptance floors at 1 (speculation can only help)
+        let ideal = Lever::Speculate { gamma: 2, alpha: 0.99 };
+        assert!((1.0..1.5).contains(&ideal.modeled_overhead()));
     }
 
     #[test]

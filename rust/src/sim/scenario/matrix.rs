@@ -1,25 +1,34 @@
 //! The scenario matrix: cartesian product of the lever axes under the
-//! validity rules.
+//! validity rules, parameterized by a [`LeverGrid`] since phase 2.
 //!
-//! Axes (canonical parameter points):
+//! Axes (values at a grid `g`, canonical defaults in parentheses):
 //!
-//! | axis   | values                                          |
-//! |--------|-------------------------------------------------|
-//! | weight | — · W8 · W4 · W8@PIM · W4@PIM                   |
-//! | kv     | — · KV8 · KV@PIM                                |
-//! | trace  | — · 0.5x                                        |
-//! | spec   | — · spec(4, 0.7) · spec@PIM(4, 0.7)             |
+//! | axis       | values                                                    |
+//! |------------|-----------------------------------------------------------|
+//! | weight     | — · W8 · W4 · W8@PIM · W4@PIM                             |
+//! | kv         | — · KV8 · KV@PIM                                          |
+//! | trace      | — · one per `g.trace_factors` (0.5x)                      |
+//! | spec/batch | — · spec(γ,α) per γ×α point (4×0.7) · spec@PIM(γ,α) per   |
+//! |            | γ×α point · b`s` per `g.batch_streams` (b8)               |
+//!
+//! Speculation and batching share one axis because they are mutually
+//! exclusive (verification already batches the target pass), so the axis is
+//! `{none} ∪ spec-grid ∪ pim-spec-grid ∪ batch-sizes`.
 //!
 //! Validity rules (enforced by [`Scenario::validate`]): the `@PIM` values
 //! need a PIM device, and a PIM-resident draft claims the PIM units, so it
-//! excludes the weight/KV residency values. Closed form of the valid count:
+//! excludes the weight/KV residency values. Closed form of the valid count,
+//! with `T = 1 + |trace|`, `G = |γ|·|α|`, `B = |batch|`:
 //!
-//! - non-PIM platform: `3 (weights) x 2 (kv) x 2 (trace) x 2 (spec)` = 24
-//! - PIM platform:     `5 x 3 x 2 x 2` (SoC-draft branch)
-//!                     `+ 3 x 2 x 2`   (PIM-draft branch)  = 72
+//! - non-PIM platform: `3 (weights) x 2 (kv) x T x (1 + G + B)`
+//! - PIM platform:     `5 x 3 x T x (1 + G + B)`  (SoC spec/batch branch)
+//!                     `+ 3 x 2 x T x G`          (PIM-draft branch)
 //!
-//! [`matrix_size`] is that closed form; the tests pin it against the
-//! enumeration so an axis or rule change cannot silently shrink coverage.
+//! At the degenerate [`LeverGrid::legacy`] (γ×α = {4}×{0.7}, trace {0.5},
+//! no batch axis) this is the original 72 (PIM) / 24 (SoC) matrix, element
+//! for element in the same order. [`matrix_size_grid`] is the closed form;
+//! the tests pin it against the enumeration so an axis or rule change
+//! cannot silently shrink coverage.
 
 use super::{Lever, Scenario};
 use crate::hw::Platform;
@@ -30,6 +39,55 @@ pub const SPEC_GAMMA: u64 = 4;
 pub const SPEC_ALPHA: f64 = 0.7;
 /// Canonical trace-compression factor of the matrix.
 pub const TRACE_FACTOR: f64 = 0.5;
+/// Canonical batched-stream count of the phase-2 default grid.
+pub const BATCH_STREAMS: u64 = 8;
+
+/// The parameter points the lever axes expand over. Counts (not unique
+/// values) drive the closed form, so duplicate points simply duplicate
+/// scenarios — callers own dedup.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LeverGrid {
+    /// Speculation depths (tokens drafted per round); crossed with
+    /// `spec_alphas` for both the SoC and the PIM-draft speculation values.
+    pub spec_gammas: Vec<u64>,
+    /// Draft acceptance rates, in (0, 1).
+    pub spec_alphas: Vec<f64>,
+    /// Reasoning-trace compression factors (fraction of generated tokens).
+    pub trace_factors: Vec<f64>,
+    /// Batched-stream counts; empty = no batch axis.
+    pub batch_streams: Vec<u64>,
+}
+
+impl LeverGrid {
+    /// The degenerate grid of the PR 3 fixed-point matrix: γ×α = {4}×{0.7},
+    /// trace {0.5}, no batch axis. `scenario_matrix_grid(p, &legacy())` is
+    /// the original 72/24 enumeration, bitwise (pinned by the tests).
+    pub fn legacy() -> LeverGrid {
+        LeverGrid {
+            spec_gammas: vec![SPEC_GAMMA],
+            spec_alphas: vec![SPEC_ALPHA],
+            trace_factors: vec![TRACE_FACTOR],
+            batch_streams: Vec::new(),
+        }
+    }
+
+    /// The phase-2 default: the legacy points plus a b8 batching value, so
+    /// the ranked matrix carries aggregate-vs-per-stream rows by default.
+    pub fn default_phase2() -> LeverGrid {
+        LeverGrid { batch_streams: vec![BATCH_STREAMS], ..LeverGrid::legacy() }
+    }
+
+    /// The γ×α cartesian product, γ-major (the enumeration order).
+    fn spec_points(&self) -> Vec<(u64, f64)> {
+        let mut v = Vec::with_capacity(self.spec_gammas.len() * self.spec_alphas.len());
+        for &g in &self.spec_gammas {
+            for &a in &self.spec_alphas {
+                v.push((g, a));
+            }
+        }
+        v
+    }
+}
 
 fn weight_axis() -> Vec<Option<Lever>> {
     vec![
@@ -45,26 +103,40 @@ fn kv_axis() -> Vec<Option<Lever>> {
     vec![None, Some(Lever::QuantizeKv), Some(Lever::PimKvAttention)]
 }
 
-fn trace_axis() -> Vec<Option<Lever>> {
-    vec![None, Some(Lever::CompressTrace { factor: TRACE_FACTOR })]
+fn trace_axis(grid: &LeverGrid) -> Vec<Option<Lever>> {
+    let mut v = vec![None];
+    for &factor in &grid.trace_factors {
+        v.push(Some(Lever::CompressTrace { factor }));
+    }
+    v
 }
 
-fn spec_axis() -> Vec<Option<Lever>> {
-    vec![
-        None,
-        Some(Lever::Speculate { gamma: SPEC_GAMMA, alpha: SPEC_ALPHA }),
-        Some(Lever::PimDraft { gamma: SPEC_GAMMA, alpha: SPEC_ALPHA }),
-    ]
+/// The shared speculation/batching axis: none, then the SoC-speculation
+/// grid, then the PIM-draft grid, then the batch values — the legacy
+/// `[None, Speculate, PimDraft]` order extended in place.
+fn spec_batch_axis(grid: &LeverGrid) -> Vec<Option<Lever>> {
+    let mut v = vec![None];
+    for (gamma, alpha) in grid.spec_points() {
+        v.push(Some(Lever::Speculate { gamma, alpha }));
+    }
+    for (gamma, alpha) in grid.spec_points() {
+        v.push(Some(Lever::PimDraft { gamma, alpha }));
+    }
+    for &streams in &grid.batch_streams {
+        v.push(Some(Lever::Batch { streams }));
+    }
+    v
 }
 
-/// Every valid scenario for `platform`, in deterministic axis order. The
-/// first entry is always the baseline (all axes at `None`).
-pub fn scenario_matrix(platform: &Platform) -> Vec<Scenario> {
+/// Every valid scenario for `platform` at the grid's parameter points, in
+/// deterministic axis order. The first entry is always the baseline (all
+/// axes at `None`).
+pub fn scenario_matrix_grid(platform: &Platform, grid: &LeverGrid) -> Vec<Scenario> {
     let mut out = Vec::new();
     for w in &weight_axis() {
         for k in &kv_axis() {
-            for t in &trace_axis() {
-                for s in &spec_axis() {
+            for t in &trace_axis(grid) {
+                for s in &spec_batch_axis(grid) {
                     let levers: Vec<Lever> = [w, k, t, s].into_iter().cloned().flatten().collect();
                     let scenario = Scenario::of(levers);
                     if scenario.validate(platform).is_ok() {
@@ -77,10 +149,30 @@ pub fn scenario_matrix(platform: &Platform) -> Vec<Scenario> {
     out
 }
 
-/// Closed-form size of the valid matrix (see the module docs for the
-/// derivation). The tests assert this equals `scenario_matrix(p).len()`.
+/// The legacy fixed-point matrix: the degenerate [`LeverGrid::legacy`]
+/// grid (γ=4, α=0.7, 0.5x trace, no batch axis) — the PR 3 enumeration,
+/// element for element.
+pub fn scenario_matrix(platform: &Platform) -> Vec<Scenario> {
+    scenario_matrix_grid(platform, &LeverGrid::legacy())
+}
+
+/// Closed-form size of the valid matrix at `grid` (see the module docs for
+/// the derivation). The tests assert this equals
+/// `scenario_matrix_grid(p, g).len()` exactly.
+pub fn matrix_size_grid(platform: &Platform, grid: &LeverGrid) -> usize {
+    let t = 1 + grid.trace_factors.len();
+    let g = grid.spec_gammas.len() * grid.spec_alphas.len();
+    let b = grid.batch_streams.len();
+    if platform.mem.pim.is_some() {
+        5 * 3 * t * (1 + g + b) + 3 * 2 * t * g
+    } else {
+        3 * 2 * t * (1 + g + b)
+    }
+}
+
+/// Closed-form size of the legacy fixed-point matrix: 72 (PIM) / 24 (SoC).
 pub fn matrix_size(platform: &Platform) -> usize {
-    if platform.mem.pim.is_some() { 5 * 3 * 2 * 2 + 3 * 2 * 2 } else { 3 * 2 * 2 * 2 }
+    matrix_size_grid(platform, &LeverGrid::legacy())
 }
 
 #[cfg(test)]
@@ -99,19 +191,71 @@ mod tests {
     }
 
     #[test]
+    fn default_phase2_grid_adds_the_batch_axis() {
+        for p in platform::sweep_platforms() {
+            let g = LeverGrid::default_phase2();
+            let m = scenario_matrix_grid(&p, &g);
+            assert_eq!(m.len(), matrix_size_grid(&p, &g), "{}", p.name);
+            // PIM: 5*3*2*(1+1+1) + 3*2*2*1 = 102; SoC: 3*2*2*3 = 36
+            let expect = if p.mem.pim.is_some() { 102 } else { 36 };
+            assert_eq!(m.len(), expect, "{}", p.name);
+            // exactly weights x kv x trace batched rows appear (|batch| = 1)
+            let group = super::super::LeverGroup::Batching;
+            let batched = m.iter().filter(|s| s.lever(group).is_some()).count();
+            let weights_kv = if p.mem.pim.is_some() { 5 * 3 } else { 3 * 2 };
+            assert_eq!(batched, weights_kv * 2, "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn grid_axes_scale_the_closed_form() {
+        let grid = LeverGrid {
+            spec_gammas: vec![2, 4, 8],
+            spec_alphas: vec![0.5, 0.7, 0.9],
+            trace_factors: vec![0.25, 0.5],
+            batch_streams: vec![4, 16],
+        };
+        // T = 3, G = 9, B = 2
+        let pim = scenario_matrix_grid(&platform::orin_pim(), &grid);
+        assert_eq!(pim.len(), 5 * 3 * 3 * 12 + 3 * 2 * 3 * 9);
+        assert_eq!(pim.len(), matrix_size_grid(&platform::orin_pim(), &grid));
+        let soc = scenario_matrix_grid(&platform::orin(), &grid);
+        assert_eq!(soc.len(), 3 * 2 * 3 * 12);
+        assert_eq!(soc.len(), matrix_size_grid(&platform::orin(), &grid));
+        // every grid point surfaces in at least one scenario name
+        for (g, a) in [(2u64, 0.5), (8, 0.9)] {
+            assert!(pim.iter().any(|s| s.name.contains(&format!("spec(g{g},a{a})"))));
+            assert!(pim.iter().any(|s| s.name.contains(&format!("spec@PIM(g{g},a{a})"))));
+        }
+        assert!(soc.iter().any(|s| s.name.contains("b16")));
+        assert!(soc.iter().any(|s| s.name.contains("0.25xCoT")));
+    }
+
+    #[test]
+    fn degenerate_grid_is_the_legacy_matrix() {
+        for p in [platform::orin(), platform::thor_hbm4_pim()] {
+            let legacy = scenario_matrix(&p);
+            let degen = scenario_matrix_grid(&p, &LeverGrid::legacy());
+            assert_eq!(legacy, degen, "{}: degenerate grid must BE the legacy matrix", p.name);
+        }
+    }
+
+    #[test]
     fn matrix_leads_with_baseline_and_names_are_unique() {
-        let m = scenario_matrix(&platform::orin_pim());
-        assert_eq!(m[0].name, "baseline");
-        let mut names: Vec<&str> = m.iter().map(|s| s.name.as_str()).collect();
-        let n = names.len();
-        names.sort_unstable();
-        names.dedup();
-        assert_eq!(names.len(), n, "scenario names must be unique");
+        for grid in [LeverGrid::legacy(), LeverGrid::default_phase2()] {
+            let m = scenario_matrix_grid(&platform::orin_pim(), &grid);
+            assert_eq!(m[0].name, "baseline");
+            let mut names: Vec<&str> = m.iter().map(|s| s.name.as_str()).collect();
+            let n = names.len();
+            names.sort_unstable();
+            names.dedup();
+            assert_eq!(names.len(), n, "scenario names must be unique");
+        }
     }
 
     #[test]
     fn non_pim_matrix_has_no_pim_levers() {
-        for s in scenario_matrix(&platform::orin()) {
+        for s in scenario_matrix_grid(&platform::orin(), &LeverGrid::default_phase2()) {
             assert!(!s.requires_pim(), "{}", s.name);
         }
     }
@@ -119,7 +263,7 @@ mod tests {
     #[test]
     fn every_generated_scenario_validates() {
         let p = platform::thor_hbm4_pim();
-        for s in scenario_matrix(&p) {
+        for s in scenario_matrix_grid(&p, &LeverGrid::default_phase2()) {
             assert!(s.validate(&p).is_ok(), "{}", s.name);
         }
     }

@@ -14,10 +14,22 @@
 //!   [`VlaConfig`](crate::model::VlaConfig) + [`SimOptions`] + a decode-cost
 //!   override, evaluated against the existing
 //!   [`Simulator`](crate::sim::Simulator) by an [`Evaluator`];
-//! - [`scenario_matrix`] enumerates the cartesian product of the lever axes
-//!   under the validity rules (PIM levers need a PIM device; a PIM-resident
-//!   draft claims the PIM units exclusively), with a closed-form size
-//!   ([`matrix_size`]) the tests pin against the enumeration.
+//! - [`scenario_matrix_grid`] enumerates the cartesian product of the lever
+//!   axes at a [`LeverGrid`]'s parameter points (γ×α speculation grids,
+//!   trace factors, batch sizes) under the validity rules (PIM levers need
+//!   a PIM device; a PIM-resident draft claims the PIM units exclusively),
+//!   with a closed-form size ([`matrix_size_grid`]) the tests pin against
+//!   the enumeration; [`scenario_matrix`]/[`matrix_size`] are the
+//!   degenerate [`LeverGrid::legacy`] fixed point (72 PIM / 24 SoC).
+//!
+//! Phase 2 adds two more result dimensions per evaluated scenario:
+//! **capacity validity** — a scenario is over capacity when the lowered
+//! model's weights + KV (+ the draft, when a speculation lever places one)
+//! exceed the platform's [`MemDevice`](crate::hw::MemDevice) capacity; such
+//! rows are flagged ([`ScenarioResult::fits_capacity`]) and reported, never
+//! silently dropped — and **energy** — every evaluation also integrates the
+//! [`sim::energy`](crate::sim::energy) model, so scenarios rank on a
+//! Hz-vs-J/action [`pareto_front`] instead of a single key.
 //!
 //! Placement semantics: within the scenario engine, exploiting PIM is an
 //! explicit *software mapping decision* (a lever), not an ambient simulator
@@ -31,11 +43,17 @@ mod eval;
 mod lever;
 mod matrix;
 
-pub use eval::{pim_speculative_decode, speculative_decode, Evaluator, ScenarioResult};
+pub use eval::{
+    pareto_front, pim_speculative_decode, speculative_decode, Evaluator, ScenarioResult,
+};
 pub use lever::{quantize_weights, Lever, LeverGroup};
-pub use matrix::{matrix_size, scenario_matrix, SPEC_ALPHA, SPEC_GAMMA, TRACE_FACTOR};
+pub use matrix::{
+    matrix_size, matrix_size_grid, scenario_matrix, scenario_matrix_grid, LeverGrid, BATCH_STREAMS,
+    SPEC_ALPHA, SPEC_GAMMA, TRACE_FACTOR,
+};
 
 use crate::hw::Platform;
+use crate::model::vla::VlaConfig;
 
 /// A named stack of co-design levers.
 #[derive(Debug, Clone, PartialEq)]
@@ -76,6 +94,47 @@ impl Scenario {
     /// satisfy `speedup >= 1 / modeled_overhead()`.
     pub fn modeled_overhead(&self) -> f64 {
         self.levers.iter().map(|l| l.modeled_overhead()).product()
+    }
+
+    /// Peak device-memory footprint (bytes) of the lowered scenario on its
+    /// platform's single memory device (PIM banks live in the same DRAM, so
+    /// residency moves compute, not capacity): the lowered target's weights
+    /// at their quantized widths, the full-trace KV cache (trace compression
+    /// shortens it, KV8 halves its width, batching multiplies it per
+    /// stream), and — when a speculation lever places one — the draft
+    /// model's weights and KV.
+    pub fn memory_footprint(&self, target: &VlaConfig, draft: &VlaConfig) -> f64 {
+        let mut cfg = target.clone();
+        for lever in &self.levers {
+            lever.apply_config(&mut cfg);
+        }
+        let kv_scale =
+            if matches!(self.lever(LeverGroup::Kv), Some(Lever::QuantizeKv)) { 0.5 } else { 1.0 };
+        let streams = match self.lever(LeverGroup::Batching) {
+            Some(Lever::Batch { streams }) => (*streams).max(1),
+            _ => 1,
+        };
+        let seq = (cfg.shape.prefill_len() + cfg.shape.decode_tokens) as f64;
+        let kv = cfg.decoder.kv_bytes_per_token() * seq * kv_scale * streams as f64;
+        let mut total = cfg.weight_footprint_bytes() + kv;
+        if self.lever(LeverGroup::Speculation).is_some() {
+            let dseq = (draft.shape.prefill_len() + draft.shape.decode_tokens) as f64;
+            total += draft.weight_footprint_bytes() + draft.decoder.kv_bytes_per_token() * dseq;
+        }
+        total
+    }
+
+    /// Capacity-validity rule: does the lowered scenario fit `platform`'s
+    /// memory device? Over-capacity scenarios stay structurally valid —
+    /// the evaluator flags them ([`ScenarioResult::fits_capacity`]) so the
+    /// ranked matrix REPORTS them instead of silently dropping rows.
+    pub fn fits_capacity(
+        &self,
+        platform: &Platform,
+        target: &VlaConfig,
+        draft: &VlaConfig,
+    ) -> bool {
+        self.memory_footprint(target, draft) <= platform.mem.capacity
     }
 
     /// Validity rules for `platform`:
@@ -188,9 +247,56 @@ mod tests {
             Lever::QuantizeWeights { bits: 8 },
             Lever::Speculate { gamma: 4, alpha: 0.7 },
         ]);
-        assert!((s.modeled_overhead() - 1.02 * 2.0).abs() < 1e-12);
+        // spec bound is parametric since phase 2: (gamma + 2) / E(gamma, alpha)
+        let e = (1.0 - 0.7f64.powi(5)) / (1.0 - 0.7f64).max(1e-9);
+        assert!((s.modeled_overhead() - 1.02 * (6.0 / e)).abs() < 1e-12);
         assert_eq!(Scenario::baseline().modeled_overhead(), 1.0);
         // per-stream batching is bounded by streams-x (KV/activations scale)
         assert_eq!(Scenario::of(vec![Lever::Batch { streams: 8 }]).modeled_overhead(), 8.0);
+    }
+
+    #[test]
+    fn footprint_accounts_for_every_lever() {
+        use crate::model::molmoact::molmoact_7b;
+        use crate::model::scaling::scaled_vla;
+        let target = molmoact_7b();
+        let draft = scaled_vla(2.0);
+        let fp = |levers: Vec<Lever>| Scenario::of(levers).memory_footprint(&target, &draft);
+        let base = fp(vec![]);
+        // bf16 7B-class model: weights + KV land in the 14-20 GB band
+        assert!((12e9..22e9).contains(&base), "baseline footprint {base:.3e}");
+        // quantization shrinks, W4 below W8
+        assert!(fp(vec![Lever::QuantizeWeights { bits: 8 }]) < base);
+        let w4 = fp(vec![Lever::QuantizeWeights { bits: 4 }]);
+        assert!(w4 < fp(vec![Lever::QuantizeWeights { bits: 8 }]));
+        // PIM residency moves compute, not capacity: same footprint as W8
+        assert_eq!(
+            fp(vec![Lever::PimWeightStream { bits: 8 }]),
+            fp(vec![Lever::QuantizeWeights { bits: 8 }])
+        );
+        // KV8 and trace compression shrink the cache term only
+        assert!(fp(vec![Lever::QuantizeKv]) < base);
+        assert!(fp(vec![Lever::CompressTrace { factor: 0.5 }]) < base);
+        // a speculation lever adds the draft; batching multiplies the KV
+        assert!(fp(vec![Lever::Speculate { gamma: 4, alpha: 0.7 }]) > base);
+        let b8 = fp(vec![Lever::Batch { streams: 8 }]);
+        let kv_one = target.decoder.kv_bytes_per_token()
+            * (target.shape.prefill_len() + target.shape.decode_tokens) as f64;
+        assert!((b8 - base - 7.0 * kv_one).abs() < 1.0, "b8 adds exactly 7 extra KV copies");
+    }
+
+    #[test]
+    fn capacity_rule_flags_oversized_models() {
+        use crate::model::scaling::scaled_vla;
+        let target30 = scaled_vla(30.0);
+        let draft = scaled_vla(2.0);
+        let base = Scenario::baseline();
+        // a bf16 30B-class model (~60+ GB) cannot fit one 36 GB HBM4 stack...
+        assert!(!base.fits_capacity(&platform::thor_hbm4_pim(), &target30, &draft));
+        // ...but W4 packs it back under the stack's capacity
+        let w4 = Scenario::of(vec![Lever::PimWeightStream { bits: 4 }]);
+        assert!(w4.fits_capacity(&platform::thor_hbm4_pim(), &target30, &draft));
+        // Thor's 128 GB LPDDR5X takes it uncompressed
+        assert!(base.fits_capacity(&platform::thor(), &target30, &draft));
     }
 }

@@ -83,6 +83,8 @@ fn report_writes_files() {
         "ablation_framework.md",
         "pim_matrix.md",
         "pim_matrix.csv",
+        "pim_capacity.md",
+        "pim_capacity.csv",
         "step_status.md",
         "control_loop_status.md",
         "serve_status.md",
@@ -117,6 +119,25 @@ fn pim_scenario_matrix_ok() {
     assert_eq!(run(&["pim", "--stride", "32", "--pim-sizes", "7", "--top", "5"]).unwrap(), 0);
     // --top 0 prints every ranked row
     assert_eq!(run(&["pim", "--stride", "32", "--pim-sizes", "7", "--top", "0"]).unwrap(), 0);
+}
+
+#[test]
+fn pim_grid_and_pareto_flags_ok() {
+    // a custom γ/α grid expands the matrix; --pareto ranks front-first and
+    // emits the front table; the S1..S5 checks gate the exit code
+    let grid = [
+        "pim", "--stride", "32", "--pim-sizes", "7", "--top", "5", "--pareto", "--spec-grid",
+        "2,4x0.5,0.9",
+    ];
+    assert_eq!(run(&grid).unwrap(), 0);
+    // dropping the batch axis degenerates back to the legacy matrix shape
+    let legacy = [
+        "pim", "--stride", "32", "--pim-sizes", "7", "--top", "3", "--pim-batches", "none",
+    ];
+    assert_eq!(run(&legacy).unwrap(), 0);
+    // malformed spec grids are context-build errors
+    assert!(run(&["pim", "--spec-grid", "4"]).is_err());
+    assert!(run(&["pim", "--spec-grid", "4x1.5"]).is_err());
 }
 
 #[test]

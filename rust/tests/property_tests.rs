@@ -7,6 +7,9 @@ use vla_char::model::layer::BlockDims;
 use vla_char::model::molmoact::molmoact_7b;
 use vla_char::model::scaling::{scaled_vla, ANCHOR_SIZES_B};
 use vla_char::model::Operator;
+use vla_char::sim::scenario::{
+    matrix_size_grid, pareto_front, scenario_matrix_grid, Lever, LeverGrid, Scenario,
+};
 use vla_char::sim::{cost_on_soc, cost_op, SimOptions, Simulator};
 use vla_char::util::json::Json;
 use vla_char::util::prng::Prng;
@@ -159,6 +162,156 @@ fn scaling_latency_superlinear_in_params() {
         let tb = sim.simulate_vla(&big).total();
         let msg = format!("{}B {} vs {}B {}", ANCHOR_SIZES_B[i], ts, ANCHOR_SIZES_B[i + 1], tb);
         ensure(tb > ts, msg)
+    });
+}
+
+#[test]
+fn pareto_front_laws_on_random_point_clouds() {
+    // the ranking's two laws: front members are mutually non-dominated,
+    // and every non-front point is dominated by some front member
+    prop_check("pareto front laws", 200, |rng| {
+        let n = rng.uniform_usize(1, 60);
+        let pts: Vec<(f64, f64)> = (0..n)
+            .map(|_| (rng.uniform_f64(0.1, 10.0), rng.uniform_f64(0.1, 10.0)))
+            .collect();
+        let front = pareto_front(&pts);
+        ensure(!front.is_empty(), "front of a non-empty set is non-empty")?;
+        let dom = |a: (f64, f64), b: (f64, f64)| -> bool {
+            a.0 >= b.0 && a.1 <= b.1 && (a.0 > b.0 || a.1 < b.1)
+        };
+        for &i in &front {
+            for &j in &front {
+                if i != j {
+                    ensure(!dom(pts[j], pts[i]), format!("front member {j} dominates {i}"))?;
+                }
+            }
+        }
+        for k in 0..n {
+            if !front.contains(&k) {
+                ensure(
+                    front.iter().any(|&i| dom(pts[i], pts[k])),
+                    format!("non-front point {k} undominated"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Build a random structurally-valid lever stack from the SoC axes (no PIM
+/// levers, so it validates on any platform); `shrink_scenario` derives a
+/// counterpart whose footprint is no larger.
+fn random_soc_scenario(rng: &mut Prng) -> Vec<Lever> {
+    let mut levers = Vec::new();
+    match rng.uniform_u64(0, 3) {
+        1 => levers.push(Lever::QuantizeWeights { bits: 8 }),
+        2 => levers.push(Lever::QuantizeWeights { bits: 4 }),
+        _ => {}
+    }
+    if rng.next_f64() < 0.5 {
+        levers.push(Lever::QuantizeKv);
+    }
+    if rng.next_f64() < 0.5 {
+        levers.push(Lever::CompressTrace { factor: rng.uniform_f64(0.2, 0.9) });
+    }
+    // batch xor speculation (the validity rule)
+    match rng.uniform_u64(0, 3) {
+        1 => levers.push(Lever::Speculate {
+            gamma: rng.uniform_u64(2, 9),
+            alpha: rng.uniform_f64(0.3, 0.95),
+        }),
+        2 => levers.push(Lever::Batch { streams: rng.uniform_u64(2, 17) }),
+        _ => {}
+    }
+    levers
+}
+
+/// Derive a counterpart whose footprint is <= the original's: step the
+/// weight lever down the quantization ladder, drop the draft, or halve the
+/// batch — each strictly shrinks one footprint term, none grows any.
+fn shrink_scenario(rng: &mut Prng, levers: &[Lever]) -> Vec<Lever> {
+    let mut out: Vec<Lever> = levers.to_vec();
+    match rng.uniform_u64(0, 4) {
+        0 => {
+            // W- ladder: none -> W8 -> W4
+            if let Some(w) = out.iter_mut().find(|l| matches!(l, Lever::QuantizeWeights { .. })) {
+                *w = Lever::QuantizeWeights { bits: 4 };
+            } else {
+                out.insert(0, Lever::QuantizeWeights { bits: 8 });
+            }
+        }
+        1 => out.retain(|l| !matches!(l, Lever::Speculate { .. })), // drop the draft
+        2 => {
+            for l in out.iter_mut() {
+                if let Lever::Batch { streams } = l {
+                    *streams = (*streams / 2).max(1);
+                }
+            }
+        }
+        _ => {
+            let have_kv = out.iter().any(|l| matches!(l, Lever::QuantizeKv));
+            if !have_kv {
+                out.push(Lever::QuantizeKv);
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn capacity_validity_monotone_in_footprint() {
+    // if a scenario fits a device, any counterpart with a smaller (or
+    // equal) footprint fits it too — at a RANDOM capacity point, so the
+    // boundary itself moves per case
+    let target = molmoact_7b();
+    let draft = scaled_vla(2.0);
+    prop_check("capacity monotone", 150, |rng| {
+        let levers = random_soc_scenario(rng);
+        let bigger = Scenario::of(levers.clone());
+        let smaller = Scenario::of(shrink_scenario(rng, &levers));
+        let fp_big = bigger.memory_footprint(&target, &draft);
+        let fp_small = smaller.memory_footprint(&target, &draft);
+        ensure(
+            fp_small <= fp_big,
+            format!("`{}` ({fp_small:.3e} B) > `{}` ({fp_big:.3e} B)", smaller.name, bigger.name),
+        )?;
+        let mut p = platform::orin();
+        p.mem.capacity = rng.uniform_f64(1e9, 80e9);
+        if bigger.fits_capacity(&p, &target, &draft) {
+            ensure(
+                smaller.fits_capacity(&p, &target, &draft),
+                format!(
+                    "`{}` fits {:.1} GB but `{}` does not",
+                    bigger.name,
+                    p.mem.capacity_gb(),
+                    smaller.name
+                ),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn grid_closed_form_matches_enumeration_on_random_grids() {
+    prop_check("matrix_size_grid == |scenario_matrix_grid|", 40, |rng| {
+        let list_u64 = |rng: &mut Prng, max_len: usize, lo: u64, hi: u64| -> Vec<u64> {
+            (0..rng.uniform_usize(0, max_len)).map(|_| rng.uniform_u64(lo, hi)).collect()
+        };
+        let n_alpha = rng.uniform_usize(1, 4);
+        let n_trace = rng.uniform_usize(0, 3);
+        let grid = LeverGrid {
+            spec_gammas: list_u64(rng, 3, 1, 9),
+            spec_alphas: (0..n_alpha).map(|_| rng.uniform_f64(0.1, 0.9)).collect(),
+            trace_factors: (0..n_trace).map(|_| rng.uniform_f64(0.1, 0.9)).collect(),
+            batch_streams: list_u64(rng, 2, 2, 33),
+        };
+        for p in [platform::orin(), platform::orin_pim()] {
+            let n = scenario_matrix_grid(&p, &grid).len();
+            let want = matrix_size_grid(&p, &grid);
+            ensure(n == want, format!("{}: {n} != {want} for {grid:?}", p.name))?;
+        }
+        Ok(())
     });
 }
 

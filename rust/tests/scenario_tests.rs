@@ -1,13 +1,16 @@
 //! Scenario-matrix acceptance suite: validity rules, the closed-form
-//! matrix size, parallel==serial determinism over scenario evaluation,
-//! the speedup sanity bound, and the PIM-vs-SoC counterpart dominance the
-//! paper's co-design thesis predicts.
+//! matrix size (legacy fixed point AND parameterized lever grids),
+//! parallel==serial determinism over scenario evaluation (energy and
+//! capacity fields included), capacity-validity reporting, the speedup
+//! sanity bound, Pareto-front laws over the real matrix, and the
+//! PIM-vs-SoC counterpart dominance the paper's co-design thesis predicts.
 
 use vla_char::hw::platform;
 use vla_char::model::molmoact::molmoact_7b;
 use vla_char::model::scaling::scaled_vla;
 use vla_char::sim::scenario::{
-    matrix_size, scenario_matrix, Evaluator, Lever, Scenario, SPEC_ALPHA, SPEC_GAMMA,
+    matrix_size, matrix_size_grid, pareto_front, scenario_matrix, scenario_matrix_grid, Evaluator,
+    Lever, LeverGrid, Scenario, SPEC_ALPHA, SPEC_GAMMA,
 };
 use vla_char::sim::{sweep, SimOptions};
 
@@ -39,6 +42,33 @@ fn matrix_size_matches_documented_closed_form() {
     }
 }
 
+/// ACCEPTANCE: the grid closed form (weights x kv x T x (1+G+B) plus the
+/// PIM-draft branch) equals the full enumeration on every sweep platform,
+/// for the legacy fixed point, the phase-2 default, and an expanded grid.
+#[test]
+fn grid_closed_form_pinned_against_enumeration() {
+    let expanded = LeverGrid {
+        spec_gammas: vec![2, 4, 8],
+        spec_alphas: vec![0.5, 0.7, 0.9],
+        trace_factors: vec![0.25, 0.5],
+        batch_streams: vec![4, 16],
+    };
+    for grid in [LeverGrid::legacy(), LeverGrid::default_phase2(), expanded] {
+        for p in platform::sweep_platforms() {
+            let m = scenario_matrix_grid(&p, &grid);
+            assert_eq!(m.len(), matrix_size_grid(&p, &grid), "{}: closed form diverged", p.name);
+            for s in &m {
+                assert!(s.validate(&p).is_ok(), "{}: `{}` invalid", p.name, s.name);
+            }
+        }
+    }
+    // pinned counts: legacy 72/24, phase-2 default (b8 axis) 114/36
+    assert_eq!(matrix_size_grid(&platform::orin_pim(), &LeverGrid::legacy()), 72);
+    assert_eq!(matrix_size_grid(&platform::orin(), &LeverGrid::legacy()), 24);
+    assert_eq!(matrix_size_grid(&platform::orin_pim(), &LeverGrid::default_phase2()), 102);
+    assert_eq!(matrix_size_grid(&platform::orin(), &LeverGrid::default_phase2()), 36);
+}
+
 #[test]
 fn validity_rules_reject_impossible_combos() {
     let orin = platform::orin();
@@ -68,13 +98,21 @@ fn validity_rules_reject_impossible_combos() {
     assert!(contended.validate(&platform::orin_pim()).is_err());
 }
 
-/// The scenario sweep must be a pure reordering of the serial path —
-/// bitwise, over every (scenario, platform) cell of a PIM platform.
+/// ACCEPTANCE: the scenario sweep must be a pure reordering of the serial
+/// path — bitwise, over every cell of the EXPANDED (grid) matrix of a PIM
+/// platform, energy and capacity outputs included.
 #[test]
 fn parallel_scenario_sweep_matches_serial_bitwise() {
     let p = platform::orin_pim();
     let ev = evaluator(&p);
-    let matrix = scenario_matrix(&p);
+    let grid = LeverGrid {
+        spec_gammas: vec![2, 4],
+        spec_alphas: vec![0.5, 0.7],
+        trace_factors: vec![0.5],
+        batch_streams: vec![8],
+    };
+    let matrix = scenario_matrix_grid(&p, &grid);
+    assert!(matrix.len() > 72, "the grid must EXPAND the legacy matrix");
     let eval = |sc: &Scenario| {
         let r = ev.eval(sc).unwrap();
         (
@@ -83,11 +121,76 @@ fn parallel_scenario_sweep_matches_serial_bitwise() {
             r.amortized_hz.to_bits(),
             r.speedup_vs_baseline.to_bits(),
             r.pim_util.to_bits(),
+            r.total_j.to_bits(),
+            r.j_per_action.to_bits(),
+            r.aggregate_hz.to_bits(),
+            (r.footprint_gb.to_bits(), r.fits_capacity, r.streams),
         )
     };
     let serial = sweep::parallel_map_with(&matrix, 1, eval);
     let parallel = sweep::parallel_map_with(&matrix, 8, eval);
     assert_eq!(serial, parallel, "scenario evaluation must be deterministic under the pool");
+}
+
+/// ACCEPTANCE: a real platform/scale pair exercises the capacity rule —
+/// a bf16 30B-class model overflows the 36 GB HBM4-PIM stack; the matrix
+/// still evaluates and REPORTS those rows (flag false), never drops them.
+#[test]
+fn capacity_invalid_scenarios_reported_not_dropped() {
+    let p = platform::thor_hbm4_pim();
+    let ev = Evaluator::new(&p, &opts(), &scaled_vla(30.0), &scaled_vla(2.0));
+    let grid = LeverGrid::default_phase2();
+    let matrix = scenario_matrix_grid(&p, &grid);
+    let results: Vec<_> = matrix.iter().map(|sc| ev.eval(sc).unwrap()).collect();
+    // every enumerated cell produced a row — nothing silently dropped
+    assert_eq!(results.len(), matrix_size_grid(&p, &grid));
+    let invalid = results.iter().filter(|r| !r.fits_capacity).count();
+    let valid = results.len() - invalid;
+    assert!(invalid > 0, "bf16 30B rows must overflow a 36 GB stack");
+    assert!(valid > 0, "quantized/residency rows must fit a 36 GB stack");
+    // the baseline is among the invalid rows, with a meaningful excess
+    let base = results.iter().find(|r| r.scenario == "baseline").unwrap();
+    assert!(!base.fits_capacity);
+    assert!(base.footprint_gb > base.capacity_gb * 1.2, "{} GB", base.footprint_gb);
+    // invalid rows still carry full projections
+    assert!(base.step_latency > 0.0 && base.total_j > 0.0);
+    // and capacity is monotone along the quantization ladder: W4@PIM fits
+    let w4 = results.iter().find(|r| r.scenario == "W4@PIM").unwrap();
+    assert!(w4.fits_capacity, "W4 30B must fit: {} GB", w4.footprint_gb);
+}
+
+/// Pareto-front laws over the REAL evaluated matrix (Hz up, J/action
+/// down): front members are mutually non-dominated and every non-front
+/// row is dominated by some front member.
+#[test]
+fn pareto_front_laws_hold_on_the_real_matrix() {
+    let p = platform::thor_hbm4_pim();
+    let ev = evaluator(&p);
+    let results: Vec<_> = scenario_matrix_grid(&p, &LeverGrid::default_phase2())
+        .iter()
+        .map(|sc| ev.eval(sc).unwrap())
+        .collect();
+    let pts: Vec<(f64, f64)> = results.iter().map(|r| (r.control_hz, r.j_per_action)).collect();
+    let front = pareto_front(&pts);
+    assert!(!front.is_empty());
+    let dom = |a: (f64, f64), b: (f64, f64)| -> bool {
+        a.0 >= b.0 && a.1 <= b.1 && (a.0 > b.0 || a.1 < b.1)
+    };
+    for &i in &front {
+        for &j in &front {
+            assert!(i == j || !dom(pts[j], pts[i]), "front members must not dominate each other");
+        }
+    }
+    for k in 0..pts.len() {
+        if !front.contains(&k) {
+            assert!(
+                front.iter().any(|&i| dom(pts[i], pts[k])),
+                "non-front row {} ({}) must be dominated by a front member",
+                k,
+                results[k].scenario
+            );
+        }
+    }
 }
 
 /// No scenario may slow a step beyond its modeled lever overhead:
@@ -96,7 +199,7 @@ fn parallel_scenario_sweep_matches_serial_bitwise() {
 fn every_scenario_within_sanity_bound() {
     for p in [platform::orin(), platform::thor_hbm4(), platform::orin_pim()] {
         let ev = evaluator(&p);
-        for sc in scenario_matrix(&p) {
+        for sc in scenario_matrix_grid(&p, &LeverGrid::default_phase2()) {
             let r = ev.eval(&sc).unwrap();
             let floor = 1.0 / sc.modeled_overhead();
             assert!(

@@ -34,6 +34,11 @@ echo "==> vla-char pim smoke (ranked scenario matrix, top 10)"
 mkdir -p reports
 cargo run --release -- pim --top 10 | tee reports/pim_top10.txt
 
+echo "==> vla-char pim pareto smoke (energy-aware Pareto front, top 10)"
+cargo run --release -- pim --pareto --top 10 | tee reports/pim_pareto_top10.txt
+grep -E "Pareto front \(per-stream\): [1-9]" reports/pim_pareto_top10.txt >/dev/null \
+    || { echo "ERROR: empty Pareto front in pim report"; exit 1; }
+
 if command -v pytest >/dev/null 2>&1 || python3 -c 'import pytest' >/dev/null 2>&1; then
     echo "==> python -m pytest python/tests -q (soft gate until L1/L2 artifacts land)"
     python3 -m pytest python/tests -q || echo "WARNING: python tests failed (soft gate)"
