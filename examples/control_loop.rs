@@ -81,6 +81,7 @@ fn main() -> anyhow::Result<()> {
         duration_s: 4.0,
         policy: Policy::RoundRobin,
         seed: 7,
+        deadline_s: None,
     };
     let frames = FrameSource::new(1, m.vision.patches, m.vision.patch_dim, 7);
     let prompt = frames.prompt(0, m.workload.prompt_tokens, m.decoder.vocab);

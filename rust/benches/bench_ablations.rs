@@ -32,6 +32,7 @@ fn main() {
         spec_alphas: vec![0.5, 0.7, 0.9],
         trace_factors: vec![0.5],
         batch_streams: vec![8],
+        shard_engines: Vec::new(),
     };
     let options = SimOptions { decode_stride: 32, pim: false, ..Default::default() };
     let ev = Evaluator::new(&p, &options, &molmoact_7b(), &scaled_vla(2.0));

@@ -65,6 +65,41 @@ fn main() {
         });
     }
 
+    // shard serving scaling: simulator-backed batcher cells (topology x
+    // streams x rate) on the worker pool — the `serve` experiment's shape
+    {
+        use vla_char::engine::{run_shard_batcher, BatcherConfig, Policy, ShardMode, ShardModel};
+        use vla_char::engine::{ShardService, SimStepServer};
+        use vla_char::sim::scenario::Scenario;
+        let p = platform::orin();
+        let opts = SimOptions { decode_stride: 32, ..Default::default() };
+        let mut cells: Vec<(ShardModel, usize, f64)> = Vec::new();
+        for mode in [ShardMode::Replicate, ShardMode::PipelineDecoder] {
+            for engines in [1u64, 2, 4] {
+                for streams in [1usize, 2, 4] {
+                    for rate in [1.0f64, 2.0, 4.0] {
+                        cells.push((ShardModel { mode, engines }, streams, rate));
+                    }
+                }
+            }
+        }
+        let draft = scaled_vla(2.0);
+        sweep::bench_scaling("shard serving cells (Orin)", &cells, |(m, streams, rate)| {
+            let svc =
+                ShardService::lower(&p, &opts, &cfg, &draft, &Scenario::baseline(), *m).unwrap();
+            let bcfg = BatcherConfig {
+                streams: *streams,
+                rate_hz: *rate,
+                duration_s: 5.0,
+                policy: Policy::RoundRobin,
+                seed: 7,
+                deadline_s: Some(0.2),
+            };
+            let mut server = SimStepServer::for_service(&svc);
+            black_box(run_shard_batcher(&mut server, 2, 2, &[1], &bcfg, &svc.model).unwrap());
+        });
+    }
+
     // ops/sec summary for the §Perf log
     let per_step = results[0].summary.mean;
     println!(

@@ -52,6 +52,10 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "rate", value_name: Some("HZ"), help: "per-stream request rate", default: Some("2") },
         OptSpec { name: "policy", value_name: Some("P"), help: "serving policy: fifo | rr", default: Some("rr") },
         OptSpec { name: "duration", value_name: Some("S"), help: "serving arrival-trace duration (virtual s)", default: Some("5") },
+        OptSpec { name: "shards", value_name: Some("LIST"), help: "shard engine counts swept by `serve`", default: Some("1,2,4") },
+        OptSpec { name: "shard-mode", value_name: Some("M"), help: "shard topologies for `serve`: replicate (rep) | pipeline (pipe) | both", default: Some("both") },
+        OptSpec { name: "deadline-ms", value_name: Some("MS"), help: "queueing-delay deadline for `serve` (0 = serve everything)", default: Some("0") },
+        OptSpec { name: "pim-shards", value_name: Some("LIST"), help: "shard-serving engine counts in the `pim` lever grid (`none` drops the axis)", default: Some("none") },
         OptSpec { name: "stride", value_name: Some("N"), help: "decode-position sampling stride (sim)", default: Some("1") },
         OptSpec { name: "no-prefetch", value_name: None, help: "disable cross-operator prefetch (sim)", default: None },
         OptSpec { name: "no-pim", value_name: None, help: "disable PIM offload (sim)", default: None },

@@ -1,16 +1,18 @@
 //! The L3 coordinator: runnable VLA engine over PJRT artifacts, synthetic
-//! camera workloads, the real-time control-loop driver, and the multi-stream
-//! request batcher.
+//! camera workloads, the real-time control-loop driver, the multi-stream
+//! request batcher, and the simulator-backed multi-engine shard server.
 
 pub mod batcher;
 pub mod control_loop;
 #[allow(clippy::module_inception)]
 pub mod engine;
 pub mod frames;
+pub mod shard;
 pub mod vla_model;
 
 pub use batcher::{run_batcher, BatcherConfig, Policy, ServeReport, StepServer};
 pub use control_loop::{run_control_loop, ControlLoopConfig, ControlLoopReport};
 pub use engine::{PhaseTimes, StepResult, VlaEngine};
 pub use frames::{Frame, FrameSource};
+pub use shard::{run_shard_batcher, ShardMode, ShardModel, ShardService, SimStepServer};
 pub use vla_model::{KvCache, VlaModel};

@@ -89,6 +89,17 @@ pub struct ExpContext {
     pub duration_s: f64,
     /// Serving policy: "fifo" or "rr".
     pub policy: String,
+    /// Shard engine counts the `serve` experiment sweeps (`--shards`).
+    pub shards: Vec<u64>,
+    /// Shard topologies `serve` sweeps: "replicate", "pipeline", or "both"
+    /// (`--shard-mode`).
+    pub shard_mode: String,
+    /// Queueing-delay deadline for `serve` in ms (`--deadline-ms`; 0 = no
+    /// deadline, every request is eventually served).
+    pub deadline_ms: f64,
+    /// Shard-serving engine counts of the `pim` lever grid (`--pim-shards`;
+    /// empty = no serving axis, the pre-serving matrix).
+    pub pim_shards: Vec<u64>,
     /// Override for generated tokens per step (engine-backed experiments).
     pub decode_tokens: Option<usize>,
     /// `characterize`: also emit the top-operator decode trace.
@@ -145,6 +156,27 @@ impl ExpContext {
                 v.into_iter().map(|b| b as u64).collect()
             }
         };
+        let whole_list = |name: &str, v: Vec<f64>| -> anyhow::Result<Vec<u64>> {
+            anyhow::ensure!(
+                !v.is_empty() && v.iter().all(|&b| b >= 1.0 && b.fract() == 0.0),
+                "`--{name}` expects whole engine counts >= 1, got {v:?}"
+            );
+            Ok(v.into_iter().map(|b| b as u64).collect())
+        };
+        let shards = whole_list("shards", args.get_f64_list("shards", &[1.0, 2.0, 4.0])?)?;
+        let pim_shards: Vec<u64> = match args.get("pim-shards") {
+            None | Some("none") | Some("") => Vec::new(),
+            Some(_) => whole_list("pim-shards", args.get_f64_list("pim-shards", &[])?)?,
+        };
+        // single source of mode names: everything ShardMode::parse accepts
+        // (replicate/rep, pipeline/pipe) plus the sweep-both default
+        let shard_mode = args.get_or("shard-mode", "both").to_string();
+        if shard_mode != "both" {
+            crate::engine::shard::ShardMode::parse(&shard_mode)
+                .map_err(|e| anyhow::anyhow!("`--shard-mode`: {e}"))?;
+        }
+        let deadline_ms = args.get_f64("deadline-ms", 0.0)?;
+        anyhow::ensure!(deadline_ms >= 0.0, "`--deadline-ms` must be >= 0");
         Ok(ExpContext {
             options,
             platforms,
@@ -167,6 +199,10 @@ impl ExpContext {
             rate_hz: args.get_f64("rate", 2.0)?,
             duration_s: args.get_f64("duration", 5.0)?,
             policy: args.get_or("policy", "rr").to_string(),
+            shards,
+            shard_mode,
+            deadline_ms,
+            pim_shards,
             decode_tokens: match args.get("decode-tokens") {
                 Some(_) => Some(args.get_usize("decode-tokens", 24)?),
                 None => None,
@@ -187,7 +223,20 @@ impl ExpContext {
             spec_alphas: self.spec_alphas.clone(),
             trace_factors: self.trace_factors.clone(),
             batch_streams: self.pim_batches.clone(),
+            shard_engines: self.pim_shards.clone(),
         }
+    }
+
+    /// The shard topologies the `serve` experiment sweeps, resolved from
+    /// `--shard-mode` through [`ShardMode::parse`] (the one mode parser);
+    /// anything unparseable — including the default — sweeps both.
+    ///
+    /// [`ShardMode::parse`]: crate::engine::shard::ShardMode::parse
+    pub fn serve_modes(&self) -> Vec<crate::engine::shard::ShardMode> {
+        use crate::engine::shard::ShardMode;
+        ShardMode::parse(&self.shard_mode)
+            .map(|m| vec![m])
+            .unwrap_or_else(|_| vec![ShardMode::Replicate, ShardMode::PipelineDecoder])
     }
 }
 
@@ -217,6 +266,10 @@ impl Default for ExpContext {
             rate_hz: 2.0,
             duration_s: 5.0,
             policy: "rr".to_string(),
+            shards: vec![1, 2, 4],
+            shard_mode: "both".to_string(),
+            deadline_ms: 0.0,
+            pim_shards: Vec::new(),
             decode_tokens: None,
             trace: false,
             amortized: false,
@@ -250,6 +303,10 @@ mod tests {
             OptSpec { name: "trace-factors", value_name: Some("LIST"), help: "", default: None },
             OptSpec { name: "pim-batches", value_name: Some("LIST"), help: "", default: None },
             OptSpec { name: "pareto", value_name: None, help: "", default: None },
+            OptSpec { name: "shards", value_name: Some("LIST"), help: "", default: None },
+            OptSpec { name: "shard-mode", value_name: Some("M"), help: "", default: None },
+            OptSpec { name: "deadline-ms", value_name: Some("MS"), help: "", default: None },
+            OptSpec { name: "pim-shards", value_name: Some("LIST"), help: "", default: None },
         ]
     }
 
@@ -331,6 +388,46 @@ mod tests {
         for bad in ["0", "-2", "4.5", "8,0"] {
             let args = parse(&["pim", "--pim-batches", bad]);
             assert!(ExpContext::from_args(&args).is_err(), "`{bad}` must be rejected");
+        }
+    }
+
+    #[test]
+    fn serve_shard_flags_resolve() {
+        use crate::engine::shard::ShardMode;
+        // defaults: 1/2/4 shards, both topologies, no deadline, no pim axis
+        let ctx = ExpContext::from_args(&parse(&["serve"])).unwrap();
+        assert_eq!(ctx.shards, vec![1, 2, 4]);
+        assert_eq!(ctx.shard_mode, "both");
+        assert_eq!(ctx.serve_modes(), vec![ShardMode::Replicate, ShardMode::PipelineDecoder]);
+        assert_eq!(ctx.deadline_ms, 0.0);
+        assert!(ctx.pim_shards.is_empty());
+        assert_eq!(ctx.lever_grid(), LeverGrid::default_phase2());
+        // explicit flags flow through
+        let a = parse(&[
+            "serve", "--shards", "2,8", "--shard-mode", "pipeline", "--deadline-ms", "250",
+            "--pim-shards", "2,4",
+        ]);
+        let ctx = ExpContext::from_args(&a).unwrap();
+        assert_eq!(ctx.shards, vec![2, 8]);
+        assert_eq!(ctx.serve_modes(), vec![ShardMode::PipelineDecoder]);
+        assert_eq!(ctx.deadline_ms, 250.0);
+        // mode names resolve through ShardMode::parse: shorthands work too
+        let short = ExpContext::from_args(&parse(&["serve", "--shard-mode", "rep"])).unwrap();
+        assert_eq!(short.serve_modes(), vec![ShardMode::Replicate]);
+        assert_eq!(ctx.pim_shards, vec![2, 4]);
+        assert_eq!(ctx.lever_grid().shard_engines, vec![2, 4]);
+        // `none` drops the pim serving axis; bad values are rejected
+        let none = parse(&["pim", "--pim-shards", "none"]);
+        assert!(ExpContext::from_args(&none).unwrap().pim_shards.is_empty());
+        for (flag, bad) in [
+            ("--shards", "0"),
+            ("--shards", "2.5"),
+            ("--shard-mode", "mesh"),
+            ("--deadline-ms", "-5"),
+            ("--pim-shards", "0,4"),
+        ] {
+            let args = parse(&["serve", flag, bad]);
+            assert!(ExpContext::from_args(&args).is_err(), "`{flag} {bad}` must be rejected");
         }
     }
 

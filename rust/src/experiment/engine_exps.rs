@@ -1,19 +1,17 @@
 //! Engine-backed experiments: the PJRT flows (`step`, `control-loop`,
-//! `serve`, `validate`) as registry members.
+//! `validate`) as registry members.
 //!
 //! Unlike the simulator-backed experiments these need a real runtime plus
 //! compiled artifacts. When either is missing the experiment still returns
 //! a passing report whose status table and check read "skipped: no PJRT
 //! runtime" — so `report` covers the whole registry on any machine and CI
 //! exit codes stay meaningful (closes the ROADMAP "Engine-backed
-//! experiments" item).
+//! experiments" item). The `serve` flow is no longer one of them: it runs
+//! simulator-backed (see [`super::serve_exp`]) on every machine.
 
 use super::experiments::slug;
 use super::{ExpContext, Experiment, Report};
-use crate::engine::{
-    run_batcher, run_control_loop, BatcherConfig, ControlLoopConfig, FrameSource, Policy,
-    StepServer, VlaEngine, VlaModel,
-};
+use crate::engine::{run_control_loop, ControlLoopConfig, FrameSource, VlaEngine, VlaModel};
 use crate::profile::PhaseProfiler;
 use crate::report::checks::Check;
 use crate::runtime::Runtime;
@@ -23,7 +21,6 @@ use crate::util::units::{fmt_hz, fmt_time};
 
 const STEP_CHECK: &str = "R-step-runtime";
 const LOOP_CHECK: &str = "R-loop-runtime";
-const SERVE_CHECK: &str = "R-serve-runtime";
 const VALIDATE_CHECK: &str = "R-validate-runtime";
 
 /// Outcome of trying to stand the real engine up.
@@ -190,75 +187,6 @@ impl Experiment for ControlLoop {
         rep.metric("achieved_hz", r.achieved_hz);
         rep.metric("amortized_hz", r.amortized_hz);
         rep.metric("deadline_misses", r.deadline_misses as f64);
-        Ok(rep)
-    }
-}
-
-struct EngineServer<'a>(&'a VlaEngine);
-
-impl StepServer for EngineServer<'_> {
-    fn serve(
-        &mut self,
-        frame: &crate::engine::Frame,
-        prompt: &[i32],
-    ) -> anyhow::Result<std::time::Duration> {
-        Ok(self.0.step(frame, prompt)?.times.total())
-    }
-}
-
-/// Multi-stream serving through the batcher (real engine).
-pub struct Serve;
-
-impl Experiment for Serve {
-    fn name(&self) -> &'static str {
-        "serve"
-    }
-
-    fn description(&self) -> &'static str {
-        "multi-stream serving through the batcher (real engine)"
-    }
-
-    fn run(&self, ctx: &ExpContext) -> anyhow::Result<Report> {
-        let engine = match load_engine(ctx)? {
-            EngineLoad::Ready(engine) => engine,
-            EngineLoad::Unavailable(why) => return Ok(skipped(self.name(), SERVE_CHECK, &why)),
-        };
-        let mut rep = Report::new(self.name());
-        ran(&mut rep, self.name(), SERVE_CHECK);
-        let m = engine.model.manifest.clone();
-        let cfg = BatcherConfig {
-            streams: ctx.streams,
-            rate_hz: ctx.rate_hz,
-            duration_s: ctx.duration_s,
-            policy: match ctx.policy.as_str() {
-                "fifo" => Policy::Fifo,
-                _ => Policy::RoundRobin,
-            },
-            seed: ctx.seed,
-        };
-        let frames = FrameSource::new(1, m.vision.patches, m.vision.patch_dim, cfg.seed);
-        let prompt = frames.prompt(0, m.workload.prompt_tokens, m.decoder.vocab);
-        let mut server = EngineServer(&engine);
-        let r = run_batcher(&mut server, m.vision.patches, m.vision.patch_dim, &prompt, &cfg)?;
-        let mut t = Table::new("Serving (real engine)", &["metric", "value"]).left_first();
-        for (k, v) in [
-            ("served", format!("{}", r.served)),
-            ("throughput", format!("{:.2} req/s", r.throughput)),
-            ("max burst", format!("{}", r.max_burst)),
-            ("queue delay p50", fmt_time(r.queue_delay.p50)),
-            ("queue delay p99", fmt_time(r.queue_delay.p99)),
-            ("service p50", fmt_time(r.service.p50)),
-            ("service p99", fmt_time(r.service.p99)),
-        ] {
-            t.row(vec![k.to_string(), v]);
-        }
-        rep.push_table("serve", t);
-        rep.note(format!(
-            "per-stream arrived: {:?} | served: {:?}",
-            r.per_stream_arrived, r.per_stream_served
-        ));
-        rep.metric("throughput_req_s", r.throughput);
-        rep.metric("served", r.served as f64);
         Ok(rep)
     }
 }

@@ -20,6 +20,7 @@
 
 use super::lever::expected_accepted;
 use super::{Lever, LeverGroup, Scenario};
+use crate::engine::shard::{link_demand_bw, ShardMode, ShardModel};
 use crate::hw::Platform;
 use crate::model::vla::VlaConfig;
 use crate::sim::energy;
@@ -86,13 +87,20 @@ pub struct ScenarioResult {
     pub pim_util: f64,
     /// Lockstep streams served (1 unless a batching lever is stacked).
     pub streams: u64,
-    /// Aggregate actions/s across all streams (== `amortized_hz` at b1).
+    /// Serving engines (1 unless a shard lever is stacked).
+    pub engines: u64,
+    /// Aggregate actions/s across all streams and engines (==
+    /// `amortized_hz` at b1 on one engine).
     pub aggregate_hz: f64,
-    /// Energy per control step, dynamic + static, all streams (J).
+    /// Energy per control step, dynamic + static, all streams AND engines
+    /// (J) — deployment-level, like `aggregate_hz` and the footprint:
+    /// replicate shards scale it by their engine count.
     pub total_j: f64,
-    /// Energy per emitted action: `total_j / (streams * horizon)` (J).
+    /// Energy per emitted action (J): `total_j` over the actions the
+    /// deployment emits per step window (replicate multiplies both, so
+    /// this is topology-invariant).
     pub j_per_action: f64,
-    /// Average power draw over the step (W).
+    /// Average power draw of the whole deployment over the step (W).
     pub avg_watts: f64,
     /// Lowered weights + KV (+ draft) footprint (GB).
     pub footprint_gb: f64,
@@ -323,20 +331,63 @@ impl Evaluator {
         // once), which is the batching lever's whole point. At streams == 1
         // the `* 1.0` terms are bitwise no-ops, preserving the legacy path.
         let s = streams as f64;
+        // the serving shard lever transforms the decode phase only:
+        // pipelining splits the decoder pass across engines (plus hop
+        // cost), replication contends R weight streams on the shared
+        // off-chip link. Shard-free scenarios take the untouched-dc path —
+        // every expression below is bitwise the pre-shard evaluator.
+        let shard = match scenario.lever(LeverGroup::Serving) {
+            Some(Lever::Shard { mode, engines }) => {
+                ShardModel { mode: *mode, engines: (*engines).max(1) }
+            }
+            _ => ShardModel::single(),
+        };
+        let mut decode_time = dc.time;
+        let mut agg_engines = 1u64;
+        let mut idle_engines = 1u64;
+        if shard.engines > 1 {
+            match shard.mode {
+                ShardMode::PipelineDecoder => {
+                    decode_time = shard.decode_time(decode_time, cfg.shape.decode_tokens);
+                    // every pipeline stage idles over the one logical step
+                    idle_engines = shard.engines;
+                }
+                ShardMode::Replicate => {
+                    let step0 = (self.base.vision.time + self.base.prefill.time) * s
+                        + decode_time
+                        + self.base.action.time * s;
+                    let demand = link_demand_bw(scenario, &cfg, step0);
+                    decode_time *= shard.contention(demand, self.platform.mem.effective_bw());
+                    // each replica produces its own streams' actions
+                    agg_engines = shard.engines;
+                }
+            }
+        }
         let total = (self.base.vision.time + self.base.prefill.time) * s
-            + dc.time
+            + decode_time
             + self.base.action.time * s;
         let horizon = self.target.action.horizon.max(1);
         let amortized_hz = horizon as f64 / total;
         let dynamic_j =
             (self.base_vision_j + self.base_prefill_j) * s + dc.energy + self.base_action_j * s;
-        let total_j = dynamic_j + self.idle_watts * total;
+        // one engine's energy over the step: every pipeline stage idles for
+        // the one logical step, so its static share is R x
+        let engine_j = if idle_engines > 1 {
+            dynamic_j + self.idle_watts * idle_engines as f64 * total
+        } else {
+            dynamic_j + self.idle_watts * total
+        };
+        // deployment-level energy: replicate rows scale it by the engine
+        // count, matching their R x aggregate_hz and footprint (J/action is
+        // invariant — R x the energy produces R x the actions). At one
+        // engine the `* 1.0` is a bitwise no-op.
+        let total_j = agg_engines as f64 * engine_j;
         let footprint = scenario.memory_footprint(&self.target, &self.draft);
         Ok(ScenarioResult {
             scenario: scenario.name.clone(),
             platform: self.platform.name.clone(),
             model: self.target.name.clone(),
-            decode_time: dc.time,
+            decode_time,
             step_latency: total,
             control_hz: 1.0 / total,
             amortized_hz,
@@ -344,9 +395,10 @@ impl Evaluator {
             bound: dc.bound(),
             pim_util: dc.pim_frac,
             streams,
-            aggregate_hz: streams as f64 * amortized_hz,
+            engines: shard.engines,
+            aggregate_hz: (streams * agg_engines) as f64 * amortized_hz,
             total_j,
-            j_per_action: total_j / (streams * horizon) as f64,
+            j_per_action: total_j / (agg_engines * streams * horizon) as f64,
             avg_watts: total_j / total.max(1e-12),
             footprint_gb: footprint / GB,
             capacity_gb: self.platform.mem.capacity_gb(),
@@ -632,6 +684,68 @@ mod tests {
         // W4 residency packs it back in
         let w4 = ev.eval(&Scenario::of(vec![Lever::PimWeightStream { bits: 4 }])).unwrap();
         assert!(w4.fits_capacity, "W4 30B fits 36 GB: {} GB", w4.footprint_gb);
+    }
+
+    #[test]
+    fn shard_levers_transform_the_step() {
+        let ev = evaluator(&platform::orin());
+        let base = ev.eval(&Scenario::baseline()).unwrap();
+        assert_eq!(base.engines, 1);
+        // MolmoAct's decode weight stream is ~3/4 of Orin's link, so even
+        // two replicas contend: the per-stream step stretches, aggregate
+        // gains stay short of 2x, and footprint pays for both copies
+        let rep2 = ev
+            .eval(&Scenario::of(vec![Lever::Shard { mode: ShardMode::Replicate, engines: 2 }]))
+            .unwrap();
+        assert_eq!(rep2.engines, 2);
+        assert!(rep2.step_latency > base.step_latency, "two 7B streams contend on Orin");
+        let gain2 = rep2.aggregate_hz / base.aggregate_hz;
+        assert!(gain2 > 1.0 && gain2 < 2.0, "saturated replicate-2 gain {gain2}");
+        assert!((rep2.footprint_gb / base.footprint_gb - 2.0).abs() < 1e-9);
+        // replicate-4: deeper saturation, monotone aggregate, bounded slow-down
+        let rep4 = ev
+            .eval(&Scenario::of(vec![Lever::Shard { mode: ShardMode::Replicate, engines: 4 }]))
+            .unwrap();
+        assert!(rep4.step_latency > rep2.step_latency, "4 weight streams contend harder");
+        let gain4 = rep4.aggregate_hz / base.aggregate_hz;
+        assert!(gain4 >= gain2 && gain4 < 4.0, "saturated replicate gain {gain4}");
+        assert!(rep4.speedup_vs_baseline >= 1.0 / 4.0, "contention bounded by R");
+        // a tiny model's stream is a rounding error on the link: replicate
+        // is contention-free — per-stream step BITWISE unchanged, aggregate
+        // exactly 2x
+        let tiny_ev = Evaluator::new(
+            &platform::orin(),
+            &opts(),
+            &crate::model::vla::tiny_test_config(),
+            &scaled_vla(2.0),
+        );
+        let tiny_base = tiny_ev.eval(&Scenario::baseline()).unwrap();
+        let tiny_rep2 = tiny_ev
+            .eval(&Scenario::of(vec![Lever::Shard { mode: ShardMode::Replicate, engines: 2 }]))
+            .unwrap();
+        assert_eq!(tiny_rep2.step_latency.to_bits(), tiny_base.step_latency.to_bits());
+        assert!((tiny_rep2.aggregate_hz / tiny_base.aggregate_hz - 2.0).abs() < 1e-9);
+        // replicate energy is deployment-level, matching the 2x aggregate
+        // and footprint: total/avg-W double, J/action is invariant
+        assert!((tiny_rep2.total_j / tiny_base.total_j - 2.0).abs() < 1e-9);
+        assert!((tiny_rep2.avg_watts / tiny_base.avg_watts - 2.0).abs() < 1e-9);
+        assert!((tiny_rep2.j_per_action / tiny_base.j_per_action - 1.0).abs() < 1e-9);
+        // pipeline-4 cuts decode ~4x (minus hop cost) on one weight copy
+        let pipe4 = ev
+            .eval(&Scenario::of(vec![
+                Lever::Shard { mode: ShardMode::PipelineDecoder, engines: 4 },
+            ]))
+            .unwrap();
+        assert!(pipe4.decode_time < base.decode_time / 2.0);
+        assert!(pipe4.decode_time > base.decode_time / 8.0, "hop cost bounds the win");
+        assert!(pipe4.control_hz > base.control_hz);
+        assert_eq!(pipe4.footprint_gb.to_bits(), base.footprint_gb.to_bits());
+        // four stages idle over one logical step: latency is bought with
+        // energy (4 x static power over the step always exceeds 1 x over
+        // the longer one, since the non-decode phases don't shrink)
+        assert!(pipe4.total_j > base.total_j, "four idling stages cost energy");
+        assert!(pipe4.j_per_action > base.j_per_action);
+        assert!(pipe4.avg_watts > base.avg_watts);
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! ones `sim::codesign` has always modeled; the three `Pim*` levers are the
 //! paper's forward-looking hardware/software co-design points.
 
+use crate::engine::shard::ShardMode;
 use crate::hw::{DType, Platform};
 use crate::model::vla::VlaConfig;
 use crate::sim::simulator::SimOptions;
@@ -54,6 +55,8 @@ pub enum LeverGroup {
     Speculation,
     /// Multi-robot batching.
     Batching,
+    /// Serving topology (multi-engine sharding).
+    Serving,
 }
 
 /// One co-design lever.
@@ -84,6 +87,12 @@ pub enum Lever {
     /// Batched multi-robot serving: `streams` robots decode in lockstep;
     /// weights are read once per step, per-stream latency is the metric.
     Batch { streams: u64 },
+    /// Multi-engine shard serving (`engine::shard`): replicate the engine
+    /// (`R` full weight copies contending for the shared link, aggregate
+    /// throughput `R`x until bandwidth saturation) or pipeline the decoder
+    /// across `R` engines (weights shard `1/R` per engine, per-token
+    /// latency = max stage time + inter-stage hop).
+    Shard { mode: ShardMode, engines: u64 },
 }
 
 impl Lever {
@@ -98,6 +107,8 @@ impl Lever {
             Lever::Speculate { gamma, alpha } => format!("spec(g{gamma},a{alpha})"),
             Lever::PimDraft { gamma, alpha } => format!("spec@PIM(g{gamma},a{alpha})"),
             Lever::Batch { streams } => format!("b{streams}"),
+            Lever::Shard { mode: ShardMode::Replicate, engines } => format!("rep{engines}"),
+            Lever::Shard { mode: ShardMode::PipelineDecoder, engines } => format!("pipe{engines}"),
         }
     }
 
@@ -108,6 +119,7 @@ impl Lever {
             Lever::CompressTrace { .. } => LeverGroup::Trace,
             Lever::Speculate { .. } | Lever::PimDraft { .. } => LeverGroup::Speculation,
             Lever::Batch { .. } => LeverGroup::Batching,
+            Lever::Shard { .. } => LeverGroup::Serving,
         }
     }
 
@@ -138,6 +150,12 @@ impl Lever {
                 ((*gamma as f64 + 2.0) / expected_accepted(*gamma, *alpha)).max(1.0)
             }
             Lever::Batch { streams } => (*streams).max(1) as f64,
+            // a shard topology never slows a step beyond Rx: replicate
+            // contention is clamped to R by construction, and an R-stage
+            // pipeline charges (R-1) hops per token, each below the
+            // per-token cost floor — so even a hop-dominated deep pipeline
+            // stays within Rx of the unsharded step
+            Lever::Shard { engines, .. } => (*engines).max(1) as f64,
             _ => 1.02,
         }
     }
@@ -225,6 +243,27 @@ mod tests {
         // near-perfect acceptance floors at 1 (speculation can only help)
         let ideal = Lever::Speculate { gamma: 2, alpha: 0.99 };
         assert!((1.0..1.5).contains(&ideal.modeled_overhead()));
+    }
+
+    #[test]
+    fn shard_lever_surface() {
+        let rep = Lever::Shard { mode: ShardMode::Replicate, engines: 4 };
+        let pipe = Lever::Shard { mode: ShardMode::PipelineDecoder, engines: 4 };
+        assert_eq!(rep.short(), "rep4");
+        assert_eq!(pipe.short(), "pipe4");
+        assert_eq!(rep.group(), LeverGroup::Serving);
+        assert_eq!(pipe.group(), LeverGroup::Serving);
+        assert!(!rep.requires_pim() && !pipe.requires_pim());
+        assert!(rep.valid_on(&platform::orin()), "sharding needs no PIM hardware");
+        assert_eq!(rep.modeled_overhead(), 4.0, "replicate contention bounded by R");
+        assert_eq!(pipe.modeled_overhead(), 4.0, "hop costs bounded by R per-token floors");
+        // sharding transforms neither the workload config nor the options
+        let mut c = tiny_test_config();
+        rep.apply_config(&mut c);
+        assert_eq!(c, tiny_test_config());
+        let mut o = SimOptions::default();
+        pipe.apply_options(&mut o);
+        assert_eq!(o.pim_scope, SimOptions::default().pim_scope);
     }
 
     #[test]

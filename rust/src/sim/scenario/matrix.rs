@@ -10,6 +10,7 @@
 //! | trace      | — · one per `g.trace_factors` (0.5x)                      |
 //! | spec/batch | — · spec(γ,α) per γ×α point (4×0.7) · spec@PIM(γ,α) per   |
 //! |            | γ×α point · b`s` per `g.batch_streams` (b8)               |
+//! | serving    | — · rep`R` · pipe`R` per `g.shard_engines` (empty)        |
 //!
 //! Speculation and batching share one axis because they are mutually
 //! exclusive (verification already batches the target pass), so the axis is
@@ -17,12 +18,15 @@
 //!
 //! Validity rules (enforced by [`Scenario::validate`]): the `@PIM` values
 //! need a PIM device, and a PIM-resident draft claims the PIM units, so it
-//! excludes the weight/KV residency values. Closed form of the valid count,
-//! with `T = 1 + |trace|`, `G = |γ|·|α|`, `B = |batch|`:
+//! excludes the weight/KV residency values. The serving axis (shard
+//! topologies, from `engine::shard`) is valid everywhere and composes with
+//! everything, so it multiplies the count. Closed form of the valid total,
+//! with `T = 1 + |trace|`, `G = |γ|·|α|`, `B = |batch|`,
+//! `S = 1 + 2·|shards|`:
 //!
-//! - non-PIM platform: `3 (weights) x 2 (kv) x T x (1 + G + B)`
-//! - PIM platform:     `5 x 3 x T x (1 + G + B)`  (SoC spec/batch branch)
-//!                     `+ 3 x 2 x T x G`          (PIM-draft branch)
+//! - non-PIM platform: `3 (weights) x 2 (kv) x T x (1 + G + B) x S`
+//! - PIM platform:     `[5 x 3 x T x (1 + G + B)`  (SoC spec/batch branch)
+//!                     `+ 3 x 2 x T x G] x S`      (PIM-draft branch)
 //!
 //! At the degenerate [`LeverGrid::legacy`] (γ×α = {4}×{0.7}, trace {0.5},
 //! no batch axis) this is the original 72 (PIM) / 24 (SoC) matrix, element
@@ -31,6 +35,7 @@
 //! cannot silently shrink coverage.
 
 use super::{Lever, Scenario};
+use crate::engine::shard::ShardMode;
 use crate::hw::Platform;
 
 /// Canonical speculation depth of the matrix (tokens drafted per round).
@@ -56,6 +61,10 @@ pub struct LeverGrid {
     pub trace_factors: Vec<f64>,
     /// Batched-stream counts; empty = no batch axis.
     pub batch_streams: Vec<u64>,
+    /// Shard-serving engine counts; each value contributes a replicate AND
+    /// a pipeline-decoder point to the serving axis. Empty = no shard axis
+    /// (the pre-serving matrix, bit for bit).
+    pub shard_engines: Vec<u64>,
 }
 
 impl LeverGrid {
@@ -68,6 +77,7 @@ impl LeverGrid {
             spec_alphas: vec![SPEC_ALPHA],
             trace_factors: vec![TRACE_FACTOR],
             batch_streams: Vec::new(),
+            shard_engines: Vec::new(),
         }
     }
 
@@ -128,6 +138,20 @@ fn spec_batch_axis(grid: &LeverGrid) -> Vec<Option<Lever>> {
     v
 }
 
+/// The serving axis: none, then replicate-R, then pipeline-R per engine
+/// count. Valid on every platform (sharding needs no PIM hardware), so it
+/// multiplies the closed form cleanly.
+fn shard_axis(grid: &LeverGrid) -> Vec<Option<Lever>> {
+    let mut v = vec![None];
+    for &engines in &grid.shard_engines {
+        v.push(Some(Lever::Shard { mode: ShardMode::Replicate, engines }));
+    }
+    for &engines in &grid.shard_engines {
+        v.push(Some(Lever::Shard { mode: ShardMode::PipelineDecoder, engines }));
+    }
+    v
+}
+
 /// Every valid scenario for `platform` at the grid's parameter points, in
 /// deterministic axis order. The first entry is always the baseline (all
 /// axes at `None`).
@@ -137,10 +161,13 @@ pub fn scenario_matrix_grid(platform: &Platform, grid: &LeverGrid) -> Vec<Scenar
         for k in &kv_axis() {
             for t in &trace_axis(grid) {
                 for s in &spec_batch_axis(grid) {
-                    let levers: Vec<Lever> = [w, k, t, s].into_iter().cloned().flatten().collect();
-                    let scenario = Scenario::of(levers);
-                    if scenario.validate(platform).is_ok() {
-                        out.push(scenario);
+                    for sh in &shard_axis(grid) {
+                        let levers: Vec<Lever> =
+                            [w, k, t, s, sh].into_iter().cloned().flatten().collect();
+                        let scenario = Scenario::of(levers);
+                        if scenario.validate(platform).is_ok() {
+                            out.push(scenario);
+                        }
                     }
                 }
             }
@@ -163,10 +190,14 @@ pub fn matrix_size_grid(platform: &Platform, grid: &LeverGrid) -> usize {
     let t = 1 + grid.trace_factors.len();
     let g = grid.spec_gammas.len() * grid.spec_alphas.len();
     let b = grid.batch_streams.len();
+    // the serving axis (none + replicate-R + pipeline-R per engine count)
+    // composes with every other lever on every platform, so it multiplies
+    // the whole count
+    let sh = 1 + 2 * grid.shard_engines.len();
     if platform.mem.pim.is_some() {
-        5 * 3 * t * (1 + g + b) + 3 * 2 * t * g
+        (5 * 3 * t * (1 + g + b) + 3 * 2 * t * g) * sh
     } else {
-        3 * 2 * t * (1 + g + b)
+        3 * 2 * t * (1 + g + b) * sh
     }
 }
 
@@ -214,6 +245,7 @@ mod tests {
             spec_alphas: vec![0.5, 0.7, 0.9],
             trace_factors: vec![0.25, 0.5],
             batch_streams: vec![4, 16],
+            shard_engines: Vec::new(),
         };
         // T = 3, G = 9, B = 2
         let pim = scenario_matrix_grid(&platform::orin_pim(), &grid);
@@ -229,6 +261,30 @@ mod tests {
         }
         assert!(soc.iter().any(|s| s.name.contains("b16")));
         assert!(soc.iter().any(|s| s.name.contains("0.25xCoT")));
+    }
+
+    #[test]
+    fn shard_axis_multiplies_the_closed_form() {
+        // |shards| = 2 -> S = 5: the serving axis composes with every other
+        // lever on every platform (no validity interactions)
+        let grid = LeverGrid { shard_engines: vec![2, 4], ..LeverGrid::default_phase2() };
+        for p in [platform::orin(), platform::orin_pim()] {
+            let m = scenario_matrix_grid(&p, &grid);
+            assert_eq!(m.len(), matrix_size_grid(&p, &grid), "{}", p.name);
+            let base = matrix_size_grid(&p, &LeverGrid::default_phase2());
+            assert_eq!(m.len(), base * 5, "{}", p.name);
+            // every shard point surfaces, replicate and pipeline alike
+            for tag in ["rep2", "rep4", "pipe2", "pipe4"] {
+                assert!(
+                    m.iter().any(|s| s.name.split(" + ").any(|part| part == tag)),
+                    "{}: `{tag}` missing from the serving axis",
+                    p.name
+                );
+            }
+        }
+        // and the empty shard axis is the pre-serving matrix, bit for bit
+        let legacy = scenario_matrix_grid(&platform::orin_pim(), &LeverGrid::default_phase2());
+        assert_eq!(legacy.len(), 102);
     }
 
     #[test]

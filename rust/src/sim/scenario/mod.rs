@@ -6,9 +6,11 @@
 //! space a value:
 //!
 //! - a [`Lever`] is one technique — weight quantization, KV quantization,
-//!   trace compression, speculative decoding, batching, and the three
+//!   trace compression, speculative decoding, batching, the three
 //!   PIM-residency levers (weight-streaming on PIM, KV-resident-in-PIM
-//!   attention, draft-model-on-PIM speculation);
+//!   attention, draft-model-on-PIM speculation), and the serving shard
+//!   topologies of [`engine::shard`](crate::engine::shard) (replicate the
+//!   engine / pipeline the decoder);
 //! - a [`Scenario`] is a named stack of levers (at most one per
 //!   [`LeverGroup`]) that *lowers* to a transformed
 //!   [`VlaConfig`](crate::model::VlaConfig) + [`SimOptions`] + a decode-cost
@@ -102,7 +104,12 @@ impl Scenario {
     /// at their quantized widths, the full-trace KV cache (trace compression
     /// shortens it, KV8 halves its width, batching multiplies it per
     /// stream), and — when a speculation lever places one — the draft
-    /// model's weights and KV.
+    /// model's weights and KV. A replicate shard lever multiplies the whole
+    /// footprint by its engine count (each replica holds a full weight copy
+    /// and its own KV on the shared memory system); a pipelined decoder
+    /// partitions ONE copy across its stages, so the device total is
+    /// unchanged (the per-engine 1/R view lives in
+    /// [`ShardModel`](crate::engine::shard::ShardModel)).
     pub fn memory_footprint(&self, target: &VlaConfig, draft: &VlaConfig) -> f64 {
         let mut cfg = target.clone();
         for lever in &self.levers {
@@ -121,7 +128,13 @@ impl Scenario {
             let dseq = (draft.shape.prefill_len() + draft.shape.decode_tokens) as f64;
             total += draft.weight_footprint_bytes() + draft.decoder.kv_bytes_per_token() * dseq;
         }
-        total
+        match self.lever(LeverGroup::Serving) {
+            Some(Lever::Shard { mode, engines }) => {
+                crate::engine::shard::ShardModel { mode: *mode, engines: *engines }
+                    .device_footprint_bytes(total)
+            }
+            _ => total,
+        }
     }
 
     /// Capacity-validity rule: does the lowered scenario fit `platform`'s
@@ -181,6 +194,13 @@ impl Scenario {
             anyhow::ensure!(
                 self.lever(LeverGroup::Speculation).is_none(),
                 "scenario `{}`: batching does not compose with speculative decoding",
+                self.name
+            );
+        }
+        if let Some(Lever::Shard { engines, .. }) = self.lever(LeverGroup::Serving) {
+            anyhow::ensure!(
+                *engines >= 1,
+                "scenario `{}`: a shard topology needs at least one engine",
                 self.name
             );
         }
@@ -283,6 +303,35 @@ mod tests {
         let kv_one = target.decoder.kv_bytes_per_token()
             * (target.shape.prefill_len() + target.shape.decode_tokens) as f64;
         assert!((b8 - base - 7.0 * kv_one).abs() < 1.0, "b8 adds exactly 7 extra KV copies");
+    }
+
+    #[test]
+    fn shard_lever_footprint_and_validity() {
+        use crate::engine::shard::ShardMode;
+        use crate::model::molmoact::molmoact_7b;
+        use crate::model::scaling::scaled_vla;
+        let target = molmoact_7b();
+        let draft = scaled_vla(2.0);
+        let base = Scenario::baseline().memory_footprint(&target, &draft);
+        // replicate-R pays for R full copies on the shared memory system
+        let rep4 =
+            Scenario::of(vec![Lever::Shard { mode: ShardMode::Replicate, engines: 4 }]);
+        assert!((rep4.memory_footprint(&target, &draft) / base - 4.0).abs() < 1e-9);
+        // a pipelined decoder partitions ONE copy: device total unchanged
+        let pipe4 =
+            Scenario::of(vec![Lever::Shard { mode: ShardMode::PipelineDecoder, engines: 4 }]);
+        assert_eq!(pipe4.memory_footprint(&target, &draft).to_bits(), base.to_bits());
+        // sharding needs no PIM hardware and composes with the other axes
+        assert!(rep4.validate(&platform::orin()).is_ok());
+        let stacked = Scenario::of(vec![
+            Lever::QuantizeWeights { bits: 4 },
+            Lever::Shard { mode: ShardMode::PipelineDecoder, engines: 2 },
+        ]);
+        assert!(stacked.validate(&platform::orin()).is_ok());
+        assert_eq!(stacked.name, "W4 + pipe2");
+        // zero engines is structurally invalid
+        let zero = Scenario::of(vec![Lever::Shard { mode: ShardMode::Replicate, engines: 0 }]);
+        assert!(zero.validate(&platform::orin()).is_err());
     }
 
     #[test]

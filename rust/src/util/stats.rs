@@ -31,7 +31,11 @@ impl Summary {
             };
         }
         let mut sorted: Vec<f64> = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: a stray NaN sample (e.g. a 0/0 rate from an empty
+        // serving window) sorts to one end (sign-dependent: -NaN first,
+        // +NaN last) and taints the adjacent order statistics, instead of
+        // panicking mid-sort as partial_cmp().unwrap() did
+        sorted.sort_by(f64::total_cmp);
         let n = sorted.len();
         let mean = sorted.iter().sum::<f64>() / n as f64;
         let var = if n > 1 {
@@ -75,10 +79,11 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
     sorted[lo] * (1.0 - frac) + sorted[hi] * frac
 }
 
-/// Percentile of an unsorted slice.
+/// Percentile of an unsorted slice. NaN samples take a total order (sign
+/// bit decides the end they sort to) — never a panic.
 pub fn percentile(samples: &[f64], p: f64) -> f64 {
     let mut sorted = samples.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(f64::total_cmp);
     percentile_sorted(&sorted, p)
 }
 
@@ -155,6 +160,22 @@ mod tests {
     #[test]
     fn percentile_unsorted_input() {
         assert!((percentile(&[5.0, 1.0, 3.0], 50.0) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic() {
+        // regression: the partial_cmp().unwrap() sort used to panic on NaN.
+        // total_cmp gives NaN a defined slot instead — positive NaN sorts
+        // last (tainting max), negative NaN first (tainting min)
+        let s = Summary::of(&[2.0, f64::NAN, 1.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.p50, 2.0);
+        assert!(s.max.is_nan());
+        assert!(percentile(&[1.0, f64::NAN, 0.5], 0.0) == 0.5);
+        let neg = Summary::of(&[2.0, -f64::NAN, 1.0]);
+        assert!(neg.min.is_nan());
+        assert_eq!(neg.max, 2.0);
     }
 
     #[test]

@@ -87,7 +87,9 @@ fn report_writes_files() {
         "pim_capacity.csv",
         "step_status.md",
         "control_loop_status.md",
-        "serve_status.md",
+        "serve_topology.md",
+        "serve_matrix.md",
+        "serve_matrix.csv",
         "validate_status.md",
         "checks.txt",
     ] {
@@ -142,11 +144,36 @@ fn pim_grid_and_pareto_flags_ok() {
 
 #[test]
 fn engine_subcommands_skip_without_runtime_or_run() {
-    // engine-backed experiments are registry members now: without a PJRT
+    // engine-backed experiments are registry members: without a PJRT
     // runtime they report "skipped" and exit 0; with one they run for real
     // (and `step` exits 0 on success too) — either way the exit code is 0.
     assert_eq!(run(&["step"]).unwrap(), 0);
-    assert_eq!(run(&["serve", "--duration", "1"]).unwrap(), 0);
+}
+
+#[test]
+fn serve_runs_simulator_backed_without_pjrt() {
+    // `serve` is simulator-backed since the shard model landed: it must RUN
+    // (checks SV1..SV4 gate the exit code), never report "skipped"
+    assert_eq!(run(&["serve", "--stride", "16", "--duration", "2"]).unwrap(), 0);
+    // shard flags sweep both topologies with a deadline
+    let sharded = [
+        "serve", "--stride", "16", "--duration", "2", "--shards", "1,2,4", "--shard-mode",
+        "pipeline", "--deadline-ms", "200",
+    ];
+    assert_eq!(run(&sharded).unwrap(), 0);
+    // malformed shard flags are context-build errors
+    assert!(run(&["serve", "--shard-mode", "mesh"]).is_err());
+    assert!(run(&["serve", "--shards", "0"]).is_err());
+}
+
+#[test]
+fn pim_shard_axis_from_cli() {
+    // `--pim-shards` adds the serving axis to the scenario matrix; the
+    // S1..S5 checks (closed form included) gate the exit code
+    let args = [
+        "pim", "--stride", "32", "--pim-sizes", "7", "--top", "3", "--pim-shards", "2",
+    ];
+    assert_eq!(run(&args).unwrap(), 0);
 }
 
 #[test]

@@ -66,11 +66,57 @@ fn every_experiment_runs_and_emits() {
     }
     let (_, ok) = sink.finish().unwrap();
     assert!(ok);
-    let expect_files =
-        ["table1.md", "fig2.csv", "fig3.md", "codesign_matrix.md", "energy.csv", "pim_matrix.csv"];
+    let expect_files = [
+        "table1.md",
+        "fig2.csv",
+        "fig3.md",
+        "codesign_matrix.md",
+        "energy.csv",
+        "pim_matrix.csv",
+        "serve_matrix.csv",
+        "serve_topology.md",
+    ];
     for f in expect_files {
         assert!(dir.join(f).exists(), "missing {f}");
     }
+}
+
+/// The `serve` experiment is simulator-backed: it must RUN without a PJRT
+/// runtime (no "skipped" status table), emit the ranked shard matrix with
+/// one row per sweep cell, and pass its SV1..SV4 shard-model checks.
+#[test]
+fn serve_experiment_runs_without_pjrt_and_checks_pass() {
+    let ctx = ExpContext {
+        options: SimOptions { decode_stride: 32, ..Default::default() },
+        shards: vec![1, 2, 4],
+        shard_mode: "both".to_string(),
+        deadline_ms: 200.0,
+        duration_s: 2.0,
+        top: 0,
+        ..Default::default()
+    };
+    let rep = experiment::by_name("serve").unwrap().run(&ctx).unwrap();
+    assert!(rep.passed(), "serve checks must pass");
+    let ids: Vec<&str> = rep.checks.iter().map(|c| c.id).collect();
+    for want in [
+        "SV1-replicate-monotone",
+        "SV2-pipeline-weights",
+        "SV3-single-shard-bitwise",
+        "SV4-arrival-conservation",
+    ] {
+        assert!(ids.contains(&want), "missing check {want}");
+    }
+    // no skipped-status table anywhere — the serving path is alive
+    for (slug, t) in rep.tables() {
+        assert!(!slug.ends_with("_status"), "serve must not skip: {slug}");
+        assert!(t.n_rows() > 0, "{slug} is empty");
+    }
+    // topologies: rep1/rep2/rep4 + pipe2/pipe4 (pipe1 collapses into rep1);
+    // cells = topologies x 3 stream points x 3 rates, all in the matrix
+    let (_, topo) = rep.tables().find(|(s, _)| *s == "serve_topology").unwrap();
+    assert_eq!(topo.n_rows(), 5);
+    let (_, matrix) = rep.tables().find(|(s, _)| *s == "serve_matrix").unwrap();
+    assert_eq!(matrix.n_rows(), 5 * 3 * 3);
 }
 
 /// The refactor of `sim::codesign` onto the scenario engine must reproduce

@@ -120,6 +120,7 @@ fn serving_real_engine_round_robin() {
             duration_s: 2.0,
             policy: Policy::RoundRobin,
             seed: 9,
+            deadline_s: None,
         },
     )
     .unwrap();

@@ -2,6 +2,10 @@
 //! mini framework (`util::prop`): randomized operators, platforms, and
 //! workload shapes must satisfy physical/monotonicity laws.
 
+use vla_char::engine::{
+    run_batcher, run_shard_batcher, BatcherConfig, Frame, Policy, ShardMode, ShardModel,
+    StepServer,
+};
 use vla_char::hw::{platform, DType};
 use vla_char::model::layer::BlockDims;
 use vla_char::model::molmoact::molmoact_7b;
@@ -223,6 +227,14 @@ fn random_soc_scenario(rng: &mut Prng) -> Vec<Lever> {
         2 => levers.push(Lever::Batch { streams: rng.uniform_u64(2, 17) }),
         _ => {}
     }
+    // optional serving topology
+    match rng.uniform_u64(0, 3) {
+        1 => levers
+            .push(Lever::Shard { mode: ShardMode::Replicate, engines: rng.uniform_u64(2, 9) }),
+        2 => levers
+            .push(Lever::Shard { mode: ShardMode::PipelineDecoder, engines: rng.uniform_u64(2, 9) }),
+        _ => {}
+    }
     levers
 }
 
@@ -231,7 +243,7 @@ fn random_soc_scenario(rng: &mut Prng) -> Vec<Lever> {
 /// batch — each strictly shrinks one footprint term, none grows any.
 fn shrink_scenario(rng: &mut Prng, levers: &[Lever]) -> Vec<Lever> {
     let mut out: Vec<Lever> = levers.to_vec();
-    match rng.uniform_u64(0, 4) {
+    match rng.uniform_u64(0, 5) {
         0 => {
             // W- ladder: none -> W8 -> W4
             if let Some(w) = out.iter_mut().find(|l| matches!(l, Lever::QuantizeWeights { .. })) {
@@ -245,6 +257,15 @@ fn shrink_scenario(rng: &mut Prng, levers: &[Lever]) -> Vec<Lever> {
             for l in out.iter_mut() {
                 if let Lever::Batch { streams } = l {
                     *streams = (*streams / 2).max(1);
+                }
+            }
+        }
+        3 => {
+            // halve the replica count: footprint is linear in replicate
+            // engines (a pipeline's device footprint is R-invariant)
+            for l in out.iter_mut() {
+                if let Lever::Shard { mode: ShardMode::Replicate, engines } = l {
+                    *engines = (*engines / 2).max(1);
                 }
             }
         }
@@ -293,6 +314,109 @@ fn capacity_validity_monotone_in_footprint() {
 }
 
 #[test]
+fn replicate_aggregate_monotone_in_engine_count() {
+    // aggregate throughput R / (other + decode * max(1, R*q)) is monotone
+    // non-decreasing in R for ANY positive step split and link demand
+    // ratio: below saturation it grows linearly, past it it approaches the
+    // bandwidth-bound asymptote from below — never regresses
+    prop_check("replicate aggregate monotone until saturation", 200, |rng| {
+        let other = rng.uniform_f64(1e-3, 10.0);
+        let decode = rng.uniform_f64(1e-3, 30.0);
+        let link_bw = rng.uniform_f64(1e9, 2e12);
+        // the demand ESTIMATE may exceed the link (it is an upper bound on
+        // an engine's pull); the contention model clamps it to the link
+        let demand = rng.uniform_f64(0.0, 2.0) * link_bw;
+        let mut prev = 0.0f64;
+        for engines in 1..=16u64 {
+            let m = ShardModel { mode: ShardMode::Replicate, engines };
+            let step = other + decode * m.contention(demand, link_bw);
+            let agg = engines as f64 / step;
+            ensure(
+                agg >= prev * (1.0 - 1e-12),
+                format!("aggregate regressed at R={engines}: {prev} -> {agg}"),
+            )?;
+            // contention (and hence per-stream slow-down) is bounded by R
+            ensure(m.contention(demand, link_bw) <= engines as f64 + 1e-12, "contention > R")?;
+            prev = agg;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pipeline_per_engine_footprint_monotone_decreasing() {
+    prop_check("pipeline weights shard 1/R", 200, |rng| {
+        let weights = rng.uniform_f64(1e9, 2e11);
+        let mut prev = f64::INFINITY;
+        for engines in 1..=12u64 {
+            let m = ShardModel { mode: ShardMode::PipelineDecoder, engines };
+            let per = m.per_engine_weight_bytes(weights);
+            ensure(per < prev, format!("per-engine weights not decreasing at R={engines}"))?;
+            ensure_close(per * engines as f64, weights, 1e-12, "1/R shard")?;
+            // the device holds ONE partitioned copy regardless of R
+            ensure_close(m.device_footprint_bytes(weights), weights, 0.0, "device copy")?;
+            prev = per;
+        }
+        // replicate is the opposite deal: full copy per engine, R on device
+        let rep = ShardModel { mode: ShardMode::Replicate, engines: 6 };
+        ensure_close(rep.per_engine_weight_bytes(weights), weights, 0.0, "full copy")?;
+        ensure_close(rep.device_footprint_bytes(weights), 6.0 * weights, 1e-12, "R copies")
+    });
+}
+
+struct FixedServer(std::time::Duration);
+
+impl StepServer for FixedServer {
+    fn serve(&mut self, _f: &Frame, _p: &[i32]) -> anyhow::Result<std::time::Duration> {
+        Ok(self.0)
+    }
+}
+
+#[test]
+fn single_shard_bitwise_equals_legacy_batcher() {
+    // over random serving configs (streams, rate, policy, deadline,
+    // service time), one shard — replicate-1 or pipeline-1 — must be
+    // BITWISE the legacy run_batcher path
+    prop_check("one shard == run_batcher, bit for bit", 40, |rng| {
+        let cfg = BatcherConfig {
+            streams: rng.uniform_usize(1, 5),
+            rate_hz: rng.uniform_f64(0.5, 4.0),
+            duration_s: rng.uniform_f64(1.0, 6.0),
+            policy: if rng.next_f64() < 0.5 { Policy::Fifo } else { Policy::RoundRobin },
+            seed: rng.next_u64(),
+            deadline_s: if rng.next_f64() < 0.5 {
+                Some(rng.uniform_f64(0.05, 1.0))
+            } else {
+                None
+            },
+        };
+        let service = std::time::Duration::from_micros(rng.uniform_u64(1_000, 800_000));
+        let legacy = run_batcher(&mut FixedServer(service), 2, 2, &[1], &cfg)
+            .map_err(|e| e.to_string())?;
+        for mode in [ShardMode::Replicate, ShardMode::PipelineDecoder] {
+            let model = ShardModel { mode, engines: 1 };
+            let sharded = run_shard_batcher(&mut FixedServer(service), 2, 2, &[1], &cfg, &model)
+                .map_err(|e| e.to_string())?;
+            ensure(sharded.arrived == legacy.arrived, "arrived differs")?;
+            ensure(sharded.served == legacy.served, "served differs")?;
+            ensure(sharded.dropped == legacy.dropped, "dropped differs")?;
+            ensure(
+                sharded.throughput.to_bits() == legacy.throughput.to_bits(),
+                "throughput bits differ",
+            )?;
+            ensure(
+                sharded.queue_delay.p50.to_bits() == legacy.queue_delay.p50.to_bits()
+                    && sharded.queue_delay.p99.to_bits() == legacy.queue_delay.p99.to_bits(),
+                "queue-delay bits differ",
+            )?;
+            ensure(sharded.per_stream_served == legacy.per_stream_served, "per-stream differs")?;
+            ensure(sharded.max_burst == legacy.max_burst, "burst differs")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn grid_closed_form_matches_enumeration_on_random_grids() {
     prop_check("matrix_size_grid == |scenario_matrix_grid|", 40, |rng| {
         let list_u64 = |rng: &mut Prng, max_len: usize, lo: u64, hi: u64| -> Vec<u64> {
@@ -305,6 +429,7 @@ fn grid_closed_form_matches_enumeration_on_random_grids() {
             spec_alphas: (0..n_alpha).map(|_| rng.uniform_f64(0.1, 0.9)).collect(),
             trace_factors: (0..n_trace).map(|_| rng.uniform_f64(0.1, 0.9)).collect(),
             batch_streams: list_u64(rng, 2, 2, 33),
+            shard_engines: list_u64(rng, 2, 1, 9),
         };
         for p in [platform::orin(), platform::orin_pim()] {
             let n = scenario_matrix_grid(&p, &grid).len();

@@ -5,12 +5,13 @@
 //! sanity bound, Pareto-front laws over the real matrix, and the
 //! PIM-vs-SoC counterpart dominance the paper's co-design thesis predicts.
 
+use vla_char::engine::ShardMode;
 use vla_char::hw::platform;
 use vla_char::model::molmoact::molmoact_7b;
 use vla_char::model::scaling::scaled_vla;
 use vla_char::sim::scenario::{
     matrix_size, matrix_size_grid, pareto_front, scenario_matrix, scenario_matrix_grid, Evaluator,
-    Lever, LeverGrid, Scenario, SPEC_ALPHA, SPEC_GAMMA,
+    Lever, LeverGrid, LeverGroup, Scenario, SPEC_ALPHA, SPEC_GAMMA,
 };
 use vla_char::sim::{sweep, SimOptions};
 
@@ -52,8 +53,10 @@ fn grid_closed_form_pinned_against_enumeration() {
         spec_alphas: vec![0.5, 0.7, 0.9],
         trace_factors: vec![0.25, 0.5],
         batch_streams: vec![4, 16],
+        shard_engines: Vec::new(),
     };
-    for grid in [LeverGrid::legacy(), LeverGrid::default_phase2(), expanded] {
+    let sharded = LeverGrid { shard_engines: vec![2, 4], ..LeverGrid::default_phase2() };
+    for grid in [LeverGrid::legacy(), LeverGrid::default_phase2(), expanded, sharded] {
         for p in platform::sweep_platforms() {
             let m = scenario_matrix_grid(&p, &grid);
             assert_eq!(m.len(), matrix_size_grid(&p, &grid), "{}: closed form diverged", p.name);
@@ -62,11 +65,15 @@ fn grid_closed_form_pinned_against_enumeration() {
             }
         }
     }
-    // pinned counts: legacy 72/24, phase-2 default (b8 axis) 114/36
+    // pinned counts: legacy 72/24, phase-2 default (b8 axis) 102/36
     assert_eq!(matrix_size_grid(&platform::orin_pim(), &LeverGrid::legacy()), 72);
     assert_eq!(matrix_size_grid(&platform::orin(), &LeverGrid::legacy()), 24);
     assert_eq!(matrix_size_grid(&platform::orin_pim(), &LeverGrid::default_phase2()), 102);
     assert_eq!(matrix_size_grid(&platform::orin(), &LeverGrid::default_phase2()), 36);
+    // the serving axis multiplies the count: |shards| = 2 -> S = 5
+    let sharded = LeverGrid { shard_engines: vec![2, 4], ..LeverGrid::default_phase2() };
+    assert_eq!(matrix_size_grid(&platform::orin_pim(), &sharded), 102 * 5);
+    assert_eq!(matrix_size_grid(&platform::orin(), &sharded), 36 * 5);
 }
 
 #[test]
@@ -107,9 +114,10 @@ fn parallel_scenario_sweep_matches_serial_bitwise() {
     let ev = evaluator(&p);
     let grid = LeverGrid {
         spec_gammas: vec![2, 4],
-        spec_alphas: vec![0.5, 0.7],
+        spec_alphas: vec![0.5],
         trace_factors: vec![0.5],
         batch_streams: vec![8],
+        shard_engines: vec![2],
     };
     let matrix = scenario_matrix_grid(&p, &grid);
     assert!(matrix.len() > 72, "the grid must EXPAND the legacy matrix");
@@ -124,7 +132,7 @@ fn parallel_scenario_sweep_matches_serial_bitwise() {
             r.total_j.to_bits(),
             r.j_per_action.to_bits(),
             r.aggregate_hz.to_bits(),
-            (r.footprint_gb.to_bits(), r.fits_capacity, r.streams),
+            (r.footprint_gb.to_bits(), r.fits_capacity, r.streams, r.engines),
         )
     };
     let serial = sweep::parallel_map_with(&matrix, 1, eval);
@@ -257,6 +265,56 @@ fn w4_scenario_streams_half_of_w8() {
     // decode is BW-bound on Orin: halving the stream lands near half the time
     let ratio = w4.decode_time / w8.decode_time;
     assert!((0.4..0.75).contains(&ratio), "W4/W8 decode ratio {ratio}");
+}
+
+/// ACCEPTANCE: the serving axis is a first-class matrix member. Every
+/// shard row evaluates; against its shard-free counterpart (same stack,
+/// serving lever removed), replication never improves per-stream latency
+/// but multiplies aggregate throughput and footprint, while a pipelined
+/// decoder cuts the decode phase on an unchanged device footprint.
+#[test]
+fn shard_rows_evaluate_against_their_counterparts() {
+    let p = platform::orin();
+    let ev = evaluator(&p);
+    let grid = LeverGrid { shard_engines: vec![2], ..LeverGrid::legacy() };
+    let matrix = scenario_matrix_grid(&p, &grid);
+    assert_eq!(matrix.len(), 24 * 3, "legacy x (none + rep2 + pipe2)");
+    let mut rep_rows = 0;
+    let mut pipe_rows = 0;
+    for sc in &matrix {
+        let Some(Lever::Shard { mode, engines }) = sc.lever(LeverGroup::Serving).cloned() else {
+            continue;
+        };
+        assert_eq!(engines, 2);
+        let r = ev.eval(sc).unwrap();
+        assert_eq!(r.engines, 2, "{}", sc.name);
+        let counterpart = Scenario::of(
+            sc.levers.iter().filter(|l| l.group() != LeverGroup::Serving).cloned().collect(),
+        );
+        let c = ev.eval(&counterpart).unwrap();
+        match mode {
+            ShardMode::Replicate => {
+                rep_rows += 1;
+                // replication never speeds the per-stream step (contention
+                // can only slow it) and doubles aggregate AND footprint
+                assert!(r.step_latency >= c.step_latency * (1.0 - 1e-12), "{}", sc.name);
+                assert!(
+                    (r.aggregate_hz - 2.0 * r.amortized_hz).abs() <= 1e-9 * r.aggregate_hz,
+                    "{}",
+                    sc.name
+                );
+                assert!((r.footprint_gb / c.footprint_gb - 2.0).abs() < 1e-9, "{}", sc.name);
+            }
+            ShardMode::PipelineDecoder => {
+                pipe_rows += 1;
+                assert!(r.decode_time < c.decode_time, "{}: pipelining must cut decode", sc.name);
+                assert!(r.control_hz > c.control_hz, "{}", sc.name);
+                assert_eq!(r.footprint_gb.to_bits(), c.footprint_gb.to_bits(), "{}", sc.name);
+            }
+        }
+    }
+    assert_eq!(rep_rows, 24);
+    assert_eq!(pipe_rows, 24);
 }
 
 /// Every scenario of the matrix reports a sane classification and a

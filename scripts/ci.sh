@@ -39,6 +39,16 @@ cargo run --release -- pim --pareto --top 10 | tee reports/pim_pareto_top10.txt
 grep -E "Pareto front \(per-stream\): [1-9]" reports/pim_pareto_top10.txt >/dev/null \
     || { echo "ERROR: empty Pareto front in pim report"; exit 1; }
 
+echo "==> vla-char serve smoke (simulator-backed shard serving, both topologies)"
+cargo run --release -- serve --shards 1,2,4 --deadline-ms 200 --top 0 \
+    | tee reports/serve_shards.txt
+grep -E "ranked by aggregate actions/s" reports/serve_shards.txt >/dev/null \
+    || { echo "ERROR: no ranked shard table in serve report"; exit 1; }
+grep -E "replicate-[0-9]" reports/serve_shards.txt >/dev/null \
+    || { echo "ERROR: no replicate rows in serve report"; exit 1; }
+grep -E "pipeline-[0-9]" reports/serve_shards.txt >/dev/null \
+    || { echo "ERROR: no pipeline rows in serve report"; exit 1; }
+
 if command -v pytest >/dev/null 2>&1 || python3 -c 'import pytest' >/dev/null 2>&1; then
     echo "==> python -m pytest python/tests -q (soft gate until L1/L2 artifacts land)"
     python3 -m pytest python/tests -q || echo "WARNING: python tests failed (soft gate)"
