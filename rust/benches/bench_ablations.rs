@@ -4,6 +4,7 @@
 //! sweep pool, with the per-worker scaling summary line. Phase 2 adds a
 //! scenario-grid scaling line: the γ×α lever grid evaluated on the PIM
 //! ceiling, the hot loop of the `pim` experiment.
+//! `--json [PATH]` emits `BENCH_ablations.json` for the perf trajectory.
 
 use vla_char::hw::platform;
 use vla_char::model::molmoact::molmoact_7b;
@@ -11,6 +12,8 @@ use vla_char::model::scaling::scaled_vla;
 use vla_char::report::ablations;
 use vla_char::sim::scenario::{scenario_matrix_grid, Evaluator, LeverGrid};
 use vla_char::sim::{sweep, SimOptions};
+use vla_char::util::bench::{json_path_from_args, write_json};
+use vla_char::util::json::Json;
 
 fn main() {
     let kinds = ["prefetch", "cot", "horizon", "framework"];
@@ -37,9 +40,26 @@ fn main() {
     let options = SimOptions { decode_stride: 32, pim: false, ..Default::default() };
     let ev = Evaluator::new(&p, &options, &molmoact_7b(), &scaled_vla(2.0));
     let matrix = scenario_matrix_grid(&p, &grid);
-    let hz = sweep::bench_scaling("pim lever grid (γxα)", &matrix, |sc| {
+    let (hz, stats) = sweep::bench_scaling_stats("pim lever grid (γxα)", &matrix, |sc| {
         ev.eval(sc).expect("grid scenarios are valid").control_hz
     });
     let best = hz.iter().cloned().fold(f64::MIN, f64::max);
     println!("grid cells: {} | best control Hz {best:.3}", matrix.len());
+
+    if let Some(path) = json_path_from_args("BENCH_ablations.json") {
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("ablations".into())),
+            ("schema", Json::Num(1.0)),
+            (
+                "metrics",
+                Json::obj(vec![
+                    ("grid_cells", Json::Num(matrix.len() as f64)),
+                    ("best_control_hz", Json::Num(best)),
+                    ("grid_evals_per_s_parallel", Json::Num(stats.parallel_rate())),
+                    ("workers", Json::Num(stats.workers as f64)),
+                ]),
+            ),
+        ]);
+        write_json(&path, &doc).expect("writing BENCH_ablations.json");
+    }
 }

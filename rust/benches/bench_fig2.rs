@@ -1,12 +1,14 @@
 //! Bench E-F2: regenerate Figure 2 (MolmoAct-7B on Orin/Thor) and report the
 //! modeled phase latencies as the benchmark's primary output, plus the
 //! simulator's wall cost for producing them.
+//! `--json [PATH]` emits `BENCH_fig2.json` for the perf trajectory.
 
 use vla_char::hw::platform;
 use vla_char::model::molmoact::molmoact_7b;
 use vla_char::report::{check_fig2, fig2, render};
 use vla_char::sim::{sweep, SimOptions, Simulator};
-use vla_char::util::bench::{black_box, BenchSet};
+use vla_char::util::bench::{black_box, json_path_from_args, results_json, write_json, BenchSet};
+use vla_char::util::json::Json;
 
 fn main() {
     let options = SimOptions::default();
@@ -23,7 +25,7 @@ fn main() {
     b.bench("simulate_fig2_wall(stride=8)", || {
         black_box(fig2::run(&fast));
     });
-    b.finish();
+    let results = b.finish();
 
     // Fig 2's unit (one MolmoAct-7B step) over the full platform grid, on
     // the sweep pool — prints the per-worker scaling summary line.
@@ -36,4 +38,13 @@ fn main() {
     let (text, ok) = render(&check_fig2(&f));
     println!("\n{text}");
     assert!(ok, "fig2 paper-shape checks failed");
+
+    if let Some(path) = json_path_from_args("BENCH_fig2.json") {
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("fig2".into())),
+            ("schema", Json::Num(1.0)),
+            ("micro", results_json(&results)),
+        ]);
+        write_json(&path, &doc).expect("writing BENCH_fig2.json");
+    }
 }

@@ -1,11 +1,13 @@
 //! Bench E-F3: regenerate Figure 3 (control frequency sweep) and report the
 //! modeled frequencies; time the full sweep as the harness cost.
+//! `--json [PATH]` emits `BENCH_fig3.json` for the perf trajectory.
 
 use vla_char::hw::{platform, Platform};
 use vla_char::model::scaling::{scaled_vla, ANCHOR_SIZES_B};
 use vla_char::report::{check_fig3, fig3, render};
 use vla_char::sim::{sweep, SimOptions, Simulator};
-use vla_char::util::bench::{black_box, BenchSet};
+use vla_char::util::bench::{black_box, json_path_from_args, results_json, write_json, BenchSet};
+use vla_char::util::json::Json;
 
 fn main() {
     let options = SimOptions { decode_stride: 4, ..Default::default() };
@@ -22,7 +24,7 @@ fn main() {
     b.bench("simulate_fig3_sweep_wall(stride=32)", || {
         black_box(fig3::run(&fast, &ANCHOR_SIZES_B));
     });
-    b.finish();
+    let results = b.finish();
 
     // the full sizes x platforms cell grid on the sweep pool, with the
     // per-worker scaling summary line
@@ -41,4 +43,13 @@ fn main() {
     let (text, ok) = render(&check_fig3(&f));
     println!("{text}");
     assert!(ok, "fig3 paper-shape checks failed");
+
+    if let Some(path) = json_path_from_args("BENCH_fig3.json") {
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("fig3".into())),
+            ("schema", Json::Num(1.0)),
+            ("micro", results_json(&results)),
+        ]);
+        write_json(&path, &doc).expect("writing BENCH_fig3.json");
+    }
 }

@@ -1,10 +1,29 @@
 //! Real-runtime benchmark (E-RT): PJRT-CPU latency of each compiled phase of
 //! the tiny VLA, plus sustained decode tokens/s — the measured counterpart
 //! the simulator is calibrated against.
+//! `--json [PATH]` emits `BENCH_runtime.json` for the perf trajectory; when
+//! the PJRT runtime or artifacts are missing the document carries
+//! `skipped: true` and an empty `micro` array, so the trajectory stays
+//! well-formed on simulator-only machines.
 
 use vla_char::engine::{FrameSource, VlaEngine, VlaModel};
 use vla_char::runtime::Runtime;
-use vla_char::util::bench::{black_box, BenchSet};
+use vla_char::util::bench::{
+    black_box, json_path_from_args, results_json, write_json, BenchResult, BenchSet,
+};
+use vla_char::util::json::Json;
+
+fn emit_json(skipped: bool, results: &[BenchResult]) {
+    if let Some(path) = json_path_from_args("BENCH_runtime.json") {
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("runtime".into())),
+            ("schema", Json::Num(1.0)),
+            ("skipped", Json::Bool(skipped)),
+            ("micro", results_json(results)),
+        ]);
+        write_json(&path, &doc).expect("writing BENCH_runtime.json");
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     // the simulated counterpart of the measured phases, per platform, on
@@ -20,11 +39,13 @@ fn main() -> anyhow::Result<()> {
         Ok(rt) => rt,
         Err(e) => {
             println!("skipping runtime bench (PJRT unavailable): {e}");
+            emit_json(true, &[]);
             return Ok(());
         }
     };
     let Ok(dir) = vla_char::runtime::artifacts_dir() else {
         println!("skipping runtime bench: no artifacts (run `make artifacts`)");
+        emit_json(true, &[]);
         return Ok(());
     };
     // Artifacts are present and a client exists: load failures are real.
@@ -68,5 +89,6 @@ fn main() -> anyhow::Result<()> {
         1.0 / decode.summary.p50,
         decode.summary.p50 * 1e3
     );
+    emit_json(false, &results);
     Ok(())
 }

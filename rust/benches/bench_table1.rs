@@ -1,8 +1,10 @@
 //! Bench E-T1: regenerate Table 1 and time the platform registry.
+//! `--json [PATH]` emits `BENCH_table1.json` for the perf trajectory.
 
 use vla_char::hw::platform;
 use vla_char::sim::sweep;
-use vla_char::util::bench::{black_box, BenchSet};
+use vla_char::util::bench::{black_box, json_path_from_args, results_json, write_json, BenchSet};
+use vla_char::util::json::Json;
 
 fn main() {
     let mut b = BenchSet::new("table1");
@@ -12,7 +14,7 @@ fn main() {
     b.bench("table1_render_markdown", || {
         black_box(platform::table1().to_markdown());
     });
-    b.finish();
+    let results = b.finish();
 
     // headline-number derivation per platform on the sweep pool (trivial
     // cells — the scaling line mostly shows the pool's fixed overhead)
@@ -21,4 +23,13 @@ fn main() {
     });
 
     println!("\n{}", platform::table1().to_markdown());
+
+    if let Some(path) = json_path_from_args("BENCH_table1.json") {
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("table1".into())),
+            ("schema", Json::Num(1.0)),
+            ("micro", results_json(&results)),
+        ]);
+        write_json(&path, &doc).expect("writing BENCH_table1.json");
+    }
 }

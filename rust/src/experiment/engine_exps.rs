@@ -145,7 +145,7 @@ impl Experiment for ControlLoop {
     }
 
     fn description(&self) -> &'static str {
-        "run the real tiny-VLA control loop and report achieved Hz"
+        "run the real tiny-VLA control loop over --steps steps (default 20) and report achieved Hz"
     }
 
     fn run(&self, ctx: &ExpContext) -> anyhow::Result<Report> {

@@ -18,8 +18,14 @@
 //!
 //! [`sim::energy`]: crate::sim::energy
 
+use std::sync::Arc;
+
+use super::cache::{
+    config_fp, context_key, options_fp, BaselineBundle, CachedIntegral, ContextCache, DecodeKey,
+    IntegralKey, SpecKey,
+};
 use super::lever::expected_accepted;
-use super::{Lever, LeverGroup, Scenario};
+use super::{EvalCache, Lever, LeverGroup, Scenario};
 use crate::engine::shard::{link_demand_bw, ShardMode, ShardModel};
 use crate::hw::Platform;
 use crate::model::vla::VlaConfig;
@@ -49,6 +55,28 @@ impl DecodeCost {
             t_overhead: r.t_overhead_bound,
             pim_frac: r.pim_time_frac,
             energy: 0.0,
+        }
+    }
+
+    fn from_cached(c: CachedIntegral) -> DecodeCost {
+        DecodeCost {
+            time: c.time,
+            t_compute: c.t_compute,
+            t_memory: c.t_memory,
+            t_overhead: c.t_overhead,
+            pim_frac: c.pim_frac,
+            energy: c.energy,
+        }
+    }
+
+    fn to_cached(self) -> CachedIntegral {
+        CachedIntegral {
+            time: self.time,
+            t_compute: self.t_compute,
+            t_memory: self.t_memory,
+            t_overhead: self.t_overhead,
+            pim_frac: self.pim_frac,
+            energy: self.energy,
         }
     }
 
@@ -225,7 +253,14 @@ fn pim_spec_combine(
 
 /// Evaluates scenarios against one (platform, options, target, draft)
 /// context; the baseline step (latency AND phase energies) is simulated
-/// once at construction.
+/// once per context. Since the incremental-evaluation PR every evaluator
+/// carries a shared [`EvalCache`] — [`Evaluator::new`] owns a private one
+/// (so even a lone evaluator reuses integrals across its grid), and
+/// [`Evaluator::with_cache`] threads one cache through many evaluators
+/// and [`sim::sweep`](crate::sim::sweep) workers. [`Evaluator::eval_fresh`]
+/// bypasses the scenario-level caches and is the pre-cache evaluation
+/// path, bit for bit — the identity `eval == eval_fresh` is pinned by the
+/// test suites over the full matrix.
 #[derive(Debug, Clone)]
 pub struct Evaluator {
     platform: Platform,
@@ -243,55 +278,103 @@ pub struct Evaluator {
     idle_watts: f64,
     /// Ambient-path draft decode time per token — invariant across levers
     /// (it depends only on platform, ambient options, and the draft), so it
-    /// is integrated once here instead of once per speculative scenario.
+    /// is integrated once per context instead of once per speculative
+    /// scenario.
     draft_step: f64,
     /// Ambient-path draft decode energy per token (J).
     draft_step_j: f64,
-    /// PIM-resident draft decode (time, energy) per token, integrated on
-    /// first use (codesign's classic study never needs it, the matrix's
-    /// PimDraft scenarios share one integration).
-    draft_step_pim: std::sync::OnceLock<(f64, f64)>,
+    /// The shared lowering cache and this evaluator's resolved context
+    /// store within it (integrals, decode costs, the lazy PIM draft step).
+    cache: Arc<EvalCache>,
+    ctx: Arc<ContextCache>,
 }
 
 impl Evaluator {
+    /// Build an evaluator with a private cache — integrals are still
+    /// reused across every scenario this evaluator sees.
     pub fn new(
         platform: &Platform,
         options: &SimOptions,
         target: &VlaConfig,
         draft: &VlaConfig,
     ) -> Evaluator {
-        let sim = Simulator::with_options(platform.clone(), options.clone());
-        let base = sim.simulate_vla(target);
-        let base_total = base.vision.time + base.prefill.time + base.decode.time + base.action.time;
-        let draft_step = draft_step_time(platform, options, draft);
-        let scope = options.effective_pim_scope();
-        let base_vision_j = energy::stage_dynamic_energy(platform, scope, &target.vision_stage());
-        let base_prefill_j = energy::stage_dynamic_energy(platform, scope, &target.prefill_stage());
-        let base_action_j = energy::stage_dynamic_energy(platform, scope, &target.action_stage());
-        let idle_watts = energy::EnergyModel::for_platform(platform).idle_watts;
-        let draft_step_j = energy::decode_dynamic_energy(platform, options, draft)
-            / draft.shape.decode_tokens as f64;
+        Evaluator::with_cache(platform, options, target, draft, &EvalCache::shared())
+    }
+
+    /// Build an evaluator on a shared [`EvalCache`]: evaluators of the
+    /// same (platform, options, target, draft) context share baseline
+    /// integrations and every memoized lowering; distinct contexts coexist
+    /// in one cache. Safe to call from parallel sweep workers.
+    pub fn with_cache(
+        platform: &Platform,
+        options: &SimOptions,
+        target: &VlaConfig,
+        draft: &VlaConfig,
+        cache: &Arc<EvalCache>,
+    ) -> Evaluator {
+        let ctx = cache.context(context_key(platform, options, target, draft));
+        let b = ctx
+            .baseline
+            .get_or_init(|| {
+                cache.count_baseline();
+                let sim = Simulator::with_options(platform.clone(), options.clone());
+                let base = sim.simulate_vla(target);
+                let base_total =
+                    base.vision.time + base.prefill.time + base.decode.time + base.action.time;
+                let draft_step = draft_step_time(platform, options, draft);
+                let scope = options.effective_pim_scope();
+                BaselineBundle {
+                    base,
+                    base_total,
+                    base_vision_j: energy::stage_dynamic_energy(
+                        platform,
+                        scope,
+                        &target.vision_stage(),
+                    ),
+                    base_prefill_j: energy::stage_dynamic_energy(
+                        platform,
+                        scope,
+                        &target.prefill_stage(),
+                    ),
+                    base_action_j: energy::stage_dynamic_energy(
+                        platform,
+                        scope,
+                        &target.action_stage(),
+                    ),
+                    idle_watts: energy::EnergyModel::for_platform(platform).idle_watts,
+                    draft_step,
+                    draft_step_j: energy::decode_dynamic_energy(platform, options, draft)
+                        / draft.shape.decode_tokens as f64,
+                }
+            })
+            .clone();
         Evaluator {
             platform: platform.clone(),
             options: options.clone(),
             target: target.clone(),
             draft: draft.clone(),
-            base,
-            base_total,
-            base_vision_j,
-            base_prefill_j,
-            base_action_j,
-            idle_watts,
-            draft_step,
-            draft_step_j,
-            draft_step_pim: std::sync::OnceLock::new(),
+            base: b.base,
+            base_total: b.base_total,
+            base_vision_j: b.base_vision_j,
+            base_prefill_j: b.base_prefill_j,
+            base_action_j: b.base_action_j,
+            idle_watts: b.idle_watts,
+            draft_step: b.draft_step,
+            draft_step_j: b.draft_step_j,
+            cache: Arc::clone(cache),
+            ctx,
         }
     }
 
-    /// Lazily integrated PIM-resident draft step (see `draft_step_pim`):
-    /// per-token (time, dynamic energy).
+    /// The shared cache this evaluator feeds (for its counter snapshot).
+    pub fn cache(&self) -> &Arc<EvalCache> {
+        &self.cache
+    }
+
+    /// Lazily integrated PIM-resident draft step, shared across the
+    /// context: per-token (time, dynamic energy).
     fn pim_draft_step(&self) -> (f64, f64) {
-        *self.draft_step_pim.get_or_init(|| {
+        *self.ctx.pim_draft.get_or_init(|| {
             let mut resident = self.options.clone();
             resident.enable_pim_residency(true, true);
             (
@@ -309,9 +392,49 @@ impl Evaluator {
 
     /// Lower `scenario` and evaluate it: transformed config + options, the
     /// decode-cost override, baseline phases for the rest of the step, the
-    /// energy integration, and the capacity-validity flag.
+    /// energy integration, and the capacity-validity flag. Incremental:
+    /// shared lowerings come from the [`EvalCache`] — bitwise-identical to
+    /// [`Evaluator::eval_fresh`] (pinned by the test suites).
     pub fn eval(&self, scenario: &Scenario) -> anyhow::Result<ScenarioResult> {
+        self.eval_inner(scenario, true)
+    }
+
+    /// Evaluate `scenario` without the scenario-level caches: every
+    /// roofline integration runs fresh. This is the pre-cache evaluation
+    /// path, bit for bit — the reference the incremental path is pinned
+    /// against (and what the perf bench times as "fresh").
+    pub fn eval_fresh(&self, scenario: &Scenario) -> anyhow::Result<ScenarioResult> {
+        self.eval_inner(scenario, false)
+    }
+
+    /// Canonical per-group key of the decode-relevant levers (the Serving
+    /// group is a decode-lowering no-op, so it is excluded — that is what
+    /// lets the whole shard axis share one decode cost).
+    fn decode_key(scenario: &Scenario) -> DecodeKey {
+        let mut key = DecodeKey { weights: None, kv: 0, trace: None, spec: SpecKey::None };
+        for l in &scenario.levers {
+            match l {
+                Lever::QuantizeWeights { bits } => key.weights = Some((false, *bits)),
+                Lever::PimWeightStream { bits } => key.weights = Some((true, *bits)),
+                Lever::QuantizeKv => key.kv = 1,
+                Lever::PimKvAttention => key.kv = 2,
+                Lever::CompressTrace { factor } => key.trace = Some(factor.to_bits()),
+                Lever::Speculate { gamma, alpha } => {
+                    key.spec = SpecKey::Soc { gamma: *gamma, alpha_bits: alpha.to_bits() };
+                }
+                Lever::PimDraft { gamma, alpha } => {
+                    key.spec = SpecKey::Pim { gamma: *gamma, alpha_bits: alpha.to_bits() };
+                }
+                Lever::Batch { streams } => key.spec = SpecKey::Batch { streams: *streams },
+                Lever::Shard { .. } => {}
+            }
+        }
+        key
+    }
+
+    fn eval_inner(&self, scenario: &Scenario, use_cache: bool) -> anyhow::Result<ScenarioResult> {
         scenario.validate(&self.platform)?;
+        self.cache.count_eval();
         let mut cfg = self.target.clone();
         let mut options = self.options.clone();
         for lever in &scenario.levers {
@@ -320,7 +443,30 @@ impl Evaluator {
         for lever in &scenario.levers {
             lever.apply_options(&mut options);
         }
-        let dc = self.decode_cost(scenario, &cfg, &options);
+        let dkey = Self::decode_key(scenario);
+        let cached_dc = if use_cache {
+            let map = self.ctx.decode_costs.read().expect("decode cache lock poisoned");
+            map.get(&dkey).copied()
+        } else {
+            None
+        };
+        let dc = match cached_dc {
+            Some(c) => {
+                self.cache.count_decode_hit();
+                DecodeCost::from_cached(c)
+            }
+            None => {
+                let dc = self.decode_cost(scenario, &cfg, &options, use_cache);
+                if use_cache {
+                    self.ctx
+                        .decode_costs
+                        .write()
+                        .expect("decode cache lock poisoned")
+                        .insert(dkey, dc.to_cached());
+                }
+                dc
+            }
+        };
         let streams = match scenario.lever(LeverGroup::Batching) {
             Some(Lever::Batch { streams }) => (*streams).max(1),
             _ => 1,
@@ -415,18 +561,21 @@ impl Evaluator {
         scenario: &Scenario,
         cfg: &VlaConfig,
         options: &SimOptions,
+        use_cache: bool,
     ) -> DecodeCost {
         let model = |c: &VlaConfig| -> DecodeCost {
             match scenario.lever(LeverGroup::Speculation) {
                 Some(Lever::Speculate { gamma, alpha }) => {
-                    self.spec_cost(c, options, *gamma, *alpha, false)
+                    self.spec_cost(c, options, *gamma, *alpha, false, use_cache)
                 }
                 Some(Lever::PimDraft { gamma, alpha }) => {
-                    self.spec_cost(c, options, *gamma, *alpha, true)
+                    self.spec_cost(c, options, *gamma, *alpha, true, use_cache)
                 }
                 _ => match scenario.lever(LeverGroup::Batching) {
-                    Some(Lever::Batch { streams }) => self.batched_cost(c, options, *streams),
-                    _ => self.direct_cost(c, options),
+                    Some(Lever::Batch { streams }) => {
+                        self.batched_cost(c, options, *streams, use_cache)
+                    }
+                    _ => self.direct_cost(c, options, use_cache),
                 },
             }
         };
@@ -448,13 +597,20 @@ impl Evaluator {
         }
     }
 
-    /// The plain decode integration of the transformed config.
-    fn direct_cost(&self, cfg: &VlaConfig, options: &SimOptions) -> DecodeCost {
-        let sim = Simulator::with_options(self.platform.clone(), options.clone());
-        DecodeCost {
-            energy: energy::decode_dynamic_energy(&self.platform, options, cfg),
-            ..DecodeCost::from_stage(&sim.simulate_decode(cfg))
-        }
+    /// The plain decode integration of the transformed config, memoized on
+    /// (config, options) — the whole integration is cached, never a
+    /// partial sum, so hits are bitwise the fresh result.
+    fn direct_cost(&self, cfg: &VlaConfig, options: &SimOptions, use_cache: bool) -> DecodeCost {
+        let key = IntegralKey { rows: None, cfg: config_fp(cfg), opts: options_fp(options) };
+        let cached = self.cache.integral(&self.ctx, use_cache, key, || {
+            let sim = Simulator::with_options(self.platform.clone(), options.clone());
+            DecodeCost {
+                energy: energy::decode_dynamic_energy(&self.platform, options, cfg),
+                ..DecodeCost::from_stage(&sim.simulate_decode(cfg))
+            }
+            .to_cached()
+        });
+        DecodeCost::from_cached(cached)
     }
 
     /// Speculative decode cost, with the draft on the SoC or on PIM. The
@@ -471,27 +627,53 @@ impl Evaluator {
         gamma: u64,
         alpha: f64,
         draft_on_pim: bool,
+        use_cache: bool,
     ) -> DecodeCost {
-        // build the ~430-op verify stage ONCE; latency and energy walk the
-        // same operators, so this is bitwise what two builds would produce
-        let kv_mid = cfg.shape.prefill_len() + cfg.shape.decode_tokens / 2;
-        let vstage = cfg.decode_stage_batched(kv_mid, gamma + 1);
-        let verify_r = Simulator::with_options(self.platform.clone(), options.clone())
-            .simulate_stage(&vstage);
-        let verify_j =
-            energy::stage_dynamic_energy(&self.platform, options.effective_pim_scope(), &vstage);
+        // the verify pass is the memoized integral: SoC and PIM-draft
+        // speculation at the same gamma share it (the draft placement only
+        // changes how the cached pass is combined below), and it shares a
+        // keyspace with the lockstep batched step at the same row count
+        let verify = self.batched_step(cfg, options, gamma + 1, use_cache);
         let rounds = expected_rounds(cfg.shape.decode_tokens, gamma, alpha);
         if draft_on_pim {
             let (draft_step, draft_j) = self.pim_draft_step();
             let (time, pim_frac) =
-                pim_spec_combine(cfg.shape.decode_tokens, gamma, alpha, draft_step, verify_r.time);
-            let energy = rounds * (gamma as f64 * draft_j + verify_j);
-            DecodeCost { time, pim_frac, energy, ..DecodeCost::from_stage(&verify_r) }
+                pim_spec_combine(cfg.shape.decode_tokens, gamma, alpha, draft_step, verify.time);
+            let energy = rounds * (gamma as f64 * draft_j + verify.energy);
+            DecodeCost { time, pim_frac, energy, ..DecodeCost::from_cached(verify) }
         } else {
-            let time = rounds * (gamma as f64 * self.draft_step + verify_r.time);
-            let energy = rounds * (gamma as f64 * self.draft_step_j + verify_j);
-            DecodeCost { time, energy, ..DecodeCost::from_stage(&verify_r) }
+            let time = rounds * (gamma as f64 * self.draft_step + verify.time);
+            let energy = rounds * (gamma as f64 * self.draft_step_j + verify.energy);
+            DecodeCost { time, energy, ..DecodeCost::from_cached(verify) }
         }
+    }
+
+    /// One batched mid-trace decode step at `rows` rows (a verify pass or
+    /// a lockstep batch step): raw per-step latency decomposition + dynamic
+    /// energy, memoized on (rows, config, options). The ~430-op stage is
+    /// built once per miss; latency and energy walk the same operators, so
+    /// this is bitwise what two builds would produce.
+    fn batched_step(
+        &self,
+        cfg: &VlaConfig,
+        options: &SimOptions,
+        rows: u64,
+        use_cache: bool,
+    ) -> CachedIntegral {
+        let key =
+            IntegralKey { rows: Some(rows), cfg: config_fp(cfg), opts: options_fp(options) };
+        self.cache.integral(&self.ctx, use_cache, key, || {
+            let kv_mid = cfg.shape.prefill_len() + cfg.shape.decode_tokens / 2;
+            let stage = cfg.decode_stage_batched(kv_mid, rows);
+            let r = Simulator::with_options(self.platform.clone(), options.clone())
+                .simulate_stage(&stage);
+            let step_j = energy::stage_dynamic_energy(
+                &self.platform,
+                options.effective_pim_scope(),
+                &stage,
+            );
+            DecodeCost { energy: step_j, ..DecodeCost::from_stage(&r) }.to_cached()
+        })
     }
 
     /// Lockstep multi-robot decode: every stream advances one token per
@@ -499,17 +681,21 @@ impl Evaluator {
     /// step cost times the trace length (and the step energy covers all
     /// streams — weights are read, and their movement paid, once). The
     /// per-stream vision/prefill/action replication lives in `eval`.
-    fn batched_cost(&self, cfg: &VlaConfig, options: &SimOptions, streams: u64) -> DecodeCost {
-        let kv_mid = cfg.shape.prefill_len() + cfg.shape.decode_tokens / 2;
-        let stage = cfg.decode_stage_batched(kv_mid, streams.max(1));
-        let r = Simulator::with_options(self.platform.clone(), options.clone())
-            .simulate_stage(&stage);
-        let step_j =
-            energy::stage_dynamic_energy(&self.platform, options.effective_pim_scope(), &stage);
+    fn batched_cost(
+        &self,
+        cfg: &VlaConfig,
+        options: &SimOptions,
+        streams: u64,
+        use_cache: bool,
+    ) -> DecodeCost {
+        // the cache stores the RAW per-step integral; the trace-length
+        // multiplication happens here, after retrieval, in the same
+        // expression the fresh path evaluates — bitwise either way
+        let step = self.batched_step(cfg, options, streams.max(1), use_cache);
         DecodeCost {
-            time: r.time * cfg.shape.decode_tokens as f64,
-            energy: step_j * cfg.shape.decode_tokens as f64,
-            ..DecodeCost::from_stage(&r)
+            time: step.time * cfg.shape.decode_tokens as f64,
+            energy: step.energy * cfg.shape.decode_tokens as f64,
+            ..DecodeCost::from_cached(step)
         }
     }
 }

@@ -87,6 +87,14 @@ impl LeverGrid {
         LeverGrid { batch_streams: vec![BATCH_STREAMS], ..LeverGrid::legacy() }
     }
 
+    /// The phase-2 default extended with the canonical serving axis
+    /// (replicate/pipeline at 2 and 4 engines, `S = 5`) — the full PR 5
+    /// matrix the perf bench and the incremental-vs-fresh identity tests
+    /// sweep: 510 scenarios on a PIM platform, 180 on a SoC.
+    pub fn default_phase2_sharded() -> LeverGrid {
+        LeverGrid { shard_engines: vec![2, 4], ..LeverGrid::default_phase2() }
+    }
+
     /// The γ×α cartesian product, γ-major (the enumeration order).
     fn spec_points(&self) -> Vec<(u64, f64)> {
         let mut v = Vec::with_capacity(self.spec_gammas.len() * self.spec_alphas.len());
@@ -261,6 +269,15 @@ mod tests {
         }
         assert!(soc.iter().any(|s| s.name.contains("b16")));
         assert!(soc.iter().any(|s| s.name.contains("0.25xCoT")));
+    }
+
+    #[test]
+    fn sharded_default_grid_sizes() {
+        // the canonical perf-bench grid: 510 scenarios on PIM, 180 on SoC
+        let g = LeverGrid::default_phase2_sharded();
+        assert_eq!(matrix_size_grid(&platform::thor_hbm4_pim(), &g), 510);
+        assert_eq!(matrix_size_grid(&platform::orin(), &g), 180);
+        assert_eq!(scenario_matrix_grid(&platform::thor_hbm4_pim(), &g).len(), 510);
     }
 
     #[test]

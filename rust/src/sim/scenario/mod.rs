@@ -40,11 +40,21 @@
 //! buys. The legacy `sim::codesign` entry points keep their ambient-PIM
 //! behavior (and their numbers, bitwise) by passing their options through
 //! unchanged.
+//!
+//! Evaluation is *incremental* since the perf-trajectory PR: an
+//! [`EvalCache`] memoizes whole roofline integrations and whole
+//! decode-phase costs across the grid (see the `cache` module docs for
+//! the two levels and the bitwise-identity discipline), collapsing the
+//! 690 fresh integrations of the sharded default matrix to 90 distinct
+//! ones. [`Evaluator::eval_fresh`] keeps the uncached path alive as the
+//! reference the tests pin `eval` against, bit for bit.
 
+mod cache;
 mod eval;
 mod lever;
 mod matrix;
 
+pub use cache::{CacheStats, EvalCache};
 pub use eval::{
     pareto_front, pim_speculative_decode, speculative_decode, Evaluator, ScenarioResult,
 };

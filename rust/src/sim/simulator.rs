@@ -10,6 +10,10 @@ use crate::model::{Phase, Stage, VlaConfig};
 /// Simulation options (ablation switches).
 #[derive(Debug, Clone)]
 pub struct SimOptions {
+    // NOTE: `sim::scenario`'s lowering cache fingerprints EVERY field of
+    // this struct (`cache::options_fp`, which destructures it exhaustively
+    // so a new field is a compile error there until it is covered) — two
+    // option sets the simulator distinguishes must never alias a cache key.
     /// Cross-operator prefetch: stream weights of upcoming operators during
     /// current-op execution (paper §3.2, "cross-operator optimization").
     pub prefetch: bool,

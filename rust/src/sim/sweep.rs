@@ -80,13 +80,56 @@ where
     })
 }
 
+/// Timing summary of one [`bench_scaling`] run — the machine-readable
+/// counterpart of its console line, consumed by the benches' `--json`
+/// emitters (`BENCH_*.json`).
+#[derive(Debug, Clone, Copy)]
+pub struct ScalingStats {
+    pub items: usize,
+    pub workers: usize,
+    /// Serial (1-worker) wall time over all items (s).
+    pub t_serial: f64,
+    /// Parallel wall time on `workers` workers (s).
+    pub t_parallel: f64,
+}
+
+impl ScalingStats {
+    pub fn speedup(&self) -> f64 {
+        self.t_serial / self.t_parallel.max(1e-12)
+    }
+
+    /// Items per second on the worker pool.
+    pub fn parallel_rate(&self) -> f64 {
+        self.items as f64 / self.t_parallel.max(1e-12)
+    }
+
+    /// Items per second on one worker.
+    pub fn serial_rate(&self) -> f64 {
+        self.items as f64 / self.t_serial.max(1e-12)
+    }
+}
+
 /// Bench harness hook: map `f` over `items` serially and on the default
 /// worker pool, timing both, and print the shared per-worker scaling
 /// summary line (workers, wall time, speedup). Returns the parallel results
 /// (identical to the serial ones — see [`parallel_map`]'s determinism
 /// guarantee). The six `harness = false` benches route their grids through
 /// this so every bench reports how the sweep pool scales on the host.
+/// `f` may close over shared state (e.g. a scenario [`Evaluator`] and its
+/// `EvalCache` — both `Sync`) — the workers hit one memo store together.
+///
+/// [`Evaluator`]: crate::sim::scenario::Evaluator
 pub fn bench_scaling<T, R, F>(label: &str, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    bench_scaling_stats(label, items, f).0
+}
+
+/// [`bench_scaling`], returning the timing summary alongside the results.
+pub fn bench_scaling_stats<T, R, F>(label: &str, items: &[T], f: F) -> (Vec<R>, ScalingStats)
 where
     T: Sync,
     R: Send,
@@ -100,16 +143,17 @@ where
     let t1 = std::time::Instant::now();
     let out = parallel_map_with(items, workers, &f);
     let t_parallel = t1.elapsed().as_secs_f64();
+    let stats = ScalingStats { items: items.len(), workers, t_serial, t_parallel };
     println!(
         "sweep scaling[{label}]: {} items | 1 worker {:.1} ms | {} workers {:.1} ms \
          | speedup {:.2}x",
-        items.len(),
+        stats.items,
         t_serial * 1e3,
         workers,
         t_parallel * 1e3,
-        t_serial / t_parallel.max(1e-12)
+        stats.speedup()
     );
-    out
+    (out, stats)
 }
 
 #[cfg(test)]
@@ -150,6 +194,16 @@ mod tests {
         let out = bench_scaling("unit", &items, |&x| x * 3);
         let want: Vec<u64> = items.iter().map(|&x| x * 3).collect();
         assert_eq!(out, want);
+    }
+
+    #[test]
+    fn bench_scaling_stats_reports_timing() {
+        let items: Vec<u64> = (0..16).collect();
+        let (out, s) = bench_scaling_stats("unit", &items, |&x| x + 1);
+        assert_eq!(out.len(), 16);
+        assert_eq!((s.items, s.workers >= 1), (16, true));
+        assert!(s.t_serial >= 0.0 && s.t_parallel >= 0.0);
+        assert!(s.serial_rate() > 0.0 && s.parallel_rate() > 0.0 && s.speedup() > 0.0);
     }
 
     #[test]

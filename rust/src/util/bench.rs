@@ -10,7 +10,9 @@
 //! b.finish();
 //! ```
 
+use super::json::Json;
 use super::stats::Summary;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 /// One benchmark measurement.
@@ -149,6 +151,60 @@ impl BenchSet {
     }
 }
 
+/// Parse `--json [PATH]` from the bench binary's argv. Every
+/// `harness = false` bench supports it: with a bare `--json` the file goes
+/// to `default_path` (the tracked `BENCH_*.json` name); `--json PATH`
+/// overrides it. Other argv entries (e.g. the `--bench` flag cargo passes
+/// to bench targets) are ignored.
+pub fn json_path_from_args(default_path: &str) -> Option<PathBuf> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--json" {
+            return match args.get(i + 1) {
+                Some(next) if !next.starts_with('-') => Some(PathBuf::from(next)),
+                _ => Some(PathBuf::from(default_path)),
+            };
+        }
+        i += 1;
+    }
+    None
+}
+
+/// The machine-readable form of a bench run's measurements: one entry per
+/// [`BenchResult`], seconds per iteration.
+pub fn results_json(results: &[BenchResult]) -> Json {
+    Json::Arr(
+        results
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("mean_s", Json::Num(r.summary.mean)),
+                    ("p50_s", Json::Num(r.summary.p50)),
+                    ("p99_s", Json::Num(r.summary.p99)),
+                    ("iters_per_sample", Json::Num(r.iters_per_sample as f64)),
+                    ("samples", Json::Num(r.samples as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Write a `BENCH_*.json` document (pretty-printed, trailing newline) and
+/// log the path — the benches' `--json` sink, diffed against the
+/// checked-in baseline by `scripts/check_bench.py` in CI.
+pub fn write_json(path: &Path, doc: &Json) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, format!("{}\n", doc.to_string_pretty()))?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
 /// Best-effort blackbox to stop the optimizer deleting benched work.
 #[inline]
 pub fn black_box<T>(x: T) -> T {
@@ -180,6 +236,33 @@ mod tests {
         let r = &set.results[0];
         assert!(r.summary.mean > 0.0);
         assert_eq!(r.samples, 5);
+    }
+
+    #[test]
+    fn results_json_shape() {
+        let r = BenchResult {
+            name: "x".into(),
+            summary: Summary::of(&[0.5]),
+            iters_per_sample: 3,
+            samples: 1,
+        };
+        let j = results_json(&[r]);
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].req_str("name").unwrap(), "x");
+        assert_eq!(arr[0].req_f64("mean_s").unwrap(), 0.5);
+        assert_eq!(arr[0].req_u64("iters_per_sample").unwrap(), 3);
+    }
+
+    #[test]
+    fn write_json_roundtrip() {
+        let dir = std::env::temp_dir().join("vla_char_bench_json_test");
+        let path = dir.join("BENCH_unit.json");
+        let doc = Json::obj(vec![("bench", Json::Str("unit".into())), ("v", Json::Num(1.0))]);
+        write_json(&path, &doc).unwrap();
+        let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back.req_str("bench").unwrap(), "unit");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -10,10 +10,10 @@ use vla_char::hw::platform;
 use vla_char::model::molmoact::molmoact_7b;
 use vla_char::model::scaling::scaled_vla;
 use vla_char::sim::scenario::{
-    matrix_size, matrix_size_grid, pareto_front, scenario_matrix, scenario_matrix_grid, Evaluator,
-    Lever, LeverGrid, LeverGroup, Scenario, SPEC_ALPHA, SPEC_GAMMA,
+    matrix_size, matrix_size_grid, pareto_front, scenario_matrix, scenario_matrix_grid, EvalCache,
+    Evaluator, Lever, LeverGrid, LeverGroup, Scenario, ScenarioResult, SPEC_ALPHA, SPEC_GAMMA,
 };
-use vla_char::sim::{sweep, SimOptions};
+use vla_char::sim::{sweep, Bound, SimOptions};
 
 /// Scenario-engine options: ambient PIM off — exploiting PIM is a lever.
 fn opts() -> SimOptions {
@@ -315,6 +315,146 @@ fn shard_rows_evaluate_against_their_counterparts() {
     }
     assert_eq!(rep_rows, 24);
     assert_eq!(pipe_rows, 24);
+}
+
+/// Every output field of a [`ScenarioResult`], bit-exact: floats via
+/// `to_bits`, everything else via its own equality. The comparison key the
+/// incremental-vs-fresh pinning below is stated in.
+fn result_bits(r: &ScenarioResult) -> (Vec<String>, Vec<u64>, (Bound, u64, u64, bool)) {
+    (
+        vec![r.scenario.clone(), r.platform.clone(), r.model.clone()],
+        vec![
+            r.decode_time.to_bits(),
+            r.step_latency.to_bits(),
+            r.control_hz.to_bits(),
+            r.amortized_hz.to_bits(),
+            r.speedup_vs_baseline.to_bits(),
+            r.pim_util.to_bits(),
+            r.aggregate_hz.to_bits(),
+            r.total_j.to_bits(),
+            r.j_per_action.to_bits(),
+            r.avg_watts.to_bits(),
+            r.footprint_gb.to_bits(),
+            r.capacity_gb.to_bits(),
+        ],
+        (r.bound, r.streams, r.engines, r.fits_capacity),
+    )
+}
+
+/// TENTPOLE ACCEPTANCE: incremental evaluation is bitwise the fresh
+/// (pre-cache) path over the ENTIRE sharded default grid on every sweep
+/// platform — every output field, energy, capacity and shard columns
+/// included. One cache is shared across all ten platform contexts, so the
+/// sweep also exercises cross-context isolation; each scenario is then
+/// re-evaluated warm to pin that cache hits never change results.
+#[test]
+fn incremental_eval_bitwise_matches_fresh_over_full_sharded_grid() {
+    let cache = EvalCache::shared();
+    let grid = LeverGrid::default_phase2_sharded();
+    let mut rows = 0u64;
+    for p in platform::sweep_platforms() {
+        let ev = Evaluator::with_cache(&p, &opts(), &molmoact_7b(), &scaled_vla(2.0), &cache);
+        let matrix = scenario_matrix_grid(&p, &grid);
+        assert_eq!(matrix.len(), matrix_size_grid(&p, &grid), "{}", p.name);
+        for sc in &matrix {
+            let fresh = ev.eval_fresh(sc).unwrap();
+            let inc = ev.eval(sc).unwrap();
+            let warm = ev.eval(sc).unwrap();
+            assert_eq!(result_bits(&fresh), result_bits(&inc), "{}: `{}`", p.name, sc.name);
+            assert_eq!(result_bits(&inc), result_bits(&warm), "{}: `{}` warm", p.name, sc.name);
+            rows += 1;
+        }
+    }
+    // 3 PIM platforms x 510 rows + 7 SoC platforms x 180 rows; the repeat
+    // evals above must all have been served from the decode-cost cache
+    let s = cache.stats();
+    assert_eq!(rows, 2790, "3 x 510 + 7 x 180 sweep rows");
+    assert!(s.decode_cost_hits >= rows, "hits {} < rows {}", s.decode_cost_hits, rows);
+}
+
+/// TENTPOLE ACCEPTANCE: the simulation ledger the CI bench gate pins, as a
+/// test — on the PIM ceiling the 510-scenario sharded grid costs 690 full
+/// roofline integrations fresh and 90 incrementally (>= 5x fewer).
+#[test]
+fn incremental_simulation_ledger_pinned_on_the_pim_ceiling() {
+    let p = platform::thor_hbm4_pim();
+    let grid = LeverGrid::default_phase2_sharded();
+    let matrix = scenario_matrix_grid(&p, &grid);
+    assert_eq!(matrix.len(), 510);
+
+    let fresh_cache = EvalCache::shared();
+    let ev = Evaluator::with_cache(&p, &opts(), &molmoact_7b(), &scaled_vla(2.0), &fresh_cache);
+    for sc in &matrix {
+        ev.eval_fresh(sc).unwrap();
+    }
+    assert_eq!(fresh_cache.stats().integrals_computed, 690);
+
+    let inc_cache = EvalCache::shared();
+    let ev = Evaluator::with_cache(&p, &opts(), &molmoact_7b(), &scaled_vla(2.0), &inc_cache);
+    for sc in &matrix {
+        ev.eval(sc).unwrap();
+    }
+    let s = inc_cache.stats();
+    assert_eq!(s.evals, 510);
+    assert_eq!(s.integrals_computed, 90);
+    assert!(690.0 / s.integrals_computed as f64 >= 5.0);
+}
+
+/// TENTPOLE PROPERTY: random lever stacks in random order, on a cache
+/// shared between a PIM and a SoC context — cached evaluation is bitwise
+/// the fresh path, repeat evaluation is bitwise the first, and the two
+/// paths agree on validity. Lever-stack ORDER is deliberately shuffled:
+/// the canonical decode key must make order invisible to the cache.
+#[test]
+fn random_lever_stacks_cached_eval_is_bitwise_fresh() {
+    use vla_char::util::prop::prop_check;
+    let pim = platform::thor_hbm4_pim();
+    let soc = platform::orin();
+    let cache = EvalCache::shared();
+    let ev_pim = Evaluator::with_cache(&pim, &opts(), &molmoact_7b(), &scaled_vla(2.0), &cache);
+    let ev_soc = Evaluator::with_cache(&soc, &opts(), &molmoact_7b(), &scaled_vla(2.0), &cache);
+    prop_check("cached eval == fresh eval", 300, |rng| {
+        let gamma = *rng.choose(&[2u64, 4, 8]);
+        let alpha = *rng.choose(&[0.5, 0.7, 0.9]);
+        let candidates = vec![
+            Lever::QuantizeWeights { bits: *rng.choose(&[4u32, 8]) },
+            Lever::PimWeightStream { bits: *rng.choose(&[4u32, 8]) },
+            Lever::QuantizeKv,
+            Lever::PimKvAttention,
+            Lever::CompressTrace { factor: *rng.choose(&[0.25, 0.5]) },
+            Lever::Speculate { gamma, alpha },
+            Lever::PimDraft { gamma, alpha },
+            Lever::Batch { streams: *rng.choose(&[4u64, 8, 16]) },
+            Lever::Shard {
+                mode: *rng.choose(&[ShardMode::Replicate, ShardMode::PipelineDecoder]),
+                engines: *rng.choose(&[2u64, 4]),
+            },
+        ];
+        let mut stack: Vec<Lever> =
+            candidates.into_iter().filter(|_| rng.next_f64() < 0.4).collect();
+        rng.shuffle(&mut stack);
+        let sc = Scenario::of(stack);
+        let ev = if rng.next_f64() < 0.5 { &ev_pim } else { &ev_soc };
+        match (ev.eval(&sc), ev.eval_fresh(&sc)) {
+            (Ok(inc), Ok(fresh)) => {
+                if result_bits(&inc) != result_bits(&fresh) {
+                    return Err(format!("`{}`: cached != fresh", sc.name));
+                }
+                let again = ev.eval(&sc).map_err(|e| format!("`{}`: warm err {e}", sc.name))?;
+                if result_bits(&again) != result_bits(&inc) {
+                    return Err(format!("`{}`: warm repeat changed the result", sc.name));
+                }
+                Ok(())
+            }
+            (Err(_), Err(_)) => Ok(()),
+            (a, b) => Err(format!(
+                "`{}`: paths disagree on validity (cached ok={}, fresh ok={})",
+                sc.name,
+                a.is_ok(),
+                b.is_ok()
+            )),
+        }
+    });
 }
 
 /// Every scenario of the matrix reports a sane classification and a

@@ -1,0 +1,85 @@
+#!/usr/bin/env python3
+"""Gate a fresh BENCH_*.json against its checked-in baseline.
+
+Usage: check_bench.py BASELINE CURRENT [--tolerance FRAC]
+
+Two gate classes, keyed off the BASELINE document (extra keys in the
+current document are informational and ignored):
+
+  exact    every key must match the baseline numerically, zero tolerance.
+           These are machine-independent counts (matrix sizes, simulation
+           ledgers) — any drift means the grid or the cache changed shape
+           and the baseline must be re-pinned deliberately.
+
+  metrics  higher-is-better throughputs. The current value must be at
+           least baseline * (1 - tolerance); default tolerance 0.25. The
+           baseline stores conservative floors, so a pass means "no worse
+           than 25% under the floor", catching real regressions while
+           riding out runner noise.
+
+Exit code 0 on pass, 1 on any violation (all violations are listed).
+"""
+
+import argparse
+import json
+import sys
+
+
+def fail(msgs):
+    for m in msgs:
+        print(f"FAIL: {m}", file=sys.stderr)
+    print(f"\nbench gate FAILED ({len(msgs)} violation(s))", file=sys.stderr)
+    return 1
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed relative shortfall on metrics (default 0.25)")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.current) as f:
+        cur = json.load(f)
+
+    violations = []
+
+    if base.get("bench") != cur.get("bench"):
+        violations.append(
+            f"bench name mismatch: baseline {base.get('bench')!r} vs current {cur.get('bench')!r}")
+    if base.get("schema") != cur.get("schema"):
+        violations.append(
+            f"schema mismatch: baseline {base.get('schema')!r} vs current {cur.get('schema')!r}")
+
+    cur_exact = cur.get("exact", {})
+    for key, want in base.get("exact", {}).items():
+        got = cur_exact.get(key)
+        if got is None:
+            violations.append(f"exact.{key}: missing from current document")
+        elif got != want:
+            violations.append(f"exact.{key}: expected {want}, got {got}")
+
+    cur_metrics = cur.get("metrics", {})
+    for key, floor in base.get("metrics", {}).items():
+        got = cur_metrics.get(key)
+        bound = floor * (1.0 - args.tolerance)
+        if got is None:
+            violations.append(f"metrics.{key}: missing from current document")
+        elif got < bound:
+            violations.append(
+                f"metrics.{key}: {got:.4g} is below {bound:.4g} "
+                f"(baseline floor {floor:.4g}, tolerance {args.tolerance:.0%})")
+        else:
+            print(f"ok: metrics.{key} = {got:.4g} (floor {floor:.4g})")
+
+    if violations:
+        return fail(violations)
+    print("bench gate PASSED")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

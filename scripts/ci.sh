@@ -30,6 +30,11 @@ cargo clippy --workspace -- -D warnings
 echo "==> cargo bench --no-run (compile-only smoke)"
 cargo bench --no-run
 
+echo "==> bench baseline gate (bench_sim_perf --json vs BENCH_sim.json)"
+mkdir -p reports
+cargo bench --bench bench_sim_perf -- --json reports/BENCH_sim.json
+python3 scripts/check_bench.py BENCH_sim.json reports/BENCH_sim.json
+
 echo "==> vla-char pim smoke (ranked scenario matrix, top 10)"
 mkdir -p reports
 cargo run --release -- pim --top 10 | tee reports/pim_top10.txt
