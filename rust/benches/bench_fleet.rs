@@ -1,0 +1,156 @@
+//! Fleet-simulator performance: the CI smoke scale — a 10k-stream
+//! heterogeneous fleet through the discrete-event engine — plus the policy
+//! grid on the sweep worker pool.
+//!
+//! `--json [PATH]` emits the tracked `BENCH_fleet.json` baseline:
+//! machine-independent config echo (`exact`) and host event-processing
+//! rates (`metrics`) that `scripts/check_bench.py` gates in CI. Two
+//! invariants are asserted on EVERY run, JSON or not: conservation
+//! (`arrived == served + dropped + rejected`) and bitwise replay of the
+//! smoke run.
+
+use std::time::Instant;
+
+use vla_char::sim::fleet::{AdmissionPolicy, FleetConfig, FleetSim, SchedulingPolicy, ShardSpec};
+use vla_char::sim::sweep;
+use vla_char::util::bench::{black_box, json_path_from_args, write_json};
+use vla_char::util::json::Json;
+
+/// The heterogeneous smoke fleet: three engine tiers, 18 static lanes,
+/// ~600 steps/s of capacity against 500 req/s offered (~83% utilization).
+fn fleet_specs() -> Vec<ShardSpec> {
+    vec![
+        ShardSpec::uniform("edge-fast", 8, 0.02),
+        ShardSpec::uniform("edge-mid", 6, 0.04),
+        ShardSpec::uniform("edge-slow", 4, 0.08),
+    ]
+}
+
+fn main() {
+    let json_path = json_path_from_args("BENCH_fleet.json");
+    let specs = fleet_specs();
+    let static_engines: usize = specs.iter().map(|s| s.lanes).sum();
+
+    // the CI smoke scale: 10k Poisson robot streams, EDF over three SLO
+    // classes, a 500 ms base deadline
+    let cfg = FleetConfig {
+        streams: 10_000,
+        rate_hz: 0.05,
+        duration_s: 20.0,
+        seed: 7,
+        deadline_s: Some(0.5),
+        admission: AdmissionPolicy::DropOnDeadline,
+        scheduling: SchedulingPolicy::Edf,
+        slo_deadline_mults: vec![0.5, 1.0, 2.0],
+        autoscaler: None,
+        failure_rate_hz: 0.0,
+    };
+    let sim = FleetSim::new(cfg, specs.clone()).expect("bench fleet config is valid");
+    let t0 = Instant::now();
+    let r = sim.run();
+    let t_single = t0.elapsed().as_secs_f64().max(1e-12);
+    assert!(r.conserves(), "conservation must hold: {r:?}");
+    assert!(r.served > 0 && r.arrived >= 9_000, "the smoke fleet must actually serve: {r:?}");
+    let arrivals_per_s = r.arrived as f64 / t_single;
+    println!(
+        "fleet smoke: {} streams x {} engines | {} arrived, {} served, {:.1}% miss | {:.3} \
+         virtual actions/s | {:.0} arrivals/s host rate ({:.1} ms wall)",
+        10_000,
+        static_engines,
+        r.arrived,
+        r.served,
+        100.0 * r.miss_rate(),
+        r.agg_actions_s,
+        arrivals_per_s,
+        t_single * 1e3
+    );
+
+    // determinism: the same sim replays bit for bit
+    let r2 = sim.run();
+    assert_eq!(r.throughput.to_bits(), r2.throughput.to_bits(), "fleet runs must replay bitwise");
+    assert_eq!(r.served, r2.served, "fleet runs must replay bitwise");
+
+    // the policy grid (the `fleet` experiment's shape) on the worker pool,
+    // at a reduced per-cell scale so the grid probes sweep overhead rather
+    // than one giant cell
+    let mut cells: Vec<(AdmissionPolicy, SchedulingPolicy)> = Vec::new();
+    for admission in [
+        AdmissionPolicy::DropOnDeadline,
+        AdmissionPolicy::TokenBucket { rate_hz: 60.0, burst: 64 },
+        AdmissionPolicy::SloPriority { depth_limit: 64 },
+    ] {
+        for scheduling in [
+            SchedulingPolicy::EarliestFree,
+            SchedulingPolicy::RoundRobin,
+            SchedulingPolicy::LeastLoaded,
+            SchedulingPolicy::Edf,
+        ] {
+            cells.push((admission, scheduling));
+        }
+    }
+    let (grid_reports, grid_scaling) =
+        sweep::bench_scaling_stats("fleet policy grid (2k streams)", &cells, |(a, s)| {
+            let cfg = FleetConfig {
+                streams: 2_000,
+                rate_hz: 0.05,
+                duration_s: 10.0,
+                seed: 7,
+                deadline_s: Some(0.5),
+                admission: *a,
+                scheduling: *s,
+                slo_deadline_mults: vec![0.5, 1.0, 2.0],
+                autoscaler: None,
+                failure_rate_hz: 0.0,
+            };
+            black_box(FleetSim::new(cfg, fleet_specs()).unwrap().run())
+        });
+    for (cell, gr) in cells.iter().zip(&grid_reports) {
+        assert!(gr.conserves(), "grid cell {cell:?} must conserve: {gr:?}");
+    }
+
+    if let Some(path) = json_path {
+        // `exact` is pure config echo (machine-independent by construction,
+        // zero-tolerance gated); `metrics` are host event-processing rates
+        // gated against conservative floors — see scripts/check_bench.py
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("fleet".into())),
+            ("schema", Json::Num(1.0)),
+            (
+                "fleet",
+                Json::obj(vec![
+                    ("rate_hz", Json::Num(0.05)),
+                    ("duration_s", Json::Num(20.0)),
+                    ("deadline_s", Json::Num(0.5)),
+                    ("scheduling", Json::Str("edf".into())),
+                ]),
+            ),
+            (
+                "exact",
+                Json::obj(vec![
+                    ("streams", Json::Num(10_000.0)),
+                    ("shard_specs", Json::Num(specs.len() as f64)),
+                    ("static_engines", Json::Num(static_engines as f64)),
+                    ("slo_classes", Json::Num(3.0)),
+                    ("grid_cells", Json::Num(cells.len() as f64)),
+                ]),
+            ),
+            (
+                "metrics",
+                Json::obj(vec![
+                    ("arrivals_per_s_host", Json::Num(arrivals_per_s)),
+                    ("grid_cells_per_s_parallel", Json::Num(grid_scaling.parallel_rate())),
+                ]),
+            ),
+            (
+                "smoke",
+                Json::obj(vec![
+                    ("arrived", Json::Num(r.arrived as f64)),
+                    ("served", Json::Num(r.served as f64)),
+                    ("miss_rate", Json::Num(r.miss_rate())),
+                    ("virtual_actions_per_s", Json::Num(r.agg_actions_s)),
+                ]),
+            ),
+        ]);
+        write_json(&path, &doc).expect("writing BENCH_fleet.json");
+    }
+}

@@ -56,6 +56,18 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "shard-mode", value_name: Some("M"), help: "shard topologies for `serve`: replicate (rep) | pipeline (pipe) | both", default: Some("both") },
         OptSpec { name: "deadline-ms", value_name: Some("MS"), help: "queueing-delay deadline for `serve` (0 = serve everything)", default: Some("0") },
         OptSpec { name: "pim-shards", value_name: Some("LIST"), help: "shard-serving engine counts in the `pim` lever grid (`none` drops the axis)", default: Some("none") },
+        OptSpec { name: "fleet-streams", value_name: Some("N"), help: "robot streams served by `fleet`", default: Some("64") },
+        OptSpec { name: "admission", value_name: Some("P"), help: "fleet admission policy: drop | token | slo | all (sweep the grid)", default: Some("all") },
+        OptSpec { name: "scheduling", value_name: Some("P"), help: "fleet scheduling policy: earliest | rr | least | edf | all (sweep the grid)", default: Some("all") },
+        OptSpec { name: "slo-mults", value_name: Some("LIST"), help: "SLO-class deadline multipliers for `fleet` (stream s -> class s % len)", default: Some("0.5,1,2") },
+        OptSpec { name: "token-rate", value_name: Some("HZ"), help: "token-bucket admission refill rate (0 = half the offered load)", default: Some("0") },
+        OptSpec { name: "token-burst", value_name: Some("N"), help: "token-bucket admission burst capacity", default: Some("8") },
+        OptSpec { name: "slo-depth", value_name: Some("N"), help: "queue-depth limit of the SLO-priority admission policy", default: Some("8") },
+        OptSpec { name: "scale-up", value_name: Some("N"), help: "autoscaler scale-up queue-depth threshold", default: Some("8") },
+        OptSpec { name: "scale-down", value_name: Some("N"), help: "autoscaler scale-down queue-depth threshold", default: Some("1") },
+        OptSpec { name: "warmup-ms", value_name: Some("MS"), help: "autoscaler warm-up latency before a new engine takes work", default: Some("500") },
+        OptSpec { name: "max-engines", value_name: Some("N"), help: "autoscaler alive-engine ceiling per shard group", default: Some("8") },
+        OptSpec { name: "fail-rate", value_name: Some("HZ"), help: "per-engine fail-stop rate for `fleet` (0 disables failures)", default: Some("0") },
         OptSpec { name: "stride", value_name: Some("N"), help: "decode-position sampling stride (sim)", default: Some("1") },
         OptSpec { name: "no-prefetch", value_name: None, help: "disable cross-operator prefetch (sim)", default: None },
         OptSpec { name: "no-pim", value_name: None, help: "disable PIM offload (sim)", default: None },

@@ -12,7 +12,6 @@
 //! one-shard deployment is bitwise the legacy batcher.
 
 use super::frames::Frame;
-use crate::util::prng::Prng;
 use crate::util::stats::Summary;
 use std::collections::VecDeque;
 use std::time::Duration;
@@ -64,47 +63,51 @@ impl Default for BatcherConfig {
     }
 }
 
-#[derive(Debug, Clone)]
-pub(crate) struct Request {
-    pub(crate) stream: usize,
-    pub(crate) step: u64,
-    pub(crate) arrival: f64, // virtual seconds
+impl BatcherConfig {
+    /// Reject configurations the arrival process cannot represent: a
+    /// non-finite or non-positive rate panics inside the exponential
+    /// sampler, and a non-finite duration or deadline turns the serving
+    /// loop into nonsense (an unbounded trace / a deadline that can never
+    /// drop). Checked at the top of [`run_batcher`].
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.streams >= 1, "batcher needs at least one stream");
+        anyhow::ensure!(
+            self.rate_hz.is_finite() && self.rate_hz > 0.0,
+            "batcher rate must be finite and positive (got {})",
+            self.rate_hz
+        );
+        anyhow::ensure!(
+            self.duration_s.is_finite() && self.duration_s >= 0.0,
+            "batcher duration must be finite and non-negative (got {})",
+            self.duration_s
+        );
+        if let Some(d) = self.deadline_s {
+            anyhow::ensure!(
+                d.is_finite() && d >= 0.0,
+                "batcher deadline must be finite and non-negative (got {d})"
+            );
+        }
+        Ok(())
+    }
 }
+
+pub(crate) use crate::sim::fleet::arrivals::Request;
 
 /// Build the per-stream Poisson arrival trace, sorted by arrival time.
 /// Returns `(arrivals, per_stream_arrived)`.
 ///
-/// Seeding: each stream's arrival PRNG comes from
-/// [`Prng::for_stream`](crate::util::prng::Prng::for_stream) over
-/// `cfg.seed`, a SplitMix-style sub-stream derivation. The old
-/// `cfg.seed ^ (s << 17)` collapsed to `cfg.seed` at stream 0 — the same
-/// raw seed the `FrameSource` is constructed from — so stream-0 arrivals
-/// and frame noise shared one PRNG stream.
+/// Delegates to the shared fleet-layer builder
+/// ([`build_poisson_arrivals`](crate::sim::fleet::arrivals::build_poisson_arrivals)):
+/// the batcher, the shard batcher, and the fleet simulator all draw from
+/// the same generator, which is what makes the degenerate-fleet bitwise
+/// pins meaningful.
 pub(crate) fn build_arrivals(cfg: &BatcherConfig) -> (Vec<Request>, Vec<usize>) {
-    let mut arrivals: Vec<Request> = Vec::new();
-    for s in 0..cfg.streams {
-        let mut rng = Prng::for_stream(cfg.seed, s as u64);
-        let mut t = 0.0;
-        let mut step = 0u64;
-        loop {
-            t += rng.exponential(cfg.rate_hz);
-            if t > cfg.duration_s {
-                break;
-            }
-            arrivals.push(Request {
-                stream: s,
-                step,
-                arrival: t,
-            });
-            step += 1;
-        }
-    }
-    let mut per_stream_arrived = vec![0usize; cfg.streams];
-    for r in &arrivals {
-        per_stream_arrived[r.stream] += 1;
-    }
-    arrivals.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
-    (arrivals, per_stream_arrived)
+    crate::sim::fleet::arrivals::build_poisson_arrivals(
+        cfg.streams,
+        cfg.rate_hz,
+        cfg.duration_s,
+        cfg.seed,
+    )
 }
 
 /// Pick the next stream to serve: FIFO takes the earliest queued arrival,
@@ -180,6 +183,7 @@ pub fn run_batcher<S: StepServer>(
     prompt: &[i32],
     cfg: &BatcherConfig,
 ) -> anyhow::Result<ServeReport> {
+    cfg.validate()?;
     let (arrivals, per_stream_arrived) = build_arrivals(cfg);
     let arrived = arrivals.len();
 
@@ -267,6 +271,7 @@ pub fn run_batcher<S: StepServer>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prng::Prng;
 
     struct MockServer {
         service: Duration,
@@ -379,10 +384,42 @@ mod tests {
         assert!((0.0..=1.0).contains(&r.miss_rate()) && r.miss_rate() > 0.0);
         // every ADMITTED request met the deadline
         assert!(r.queue_delay.max <= 0.1 + 1e-12);
-        // an infinite deadline is the legacy serve-everything behavior
-        let all = run_with(Policy::Fifo, 2.0, 400, Some(f64::INFINITY));
+        // a deadline beyond the longest possible queueing delay is the
+        // legacy serve-everything behavior (infinite deadlines are now a
+        // validation error: `None` is the way to disable the rule)
+        let all = run_with(Policy::Fifo, 2.0, 400, Some(1e9));
         assert_eq!(all.dropped, 0);
         assert_eq!(all.served, all.arrived);
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_fields() {
+        assert!(BatcherConfig::default().validate().is_ok());
+        let bad_rate = [f64::NAN, f64::INFINITY, -2.0, 0.0];
+        for rate_hz in bad_rate {
+            let cfg = BatcherConfig { rate_hz, ..Default::default() };
+            assert!(cfg.validate().is_err(), "rate_hz {rate_hz} must be rejected");
+        }
+        for duration_s in [f64::NAN, f64::INFINITY, -1.0] {
+            let cfg = BatcherConfig { duration_s, ..Default::default() };
+            assert!(cfg.validate().is_err(), "duration_s {duration_s} must be rejected");
+        }
+        for deadline in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -0.25] {
+            let cfg = BatcherConfig { deadline_s: Some(deadline), ..Default::default() };
+            assert!(cfg.validate().is_err(), "deadline_s {deadline} must be rejected");
+        }
+        assert!(BatcherConfig { streams: 0, ..Default::default() }.validate().is_err());
+        // the serving entry point surfaces the error (not a sampler panic)
+        let mut server = MockServer { service: Duration::from_millis(10), calls: 0 };
+        let cfg = BatcherConfig { rate_hz: f64::NAN, ..Default::default() };
+        let err = run_batcher(&mut server, 4, 4, &[1], &cfg).unwrap_err();
+        assert!(err.to_string().contains("rate"), "{err}");
+        assert_eq!(server.calls, 0, "no service may be consumed on invalid config");
+        // boundary values stay valid
+        let zero_dur = BatcherConfig { duration_s: 0.0, ..Default::default() };
+        assert!(zero_dur.validate().is_ok(), "zero duration is an empty trace, not an error");
+        let zero_dl = BatcherConfig { deadline_s: Some(0.0), ..Default::default() };
+        assert!(zero_dl.validate().is_ok(), "zero deadline drops all queued work, still valid");
     }
 
     #[test]

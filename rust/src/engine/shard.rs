@@ -36,7 +36,8 @@ use crate::sim::scenario::{Evaluator, Lever, LeverGroup, Scenario};
 use crate::sim::simulator::SimOptions;
 use crate::util::stats::Summary;
 use crate::util::units::GB;
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
 use std::time::Duration;
 
 /// Inter-stage activation hop cost of the pipelined decoder (s): one hidden
@@ -317,6 +318,21 @@ impl ShardService {
             j_per_action: total_j / (streams * horizon) as f64,
         }
     }
+
+    /// Lower this service into the fleet simulator's plain
+    /// [`ShardSpec`](crate::sim::fleet::ShardSpec): one spec entry covering
+    /// this topology's `lanes()` parallel engines. This is the bridge the
+    /// layer rule allows — `engine` lowers *into* `sim::fleet`, never the
+    /// other way around.
+    pub fn fleet_spec(&self) -> crate::sim::fleet::ShardSpec {
+        crate::sim::fleet::ShardSpec {
+            label: format!("{}/{}", self.scenario, self.model.label()),
+            lanes: self.model.lanes(),
+            step_s: self.step_s,
+            actions_per_step: (self.streams_per_step * self.horizon) as f64,
+            j_per_action: self.j_per_action,
+        }
+    }
 }
 
 /// Simulator-backed [`StepServer`]: every step costs the lowered scenario's
@@ -378,6 +394,7 @@ pub fn run_shard_batcher<S: StepServer>(
     model: &ShardModel,
 ) -> anyhow::Result<ServeReport> {
     model.validate()?;
+    cfg.validate()?;
     let lanes = model.lanes();
     if lanes <= 1 {
         return run_batcher(server, patches, patch_dim, prompt, cfg);
@@ -388,7 +405,13 @@ pub fn run_shard_batcher<S: StepServer>(
     let mut frames = FrameSource::new(cfg.streams, patches, patch_dim, cfg.seed);
     let mut queues: Vec<VecDeque<Request>> = vec![VecDeque::new(); cfg.streams];
     let mut pending = arrivals.into_iter().peekable();
-    let mut free = vec![0.0f64; lanes]; // per-engine next-free time
+    // per-engine next-free times as a min-heap on (free_time, engine id):
+    // O(log R) per dispatch instead of the old O(R) scan. Free times are
+    // non-negative, so the IEEE-754 bit pattern orders exactly like the
+    // float, and the id in the key resolves ties to the lowest index —
+    // bitwise the old linear scan (pinned by a property test below).
+    let mut free: BinaryHeap<Reverse<(u64, usize)>> =
+        (0..lanes).map(|i| Reverse((0.0f64.to_bits(), i))).collect();
     let mut delays = Vec::new();
     let mut services = Vec::new();
     let mut per_stream = vec![0usize; cfg.streams];
@@ -399,15 +422,9 @@ pub fn run_shard_batcher<S: StepServer>(
     let mut max_burst = 0usize;
 
     loop {
-        // the earliest-free engine drives the dispatch clock (ties resolve
-        // to the lowest index — deterministic)
-        let mut eng = 0usize;
-        for (i, f) in free.iter().enumerate() {
-            if *f < free[eng] {
-                eng = i;
-            }
-        }
-        let mut clock = free[eng];
+        // the earliest-free engine drives the dispatch clock
+        let &Reverse((free_bits, _eng)) = free.peek().unwrap();
+        let mut clock = f64::from_bits(free_bits);
         // admit arrivals up to the dispatch clock
         while let Some(r) = pending.peek() {
             if r.arrival <= clock {
@@ -454,13 +471,18 @@ pub fn run_shard_batcher<S: StepServer>(
         delays.push(delay);
         services.push(service);
         per_stream[s] += 1;
-        free[eng] = start + service;
+        let Some(Reverse((_, eng))) = free.pop() else { unreachable!("heap holds every lane") };
+        free.push(Reverse(((start + service).to_bits(), eng)));
     }
 
     let served = services.len();
     let dropped: usize = per_stream_dropped.iter().sum();
     debug_assert_eq!(served + dropped, arrived, "every arrival is served or dropped");
-    let total_time = free.iter().fold(0.0f64, |a, &b| a.max(b)).max(1e-12);
+    let total_time = free
+        .iter()
+        .map(|&Reverse((bits, _))| f64::from_bits(bits))
+        .fold(0.0f64, f64::max)
+        .max(1e-12);
     Ok(ServeReport {
         arrived,
         served,
@@ -645,6 +667,143 @@ mod tests {
         let r3 = run_shard_batcher(&mut s3, 4, 4, &[1], &cfg, &three).unwrap();
         assert!(r1.miss_rate() > r3.miss_rate(), "replicas must cut the miss rate");
         assert_eq!(r3.served + r3.dropped, r3.arrived);
+    }
+
+    /// The pre-heap dispatch loop, kept verbatim as the reference for the
+    /// bitwise property pin: earliest-free engine by O(R) linear scan with
+    /// strict `<` (ties to the lowest index).
+    fn linear_scan_reference<S: StepServer>(
+        server: &mut S,
+        patches: usize,
+        patch_dim: usize,
+        prompt: &[i32],
+        cfg: &BatcherConfig,
+        lanes: usize,
+    ) -> ServeReport {
+        let (arrivals, per_stream_arrived) = build_arrivals(cfg);
+        let arrived = arrivals.len();
+        let mut frames = FrameSource::new(cfg.streams, patches, patch_dim, cfg.seed);
+        let mut queues: Vec<VecDeque<Request>> = vec![VecDeque::new(); cfg.streams];
+        let mut pending = arrivals.into_iter().peekable();
+        let mut free = vec![0.0f64; lanes];
+        let mut delays = Vec::new();
+        let mut services = Vec::new();
+        let mut per_stream = vec![0usize; cfg.streams];
+        let mut per_stream_dropped = vec![0usize; cfg.streams];
+        let mut rr_next = 0usize;
+        let mut last_stream = usize::MAX;
+        let mut burst = 0usize;
+        let mut max_burst = 0usize;
+        loop {
+            let mut eng = 0usize;
+            for (i, f) in free.iter().enumerate() {
+                if *f < free[eng] {
+                    eng = i;
+                }
+            }
+            let mut clock = free[eng];
+            while let Some(r) = pending.peek() {
+                if r.arrival <= clock {
+                    let r = pending.next().unwrap();
+                    queues[r.stream].push_back(r);
+                } else {
+                    break;
+                }
+            }
+            if queues.iter().all(|q| q.is_empty()) {
+                match pending.next() {
+                    Some(r) => {
+                        clock = r.arrival;
+                        queues[r.stream].push_back(r);
+                    }
+                    None => break,
+                }
+            }
+            let s = pick_stream(&queues, cfg.policy, rr_next).unwrap();
+            let req = queues[s].pop_front().unwrap();
+            rr_next = (s + 1) % cfg.streams;
+            let start = clock.max(req.arrival);
+            let delay = start - req.arrival;
+            if let Some(deadline) = cfg.deadline_s {
+                if delay > deadline {
+                    per_stream_dropped[s] += 1;
+                    continue;
+                }
+            }
+            if s == last_stream {
+                burst += 1;
+            } else {
+                burst = 1;
+                last_stream = s;
+            }
+            max_burst = max_burst.max(burst);
+            let frame = frames.next_frame(req.stream, req.step);
+            let service = server.serve(&frame, prompt).unwrap().as_secs_f64();
+            delays.push(delay);
+            services.push(service);
+            per_stream[s] += 1;
+            free[eng] = start + service;
+        }
+        let served = services.len();
+        let dropped: usize = per_stream_dropped.iter().sum();
+        let total_time = free.iter().fold(0.0f64, |a, &b| a.max(b)).max(1e-12);
+        ServeReport {
+            arrived,
+            served,
+            dropped,
+            throughput: served as f64 / total_time,
+            queue_delay: Summary::of(&delays),
+            service: Summary::of(&services),
+            per_stream_served: per_stream,
+            per_stream_arrived,
+            per_stream_dropped,
+            max_burst,
+        }
+    }
+
+    #[test]
+    fn heap_dispatch_is_bitwise_the_linear_scan() {
+        use crate::util::prop::{ensure, prop_check};
+        prop_check("heap earliest-free == linear scan", 40, |rng| {
+            let lanes = 2 + (rng.next_u64() % 4) as usize; // 2..=5
+            let streams = 1 + (rng.next_u64() % 5) as usize; // 1..=5
+            let cfg = BatcherConfig {
+                streams,
+                rate_hz: rng.uniform_f64(0.5, 4.0),
+                duration_s: rng.uniform_f64(2.0, 8.0),
+                policy: if rng.next_u64() % 2 == 0 { Policy::Fifo } else { Policy::RoundRobin },
+                seed: rng.next_u64(),
+                deadline_s: if rng.next_u64() % 2 == 0 {
+                    None
+                } else {
+                    Some(rng.uniform_f64(0.05, 1.0))
+                },
+            };
+            let service = Duration::from_millis(50 + rng.next_u64() % 900);
+            let model = ShardModel { mode: ShardMode::Replicate, engines: lanes as u64 };
+            let heap =
+                run_shard_batcher(&mut MockServer(service), 4, 4, &[1], &cfg, &model).unwrap();
+            let linear = linear_scan_reference(&mut MockServer(service), 4, 4, &[1], &cfg, lanes);
+            ensure(heap.arrived == linear.arrived, "arrived diverged")?;
+            ensure(heap.served == linear.served, "served diverged")?;
+            ensure(heap.dropped == linear.dropped, "dropped diverged")?;
+            ensure(
+                heap.throughput.to_bits() == linear.throughput.to_bits(),
+                format!("throughput {} != {}", heap.throughput, linear.throughput),
+            )?;
+            ensure(
+                heap.queue_delay.p50.to_bits() == linear.queue_delay.p50.to_bits(),
+                "p50 diverged",
+            )?;
+            ensure(
+                heap.queue_delay.p99.to_bits() == linear.queue_delay.p99.to_bits(),
+                "p99 diverged",
+            )?;
+            ensure(heap.per_stream_served == linear.per_stream_served, "per-stream served")?;
+            ensure(heap.per_stream_dropped == linear.per_stream_dropped, "per-stream dropped")?;
+            ensure(heap.max_burst == linear.max_burst, "max_burst diverged")?;
+            Ok(())
+        });
     }
 
     #[test]

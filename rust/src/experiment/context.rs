@@ -100,6 +100,35 @@ pub struct ExpContext {
     /// Shard-serving engine counts of the `pim` lever grid (`--pim-shards`;
     /// empty = no serving axis, the pre-serving matrix).
     pub pim_shards: Vec<u64>,
+    /// Robot streams the `fleet` experiment serves (`--fleet-streams`).
+    pub fleet_streams: usize,
+    /// Fleet admission policy: `drop` | `token` | `slo`, or `all` (sweep
+    /// the grid).
+    pub admission: String,
+    /// Fleet scheduling policy: `earliest` | `rr` | `least` | `edf`, or
+    /// `all` (sweep the grid).
+    pub scheduling: String,
+    /// SLO-class deadline multipliers of the fleet (`--slo-mults`; stream
+    /// `s` belongs to class `s % len`, the last class is best-effort).
+    pub slo_mults: Vec<f64>,
+    /// Token-bucket admission refill rate (Hz; 0 = auto, half the offered
+    /// load).
+    pub token_rate_hz: f64,
+    /// Token-bucket burst capacity.
+    pub token_burst: usize,
+    /// Queue-depth limit of the SLO-priority admission policy.
+    pub slo_depth: usize,
+    /// Autoscaler scale-up queue-depth threshold (`--scale-up`).
+    pub scale_up: usize,
+    /// Autoscaler scale-down queue-depth threshold (`--scale-down`).
+    pub scale_down: usize,
+    /// Autoscaler warm-up latency before a new engine takes work (ms).
+    pub warmup_ms: f64,
+    /// Autoscaler alive-engine ceiling (`--max-engines`).
+    pub max_engines: usize,
+    /// Per-engine fail-stop rate of the fleet (Hz of virtual time; 0
+    /// disables failure injection).
+    pub fail_rate_hz: f64,
     /// Override for generated tokens per step (engine-backed experiments).
     pub decode_tokens: Option<usize>,
     /// `characterize`: also emit the top-operator decode trace.
@@ -177,6 +206,37 @@ impl ExpContext {
         }
         let deadline_ms = args.get_f64("deadline-ms", 0.0)?;
         anyhow::ensure!(deadline_ms >= 0.0, "`--deadline-ms` must be >= 0");
+        // fleet policy names resolve through the one policy parser each
+        // (`all` means sweep the whole family grid)
+        let admission = args.get_or("admission", "all").to_string();
+        if admission != "all" {
+            crate::sim::fleet::AdmissionPolicy::parse(&admission, 1.0, 1, 0)
+                .map_err(|e| anyhow::anyhow!("`--admission`: {e}"))?;
+        }
+        let scheduling = args.get_or("scheduling", "all").to_string();
+        if scheduling != "all" {
+            crate::sim::fleet::SchedulingPolicy::parse(&scheduling)
+                .map_err(|e| anyhow::anyhow!("`--scheduling`: {e}"))?;
+        }
+        let slo_mults = args.get_f64_list("slo-mults", &[0.5, 1.0, 2.0])?;
+        anyhow::ensure!(
+            !slo_mults.is_empty() && slo_mults.iter().all(|m| m.is_finite() && *m > 0.0),
+            "`--slo-mults` expects finite positive multipliers, got {slo_mults:?}"
+        );
+        let token_rate_hz = args.get_f64("token-rate", 0.0)?;
+        anyhow::ensure!(token_rate_hz >= 0.0, "`--token-rate` must be >= 0 (0 = auto)");
+        let warmup_ms = args.get_f64("warmup-ms", 500.0)?;
+        anyhow::ensure!(warmup_ms >= 0.0, "`--warmup-ms` must be >= 0");
+        let fail_rate_hz = args.get_f64("fail-rate", 0.0)?;
+        anyhow::ensure!(fail_rate_hz >= 0.0, "`--fail-rate` must be >= 0");
+        let scale_up = args.get_usize("scale-up", 8)?;
+        let scale_down = args.get_usize("scale-down", 1)?;
+        anyhow::ensure!(
+            scale_down <= scale_up,
+            "`--scale-down` {scale_down} must not exceed `--scale-up` {scale_up}"
+        );
+        let max_engines = args.get_usize("max-engines", 8)?;
+        anyhow::ensure!(max_engines >= 1, "`--max-engines` must be >= 1");
         Ok(ExpContext {
             options,
             platforms,
@@ -203,6 +263,18 @@ impl ExpContext {
             shard_mode,
             deadline_ms,
             pim_shards,
+            fleet_streams: args.get_usize("fleet-streams", 64)?,
+            admission,
+            scheduling,
+            slo_mults,
+            token_rate_hz,
+            token_burst: args.get_usize("token-burst", 8)?,
+            slo_depth: args.get_usize("slo-depth", 8)?,
+            scale_up,
+            scale_down,
+            warmup_ms,
+            max_engines,
+            fail_rate_hz,
             decode_tokens: match args.get("decode-tokens") {
                 Some(_) => Some(args.get_usize("decode-tokens", 24)?),
                 None => None,
@@ -270,6 +342,18 @@ impl Default for ExpContext {
             shard_mode: "both".to_string(),
             deadline_ms: 0.0,
             pim_shards: Vec::new(),
+            fleet_streams: 64,
+            admission: "all".to_string(),
+            scheduling: "all".to_string(),
+            slo_mults: vec![0.5, 1.0, 2.0],
+            token_rate_hz: 0.0,
+            token_burst: 8,
+            slo_depth: 8,
+            scale_up: 8,
+            scale_down: 1,
+            warmup_ms: 500.0,
+            max_engines: 8,
+            fail_rate_hz: 0.0,
             decode_tokens: None,
             trace: false,
             amortized: false,
@@ -307,6 +391,18 @@ mod tests {
             OptSpec { name: "shard-mode", value_name: Some("M"), help: "", default: None },
             OptSpec { name: "deadline-ms", value_name: Some("MS"), help: "", default: None },
             OptSpec { name: "pim-shards", value_name: Some("LIST"), help: "", default: None },
+            OptSpec { name: "fleet-streams", value_name: Some("N"), help: "", default: None },
+            OptSpec { name: "admission", value_name: Some("P"), help: "", default: None },
+            OptSpec { name: "scheduling", value_name: Some("P"), help: "", default: None },
+            OptSpec { name: "slo-mults", value_name: Some("LIST"), help: "", default: None },
+            OptSpec { name: "token-rate", value_name: Some("HZ"), help: "", default: None },
+            OptSpec { name: "token-burst", value_name: Some("N"), help: "", default: None },
+            OptSpec { name: "slo-depth", value_name: Some("N"), help: "", default: None },
+            OptSpec { name: "scale-up", value_name: Some("N"), help: "", default: None },
+            OptSpec { name: "scale-down", value_name: Some("N"), help: "", default: None },
+            OptSpec { name: "warmup-ms", value_name: Some("MS"), help: "", default: None },
+            OptSpec { name: "max-engines", value_name: Some("N"), help: "", default: None },
+            OptSpec { name: "fail-rate", value_name: Some("HZ"), help: "", default: None },
         ]
     }
 
@@ -429,6 +525,48 @@ mod tests {
             let args = parse(&["serve", flag, bad]);
             assert!(ExpContext::from_args(&args).is_err(), "`{flag} {bad}` must be rejected");
         }
+    }
+
+    #[test]
+    fn fleet_flags_resolve() {
+        // defaults: full policy grids, auto token rate, idle autoscaler
+        let ctx = ExpContext::from_args(&parse(&["fleet"])).unwrap();
+        assert_eq!(ctx.fleet_streams, 64);
+        assert_eq!((ctx.admission.as_str(), ctx.scheduling.as_str()), ("all", "all"));
+        assert_eq!(ctx.slo_mults, vec![0.5, 1.0, 2.0]);
+        assert_eq!((ctx.token_rate_hz, ctx.warmup_ms, ctx.fail_rate_hz), (0.0, 500.0, 0.0));
+        assert_eq!((ctx.token_burst, ctx.slo_depth), (8, 8));
+        assert_eq!((ctx.scale_up, ctx.scale_down, ctx.max_engines), (8, 1, 8));
+        // explicit flags flow through
+        let a = parse(&[
+            "fleet", "--fleet-streams", "10000", "--admission", "token", "--scheduling", "edf",
+            "--slo-mults", "0.25,1,4", "--token-rate", "40", "--token-burst", "16", "--slo-depth",
+            "4", "--scale-up", "12", "--scale-down", "2", "--warmup-ms", "250", "--max-engines",
+            "6", "--fail-rate", "0.1",
+        ]);
+        let ctx = ExpContext::from_args(&a).unwrap();
+        assert_eq!(ctx.fleet_streams, 10_000);
+        assert_eq!((ctx.admission.as_str(), ctx.scheduling.as_str()), ("token", "edf"));
+        assert_eq!(ctx.slo_mults, vec![0.25, 1.0, 4.0]);
+        assert_eq!((ctx.token_rate_hz, ctx.warmup_ms, ctx.fail_rate_hz), (40.0, 250.0, 0.1));
+        assert_eq!((ctx.token_burst, ctx.slo_depth), (16, 4));
+        assert_eq!((ctx.scale_up, ctx.scale_down, ctx.max_engines), (12, 2, 6));
+        // policy names resolve through the fleet policy parsers: bad names,
+        // signs, and threshold inversions are rejected at context build
+        for (flag, bad) in [
+            ("--admission", "open"),
+            ("--scheduling", "sjf"),
+            ("--slo-mults", "1,0"),
+            ("--token-rate", "-1"),
+            ("--warmup-ms", "-5"),
+            ("--fail-rate", "-0.1"),
+            ("--max-engines", "0"),
+        ] {
+            let args = parse(&["fleet", flag, bad]);
+            assert!(ExpContext::from_args(&args).is_err(), "`{flag} {bad}` must be rejected");
+        }
+        let inverted = parse(&["fleet", "--scale-up", "2", "--scale-down", "5"]);
+        assert!(ExpContext::from_args(&inverted).is_err(), "scale-down > scale-up");
     }
 
     #[test]

@@ -1,0 +1,427 @@
+//! The `fleet` experiment: discrete-event fleet serving at scale.
+//!
+//! Elevates the `serve` topology sweep into ONE heterogeneous fleet: every
+//! `--shard-mode` x `--shards` topology is lowered (from one shared
+//! roofline evaluation) into a [`ShardSpec`] lane group, and the whole
+//! fleet serves `--fleet-streams` Poisson robot streams through the
+//! [`FleetSim`] discrete-event engine — admission x scheduling policy
+//! grid, SLO classes, autoscaling, and fail-stop failure injection, all
+//! without a PJRT runtime.
+//!
+//! Reported: the lowered fleet composition, the per-policy serving matrix
+//! (p50/p99 queueing delay, miss/loss rates, aggregate actions/s,
+//! J/action, peak engines), and an elasticity table (static vs autoscaled
+//! vs autoscaled under failures). Checks pin the simulator's contracts:
+//! conservation `arrived == served + dropped + rejected` on every row, the
+//! degenerate single-shard fleet bitwise equal to `run_shard_batcher`, EDF
+//! never worse than FIFO on miss rate at saturation, and the autoscaler
+//! reacting to overload within its engine bound.
+
+use super::experiments::slug;
+use super::{ExpContext, Experiment, Report, Serve};
+use crate::engine::shard::{run_shard_batcher, ShardModel, ShardService, SimStepServer};
+use crate::engine::{BatcherConfig, Policy};
+use crate::report::checks::Check;
+use crate::sim::fleet::{
+    AdmissionPolicy, AutoscalerConfig, FleetConfig, FleetReport, FleetSim, SchedulingPolicy,
+    ShardSpec,
+};
+use crate::sim::scenario::Scenario;
+use crate::sim::sweep;
+use crate::util::table::Table;
+use crate::util::units::fmt_time;
+
+/// Fleet-scale discrete-event serving, simulator-backed.
+pub struct Fleet;
+
+/// One policy-grid cell.
+struct Cell {
+    admission: AdmissionPolicy,
+    scheduling: SchedulingPolicy,
+}
+
+impl Fleet {
+    /// Admission policies of the grid: `--admission all` sweeps the three
+    /// families; a named family runs alone. The token bucket defaults to
+    /// metering half the offered load when `--token-rate` is unset.
+    fn admissions(ctx: &ExpContext) -> anyhow::Result<Vec<AdmissionPolicy>> {
+        let offered = ctx.fleet_streams as f64 * ctx.rate_hz;
+        let token_rate =
+            if ctx.token_rate_hz > 0.0 { ctx.token_rate_hz } else { (0.5 * offered).max(1e-6) };
+        let burst = ctx.token_burst.max(1) as u32;
+        if ctx.admission == "all" {
+            Ok(vec![
+                AdmissionPolicy::DropOnDeadline,
+                AdmissionPolicy::TokenBucket { rate_hz: token_rate, burst },
+                AdmissionPolicy::SloPriority { depth_limit: ctx.slo_depth },
+            ])
+        } else {
+            Ok(vec![AdmissionPolicy::parse(&ctx.admission, token_rate, burst, ctx.slo_depth)?])
+        }
+    }
+
+    /// Scheduling policies of the grid (`--scheduling all` sweeps all four).
+    fn schedulings(ctx: &ExpContext) -> anyhow::Result<Vec<SchedulingPolicy>> {
+        if ctx.scheduling == "all" {
+            Ok(vec![
+                SchedulingPolicy::EarliestFree,
+                SchedulingPolicy::RoundRobin,
+                SchedulingPolicy::LeastLoaded,
+                SchedulingPolicy::Edf,
+            ])
+        } else {
+            Ok(vec![SchedulingPolicy::parse(&ctx.scheduling)?])
+        }
+    }
+
+    /// The shared fleet workload under one (admission, scheduling) choice.
+    fn fleet_config(
+        ctx: &ExpContext,
+        admission: AdmissionPolicy,
+        scheduling: SchedulingPolicy,
+        autoscaler: Option<AutoscalerConfig>,
+        failure_rate_hz: f64,
+    ) -> FleetConfig {
+        FleetConfig {
+            streams: ctx.fleet_streams,
+            rate_hz: ctx.rate_hz,
+            duration_s: ctx.duration_s,
+            seed: ctx.seed,
+            deadline_s: if ctx.deadline_ms > 0.0 { Some(ctx.deadline_ms / 1e3) } else { None },
+            admission,
+            scheduling,
+            slo_deadline_mults: ctx.slo_mults.clone(),
+            autoscaler,
+            failure_rate_hz,
+        }
+    }
+
+    /// Autoscaler thresholds from the CLI flags.
+    fn autoscaler(ctx: &ExpContext) -> AutoscalerConfig {
+        AutoscalerConfig {
+            check_interval_s: 0.25,
+            queue_up: ctx.scale_up,
+            queue_down: ctx.scale_down,
+            p99_up_s: None,
+            warmup_s: ctx.warmup_ms / 1e3,
+            min_engines: 1,
+            max_engines: ctx.max_engines.max(1),
+        }
+    }
+}
+
+impl Experiment for Fleet {
+    fn name(&self) -> &'static str {
+        "fleet"
+    }
+
+    fn description(&self) -> &'static str {
+        "discrete-event fleet serving: admission x scheduling grid, autoscaling, failures"
+    }
+
+    fn run(&self, ctx: &ExpContext) -> anyhow::Result<Report> {
+        anyhow::ensure!(ctx.rate_hz > 0.0, "`fleet` needs a positive --rate");
+        anyhow::ensure!(ctx.fleet_streams >= 1, "`fleet` needs at least one stream");
+        let mut options = ctx.options.clone();
+        options.decode_stride = options.decode_stride.max(8);
+        let scenario = Scenario::baseline();
+
+        // ONE heterogeneous fleet out of the whole serve topology sweep,
+        // lowered from one shared roofline evaluation
+        let topologies = Serve::topologies(ctx);
+        let services: Vec<ShardService> = ShardService::lower_all(
+            &ctx.platform,
+            &options,
+            &ctx.model,
+            &ctx.draft,
+            &scenario,
+            &topologies,
+        )?;
+        let specs: Vec<ShardSpec> = services.iter().map(|s| s.fleet_spec()).collect();
+        let static_engines: usize = specs.iter().map(|s| s.lanes).sum();
+
+        let mut rep = Report::new(self.name());
+        rep.note(format!(
+            "fleet of {} static engines ({} shard specs) serving {} streams x {:.2} Hz for \
+             {:.1} s of `{}` on {}",
+            static_engines,
+            specs.len(),
+            ctx.fleet_streams,
+            ctx.rate_hz,
+            ctx.duration_s,
+            ctx.model.name,
+            ctx.platform.name
+        ));
+
+        // fleet composition: the lowered shard lane groups
+        let mut ft = Table::new(
+            &format!("Fleet composition ({} on {})", ctx.model.name, ctx.platform.name),
+            &["shard", "lanes", "step (s)", "act/step", "J/action"],
+        )
+        .left_first();
+        for s in &specs {
+            ft.row(vec![
+                s.label.clone(),
+                format!("{}", s.lanes),
+                format!("{:.3}", s.step_s),
+                format!("{:.0}", s.actions_per_step),
+                format!("{:.2}", s.j_per_action),
+            ]);
+        }
+        rep.push_table(&format!("{}_composition", slug(self.name())), ft);
+
+        // the admission x scheduling policy grid, swept on the worker pool
+        // (every fleet run is bitwise-deterministic, so the parallel sweep
+        // matches the serial one — pinned by the integration tests)
+        let admissions = Self::admissions(ctx)?;
+        let schedulings = Self::schedulings(ctx)?;
+        let mut cells: Vec<Cell> = Vec::new();
+        for &admission in &admissions {
+            for &scheduling in &schedulings {
+                cells.push(Cell { admission, scheduling });
+            }
+        }
+        let reports: Vec<FleetReport> = sweep::parallel_map(&cells, |c| {
+            let cfg = Self::fleet_config(ctx, c.admission, c.scheduling, None, ctx.fail_rate_hz);
+            FleetSim::new(cfg, specs.clone()).map(|sim| sim.run())
+        })
+        .into_iter()
+        .collect::<anyhow::Result<Vec<_>>>()?;
+
+        let mut pt = Table::new(
+            &format!("Fleet policy matrix ({} cells)", cells.len()),
+            &[
+                "admission", "scheduling", "arrived", "served", "miss", "loss", "delay p50",
+                "delay p99", "agg act/s", "J/action", "peak",
+            ],
+        )
+        .left_first();
+        for (c, r) in cells.iter().zip(&reports) {
+            pt.row(vec![
+                c.admission.label(),
+                c.scheduling.label().to_string(),
+                format!("{}", r.arrived),
+                format!("{}", r.served),
+                format!("{:.0}%", 100.0 * r.miss_rate()),
+                format!("{:.0}%", 100.0 * r.loss_rate()),
+                fmt_time(r.queue_delay.p50),
+                fmt_time(r.queue_delay.p99),
+                format!("{:.3}", r.agg_actions_s),
+                format!("{:.2}", r.j_per_action),
+                format!("{}", r.peak_engines),
+            ]);
+        }
+        rep.push_table(&format!("{}_policies", slug(self.name())), pt);
+
+        // elasticity: one elastic-tier engine (spec 0), static vs
+        // autoscaled vs autoscaled under fail-stop failures
+        let auto = Self::autoscaler(ctx);
+        let elastic = vec![specs[0].clone()];
+        let drop_ef = |autoscaler: Option<AutoscalerConfig>, failure_rate_hz: f64| {
+            Self::fleet_config(
+                ctx,
+                AdmissionPolicy::DropOnDeadline,
+                SchedulingPolicy::EarliestFree,
+                autoscaler,
+                failure_rate_hz,
+            )
+        };
+        let fixed = FleetSim::new(drop_ef(None, 0.0), elastic.clone())?.run();
+        let scaled = FleetSim::new(drop_ef(Some(auto.clone()), 0.0), elastic.clone())?.run();
+        let fail_rate = if ctx.fail_rate_hz > 0.0 { ctx.fail_rate_hz } else { 0.05 };
+        let failed = FleetSim::new(drop_ef(Some(auto.clone()), fail_rate), elastic)?.run();
+
+        let mut et = Table::new(
+            &format!("Elasticity on one `{}` tier", specs[0].label),
+            &["fleet", "peak", "ups", "downs", "failures", "delay p99", "miss", "act/s"],
+        )
+        .left_first();
+        for (label, r) in
+            [("static", &fixed), ("autoscaled", &scaled), ("autoscaled+failures", &failed)]
+        {
+            et.row(vec![
+                label.to_string(),
+                format!("{}", r.peak_engines),
+                format!("{}", r.scale_ups),
+                format!("{}", r.scale_downs),
+                format!("{}", r.failures),
+                fmt_time(r.queue_delay.p99),
+                format!("{:.0}%", 100.0 * r.miss_rate()),
+                format!("{:.3}", r.agg_actions_s),
+            ]);
+        }
+        rep.push_table(&format!("{}_elasticity", slug(self.name())), et);
+
+        let all_rows: Vec<&FleetReport> =
+            reports.iter().chain([&fixed, &scaled, &failed]).collect();
+        let best = reports
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.agg_actions_s.total_cmp(&b.1.agg_actions_s))
+            .map(|(i, _)| i)
+            .unwrap();
+        rep.note(format!(
+            "best policy cell: {} + {} -> {:.3} aggregate actions/s (loss {:.0}%)",
+            cells[best].admission.label(),
+            cells[best].scheduling.label(),
+            reports[best].agg_actions_s,
+            100.0 * reports[best].loss_rate()
+        ));
+        rep.metric("cells", cells.len() as f64);
+        rep.metric("static_engines", static_engines as f64);
+        rep.metric("best_agg_actions_s", reports[best].agg_actions_s);
+        rep.metric("loss_rate_max", reports.iter().map(|r| r.loss_rate()).fold(0.0, f64::max));
+        let peak_max = all_rows.iter().map(|r| r.peak_engines).max().unwrap_or(0);
+        rep.metric("peak_engines_max", peak_max as f64);
+
+        // FL1: conservation on every row (policy grid + elasticity)
+        let conserved = all_rows.iter().all(|r| r.conserves());
+        rep.checks.push(Check {
+            id: "FL1-conservation",
+            claim: "every arrival is served, deadline-dropped, or admission-rejected",
+            passed: conserved,
+            detail: format!(
+                "{} arrivals across {} rows",
+                all_rows.iter().map(|r| r.arrived).sum::<usize>(),
+                all_rows.len()
+            ),
+        });
+
+        // FL2: the degenerate single-shard fleet (1 lane, no autoscaler, no
+        // failures, drop-on-deadline, one SLO class) is bitwise the sharded
+        // batcher serving the same lowered scenario
+        let single = match services.iter().find(|s| s.model.engines == 1) {
+            Some(s) => s.clone(),
+            None => ShardService::lower(
+                &ctx.platform,
+                &options,
+                &ctx.model,
+                &ctx.draft,
+                &scenario,
+                ShardModel::single(),
+            )?,
+        };
+        let deadline_s = if ctx.deadline_ms > 0.0 { Some(ctx.deadline_ms / 1e3) } else { None };
+        let bcfg = BatcherConfig {
+            streams: ctx.fleet_streams,
+            rate_hz: ctx.rate_hz,
+            duration_s: ctx.duration_s,
+            policy: match ctx.policy.as_str() {
+                "fifo" => Policy::Fifo,
+                _ => Policy::RoundRobin,
+            },
+            seed: ctx.seed,
+            deadline_s,
+        };
+        let mut server = SimStepServer::for_service(&single);
+        let legacy = run_shard_batcher(&mut server, 2, 2, &[1, 2, 3], &bcfg, &single.model)?;
+        let dcfg = FleetConfig {
+            streams: ctx.fleet_streams,
+            rate_hz: ctx.rate_hz,
+            duration_s: ctx.duration_s,
+            seed: ctx.seed,
+            deadline_s,
+            admission: AdmissionPolicy::DropOnDeadline,
+            scheduling: match bcfg.policy {
+                Policy::Fifo => SchedulingPolicy::EarliestFree,
+                Policy::RoundRobin => SchedulingPolicy::RoundRobin,
+            },
+            slo_deadline_mults: vec![1.0],
+            autoscaler: None,
+            failure_rate_hz: 0.0,
+        };
+        let degen = FleetSim::new(dcfg, vec![single.fleet_spec()])?.run();
+        let bitwise = degen.arrived == legacy.arrived
+            && degen.served == legacy.served
+            && degen.dropped == legacy.dropped
+            && degen.rejected == 0
+            && degen.throughput.to_bits() == legacy.throughput.to_bits()
+            && degen.queue_delay.p50.to_bits() == legacy.queue_delay.p50.to_bits()
+            && degen.queue_delay.p99.to_bits() == legacy.queue_delay.p99.to_bits()
+            && degen.per_stream_served == legacy.per_stream_served
+            && degen.per_stream_dropped == legacy.per_stream_dropped
+            && degen.max_burst == legacy.max_burst;
+        rep.checks.push(Check {
+            id: "FL2-degenerate-bitwise",
+            claim: "a 1-shard fleet with legacy policies is bitwise run_shard_batcher",
+            passed: bitwise,
+            detail: format!(
+                "served {} vs {}, throughput {:.4} vs {:.4} req/s",
+                degen.served, legacy.served, degen.throughput, legacy.throughput
+            ),
+        });
+
+        // FL3: EDF never worse than FIFO on miss rate at saturation. The
+        // probe scales the validated saturation shape (8 streams at 1.2
+        // erlangs offered, deadline 1.2x the step, a 16:1 SLO deadline
+        // spread) to the lowered step time, clamped away from the ns
+        // quantization grid and from hour-long virtual traces.
+        let probe_step = specs[0].step_s.clamp(1e-3, 10.0);
+        let probe = ShardSpec {
+            label: "edf-probe".into(),
+            lanes: 1,
+            step_s: probe_step,
+            actions_per_step: specs[0].actions_per_step,
+            j_per_action: specs[0].j_per_action,
+        };
+        let saturated = |scheduling| -> anyhow::Result<FleetReport> {
+            let cfg = FleetConfig {
+                streams: 8,
+                rate_hz: 1.2 / (8.0 * probe_step),
+                duration_s: 100.0 * probe_step,
+                seed: 71,
+                deadline_s: Some(1.2 * probe_step),
+                admission: AdmissionPolicy::DropOnDeadline,
+                scheduling,
+                slo_deadline_mults: vec![0.25, 1.0, 4.0],
+                autoscaler: None,
+                failure_rate_hz: 0.0,
+            };
+            Ok(FleetSim::new(cfg, vec![probe.clone()])?.run())
+        };
+        let fifo = saturated(SchedulingPolicy::EarliestFree)?;
+        let edf = saturated(SchedulingPolicy::Edf)?;
+        rep.checks.push(Check {
+            id: "FL3-edf-at-saturation",
+            claim: "EDF never misses more than FIFO on a saturated single-lane probe",
+            passed: fifo.dropped > 0
+                && edf.miss_rate() <= fifo.miss_rate() + 1e-12
+                && fifo.conserves()
+                && edf.conserves(),
+            detail: format!(
+                "miss {:.1}% (edf) vs {:.1}% (fifo), {} arrivals",
+                100.0 * edf.miss_rate(),
+                100.0 * fifo.miss_rate(),
+                fifo.arrived
+            ),
+        });
+
+        // FL4: the autoscaler reacts to overload on the elastic tier and
+        // stays within its engine bound (failures ride the same machinery:
+        // the min-engine floor is the failover path)
+        let offered = ctx.fleet_streams as f64 * ctx.rate_hz;
+        let tier_capacity = 1.0 / specs[0].step_s.max(1e-30);
+        let overloaded = offered > 1.5 * tier_capacity;
+        let bounded =
+            scaled.peak_engines <= auto.max_engines && failed.peak_engines <= auto.max_engines;
+        let reacted = scaled.scale_ups > 0
+            && scaled.peak_engines > 1
+            && scaled.loss_rate() <= fixed.loss_rate() + 1e-12;
+        rep.checks.push(Check {
+            id: "FL4-autoscaler",
+            claim: "the autoscaler reacts to overload within its max-engine bound",
+            passed: bounded && (!overloaded || reacted),
+            detail: format!(
+                "offered {:.1}/s vs tier {:.2}/s; peak {} (max {}), {} ups, {} failures",
+                offered,
+                tier_capacity,
+                scaled.peak_engines,
+                auto.max_engines,
+                scaled.scale_ups,
+                failed.failures
+            ),
+        });
+
+        Ok(rep)
+    }
+}

@@ -20,12 +20,14 @@
 mod context;
 mod engine_exps;
 mod experiments;
+mod fleet_exp;
 mod report;
 mod serve_exp;
 
 pub use context::ExpContext;
 pub use engine_exps::{ControlLoop, StepOnce, Validate};
 pub use experiments::{Ablate, Batch, Characterize, Codesign, Energy, PimScenarios, Project, Table1};
+pub use fleet_exp::Fleet;
 pub use report::{DirSink, Item, Report, ReportSink, StdoutSink};
 pub use serve_exp::Serve;
 
@@ -42,7 +44,8 @@ pub trait Experiment: Sync {
 /// Every registered experiment, in help/report order: the simulator-backed
 /// paper artifacts first, then the engine-backed (PJRT) flows, which report
 /// "skipped: no PJRT runtime" where no real runtime is available. `serve`
-/// is simulator-backed since the shard model landed — it runs everywhere.
+/// and `fleet` are simulator-backed since the shard model landed — they
+/// run everywhere.
 pub static REGISTRY: &[&dyn Experiment] = &[
     &Table1,
     &Characterize,
@@ -55,6 +58,7 @@ pub static REGISTRY: &[&dyn Experiment] = &[
     &StepOnce,
     &ControlLoop,
     &Serve,
+    &Fleet,
     &Validate,
 ];
 

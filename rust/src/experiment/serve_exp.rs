@@ -51,8 +51,10 @@ impl Serve {
     }
 
     /// The topologies of the sweep: `--shard-mode` x `--shards`, with the
-    /// redundant pipeline-1 collapsed into the single engine it is.
-    fn topologies(ctx: &ExpContext) -> Vec<ShardModel> {
+    /// redundant pipeline-1 collapsed into the single engine it is. The
+    /// `fleet` experiment reuses this set as its heterogeneous static
+    /// fleet, one lane group per topology.
+    pub(crate) fn topologies(ctx: &ExpContext) -> Vec<ShardModel> {
         let mut v: Vec<ShardModel> = Vec::new();
         for mode in ctx.serve_modes() {
             for &engines in &ctx.shards {

@@ -1,0 +1,99 @@
+//! Poisson arrival-trace generation shared by every serving layer.
+//!
+//! This is the single source of truth for request arrival processes: the
+//! legacy batcher (`engine::batcher`), the shard batcher, and the fleet
+//! simulator all build their traces here, so the degenerate-fleet bitwise
+//! pins compare loops fed by *identical* request streams.
+//!
+//! Seeding: each stream's arrival PRNG comes from
+//! [`Prng::for_stream`](crate::util::prng::Prng::for_stream) over the base
+//! seed, a SplitMix-style sub-stream derivation — stream 0 does NOT
+//! collapse to the raw seed, so arrival noise never aliases other
+//! consumers of the same base seed (e.g. the engine frame source).
+
+use crate::util::prng::Prng;
+
+/// One step request in virtual time.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub stream: usize,
+    pub step: u64,
+    /// Arrival time (virtual seconds).
+    pub arrival: f64,
+}
+
+/// Build the per-stream Poisson arrival trace, sorted by arrival time.
+/// Returns `(arrivals, per_stream_arrived)`.
+///
+/// The caller is responsible for validating `rate_hz` and `duration_s`
+/// (finite, positive rate; finite, non-negative duration) — see
+/// `BatcherConfig::validate` / `FleetConfig::validate`.
+pub fn build_poisson_arrivals(
+    streams: usize,
+    rate_hz: f64,
+    duration_s: f64,
+    seed: u64,
+) -> (Vec<Request>, Vec<usize>) {
+    let mut arrivals: Vec<Request> = Vec::new();
+    for s in 0..streams {
+        let mut rng = Prng::for_stream(seed, s as u64);
+        let mut t = 0.0;
+        let mut step = 0u64;
+        loop {
+            t += rng.exponential(rate_hz);
+            if t > duration_s {
+                break;
+            }
+            arrivals.push(Request { stream: s, step, arrival: t });
+            step += 1;
+        }
+    }
+    let mut per_stream_arrived = vec![0usize; streams];
+    for r in &arrivals {
+        per_stream_arrived[r.stream] += 1;
+    }
+    arrivals.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+    (arrivals, per_stream_arrived)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_sorted_and_conserved() {
+        let (arrivals, per_stream) = build_poisson_arrivals(4, 2.0, 10.0, 11);
+        assert!(!arrivals.is_empty());
+        for w in arrivals.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival, "trace must be time-sorted");
+        }
+        assert_eq!(per_stream.iter().sum::<usize>(), arrivals.len());
+        for r in &arrivals {
+            assert!(r.arrival > 0.0 && r.arrival <= 10.0);
+        }
+    }
+
+    #[test]
+    fn trace_is_deterministic_per_seed() {
+        let (a, _) = build_poisson_arrivals(3, 1.5, 8.0, 42);
+        let (b, _) = build_poisson_arrivals(3, 1.5, 8.0, 42);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
+            assert_eq!((x.stream, x.step), (y.stream, y.step));
+        }
+        let (c, _) = build_poisson_arrivals(3, 1.5, 8.0, 43);
+        assert_ne!(
+            a.iter().map(|r| r.arrival.to_bits()).collect::<Vec<_>>(),
+            c.iter().map(|r| r.arrival.to_bits()).collect::<Vec<_>>(),
+            "different seeds must give different traces"
+        );
+    }
+
+    #[test]
+    fn zero_duration_is_an_empty_trace() {
+        let (arrivals, per_stream) = build_poisson_arrivals(5, 2.0, 0.0, 7);
+        assert!(arrivals.is_empty());
+        assert_eq!(per_stream, vec![0; 5]);
+    }
+}

@@ -1,0 +1,190 @@
+//! Queue-depth / tail-latency autoscaler for the fleet simulator.
+//!
+//! A three-state decision machine evaluated at a fixed virtual-time
+//! cadence (`ScaleCheck` events):
+//!
+//! ```text
+//!             queued > queue_up  OR  window p99 > p99_up_s
+//!        Hold ────────────────────────────────────────────▶ Up
+//!          ▲                                                │ spawn engine,
+//!          │  queued < queue_down AND an idle               │ free at
+//!          │  dynamic engine exists                         │ now + warmup_s
+//!        Down ◀─────────────────────────────────────────────┘
+//! ```
+//!
+//! `Up` additionally fires whenever the alive engine count has fallen
+//! below `min_engines` (fail-stop replacement: the autoscaler is also the
+//! failover path). Scaled-up engines come online after `warmup_s` of
+//! virtual time; scale-down only retires *idle* dynamically-added engines
+//! (never the static fleet), so in-flight work is never killed.
+
+use crate::util::stats::Summary;
+
+/// Autoscaler thresholds. `p99_up_s` is the tail-latency trigger over the
+/// delays observed since the previous check; `None` scales on queue depth
+/// alone.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscalerConfig {
+    /// Virtual seconds between scale checks.
+    pub check_interval_s: f64,
+    /// Scale up when the total queue depth exceeds this.
+    pub queue_up: usize,
+    /// Scale down when the total queue depth is below this.
+    pub queue_down: usize,
+    /// Also scale up when the observed window p99 queueing delay (s)
+    /// exceeds this.
+    pub p99_up_s: Option<f64>,
+    /// Warm-up latency before a scaled-up engine takes work (s).
+    pub warmup_s: f64,
+    /// Never retire below this many alive engines; falling under it (e.g.
+    /// through failures) forces a scale-up.
+    pub min_engines: usize,
+    /// Never scale above this many alive engines.
+    pub max_engines: usize,
+}
+
+impl Default for AutoscalerConfig {
+    fn default() -> Self {
+        AutoscalerConfig {
+            check_interval_s: 0.25,
+            queue_up: 8,
+            queue_down: 1,
+            p99_up_s: None,
+            warmup_s: 0.5,
+            min_engines: 1,
+            max_engines: 8,
+        }
+    }
+}
+
+impl AutoscalerConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.check_interval_s.is_finite() && self.check_interval_s > 0.0,
+            "autoscaler check interval must be finite and positive (got {})",
+            self.check_interval_s
+        );
+        anyhow::ensure!(
+            self.warmup_s.is_finite() && self.warmup_s >= 0.0,
+            "autoscaler warmup must be finite and non-negative (got {})",
+            self.warmup_s
+        );
+        if let Some(p) = self.p99_up_s {
+            anyhow::ensure!(
+                p.is_finite() && p >= 0.0,
+                "autoscaler p99 threshold must be finite and non-negative (got {p})"
+            );
+        }
+        anyhow::ensure!(self.min_engines >= 1, "autoscaler needs at least one engine");
+        anyhow::ensure!(
+            self.max_engines >= self.min_engines,
+            "autoscaler max_engines {} < min_engines {}",
+            self.max_engines,
+            self.min_engines
+        );
+        anyhow::ensure!(
+            self.queue_down <= self.queue_up,
+            "autoscaler queue_down {} > queue_up {} would oscillate",
+            self.queue_down,
+            self.queue_up
+        );
+        Ok(())
+    }
+}
+
+/// One scale decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    Up,
+    Down,
+    Hold,
+}
+
+/// Live autoscaler state: the config plus the delay window accumulated
+/// since the last check.
+#[derive(Debug, Clone)]
+pub struct Autoscaler {
+    pub cfg: AutoscalerConfig,
+    window: Vec<f64>,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscalerConfig) -> Autoscaler {
+        Autoscaler { cfg, window: Vec::new() }
+    }
+
+    /// Record one observed queueing delay (served or dropped dispatch).
+    pub fn observe(&mut self, delay_s: f64) {
+        self.window.push(delay_s);
+    }
+
+    /// Evaluate the state machine at a check point. Consumes the window.
+    pub fn decide(&mut self, queued: usize, alive: usize) -> ScaleDecision {
+        let p99 = Summary::of(&self.window).p99;
+        self.window.clear();
+        if alive < self.cfg.min_engines {
+            // failover replacement beats every other rule
+            return ScaleDecision::Up;
+        }
+        let tail_hot = self.cfg.p99_up_s.is_some_and(|thr| p99 > thr);
+        if (queued > self.cfg.queue_up || tail_hot) && alive < self.cfg.max_engines {
+            return ScaleDecision::Up;
+        }
+        if queued < self.cfg.queue_down && alive > self.cfg.min_engines {
+            return ScaleDecision::Down;
+        }
+        ScaleDecision::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AutoscalerConfig {
+        AutoscalerConfig {
+            check_interval_s: 0.5,
+            queue_up: 4,
+            queue_down: 1,
+            p99_up_s: Some(0.2),
+            warmup_s: 0.25,
+            min_engines: 1,
+            max_engines: 3,
+        }
+    }
+
+    #[test]
+    fn validates_thresholds() {
+        assert!(cfg().validate().is_ok());
+        assert!(AutoscalerConfig { check_interval_s: 0.0, ..cfg() }.validate().is_err());
+        assert!(AutoscalerConfig { check_interval_s: f64::NAN, ..cfg() }.validate().is_err());
+        assert!(AutoscalerConfig { warmup_s: -1.0, ..cfg() }.validate().is_err());
+        assert!(AutoscalerConfig { p99_up_s: Some(f64::INFINITY), ..cfg() }.validate().is_err());
+        assert!(AutoscalerConfig { min_engines: 0, ..cfg() }.validate().is_err());
+        assert!(AutoscalerConfig { max_engines: 0, min_engines: 2, ..cfg() }.validate().is_err());
+        assert!(AutoscalerConfig { queue_down: 9, ..cfg() }.validate().is_err());
+    }
+
+    #[test]
+    fn queue_depth_drives_the_state_machine() {
+        let mut a = Autoscaler::new(cfg());
+        assert_eq!(a.decide(10, 1), ScaleDecision::Up, "deep queue scales up");
+        assert_eq!(a.decide(10, 3), ScaleDecision::Hold, "capped at max_engines");
+        assert_eq!(a.decide(2, 2), ScaleDecision::Hold, "hysteresis band holds");
+        assert_eq!(a.decide(0, 2), ScaleDecision::Down, "drained queue scales down");
+        assert_eq!(a.decide(0, 1), ScaleDecision::Hold, "floored at min_engines");
+    }
+
+    #[test]
+    fn tail_latency_and_failover_triggers() {
+        let mut a = Autoscaler::new(cfg());
+        for _ in 0..100 {
+            a.observe(0.5); // p99 well above the 0.2 s threshold
+        }
+        assert_eq!(a.decide(0, 2), ScaleDecision::Up, "hot tail scales up at shallow queue");
+        // the window was consumed: the same shallow queue now scales down
+        assert_eq!(a.decide(0, 2), ScaleDecision::Down);
+        // alive below min_engines is an unconditional replacement
+        assert_eq!(a.decide(0, 0), ScaleDecision::Up);
+    }
+}

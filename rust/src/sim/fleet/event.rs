@@ -1,0 +1,104 @@
+//! Typed event queue over virtual time for the fleet simulator.
+//!
+//! Events are ordered by `(time, push order)`: time via the `f64::to_bits`
+//! trick (valid because virtual times are finite and non-negative, where
+//! the IEEE-754 bit pattern is monotone), ties broken by a monotone
+//! sequence number so simultaneous events pop in the order they were
+//! scheduled — fully deterministic, no float-comparison ambiguity.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// One fleet event. `Completion` doubles as "engine ready": a scaled-up
+/// engine schedules a completion at the end of its warm-up so the
+/// dispatcher wakes exactly when it comes online.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FleetEvent {
+    /// Request `step` of `stream` arrives.
+    Arrival { stream: u32, step: u64 },
+    /// Engine finished its current service (or its warm-up) and can pull
+    /// the next request.
+    Completion { engine: u32 },
+    /// Periodic autoscaler evaluation.
+    ScaleCheck,
+    /// Fail-stop: the engine dies (drain-then-die — in-flight work
+    /// completes, nothing new is dispatched onto it).
+    Failure { engine: u32 },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct Queued {
+    time_bits: u64,
+    seq: u64,
+    event: FleetEvent,
+}
+
+/// Deterministic min-queue of [`FleetEvent`]s in virtual time.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<Queued>>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    /// Schedule `event` at virtual time `time` (finite, >= 0).
+    pub fn push(&mut self, time: f64, event: FleetEvent) {
+        debug_assert!(
+            time.is_finite() && time >= 0.0,
+            "fleet events live in finite non-negative virtual time (got {time})"
+        );
+        self.heap.push(Reverse(Queued { time_bits: time.to_bits(), seq: self.seq, event }));
+        self.seq += 1;
+    }
+
+    /// Pop the earliest event, `None` when the queue is drained.
+    pub fn pop(&mut self) -> Option<(f64, FleetEvent)> {
+        self.heap.pop().map(|Reverse(q)| (f64::from_bits(q.time_bits), q.event))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order_with_stable_ties() {
+        let mut q = EventQueue::new();
+        q.push(2.0, FleetEvent::ScaleCheck);
+        q.push(1.0, FleetEvent::Completion { engine: 3 });
+        q.push(1.0, FleetEvent::Arrival { stream: 0, step: 0 });
+        q.push(0.5, FleetEvent::Failure { engine: 1 });
+        assert_eq!(q.len(), 4);
+        let (t0, e0) = q.pop().unwrap();
+        assert_eq!((t0, e0), (0.5, FleetEvent::Failure { engine: 1 }));
+        // tie at t=1.0: push order wins (completion was scheduled first)
+        let (_, e1) = q.pop().unwrap();
+        assert_eq!(e1, FleetEvent::Completion { engine: 3 });
+        let (_, e2) = q.pop().unwrap();
+        assert_eq!(e2, FleetEvent::Arrival { stream: 0, step: 0 });
+        let (t3, e3) = q.pop().unwrap();
+        assert_eq!((t3, e3), (2.0, FleetEvent::ScaleCheck));
+        assert!(q.pop().is_none() && q.is_empty());
+    }
+
+    #[test]
+    fn times_round_trip_bitwise() {
+        let mut q = EventQueue::new();
+        let t = 0.1 + 0.2; // a value with a non-trivial mantissa
+        q.push(t, FleetEvent::ScaleCheck);
+        let (got, _) = q.pop().unwrap();
+        assert_eq!(got.to_bits(), t.to_bits());
+    }
+}

@@ -1,0 +1,45 @@
+//! Fleet-scale serving simulator: a deterministic discrete-event engine
+//! over virtual time (paper §5 scaled out — the direct path to "millions
+//! of users" in the ROADMAP).
+//!
+//! The paper's bottleneck analysis says the memory-bound action-generation
+//! phase dominates end-to-end VLA latency; at fleet scale that means edge
+//! serving economics are *queueing* economics. This subsystem simulates
+//! thousands-to-millions of Poisson robot streams against a fleet of
+//! engine shards — each shard a `ShardService`-lowered scenario, so
+//! heterogeneous fleets (replicated SoC engines next to pipelined decoders
+//! next to PIM-resident shards) cost one shared baseline roofline
+//! simulation — under pluggable admission and scheduling policies, an
+//! autoscaler, and fail-stop failure injection.
+//!
+//! Module map:
+//!
+//! - [`arrivals`]: the Poisson arrival-trace builder every serving layer
+//!   shares (the batcher re-uses it, which is what makes the degenerate
+//!   bitwise pins meaningful).
+//! - [`event`]: the typed event queue over virtual time (arrivals, service
+//!   completions, scale checks, failures).
+//! - [`policy`]: [`AdmissionPolicy`] (drop-on-deadline, token bucket,
+//!   SLO-class priority) and [`SchedulingPolicy`] (earliest-free,
+//!   round-robin, least-loaded, SLO-aware EDF).
+//! - [`autoscale`]: the queue-depth / p99 autoscaler state machine with
+//!   warm-up latency.
+//! - [`sim`]: [`FleetSim`] itself — the degenerate single-lane mirror of
+//!   the legacy batcher plus the general event loop, and the
+//!   conservation-checked [`FleetReport`].
+//!
+//! Layering: `sim::fleet` consumes plain [`ShardSpec`] numbers, never
+//! `engine` types — the engine layer lowers scenario evaluations *into*
+//! specs (`ShardService::fleet_spec`), keeping the repo's "`sim` never
+//! depends on `engine`" rule intact.
+
+pub mod arrivals;
+pub mod autoscale;
+pub mod event;
+pub mod policy;
+pub mod sim;
+
+pub use autoscale::{Autoscaler, AutoscalerConfig, ScaleDecision};
+pub use event::{EventQueue, FleetEvent};
+pub use policy::{AdmissionPolicy, SchedulingPolicy};
+pub use sim::{FleetConfig, FleetReport, FleetSim, ShardSpec};

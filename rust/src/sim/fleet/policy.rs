@@ -1,0 +1,188 @@
+//! Pluggable admission and scheduling policies of the fleet simulator.
+//!
+//! Admission decides at *arrival* whether a request may even enter the
+//! queue (`rejected`); scheduling decides at *dispatch* which queued
+//! request the next free engine serves. Deadline staleness (drop at
+//! dispatch when the queueing delay exceeds the request's SLO deadline) is
+//! orthogonal and always on when a deadline is configured — exactly the
+//! legacy batcher rule, so the drop-on-deadline admission policy with
+//! earliest-free scheduling IS the legacy serving stack.
+
+/// Admission control applied when a request arrives.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AdmissionPolicy {
+    /// Admit every arrival; stale requests drop at dispatch (legacy).
+    DropOnDeadline,
+    /// Fleet-wide token bucket: `rate_hz` tokens/s refill, `burst`
+    /// capacity; an arrival without a full token is rejected outright
+    /// (never queued, never served).
+    TokenBucket { rate_hz: f64, burst: u32 },
+    /// SLO-class priority: best-effort-class arrivals (the *last* SLO
+    /// class) are rejected while the total queue depth is at or above
+    /// `depth_limit`; guaranteed classes always enter the queue.
+    SloPriority { depth_limit: usize },
+}
+
+impl AdmissionPolicy {
+    pub fn label(&self) -> String {
+        match self {
+            AdmissionPolicy::DropOnDeadline => "drop".into(),
+            AdmissionPolicy::TokenBucket { rate_hz, burst } => {
+                format!("token({rate_hz:.0}/s,b{burst})")
+            }
+            AdmissionPolicy::SloPriority { depth_limit } => format!("slo(q{depth_limit})"),
+        }
+    }
+
+    /// Parse a CLI admission name. `token` and `slo` take their defaults
+    /// from the serving context (the caller substitutes the tuned
+    /// parameters); this only selects the family.
+    pub fn parse(
+        s: &str,
+        token_rate_hz: f64,
+        token_burst: u32,
+        depth_limit: usize,
+    ) -> anyhow::Result<AdmissionPolicy> {
+        match s {
+            "drop" | "deadline" => Ok(AdmissionPolicy::DropOnDeadline),
+            "token" | "bucket" => {
+                Ok(AdmissionPolicy::TokenBucket { rate_hz: token_rate_hz, burst: token_burst })
+            }
+            "slo" | "priority" => Ok(AdmissionPolicy::SloPriority { depth_limit }),
+            other => anyhow::bail!(
+                "unknown admission policy `{other}` (expected `drop`, `token`, or `slo`)"
+            ),
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if let AdmissionPolicy::TokenBucket { rate_hz, burst } = self {
+            anyhow::ensure!(
+                rate_hz.is_finite() && *rate_hz > 0.0,
+                "token bucket rate must be finite and positive (got {rate_hz})"
+            );
+            anyhow::ensure!(*burst >= 1, "token bucket burst must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// Fleet-wide token bucket state (continuous refill, deterministic f64
+/// arithmetic — part of the bitwise-pinned simulation state).
+#[derive(Debug, Clone)]
+pub(crate) struct TokenBucket {
+    rate_hz: f64,
+    burst: f64,
+    tokens: f64,
+    last_t: f64,
+}
+
+impl TokenBucket {
+    pub(crate) fn new(rate_hz: f64, burst: u32) -> TokenBucket {
+        TokenBucket { rate_hz, burst: burst as f64, tokens: burst as f64, last_t: 0.0 }
+    }
+
+    /// Refill to time `now` and try to take one token.
+    pub(crate) fn admit(&mut self, now: f64) -> bool {
+        self.tokens = (self.tokens + (now - self.last_t) * self.rate_hz).min(self.burst);
+        self.last_t = now;
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Which queued request the next free engine serves, and which engine a
+/// fresh arrival lands on when several sit idle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulingPolicy {
+    /// Engine: earliest-free (ties to the lowest id). Request: FIFO by
+    /// arrival time — the legacy batcher's `Policy::Fifo`.
+    EarliestFree,
+    /// Engine: earliest-free. Request: round-robin across streams — the
+    /// legacy batcher's `Policy::RoundRobin` (bounds per-stream
+    /// starvation; selection is O(streams), meant for modest fleets).
+    RoundRobin,
+    /// Engine: least accumulated busy time (balances heterogeneous
+    /// shards). Request: FIFO by arrival time.
+    LeastLoaded,
+    /// Engine: earliest-free. Request: SLO-aware earliest-deadline-first
+    /// over `arrival + class deadline`; with a single SLO class this
+    /// degenerates to FIFO.
+    Edf,
+}
+
+impl SchedulingPolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedulingPolicy::EarliestFree => "earliest-free",
+            SchedulingPolicy::RoundRobin => "round-robin",
+            SchedulingPolicy::LeastLoaded => "least-loaded",
+            SchedulingPolicy::Edf => "edf",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<SchedulingPolicy> {
+        match s {
+            "earliest" | "earliest-free" | "fifo" => Ok(SchedulingPolicy::EarliestFree),
+            "rr" | "round-robin" => Ok(SchedulingPolicy::RoundRobin),
+            "least" | "least-loaded" => Ok(SchedulingPolicy::LeastLoaded),
+            "edf" => Ok(SchedulingPolicy::Edf),
+            other => anyhow::bail!(
+                "unknown scheduling policy `{other}` (expected `earliest`, `rr`, `least`, or `edf`)"
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_labels_round_trip() {
+        assert_eq!(
+            AdmissionPolicy::parse("drop", 10.0, 4, 8).unwrap(),
+            AdmissionPolicy::DropOnDeadline
+        );
+        assert_eq!(
+            AdmissionPolicy::parse("token", 10.0, 4, 8).unwrap(),
+            AdmissionPolicy::TokenBucket { rate_hz: 10.0, burst: 4 }
+        );
+        assert_eq!(
+            AdmissionPolicy::parse("slo", 10.0, 4, 8).unwrap(),
+            AdmissionPolicy::SloPriority { depth_limit: 8 }
+        );
+        assert!(AdmissionPolicy::parse("open", 10.0, 4, 8).is_err());
+        assert_eq!(SchedulingPolicy::parse("edf").unwrap(), SchedulingPolicy::Edf);
+        assert_eq!(SchedulingPolicy::parse("fifo").unwrap(), SchedulingPolicy::EarliestFree);
+        assert_eq!(SchedulingPolicy::parse("least").unwrap(), SchedulingPolicy::LeastLoaded);
+        assert!(SchedulingPolicy::parse("sjf").is_err());
+        assert_eq!(SchedulingPolicy::RoundRobin.label(), "round-robin");
+        assert!(AdmissionPolicy::DropOnDeadline.label().contains("drop"));
+    }
+
+    #[test]
+    fn token_bucket_validates_and_meters() {
+        assert!(AdmissionPolicy::TokenBucket { rate_hz: f64::NAN, burst: 2 }.validate().is_err());
+        assert!(AdmissionPolicy::TokenBucket { rate_hz: -1.0, burst: 2 }.validate().is_err());
+        assert!(AdmissionPolicy::TokenBucket { rate_hz: 1.0, burst: 0 }.validate().is_err());
+        assert!(AdmissionPolicy::DropOnDeadline.validate().is_ok());
+
+        let mut tb = TokenBucket::new(1.0, 2);
+        // burst capacity: two back-to-back admits, then dry
+        assert!(tb.admit(0.0));
+        assert!(tb.admit(0.0));
+        assert!(!tb.admit(0.0));
+        // refills at 1 token/s
+        assert!(!tb.admit(0.5));
+        assert!(tb.admit(1.6));
+        // never exceeds burst
+        assert!(tb.admit(100.0));
+        assert!(tb.admit(100.0));
+        assert!(!tb.admit(100.0));
+    }
+}

@@ -5,6 +5,7 @@
 pub mod calibrate;
 pub mod codesign;
 pub mod energy;
+pub mod fleet;
 pub mod roofline;
 pub mod scenario;
 pub mod simulator;

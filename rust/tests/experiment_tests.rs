@@ -32,12 +32,13 @@ fn registry_covers_every_subcommand() {
         "step",
         "control-loop",
         "serve",
+        "fleet",
         "validate",
     ] {
         assert!(names.contains(&want), "subcommand `{want}` has no registered experiment");
         assert!(experiment::by_name(want).is_some());
     }
-    assert_eq!(names.len(), 12, "new experiments must be added to this completeness list");
+    assert_eq!(names.len(), 13, "new experiments must be added to this completeness list");
 }
 
 /// Every registered experiment runs against one shared context, passes its
@@ -75,6 +76,8 @@ fn every_experiment_runs_and_emits() {
         "pim_matrix.csv",
         "serve_matrix.csv",
         "serve_topology.md",
+        "fleet_policies.csv",
+        "fleet_composition.md",
     ];
     for f in expect_files {
         assert!(dir.join(f).exists(), "missing {f}");

@@ -1,0 +1,205 @@
+//! Integration tests of the fleet serving simulator: the parallel policy x
+//! fleet sweep is bitwise the serial one, conservation holds under
+//! randomized admission/scheduling/failure configurations, and the
+//! degenerate single-shard fleet bitwise reproduces `run_shard_batcher` on
+//! a real lowered scenario — the acceptance pin of the `fleet` experiment.
+
+use vla_char::engine::{
+    run_shard_batcher, BatcherConfig, Policy, ShardModel, ShardService, SimStepServer,
+};
+use vla_char::hw::platform;
+use vla_char::model::scaling::scaled_vla;
+use vla_char::sim::fleet::{
+    AdmissionPolicy, AutoscalerConfig, FleetConfig, FleetReport, FleetSim, SchedulingPolicy,
+    ShardSpec,
+};
+use vla_char::sim::scenario::Scenario;
+use vla_char::sim::{sweep, SimOptions};
+use vla_char::util::prop::{ensure, prop_check};
+
+/// A fleet report reduced to an exactly-comparable form: every count and
+/// every float's bit pattern.
+fn fingerprint(r: &FleetReport) -> (Vec<usize>, Vec<u64>) {
+    let mut counts = vec![r.arrived, r.served, r.dropped, r.rejected, r.max_burst, r.peak_engines];
+    counts.extend_from_slice(&r.per_stream_served);
+    counts.extend_from_slice(&r.per_stream_dropped);
+    counts.extend_from_slice(&r.per_stream_rejected);
+    let bits = vec![
+        r.throughput.to_bits(),
+        r.queue_delay.p50.to_bits(),
+        r.queue_delay.p99.to_bits(),
+        r.agg_actions_s.to_bits(),
+        r.energy_j.to_bits(),
+        r.makespan_s.to_bits(),
+    ];
+    (counts, bits)
+}
+
+#[test]
+fn policy_fleet_grid_parallel_matches_serial_bitwise() {
+    // the exact property that lets the `fleet` experiment sweep its policy
+    // grid on the worker pool: every cell replays bit for bit
+    let admissions = [
+        AdmissionPolicy::DropOnDeadline,
+        AdmissionPolicy::TokenBucket { rate_hz: 4.0, burst: 3 },
+        AdmissionPolicy::SloPriority { depth_limit: 2 },
+    ];
+    let schedulings = [
+        SchedulingPolicy::EarliestFree,
+        SchedulingPolicy::RoundRobin,
+        SchedulingPolicy::LeastLoaded,
+        SchedulingPolicy::Edf,
+    ];
+    let fleets: [Vec<ShardSpec>; 2] = [
+        vec![ShardSpec::uniform("uniform", 2, 0.15)],
+        vec![ShardSpec::uniform("fast", 1, 0.08), ShardSpec::uniform("slow", 2, 0.3)],
+    ];
+    let mut cells = Vec::new();
+    for &admission in &admissions {
+        for &scheduling in &schedulings {
+            for fleet in &fleets {
+                cells.push((admission, scheduling, fleet.to_vec()));
+            }
+        }
+    }
+    let run = |cell: &(AdmissionPolicy, SchedulingPolicy, Vec<ShardSpec>)| {
+        let cfg = FleetConfig {
+            streams: 5,
+            rate_hz: 3.0,
+            duration_s: 8.0,
+            seed: 13,
+            deadline_s: Some(0.4),
+            admission: cell.0,
+            scheduling: cell.1,
+            slo_deadline_mults: vec![0.5, 1.0, 2.0],
+            autoscaler: None,
+            failure_rate_hz: 0.0,
+        };
+        FleetSim::new(cfg, cell.2.clone()).unwrap().run()
+    };
+    let par = sweep::parallel_map(&cells, run);
+    let ser = sweep::parallel_map_with(&cells, 1, run);
+    assert_eq!(par.len(), cells.len());
+    for ((p, s), cell) in par.iter().zip(&ser).zip(&cells) {
+        let tag = format!("{:?} + {:?} on {} specs", cell.0, cell.1, cell.2.len());
+        assert!(p.conserves(), "{tag}: {p:?}");
+        assert!(p.arrived > 0 && p.served > 0, "{tag}: empty run proves nothing");
+        assert_eq!(fingerprint(p), fingerprint(s), "{tag}");
+    }
+}
+
+#[test]
+fn conservation_holds_under_random_policies_and_failures() {
+    prop_check("arrived == served + dropped + rejected", 80, |rng| {
+        let admission = match rng.uniform_u64(0, 2) {
+            0 => AdmissionPolicy::DropOnDeadline,
+            1 => AdmissionPolicy::TokenBucket {
+                rate_hz: rng.uniform_f64(0.5, 6.0),
+                burst: rng.uniform_u64(1, 5) as u32,
+            },
+            _ => AdmissionPolicy::SloPriority { depth_limit: rng.uniform_usize(0, 4) },
+        };
+        let scheduling = *rng.choose(&[
+            SchedulingPolicy::EarliestFree,
+            SchedulingPolicy::RoundRobin,
+            SchedulingPolicy::LeastLoaded,
+            SchedulingPolicy::Edf,
+        ]);
+        let autoscaler = if rng.next_f64() < 0.4 {
+            Some(AutoscalerConfig {
+                check_interval_s: rng.uniform_f64(0.1, 0.5),
+                queue_up: rng.uniform_usize(2, 8),
+                queue_down: rng.uniform_usize(0, 2),
+                p99_up_s: None,
+                warmup_s: rng.uniform_f64(0.0, 0.5),
+                min_engines: 1,
+                max_engines: rng.uniform_usize(2, 6),
+            })
+        } else {
+            None
+        };
+        let cfg = FleetConfig {
+            streams: rng.uniform_usize(1, 6),
+            rate_hz: rng.uniform_f64(0.5, 6.0),
+            duration_s: rng.uniform_f64(0.5, 6.0),
+            seed: rng.next_u64(),
+            deadline_s: if rng.next_f64() < 0.7 { Some(rng.uniform_f64(0.05, 0.6)) } else { None },
+            admission,
+            scheduling,
+            slo_deadline_mults: vec![0.25, 1.0, 4.0],
+            autoscaler,
+            failure_rate_hz: if rng.next_f64() < 0.5 { rng.uniform_f64(0.05, 2.0) } else { 0.0 },
+        };
+        let lanes = rng.uniform_usize(1, 4);
+        let fleet = vec![ShardSpec::uniform("a", lanes, rng.uniform_f64(0.02, 0.4))];
+        let r = FleetSim::new(cfg, fleet).map_err(|e| e.to_string())?.run();
+        ensure(r.conserves(), format!("conservation violated: {r:?}"))?;
+        ensure(r.arrived == r.per_stream_arrived.iter().sum::<usize>(), "per-stream arrivals")
+    });
+}
+
+/// One real scenario lowering (replicate-1 on Orin), shared by the pin.
+fn lowered_single() -> ShardService {
+    let options = SimOptions { decode_stride: 16, ..Default::default() };
+    ShardService::lower(
+        &platform::orin(),
+        &options,
+        &scaled_vla(7.0),
+        &scaled_vla(2.0),
+        &Scenario::baseline(),
+        ShardModel::single(),
+    )
+    .unwrap()
+}
+
+#[test]
+fn degenerate_fleet_bitwise_reproduces_run_shard_batcher() {
+    // the acceptance pin: a 1-shard, 1-lane fleet with drop-on-deadline
+    // admission, a legacy scheduling order, and one unit SLO class must be
+    // BITWISE the sharded batcher over the same lowered scenario, for both
+    // legacy policies, with and without a deadline
+    let single = lowered_single();
+    for (policy, scheduling) in [
+        (Policy::Fifo, SchedulingPolicy::EarliestFree),
+        (Policy::RoundRobin, SchedulingPolicy::RoundRobin),
+    ] {
+        for deadline_s in [None, Some(0.25)] {
+            let bcfg = BatcherConfig {
+                streams: 4,
+                rate_hz: 2.5,
+                duration_s: 6.0,
+                policy,
+                seed: 19,
+                deadline_s,
+            };
+            let mut server = SimStepServer::for_service(&single);
+            let legacy =
+                run_shard_batcher(&mut server, 2, 2, &[1, 2, 3], &bcfg, &single.model).unwrap();
+            let cfg = FleetConfig {
+                streams: 4,
+                rate_hz: 2.5,
+                duration_s: 6.0,
+                seed: 19,
+                deadline_s,
+                admission: AdmissionPolicy::DropOnDeadline,
+                scheduling,
+                slo_deadline_mults: vec![1.0],
+                autoscaler: None,
+                failure_rate_hz: 0.0,
+            };
+            let degen = FleetSim::new(cfg, vec![single.fleet_spec()]).unwrap().run();
+            let tag = format!("{policy:?}/{scheduling:?}/deadline {deadline_s:?}");
+            assert!(degen.arrived > 0, "{tag}: empty trace proves nothing");
+            assert_eq!(degen.arrived, legacy.arrived, "{tag}");
+            assert_eq!(degen.served, legacy.served, "{tag}");
+            assert_eq!(degen.dropped, legacy.dropped, "{tag}");
+            assert_eq!(degen.rejected, 0, "{tag}");
+            assert_eq!(degen.throughput.to_bits(), legacy.throughput.to_bits(), "{tag}");
+            assert_eq!(degen.queue_delay.p50.to_bits(), legacy.queue_delay.p50.to_bits(), "{tag}");
+            assert_eq!(degen.queue_delay.p99.to_bits(), legacy.queue_delay.p99.to_bits(), "{tag}");
+            assert_eq!(degen.per_stream_served, legacy.per_stream_served, "{tag}");
+            assert_eq!(degen.per_stream_dropped, legacy.per_stream_dropped, "{tag}");
+            assert_eq!(degen.max_burst, legacy.max_burst, "{tag}");
+        }
+    }
+}

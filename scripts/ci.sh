@@ -35,6 +35,10 @@ mkdir -p reports
 cargo bench --bench bench_sim_perf -- --json reports/BENCH_sim.json
 python3 scripts/check_bench.py BENCH_sim.json reports/BENCH_sim.json
 
+echo "==> bench baseline gate (bench_fleet --json vs BENCH_fleet.json)"
+cargo bench --bench bench_fleet -- --json reports/BENCH_fleet.json
+python3 scripts/check_bench.py BENCH_fleet.json reports/BENCH_fleet.json
+
 echo "==> vla-char pim smoke (ranked scenario matrix, top 10)"
 mkdir -p reports
 cargo run --release -- pim --top 10 | tee reports/pim_top10.txt
@@ -53,6 +57,14 @@ grep -E "replicate-[0-9]" reports/serve_shards.txt >/dev/null \
     || { echo "ERROR: no replicate rows in serve report"; exit 1; }
 grep -E "pipeline-[0-9]" reports/serve_shards.txt >/dev/null \
     || { echo "ERROR: no pipeline rows in serve report"; exit 1; }
+
+echo "==> vla-char fleet smoke (10k-stream heterogeneous fleet, full policy grid)"
+cargo run --release -- fleet --fleet-streams 10000 --rate 0.05 --duration 20 \
+    --deadline-ms 500 | tee reports/fleet_10k.txt
+grep -E "Fleet policy matrix" reports/fleet_10k.txt >/dev/null \
+    || { echo "ERROR: no policy matrix in fleet report"; exit 1; }
+grep -E "earliest-free|round-robin|least-loaded|edf" reports/fleet_10k.txt >/dev/null \
+    || { echo "ERROR: empty policy table in fleet report"; exit 1; }
 
 if command -v pytest >/dev/null 2>&1 || python3 -c 'import pytest' >/dev/null 2>&1; then
     echo "==> python -m pytest python/tests -q (soft gate until L1/L2 artifacts land)"

@@ -1,0 +1,574 @@
+#!/usr/bin/env python3
+"""Numeric mirror of rust/src/sim/fleet (authoring-time cross-check).
+
+The authoring container has no Rust toolchain, so this mirror re-implements
+the fleet simulator's arithmetic — the xoshiro256++ PRNG, the SplitMix
+sub-stream derivation, Poisson arrival building, the single-lane legacy
+mirror, and the general typed-event loop with every admission/scheduling
+policy — to validate the behavioral assertions the Rust unit tests pin
+(EDF vs FIFO miss rates, autoscaler reactions, failure flush conservation,
+token-bucket metering) before they ever reach CI.
+
+Float caveat: Python's math.log may differ from Rust's f64::ln by 1 ulp,
+so *counts* here are expected-equal-but-not-guaranteed; every assertion
+this script checks has a behavioral margin, not a bitwise one.
+
+Usage: python3 scripts/mirror_fleet.py        # run all checks, exit 0/1
+"""
+
+import heapq
+import math
+import sys
+
+M64 = (1 << 64) - 1
+
+
+def splitmix_next(sm):
+    sm = (sm + 0x9E3779B97F4A7C15) & M64
+    z = sm
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+    return sm, z ^ (z >> 31)
+
+
+def stream_seed(seed, stream):
+    z = seed ^ (((stream + 1) & M64) * 0x9E3779B97F4A7C15 & M64)
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+    return z ^ (z >> 31)
+
+
+def rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & M64
+
+
+class Prng:
+    def __init__(self, seed):
+        s, sm = [], seed
+        for _ in range(4):
+            sm, v = splitmix_next(sm)
+            s.append(v)
+        self.s = s
+
+    @classmethod
+    def for_stream(cls, seed, stream):
+        return cls(stream_seed(seed, stream))
+
+    def next_u64(self):
+        s = self.s
+        result = (rotl((s[0] + s[3]) & M64, 23) + s[0]) & M64
+        t = (s[1] << 17) & M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = rotl(s[3], 45)
+        return result
+
+    def next_f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def exponential(self, rate):
+        return -math.log(max(self.next_f64(), 1e-300)) / rate
+
+
+def build_arrivals(streams, rate_hz, duration_s, seed):
+    arrivals = []
+    per_stream = [0] * streams
+    for s in range(streams):
+        rng = Prng.for_stream(seed, s)
+        t, step = 0.0, 0
+        while True:
+            t += rng.exponential(rate_hz)
+            if t > duration_s:
+                break
+            arrivals.append((t, s, step))
+            per_stream[s] += 1
+            step += 1
+    arrivals.sort(key=lambda r: r[0])
+    return arrivals, per_stream
+
+
+def quantize_step(step_s):
+    # Duration::from_secs_f64 (round to nearest ns, ties even) -> as_secs_f64
+    ns = round(step_s * 1e9)
+    return (ns // 10**9) + (ns % 10**9) / 1e9
+
+
+FAIL_SALT = 0xFA1157A70BADC0DE
+
+
+def p99(xs):
+    if not xs:
+        return 0.0
+    ys = sorted(xs)
+    # util::stats::percentile_sorted: rank = q * (n - 1), linear interp
+    rank = 0.99 * (len(ys) - 1)
+    lo = int(math.floor(rank))
+    hi = min(lo + 1, len(ys) - 1)
+    frac = rank - lo
+    return ys[lo] * (1.0 - frac) + ys[hi] * frac
+
+
+class Report:
+    pass
+
+
+def run_fleet(
+    streams,
+    rate_hz,
+    duration_s,
+    seed,
+    shards,  # list of (lanes, step_s, actions_per_step, j_per_action)
+    deadline_s=None,
+    admission=("drop",),  # ("drop",) | ("token", rate, burst) | ("slo", depth)
+    scheduling="earliest",  # earliest | rr | least | edf
+    mults=(1.0,),
+    autoscaler=None,  # (interval, q_up, q_down, p99_up|None, warmup, min_e, max_e)
+    failure_rate_hz=0.0,
+):
+    arrivals, per_stream_arrived = build_arrivals(streams, rate_hz, duration_s, seed)
+    arrived = len(arrivals)
+    mults = list(mults) or [1.0]
+    nclass = len(mults)
+
+    engines = []  # [spec_idx, step, free, busy, alive, fail_at, dynamic]
+    uid = [0]
+
+    def spawn(spec_idx, at, dynamic):
+        if failure_rate_hz > 0.0:
+            fail_at = at + Prng.for_stream(seed ^ FAIL_SALT, uid[0]).exponential(failure_rate_hz)
+        else:
+            fail_at = math.inf
+        uid[0] += 1
+        e = [spec_idx, quantize_step(shards[spec_idx][1]), at, 0.0, True, fail_at, dynamic]
+        eid = len(engines)
+        engines.append(e)
+        if math.isfinite(fail_at):
+            push_event(fail_at, ("fail", eid))
+        if dynamic:
+            push_event(at, ("done", eid))
+
+    evq, evseq = [], [0]
+
+    def push_event(t, ev):
+        heapq.heappush(evq, (t, evseq[0], ev))
+        evseq[0] += 1
+
+    for i, sp in enumerate(shards):
+        for _ in range(sp[0]):
+            spawn(i, 0.0, False)
+
+    # ready queue
+    heap_mode = scheduling != "rr"
+    ready_heap, ready_seq = [], [0]
+    rr_queues = [[] for _ in range(streams)]
+    rr_next = [0]
+    queued = [0]
+
+    def deadline_of(s):
+        return None if deadline_s is None else deadline_s * mults[s % nclass]
+
+    def ready_push(s, arr):
+        if heap_mode:
+            key = arr + (deadline_of(s) or 0.0) if scheduling == "edf" else arr
+            heapq.heappush(ready_heap, (key, ready_seq[0], s, arr))
+            ready_seq[0] += 1
+        else:
+            rr_queues[s].append(arr)
+        queued[0] += 1
+
+    def ready_pop():
+        if heap_mode:
+            if not ready_heap:
+                return None
+            _, _, s, arr = heapq.heappop(ready_heap)
+            return (s, arr)
+        for off in range(streams):
+            s = (rr_next[0] + off) % streams
+            if rr_queues[s]:
+                arr = rr_queues[s].pop(0)
+                rr_next[0] = (s + 1) % streams
+                return (s, arr)
+        return None
+
+    bucket = None
+    if admission[0] == "token":
+        bucket = [admission[2] * 1.0, 0.0]  # tokens, last_t
+
+    window = []
+    r = Report()
+    r.delays, r.services = [], []
+    r.per_stream_served = [0] * streams
+    r.per_stream_dropped = [0] * streams
+    r.per_stream_rejected = [0] * streams
+    r.actions = 0.0
+    r.energy = 0.0
+    r.makespan = 0.0
+    r.failures = 0
+    r.scale_ups = 0
+    r.scale_downs = 0
+    r.peak = sum(1 for e in engines if e[4])
+    completed = [0]
+    last_stream = [-1]
+    burst = [0]
+    r.max_burst = 0
+
+    cursor = [0]
+    if arrivals:
+        push_event(arrivals[0][0], ("arrive", arrivals[0][1]))
+    if autoscaler:
+        push_event(autoscaler[0], ("scale",))
+
+    def alive():
+        return sum(1 for e in engines if e[4])
+
+    def pick_engine(now):
+        best = None
+        for i, e in enumerate(engines):
+            if not e[4] or e[2] > now:
+                continue
+            if best is None:
+                best = i
+            else:
+                eb = engines[best]
+                if scheduling == "least":
+                    if e[3] < eb[3]:
+                        best = i
+                elif e[2] < eb[2]:
+                    best = i
+        return best
+
+    def dispatch_all(now):
+        while True:
+            e = pick_engine(now)
+            if e is None:
+                return
+            nxt = ready_pop()
+            if nxt is None:
+                return
+            s, arr = nxt
+            queued[0] -= 1
+            delay = now - arr
+            if autoscaler:
+                window.append(delay)
+            d = deadline_of(s)
+            if d is not None and delay > d:
+                r.per_stream_dropped[s] += 1
+                completed[0] += 1
+                continue
+            if s == last_stream[0]:
+                burst[0] += 1
+            else:
+                burst[0] = 1
+                last_stream[0] = s
+            r.max_burst = max(r.max_burst, burst[0])
+            eng = engines[e]
+            service = eng[1]
+            eng[2] = now + service
+            eng[3] += service
+            spec = shards[eng[0]]
+            r.actions += spec[2]
+            r.energy += spec[3] * spec[2]
+            r.makespan = max(r.makespan, eng[2])
+            r.delays.append(delay)
+            r.services.append(service)
+            r.per_stream_served[s] += 1
+            completed[0] += 1
+            push_event(eng[2], ("done", e))
+
+    def flush():
+        while True:
+            nxt = ready_pop()
+            if nxt is None:
+                break
+            s, _ = nxt
+            r.per_stream_dropped[s] += 1
+            completed[0] += 1
+        queued[0] = 0
+        while cursor[0] < len(arrivals):
+            _, s, _ = arrivals[cursor[0]]
+            r.per_stream_dropped[s] += 1
+            completed[0] += 1
+            cursor[0] += 1
+
+    while completed[0] < arrived:
+        if not evq:
+            flush()
+            break
+        now, _, ev = heapq.heappop(evq)
+        kind = ev[0]
+        if kind == "arrive":
+            s = ev[1]
+            cursor[0] += 1
+            if cursor[0] < len(arrivals):
+                nxt = arrivals[cursor[0]]
+                push_event(nxt[0], ("arrive", nxt[1]))
+            if admission[0] == "drop":
+                admit = True
+            elif admission[0] == "token":
+                tokens, last_t = bucket
+                tokens = min(tokens + (now - last_t) * admission[1], admission[2] * 1.0)
+                admit = tokens >= 1.0
+                if admit:
+                    tokens -= 1.0
+                bucket[0], bucket[1] = tokens, now
+            else:  # slo
+                admit = not (nclass > 1 and s % nclass == nclass - 1 and queued[0] >= admission[1])
+            if not admit:
+                r.per_stream_rejected[s] += 1
+                completed[0] += 1
+            else:
+                ready_push(s, now)
+                dispatch_all(now)
+        elif kind == "done":
+            dispatch_all(now)
+        elif kind == "scale":
+            interval, q_up, q_down, p99_up, warmup, min_e, max_e = autoscaler
+            a = alive()
+            w99 = p99(window)
+            window.clear()
+            if a < min_e:
+                decision = "up"
+            elif (queued[0] > q_up or (p99_up is not None and w99 > p99_up)) and a < max_e:
+                decision = "up"
+            elif queued[0] < q_down and a > min_e:
+                decision = "down"
+            else:
+                decision = "hold"
+            if decision == "up":
+                spawn(0, now + warmup, True)
+                r.scale_ups += 1
+                r.peak = max(r.peak, alive())
+            elif decision == "down":
+                for i in range(len(engines) - 1, -1, -1):
+                    e = engines[i]
+                    if e[4] and e[6] and e[2] <= now:
+                        e[4] = False
+                        r.scale_downs += 1
+                        break
+            if completed[0] < arrived:
+                push_event(now + interval, ("scale",))
+        elif kind == "fail":
+            e = engines[ev[1]]
+            if e[4]:
+                e[4] = False
+                r.failures += 1
+            if autoscaler is None and all(not e[4] for e in engines):
+                flush()
+
+    r.arrived = arrived
+    r.served = len(r.services)
+    r.dropped = sum(r.per_stream_dropped)
+    r.rejected = sum(r.per_stream_rejected)
+    r.per_stream_arrived = per_stream_arrived
+    total = max(r.makespan, 1e-12)
+    r.throughput = r.served / total
+    r.p99 = p99(r.delays)
+    r.miss = r.dropped / arrived if arrived else 0.0
+    return r
+
+
+def run_single_lane(streams, rate_hz, duration_s, seed, step_s, deadline_s=None, rr=False):
+    """Mirror of FleetSim::run_single_lane == engine::batcher::run_batcher."""
+    arrivals, per_stream_arrived = build_arrivals(streams, rate_hz, duration_s, seed)
+    arrived = len(arrivals)
+    service = quantize_step(step_s)
+    queues = [[] for _ in range(streams)]
+    pending = list(arrivals)
+    pi = 0
+    clock = 0.0
+    delays, per_stream, per_stream_dropped = [], [0] * streams, [0] * streams
+    rr_next = 0
+    last_stream, burst, max_burst = -1, 0, 0
+    while True:
+        while pi < len(pending) and pending[pi][0] <= clock:
+            t, s, st = pending[pi]
+            queues[s].append((t, s, st))
+            pi += 1
+        pick = None
+        if rr:
+            for off in range(streams):
+                s = (rr_next + off) % streams
+                if queues[s]:
+                    pick = s
+                    break
+        else:
+            best = None
+            for i, q in enumerate(queues):
+                if q and (best is None or q[0][0] < queues[best][0][0]):
+                    best = i
+            pick = best
+        if pick is None:
+            if pi < len(pending):
+                t, s, st = pending[pi]
+                pi += 1
+                clock = t
+                queues[s].append((t, s, st))
+                continue
+            break
+        req = queues[pick].pop(0)
+        rr_next = (pick + 1) % streams
+        start = max(clock, req[0])
+        delay = start - req[0]
+        if deadline_s is not None and delay > deadline_s:
+            per_stream_dropped[pick] += 1
+            continue
+        if pick == last_stream:
+            burst += 1
+        else:
+            burst = 1
+            last_stream = pick
+        max_burst = max(max_burst, burst)
+        delays.append(delay)
+        per_stream[pick] += 1
+        clock = start + service
+    r = Report()
+    r.arrived = arrived
+    r.served = len(delays)
+    r.dropped = sum(per_stream_dropped)
+    r.per_stream_served = per_stream
+    r.per_stream_arrived = per_stream_arrived
+    r.per_stream_dropped = per_stream_dropped
+    r.max_burst = max_burst
+    r.throughput = r.served / max(clock, 1e-12)
+    r.delays = delays
+    r.p99 = p99(delays)
+    return r
+
+
+CHECKS = []
+
+
+def check(name, cond, detail=""):
+    CHECKS.append((name, bool(cond), detail))
+    print(f"  [{'ok' if cond else 'FAIL'}] {name}{(' — ' + detail) if detail else ''}")
+
+
+def main():
+    print("fleet mirror checks:")
+
+    # --- degenerate: event loop == single-lane mirror (counts) ---
+    for rr in (False, True):
+        sched = "rr" if rr else "earliest"
+        a = run_single_lane(3, 2.0, 10.0, 11, 0.4, deadline_s=0.3, rr=rr)
+        b = run_fleet(3, 2.0, 10.0, 11, [(1, 0.4, 1.0, 0.0)], deadline_s=0.3, scheduling=sched)
+        check(
+            f"degenerate {sched}: mirror == event loop",
+            a.served == b.served
+            and a.dropped == b.dropped
+            and a.per_stream_served == b.per_stream_served
+            and a.max_burst == b.max_burst
+            and abs(a.throughput - b.throughput) < 1e-12,
+            f"served {a.served}/{b.served} dropped {a.dropped}/{b.dropped}",
+        )
+
+    # --- conservation under every admission policy ---
+    for adm in (("drop",), ("token", 2.0, 2), ("slo", 2)):
+        r = run_fleet(
+            4, 2.0, 10.0, 11, [(2, 0.25, 1.0, 0.0)], deadline_s=0.2,
+            admission=adm, mults=(1.0, 2.0),
+        )
+        check(
+            f"conservation under {adm[0]}",
+            r.arrived == r.served + r.dropped + r.rejected and r.served > 0,
+            f"arrived {r.arrived} = {r.served}+{r.dropped}+{r.rejected}",
+        )
+
+    # --- token bucket metering ---
+    r = run_fleet(4, 2.0, 10.0, 11, [(1, 0.05, 1.0, 0.0)], admission=("token", 1.0, 2))
+    check(
+        "token bucket sheds load",
+        r.rejected > 0 and r.served <= 13,
+        f"arrived {r.arrived} served {r.served} rejected {r.rejected}",
+    )
+
+    # --- more lanes drain ---
+    one = run_fleet(4, 2.0, 10.0, 11, [(1, 0.5, 1.0, 0.0)])
+    four = run_fleet(4, 2.0, 10.0, 11, [(4, 0.5, 1.0, 0.0)])
+    check(
+        "4 lanes beat 1 on p99 and throughput",
+        four.p99 < one.p99 and four.throughput > one.throughput,
+        f"p99 {one.p99:.2f}->{four.p99:.3f} thr {one.throughput:.2f}->{four.throughput:.2f}",
+    )
+
+    # --- autoscaler reacts under overload ---
+    fixed = run_fleet(6, 2.0, 10.0, 17, [(1, 0.5, 1.0, 0.0)])
+    scaled = run_fleet(
+        6, 2.0, 10.0, 17, [(1, 0.5, 1.0, 0.0)],
+        autoscaler=(0.25, 4, 1, None, 0.25, 1, 6),
+    )
+    check(
+        "autoscaler scales up and cuts the tail",
+        scaled.scale_ups > 0 and 1 < scaled.peak <= 6 and scaled.p99 < fixed.p99,
+        f"ups {scaled.scale_ups} peak {scaled.peak} p99 {fixed.p99:.2f}->{scaled.p99:.2f}",
+    )
+    check(
+        "autoscaler conserves",
+        scaled.arrived == scaled.served + scaled.dropped + scaled.rejected
+        and scaled.arrived == fixed.arrived,
+    )
+
+    # --- failure injection ---
+    r = run_fleet(2, 2.0, 10.0, 23, [(3, 0.1, 1.0, 0.0)], failure_rate_hz=0.2)
+    check(
+        "failures conserve (3 engines, mean fail 5 s)",
+        r.arrived == r.served + r.dropped + r.rejected and r.served > 0,
+        f"failures {r.failures} served {r.served}/{r.arrived}",
+    )
+    dead = run_fleet(2, 2.0, 10.0, 29, [(1, 0.1, 1.0, 0.0)], failure_rate_hz=50.0)
+    check(
+        "collapsed fleet flushes and conserves",
+        dead.arrived == dead.served + dead.dropped + dead.rejected
+        and dead.failures >= 1
+        and dead.dropped > 0,
+        f"failures {dead.failures} dropped {dead.dropped}/{dead.arrived}",
+    )
+
+    # --- EDF vs FIFO at saturation ---
+    kw = dict(
+        deadline_s=0.12, mults=(0.25, 1.0, 4.0),
+    )
+    fifo = run_fleet(8, 1.5, 10.0, 71, [(1, 0.1, 1.0, 0.0)], scheduling="earliest", **kw)
+    edf = run_fleet(8, 1.5, 10.0, 71, [(1, 0.1, 1.0, 0.0)], scheduling="edf", **kw)
+    check(
+        "EDF never worse than FIFO on miss% at saturation",
+        fifo.dropped > 0 and edf.miss <= fifo.miss + 1e-12,
+        f"miss fifo {fifo.miss:.3f} edf {edf.miss:.3f} "
+        f"(drops {fifo.dropped} vs {edf.dropped})",
+    )
+
+    # --- SLO priority sheds only best-effort ---
+    r = run_fleet(
+        4, 2.0, 10.0, 11, [(1, 0.05, 1.0, 0.0)],
+        admission=("slo", 0), mults=(1.0, 1.0),
+    )
+    check(
+        "slo(depth 0) rejects exactly the best-effort class",
+        all(r.per_stream_rejected[s] == r.per_stream_arrived[s] for s in (1, 3))
+        and all(r.per_stream_rejected[s] == 0 for s in (0, 2)),
+        f"rejected {r.per_stream_rejected}",
+    )
+
+    # --- 10k-stream heterogeneous smoke (bench shape) ---
+    big = run_fleet(
+        10_000, 0.05, 20.0, 7,
+        [(2, 0.08, 1.0, 0.0), (1, 0.05, 1.0, 0.0), (1, 0.12, 1.0, 0.0)],
+        deadline_s=0.5, scheduling="edf", mults=(0.5, 1.0, 2.0),
+    )
+    check(
+        "10k-stream heterogeneous fleet conserves",
+        big.arrived == big.served + big.dropped + big.rejected and big.arrived > 5000,
+        f"arrived {big.arrived} served {big.served} dropped {big.dropped}",
+    )
+    print(f"  10k-fleet: arrived={big.arrived} served={big.served} dropped={big.dropped} "
+          f"rejected={big.rejected} thr={big.throughput:.1f}/s p99={big.p99*1e3:.1f}ms")
+
+    failed = [c for c in CHECKS if not c[1]]
+    print(f"{len(CHECKS) - len(failed)}/{len(CHECKS)} checks passed")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
