@@ -4,15 +4,18 @@
 //!
 //! `--json [PATH]` emits the tracked `BENCH_fleet.json` baseline:
 //! machine-independent config echo (`exact`) and host event-processing
-//! rates (`metrics`) that `scripts/check_bench.py` gates in CI. Two
+//! rates (`metrics`) that `scripts/check_bench.py` gates in CI. Four
 //! invariants are asserted on EVERY run, JSON or not: conservation
-//! (`arrived == served + dropped + rejected`) and bitwise replay of the
-//! smoke run.
+//! (`arrived == served + dropped + rejected`), bitwise re-run determinism,
+//! the NullSink pin (tracing off is bitwise the untraced run), and bitwise
+//! telemetry replay of the smoke run's NDJSON stream.
 
 use std::time::Instant;
 
 use vla_char::sim::fleet::{AdmissionPolicy, FleetConfig, FleetSim, SchedulingPolicy, ShardSpec};
 use vla_char::sim::sweep;
+use vla_char::telemetry::replay::{replay_ndjson, report_mismatch};
+use vla_char::telemetry::{NdjsonSink, NullSink, RunMeta};
 use vla_char::util::bench::{black_box, json_path_from_args, write_json};
 use vla_char::util::json::Json;
 
@@ -69,6 +72,52 @@ fn main() {
     let r2 = sim.run();
     assert_eq!(r.throughput.to_bits(), r2.throughput.to_bits(), "fleet runs must replay bitwise");
     assert_eq!(r.served, r2.served, "fleet runs must replay bitwise");
+
+    // telemetry cost, at the same smoke scale:
+    //  - events-off: the traced entry point with the NullSink — the pin
+    //    the test suite holds bitwise, timed here as a throughput ratio
+    //  - events-on: every event serialized through the NDJSON wire into
+    //    memory, then replayed back and certified bitwise
+    let meta = RunMeta::default();
+    let t1 = Instant::now();
+    let r_off = sim.run_traced(&meta, &mut NullSink);
+    let t_off = t1.elapsed().as_secs_f64().max(1e-12);
+    assert_eq!(
+        report_mismatch(&r, &r_off),
+        None,
+        "NullSink-traced run must be bitwise the untraced run"
+    );
+    let events_off_ratio = t_single / t_off;
+
+    let mut wire = NdjsonSink::new(Vec::<u8>::new());
+    let t2 = Instant::now();
+    let r_on = sim.run_traced(&meta, &mut wire);
+    let t_on = t2.elapsed().as_secs_f64().max(1e-12);
+    let (bytes, lines) = wire.finish_into().expect("in-memory NDJSON sink cannot fail");
+    assert_eq!(
+        report_mismatch(&r, &r_on),
+        None,
+        "serializing-traced run must be bitwise the untraced run"
+    );
+    let text = std::str::from_utf8(&bytes).expect("NDJSON stream is UTF-8");
+    let replayed = replay_ndjson(text).expect("the smoke stream must replay");
+    assert_eq!(
+        report_mismatch(&r_on, &replayed),
+        None,
+        "replaying the smoke stream must reconstruct the live report bitwise"
+    );
+    let events_on_arrivals_per_s = r_on.arrived as f64 / t_on;
+    println!(
+        "telemetry: events-off ratio {:.3} (NullSink {:.1} ms vs {:.1} ms) | events-on {} NDJSON \
+         lines, {:.1} KiB, {:.0} arrivals/s host rate ({:.1} ms wall), replay bitwise",
+        events_off_ratio,
+        t_off * 1e3,
+        t_single * 1e3,
+        lines,
+        bytes.len() as f64 / 1024.0,
+        events_on_arrivals_per_s,
+        t_on * 1e3
+    );
 
     // the policy grid (the `fleet` experiment's shape) on the worker pool,
     // at a reduced per-cell scale so the grid probes sweep overhead rather
@@ -139,6 +188,8 @@ fn main() {
                 Json::obj(vec![
                     ("arrivals_per_s_host", Json::Num(arrivals_per_s)),
                     ("grid_cells_per_s_parallel", Json::Num(grid_scaling.parallel_rate())),
+                    ("events_off_ratio", Json::Num(events_off_ratio)),
+                    ("events_on_arrivals_per_s_host", Json::Num(events_on_arrivals_per_s)),
                 ]),
             ),
             (

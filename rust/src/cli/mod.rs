@@ -68,6 +68,8 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "warmup-ms", value_name: Some("MS"), help: "autoscaler warm-up latency before a new engine takes work", default: Some("500") },
         OptSpec { name: "max-engines", value_name: Some("N"), help: "autoscaler alive-engine ceiling per shard group", default: Some("8") },
         OptSpec { name: "fail-rate", value_name: Some("HZ"), help: "per-engine fail-stop rate for `fleet` (0 disables failures)", default: Some("0") },
+        OptSpec { name: "events", value_name: Some("PATH"), help: "write fleet NDJSON telemetry events to PATH (`-` = stdout)", default: None },
+        OptSpec { name: "daemon", value_name: None, help: "stream fleet telemetry as line-buffered NDJSON on stdout (implies --events -)", default: None },
         OptSpec { name: "stride", value_name: Some("N"), help: "decode-position sampling stride (sim)", default: Some("1") },
         OptSpec { name: "no-prefetch", value_name: None, help: "disable cross-operator prefetch (sim)", default: None },
         OptSpec { name: "no-pim", value_name: None, help: "disable PIM offload (sim)", default: None },

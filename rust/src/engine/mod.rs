@@ -14,5 +14,8 @@ pub use batcher::{run_batcher, BatcherConfig, Policy, ServeReport, StepServer};
 pub use control_loop::{run_control_loop, ControlLoopConfig, ControlLoopReport};
 pub use engine::{PhaseTimes, StepResult, VlaEngine};
 pub use frames::{Frame, FrameSource};
-pub use shard::{run_shard_batcher, ShardMode, ShardModel, ShardService, SimStepServer};
+pub use shard::{
+    run_shard_batcher, run_shard_batcher_traced, ShardMode, ShardModel, ShardService,
+    SimStepServer,
+};
 pub use vla_model::{KvCache, VlaModel};

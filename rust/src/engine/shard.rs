@@ -26,7 +26,8 @@
 //! one shard is bitwise the pre-shard serving stack (pinned by tests).
 
 use super::batcher::{
-    build_arrivals, pick_stream, run_batcher, BatcherConfig, Request, ServeReport, StepServer,
+    build_arrivals, pick_stream, run_batcher, BatcherConfig, Policy, Request, ServeReport,
+    StepServer,
 };
 use super::frames::{Frame, FrameSource};
 use crate::hw::Platform;
@@ -34,6 +35,9 @@ use crate::model::VlaConfig;
 use crate::sim::energy::EnergyModel;
 use crate::sim::scenario::{Evaluator, Lever, LeverGroup, Scenario};
 use crate::sim::simulator::SimOptions;
+use crate::telemetry::{
+    DropReason, Event, EventSink, NullSink, RunEndInfo, RunMeta, RunMode, RunStartInfo, ShardEcho,
+};
 use crate::util::stats::Summary;
 use crate::util::units::GB;
 use std::cmp::Reverse;
@@ -393,11 +397,127 @@ pub fn run_shard_batcher<S: StepServer>(
     cfg: &BatcherConfig,
     model: &ShardModel,
 ) -> anyhow::Result<ServeReport> {
+    run_shard_batcher_traced(
+        server,
+        patches,
+        patch_dim,
+        prompt,
+        cfg,
+        model,
+        &RunMeta::default(),
+        &mut NullSink,
+    )
+}
+
+/// The `run_start` config echo for a batcher-mode stream: the shard model's
+/// lanes are the static engines, and the single shard echo carries the
+/// model label. `step_s` is 0 — service times come from the [`StepServer`],
+/// not a fixed spec — and each served step counts as one action with no
+/// energy model on this path.
+fn batcher_run_start(
+    cfg: &BatcherConfig,
+    model: &ShardModel,
+    meta: &RunMeta,
+    lanes: usize,
+) -> RunStartInfo {
+    let mut info = RunStartInfo {
+        platform: meta.platform.clone(),
+        scenario: meta.scenario.clone(),
+        mode: RunMode::Batcher,
+        config_fp: 0,
+        streams: cfg.streams,
+        rate_hz: cfg.rate_hz,
+        duration_s: cfg.duration_s,
+        seed: cfg.seed,
+        deadline_s: cfg.deadline_s,
+        admission: "drop".to_string(),
+        scheduling: match cfg.policy {
+            Policy::Fifo => "fifo",
+            Policy::RoundRobin => "round-robin",
+        }
+        .to_string(),
+        slo_mults: vec![1.0],
+        autoscaler: false,
+        failure_rate_hz: 0.0,
+        engines: lanes,
+        shards: vec![ShardEcho {
+            label: model.label(),
+            lanes,
+            step_s: 0.0,
+            actions_per_step: 1.0,
+            j_per_action: 0.0,
+        }],
+    };
+    info.config_fp = info.fingerprint();
+    info
+}
+
+/// `run_end` summary for a [`ServeReport`]: no rejects, no scaling, no
+/// energy accounting, one action per served step.
+fn serve_run_end(r: &ServeReport, lanes: usize, makespan_s: f64) -> RunEndInfo {
+    RunEndInfo {
+        arrived: r.arrived,
+        served: r.served,
+        dropped: r.dropped,
+        rejected: 0,
+        throughput: r.throughput,
+        delay_p50_s: r.queue_delay.p50,
+        delay_p99_s: r.queue_delay.p99,
+        max_burst: r.max_burst,
+        actions: r.served as f64,
+        energy_j: 0.0,
+        j_per_action: 0.0,
+        peak_engines: lanes,
+        failures: 0,
+        scale_ups: 0,
+        scale_downs: 0,
+        makespan_s,
+    }
+}
+
+/// [`run_shard_batcher`] narrating the run into an [`EventSink`] as a mode
+/// `batcher` stream. The arithmetic is the untraced path verbatim; with
+/// [`NullSink`] every emission is skipped and the report stays
+/// bitwise-identical.
+///
+/// Event-stream notes: the multi-lane loop emits `arrival` / `dispatch` /
+/// `drop` plus the run frame — no `admit` (admission is vacuously
+/// drop-on-deadline) and no `completion` (a completion stamp could precede
+/// a later-pulled arrival; the stream stays monotone without them). The
+/// single-lane delegation to the legacy [`run_batcher`] emits a
+/// **summary-only** frame (`run_start` + `run_end`, no per-request events,
+/// `makespan_s` 0) — `telemetry::replay` rejects such a stream rather than
+/// fabricate per-request records.
+#[allow(clippy::too_many_arguments)]
+pub fn run_shard_batcher_traced<S: StepServer, K: EventSink + ?Sized>(
+    server: &mut S,
+    patches: usize,
+    patch_dim: usize,
+    prompt: &[i32],
+    cfg: &BatcherConfig,
+    model: &ShardModel,
+    meta: &RunMeta,
+    sink: &mut K,
+) -> anyhow::Result<ServeReport> {
     model.validate()?;
     cfg.validate()?;
     let lanes = model.lanes();
+    let on = sink.enabled();
     if lanes <= 1 {
-        return run_batcher(server, patches, patch_dim, prompt, cfg);
+        let report = run_batcher(server, patches, patch_dim, prompt, cfg)?;
+        if on {
+            let info = batcher_run_start(cfg, model, meta, lanes);
+            sink.emit(&Event::RunStart { t: 0.0, info: Box::new(info) });
+            sink.emit(&Event::RunEnd {
+                t: 0.0,
+                info: Box::new(serve_run_end(&report, lanes, 0.0)),
+            });
+        }
+        return Ok(report);
+    }
+    if on {
+        let info = batcher_run_start(cfg, model, meta, lanes);
+        sink.emit(&Event::RunStart { t: 0.0, info: Box::new(info) });
     }
 
     let (arrivals, per_stream_arrived) = build_arrivals(cfg);
@@ -429,6 +549,13 @@ pub fn run_shard_batcher<S: StepServer>(
         while let Some(r) = pending.peek() {
             if r.arrival <= clock {
                 let r = pending.next().unwrap();
+                if on {
+                    sink.emit(&Event::Arrival {
+                        t: r.arrival,
+                        stream: r.stream as u32,
+                        step: r.step,
+                    });
+                }
                 queues[r.stream].push_back(r);
             } else {
                 break;
@@ -439,6 +566,13 @@ pub fn run_shard_batcher<S: StepServer>(
             match pending.next() {
                 Some(r) => {
                     clock = r.arrival;
+                    if on {
+                        sink.emit(&Event::Arrival {
+                            t: r.arrival,
+                            stream: r.stream as u32,
+                            step: r.step,
+                        });
+                    }
                     queues[r.stream].push_back(r);
                 }
                 None => break,
@@ -455,6 +589,13 @@ pub fn run_shard_batcher<S: StepServer>(
         if let Some(deadline) = cfg.deadline_s {
             if delay > deadline {
                 per_stream_dropped[s] += 1;
+                if on {
+                    sink.emit(&Event::Drop {
+                        t: start,
+                        stream: s as u32,
+                        reason: DropReason::Stale,
+                    });
+                }
                 continue;
             }
         }
@@ -472,6 +613,17 @@ pub fn run_shard_batcher<S: StepServer>(
         services.push(service);
         per_stream[s] += 1;
         let Some(Reverse((_, eng))) = free.pop() else { unreachable!("heap holds every lane") };
+        if on {
+            sink.emit(&Event::Dispatch {
+                t: start,
+                engine: eng as u32,
+                stream: s as u32,
+                delay_s: delay,
+                service_s: service,
+                actions_per_step: 1.0,
+                j_per_action: 0.0,
+            });
+        }
         free.push(Reverse(((start + service).to_bits(), eng)));
     }
 
@@ -483,7 +635,7 @@ pub fn run_shard_batcher<S: StepServer>(
         .map(|&Reverse((bits, _))| f64::from_bits(bits))
         .fold(0.0f64, f64::max)
         .max(1e-12);
-    Ok(ServeReport {
+    let report = ServeReport {
         arrived,
         served,
         dropped,
@@ -494,7 +646,14 @@ pub fn run_shard_batcher<S: StepServer>(
         per_stream_arrived,
         per_stream_dropped,
         max_burst,
-    })
+    };
+    if on {
+        sink.emit(&Event::RunEnd {
+            t: total_time,
+            info: Box::new(serve_run_end(&report, lanes, total_time)),
+        });
+    }
+    Ok(report)
 }
 
 #[cfg(test)]
@@ -804,6 +963,93 @@ mod tests {
             ensure(heap.max_burst == linear.max_burst, "max_burst diverged")?;
             Ok(())
         });
+    }
+
+    #[test]
+    fn traced_multi_lane_stream_replays_bitwise() {
+        use crate::telemetry::replay::replay;
+        use crate::telemetry::VecSink;
+        let cfg = BatcherConfig {
+            streams: 4,
+            rate_hz: 40.0,
+            duration_s: 2.0,
+            policy: Policy::RoundRobin,
+            seed: 5,
+            deadline_s: Some(0.05),
+        };
+        let model = ShardModel { mode: ShardMode::Replicate, engines: 3 };
+        let mut sink = VecSink::new();
+        let mut sv = MockServer(Duration::from_millis(30));
+        let live = run_shard_batcher_traced(
+            &mut sv,
+            4,
+            4,
+            &[1, 2],
+            &cfg,
+            &model,
+            &RunMeta::default(),
+            &mut sink,
+        )
+        .unwrap();
+        assert!(live.dropped > 0, "want drops in the stream: {live:?}");
+        let replayed = replay(&sink.events).unwrap();
+        assert_eq!(replayed.arrived, live.arrived);
+        assert_eq!(replayed.served, live.served);
+        assert_eq!(replayed.dropped, live.dropped);
+        assert_eq!(replayed.rejected, 0);
+        assert_eq!(replayed.throughput.to_bits(), live.throughput.to_bits());
+        assert_eq!(replayed.queue_delay.p99.to_bits(), live.queue_delay.p99.to_bits());
+        assert_eq!(replayed.service.mean.to_bits(), live.service.mean.to_bits());
+        assert_eq!(replayed.per_stream_served, live.per_stream_served);
+        assert_eq!(replayed.per_stream_dropped, live.per_stream_dropped);
+        assert_eq!(replayed.max_burst, live.max_burst);
+        assert_eq!(replayed.actions.to_bits(), (live.served as f64).to_bits());
+        assert_eq!(replayed.peak_engines, 3);
+        // throughput == served / makespan on both sides, so bitwise-equal
+        // throughput at equal served certifies the folded makespan matched
+        // the live heap maximum bitwise
+        assert_eq!(
+            (replayed.served as f64 / replayed.makespan_s).to_bits(),
+            live.throughput.to_bits()
+        );
+        // events-off delegate is bitwise the traced run
+        let mut sv2 = MockServer(Duration::from_millis(30));
+        let off = run_shard_batcher(&mut sv2, 4, 4, &[1, 2], &cfg, &model).unwrap();
+        assert_eq!(off.throughput.to_bits(), live.throughput.to_bits());
+        assert_eq!(off.per_stream_served, live.per_stream_served);
+    }
+
+    #[test]
+    fn single_lane_delegation_emits_a_summary_only_frame() {
+        use crate::telemetry::replay::replay;
+        use crate::telemetry::VecSink;
+        let cfg = BatcherConfig {
+            streams: 2,
+            rate_hz: 20.0,
+            duration_s: 1.0,
+            policy: Policy::Fifo,
+            seed: 7,
+            deadline_s: None,
+        };
+        let mut sink = VecSink::new();
+        let mut sv = MockServer(Duration::from_millis(10));
+        let live = run_shard_batcher_traced(
+            &mut sv,
+            4,
+            4,
+            &[1],
+            &cfg,
+            &ShardModel::single(),
+            &RunMeta::default(),
+            &mut sink,
+        )
+        .unwrap();
+        assert!(live.arrived > 0);
+        let kinds: Vec<&str> = sink.events.iter().map(|e| e.kind()).collect();
+        assert_eq!(kinds, ["run_start", "run_end"], "summary-only frame");
+        // replay refuses to certify a stream with no per-request events
+        let err = replay(&sink.events).unwrap_err().to_string();
+        assert!(err.contains("self-certify"), "got: {err}");
     }
 
     #[test]

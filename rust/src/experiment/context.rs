@@ -129,6 +129,12 @@ pub struct ExpContext {
     /// Per-engine fail-stop rate of the fleet (Hz of virtual time; 0
     /// disables failure injection).
     pub fail_rate_hz: f64,
+    /// `fleet`: write the NDJSON telemetry event stream here (`-` =
+    /// stdout; `None` disables tracing entirely).
+    pub events: Option<String>,
+    /// `fleet`: stream line-buffered NDJSON telemetry on stdout (implies
+    /// `events = Some("-")`).
+    pub daemon: bool,
     /// Override for generated tokens per step (engine-backed experiments).
     pub decode_tokens: Option<usize>,
     /// `characterize`: also emit the top-operator decode trace.
@@ -275,6 +281,8 @@ impl ExpContext {
             warmup_ms,
             max_engines,
             fail_rate_hz,
+            events: args.get("events").map(str::to_string),
+            daemon: args.flag("daemon"),
             decode_tokens: match args.get("decode-tokens") {
                 Some(_) => Some(args.get_usize("decode-tokens", 24)?),
                 None => None,
@@ -354,6 +362,8 @@ impl Default for ExpContext {
             warmup_ms: 500.0,
             max_engines: 8,
             fail_rate_hz: 0.0,
+            events: None,
+            daemon: false,
             decode_tokens: None,
             trace: false,
             amortized: false,
@@ -403,6 +413,8 @@ mod tests {
             OptSpec { name: "warmup-ms", value_name: Some("MS"), help: "", default: None },
             OptSpec { name: "max-engines", value_name: Some("N"), help: "", default: None },
             OptSpec { name: "fail-rate", value_name: Some("HZ"), help: "", default: None },
+            OptSpec { name: "events", value_name: Some("PATH"), help: "", default: None },
+            OptSpec { name: "daemon", value_name: None, help: "", default: None },
         ]
     }
 
@@ -551,6 +563,10 @@ mod tests {
         assert_eq!((ctx.token_rate_hz, ctx.warmup_ms, ctx.fail_rate_hz), (40.0, 250.0, 0.1));
         assert_eq!((ctx.token_burst, ctx.slo_depth), (16, 4));
         assert_eq!((ctx.scale_up, ctx.scale_down, ctx.max_engines), (12, 2, 6));
+        assert_eq!((ctx.events.as_deref(), ctx.daemon), (None, false));
+        let a = parse(&["fleet", "--events", "ev.ndjson", "--daemon"]);
+        let ctx = ExpContext::from_args(&a).unwrap();
+        assert_eq!((ctx.events.as_deref(), ctx.daemon), (Some("ev.ndjson"), true));
         // policy names resolve through the fleet policy parsers: bad names,
         // signs, and threshold inversions are rejected at context build
         for (flag, bad) in [

@@ -21,13 +21,17 @@ use super::experiments::slug;
 use super::{ExpContext, Experiment, Report, Serve};
 use crate::engine::shard::{run_shard_batcher, ShardModel, ShardService, SimStepServer};
 use crate::engine::{BatcherConfig, Policy};
+use crate::model::Phase;
 use crate::report::checks::Check;
 use crate::sim::fleet::{
     AdmissionPolicy, AutoscalerConfig, FleetConfig, FleetReport, FleetSim, SchedulingPolicy,
     ShardSpec,
 };
-use crate::sim::scenario::Scenario;
+use crate::sim::scenario::{Evaluator, Scenario};
+use crate::sim::simulator::{SimOptions, Simulator};
 use crate::sim::sweep;
+use crate::telemetry::replay::{replay_ndjson, report_mismatch};
+use crate::telemetry::{Event, EventSink, NdjsonSink, RunMeta};
 use crate::util::table::Table;
 use crate::util::units::fmt_time;
 
@@ -108,6 +112,117 @@ impl Fleet {
             max_engines: ctx.max_engines.max(1),
         }
     }
+
+    /// The NDJSON preamble stamped before `run_start`: the lowering-cache
+    /// counter snapshot (label `lowering`) plus the per-phase spans of one
+    /// control step on the focus platform. Span timestamps are relative to
+    /// the start of the step, not the fleet clock — they precede the run
+    /// frame precisely so the in-run monotonicity contract stays intact.
+    fn preamble(
+        ctx: &ExpContext,
+        options: &SimOptions,
+        scenario: &Scenario,
+    ) -> anyhow::Result<Vec<Event>> {
+        let ev = Evaluator::new(&ctx.platform, options, &ctx.model, &ctx.draft);
+        ev.eval(scenario)?;
+        let mut events = vec![ev.cache_snapshot(0.0, "lowering")];
+        let sim = Simulator::with_options(ctx.platform.clone(), options.clone());
+        let res = sim.simulate_vla(&ctx.model);
+        let mut t = 0.0;
+        for (phase, stage) in [
+            (Phase::Vision, &res.vision),
+            (Phase::Prefill, &res.prefill),
+            (Phase::Decode, &res.decode),
+            (Phase::Action, &res.action),
+        ] {
+            events.push(Event::PhaseSpan { t, phase, dur_s: stage.time });
+            t += stage.time;
+        }
+        Ok(events)
+    }
+
+    /// `--events PATH` / `--daemon`: ONE traced fleet run (first admission
+    /// x first scheduling of the grid, autoscaled, `--fail-rate` failures)
+    /// streamed as NDJSON instead of the full policy sweep.
+    ///
+    /// File mode re-reads the stream and replays it, proving it
+    /// reconstructs the live report bitwise. Stdout mode (`--events -` or
+    /// `--daemon`, line-buffered) keeps stdout pure NDJSON for downstream
+    /// consumers — the returned report is empty, so the CLI prints nothing
+    /// after the stream.
+    fn run_streaming(
+        &self,
+        ctx: &ExpContext,
+        options: &SimOptions,
+        scenario: &Scenario,
+        specs: Vec<ShardSpec>,
+    ) -> anyhow::Result<Report> {
+        let admission = Self::admissions(ctx)?[0];
+        let scheduling = Self::schedulings(ctx)?[0];
+        let cfg = Self::fleet_config(
+            ctx,
+            admission,
+            scheduling,
+            Some(Self::autoscaler(ctx)),
+            ctx.fail_rate_hz,
+        );
+        let meta = RunMeta {
+            platform: ctx.platform.name.clone(),
+            scenario: scenario.name.clone(),
+        };
+        let preamble = Self::preamble(ctx, options, scenario)?;
+        let sim = FleetSim::new(cfg, specs)?;
+
+        let to_stdout = ctx.daemon || ctx.events.as_deref() == Some("-");
+        if to_stdout {
+            let mut sink = NdjsonSink::stdout();
+            for e in &preamble {
+                sink.emit(e);
+            }
+            sim.run_traced(&meta, &mut sink);
+            sink.finish()
+                .map_err(|e| anyhow::anyhow!("telemetry stream to stdout failed: {e}"))?;
+            // pure-NDJSON stdout: nothing to render after the stream
+            return Ok(Report::new(self.name()));
+        }
+
+        let path = ctx.events.clone().expect("run_streaming without --events/--daemon");
+        let mut sink = NdjsonSink::create(&path)
+            .map_err(|e| anyhow::anyhow!("cannot create event stream {path}: {e}"))?;
+        for e in &preamble {
+            sink.emit(e);
+        }
+        let live = sim.run_traced(&meta, &mut sink);
+        let lines = sink
+            .finish()
+            .map_err(|e| anyhow::anyhow!("telemetry stream to {path} failed: {e}"))?;
+
+        // the stream certifies itself: read it back and replay it
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot re-read event stream {path}: {e}"))?;
+        let replayed = replay_ndjson(&text)?;
+        let mismatch = report_mismatch(&live, &replayed);
+
+        let mut rep = Report::new(self.name());
+        rep.note(format!(
+            "streamed {lines} events ({} {} + autoscaler, fail rate {} Hz) to {path}",
+            admission.label(),
+            scheduling.label(),
+            ctx.fail_rate_hz,
+        ));
+        rep.metric("events_lines", lines as f64);
+        rep.metric("events_served", live.served as f64);
+        rep.checks.push(Check {
+            id: "FL5-events-replay",
+            claim: "replaying the written NDJSON stream reconstructs the live report bitwise",
+            passed: mismatch.is_none(),
+            detail: match mismatch {
+                None => format!("{lines} events -> identical report ({} served)", live.served),
+                Some(m) => m,
+            },
+        });
+        Ok(rep)
+    }
 }
 
 impl Experiment for Fleet {
@@ -139,6 +254,11 @@ impl Experiment for Fleet {
         )?;
         let specs: Vec<ShardSpec> = services.iter().map(|s| s.fleet_spec()).collect();
         let static_engines: usize = specs.iter().map(|s| s.lanes).sum();
+
+        // telemetry streaming mode replaces the policy sweep entirely
+        if ctx.daemon || ctx.events.is_some() {
+            return self.run_streaming(ctx, &options, &scenario, specs);
+        }
 
         let mut rep = Report::new(self.name());
         rep.note(format!(

@@ -23,6 +23,7 @@ mod experiments;
 mod fleet_exp;
 mod report;
 mod serve_exp;
+mod telemetry_exp;
 
 pub use context::ExpContext;
 pub use engine_exps::{ControlLoop, StepOnce, Validate};
@@ -30,6 +31,7 @@ pub use experiments::{Ablate, Batch, Characterize, Codesign, Energy, PimScenario
 pub use fleet_exp::Fleet;
 pub use report::{DirSink, Item, Report, ReportSink, StdoutSink};
 pub use serve_exp::Serve;
+pub use telemetry_exp::Telemetry;
 
 /// A named experiment producing a structured report.
 pub trait Experiment: Sync {
@@ -59,6 +61,7 @@ pub static REGISTRY: &[&dyn Experiment] = &[
     &ControlLoop,
     &Serve,
     &Fleet,
+    &Telemetry,
     &Validate,
 ];
 

@@ -1,0 +1,270 @@
+//! The `telemetry` experiment: trace a policy-rich fleet run, replay its
+//! own event stream, and prove the stream is a faithful record.
+//!
+//! Four contracts, each a report check:
+//!
+//! - **TL1 replay**: folding the event stream back through
+//!   `telemetry::replay` reconstructs the live [`FleetReport`] bitwise —
+//!   every count, every p99 bit.
+//! - **TL2 conservation**: counting raw event kinds alone (no replay
+//!   machinery) balances `arrival == dispatch + drop + reject` and matches
+//!   the `run_end` summary.
+//! - **TL3 wire round-trip**: serializing every event to its NDJSON line
+//!   and parsing it back is the identity, and the re-parsed stream still
+//!   replays bitwise.
+//! - **TL4 events-off**: the untraced `run()` (NullSink) returns a report
+//!   bitwise-identical to the traced run — telemetry costs nothing when
+//!   it is off.
+//!
+//! Reported: event counts by kind, the per-phase spans of one control
+//! step, the queueing-latency summary recovered *from the stream*, and
+//! the events-on wall-clock overhead (`bench_fleet` gates the same number
+//! in `BENCH_fleet.json`).
+
+use super::experiments::slug;
+use super::{ExpContext, Experiment, Report};
+use crate::engine::shard::{ShardModel, ShardService};
+use crate::report::checks::Check;
+use crate::sim::fleet::{
+    AdmissionPolicy, AutoscalerConfig, FleetConfig, FleetSim, SchedulingPolicy, ShardSpec,
+};
+use crate::sim::scenario::{Evaluator, Scenario};
+use crate::telemetry::replay::{replay, report_mismatch};
+use crate::telemetry::{Event, RunMeta, VecSink};
+use crate::util::table::Table;
+use crate::util::units::fmt_time;
+use std::time::Instant;
+
+/// Typed telemetry event stream: emit, replay, certify.
+pub struct Telemetry;
+
+impl Telemetry {
+    /// A policy-rich workload: token-bucket admission, EDF scheduling,
+    /// three SLO classes, an autoscaler, and fail-stop failures — so the
+    /// stream exercises every event kind the fleet can emit.
+    fn config(ctx: &ExpContext) -> FleetConfig {
+        let streams = ctx.fleet_streams.clamp(1, 64);
+        let rate_hz = ctx.rate_hz.max(0.5);
+        let offered = streams as f64 * rate_hz;
+        FleetConfig {
+            streams,
+            rate_hz,
+            duration_s: ctx.duration_s.clamp(1.0, 10.0),
+            seed: ctx.seed,
+            deadline_s: Some(0.4),
+            admission: AdmissionPolicy::TokenBucket {
+                rate_hz: (0.75 * offered).max(1e-6),
+                burst: ctx.token_burst.max(1) as u32,
+            },
+            scheduling: SchedulingPolicy::Edf,
+            slo_deadline_mults: vec![0.5, 1.0, 2.0],
+            autoscaler: Some(AutoscalerConfig {
+                check_interval_s: 0.25,
+                queue_up: ctx.scale_up,
+                queue_down: ctx.scale_down,
+                p99_up_s: None,
+                warmup_s: (ctx.warmup_ms / 1e3).min(0.5),
+                min_engines: 1,
+                max_engines: ctx.max_engines.clamp(1, 8),
+            }),
+            failure_rate_hz: if ctx.fail_rate_hz > 0.0 { ctx.fail_rate_hz } else { 0.05 },
+        }
+    }
+}
+
+impl Experiment for Telemetry {
+    fn name(&self) -> &'static str {
+        "telemetry"
+    }
+
+    fn description(&self) -> &'static str {
+        "typed event stream: trace a fleet run, replay it bitwise, measure the overhead"
+    }
+
+    fn run(&self, ctx: &ExpContext) -> anyhow::Result<Report> {
+        let mut options = ctx.options.clone();
+        options.decode_stride = options.decode_stride.max(8);
+        let scenario = Scenario::baseline();
+
+        // a two-tier fleet lowered from one shared roofline evaluation;
+        // the separate evaluator feeds the `cache` preamble snapshot
+        let topologies =
+            vec![ShardModel::single(), ShardModel { mode: crate::engine::shard::ShardMode::Replicate, engines: 2 }];
+        let services: Vec<ShardService> = ShardService::lower_all(
+            &ctx.platform,
+            &options,
+            &ctx.model,
+            &ctx.draft,
+            &scenario,
+            &topologies,
+        )?;
+        let specs: Vec<ShardSpec> = services.iter().map(|s| s.fleet_spec()).collect();
+        let ev = Evaluator::new(&ctx.platform, &options, &ctx.model, &ctx.draft);
+        ev.eval(&scenario)?;
+
+        let cfg = Self::config(ctx);
+        let meta = RunMeta {
+            platform: ctx.platform.name.clone(),
+            scenario: scenario.name.clone(),
+        };
+        let sim = FleetSim::new(cfg, specs)?;
+
+        // events-off pass (NullSink), then the traced pass, both timed
+        let t0 = Instant::now();
+        let off = sim.run();
+        let live_s = t0.elapsed().as_secs_f64();
+        let mut sink = VecSink::new();
+        let preamble = ev.cache_snapshot(0.0, "lowering");
+        sink.events.push(preamble);
+        let t1 = Instant::now();
+        let live = sim.run_traced(&meta, &mut sink);
+        let traced_s = t1.elapsed().as_secs_f64();
+        let events = sink.events;
+
+        let mut rep = Report::new(self.name());
+        rep.note(format!(
+            "traced {} events over {} arrivals of `{}` on {} ({} streams, {:.1} s virtual)",
+            events.len(),
+            live.arrived,
+            ctx.model.name,
+            ctx.platform.name,
+            live.per_stream_arrived.len(),
+            sim_duration(&events),
+        ));
+
+        // event counts by kind, in wire order
+        let mut ct = Table::new("Event stream composition", &["event", "count"]).left_first();
+        let kinds = [
+            "cache", "run_start", "arrival", "admit", "reject", "dispatch", "completion",
+            "drop", "scale", "failure", "run_end",
+        ];
+        for k in kinds {
+            let n = events.iter().filter(|e| e.kind() == k).count();
+            ct.row(vec![k.to_string(), format!("{n}")]);
+        }
+        rep.push_table(&format!("{}_events", slug(self.name())), ct);
+
+        // the queueing-latency summary as recovered FROM THE STREAM
+        let replayed = replay(&events)?;
+        let mut lt = Table::new(
+            "Latency from the replayed stream",
+            &["series", "p50", "p90", "p99", "max"],
+        )
+        .left_first();
+        for (label, s) in [("queue delay", &replayed.queue_delay), ("service", &replayed.service)] {
+            lt.row(vec![
+                label.to_string(),
+                fmt_time(s.p50),
+                fmt_time(s.p90),
+                fmt_time(s.p99),
+                fmt_time(s.max),
+            ]);
+        }
+        rep.push_table(&format!("{}_latency", slug(self.name())), lt);
+
+        // TL1: the replay invariant, bit for bit
+        let mismatch = report_mismatch(&live, &replayed);
+        rep.checks.push(Check {
+            id: "TL1-replay-bitwise",
+            claim: "replaying the event stream reconstructs the live report bitwise",
+            passed: mismatch.is_none(),
+            detail: match &mismatch {
+                None => format!("{} events -> identical report", events.len()),
+                Some(m) => m.clone(),
+            },
+        });
+
+        // TL2: conservation from raw event counts alone
+        let count = |k: &str| events.iter().filter(|e| e.kind() == k).count();
+        let (arrivals, dispatches, drops, rejects) =
+            (count("arrival"), count("dispatch"), count("drop"), count("reject"));
+        let end_counts = events.iter().rev().find_map(|e| match e {
+            Event::RunEnd { info, .. } => {
+                Some((info.arrived, info.served, info.dropped, info.rejected))
+            }
+            _ => None,
+        });
+        let balanced = arrivals == dispatches + drops + rejects
+            && end_counts == Some((arrivals, dispatches, drops, rejects));
+        rep.checks.push(Check {
+            id: "TL2-stream-conservation",
+            claim: "raw event counts balance arrivals == dispatch + drop + reject",
+            passed: balanced,
+            detail: format!(
+                "{arrivals} arrivals vs {dispatches} + {drops} + {rejects} (run_end {end_counts:?})"
+            ),
+        });
+
+        // TL3: NDJSON wire round-trip is the identity and still replays
+        let reparsed: anyhow::Result<Vec<Event>> =
+            events.iter().map(|e| Event::parse_line(&e.to_ndjson_line())).collect();
+        let tl3 = match reparsed {
+            Ok(back) => {
+                back == events
+                    && replay(&back).map(|r| report_mismatch(&live, &r).is_none()).unwrap_or(false)
+            }
+            Err(_) => false,
+        };
+        rep.checks.push(Check {
+            id: "TL3-wire-round-trip",
+            claim: "every event survives serialize -> parse bitwise and the re-parsed stream replays",
+            passed: tl3,
+            detail: format!("{} NDJSON lines", events.len()),
+        });
+
+        // TL4: with the NullSink the traced path IS the untraced path
+        let off_mismatch = report_mismatch(&off, &live);
+        rep.checks.push(Check {
+            id: "TL4-events-off-bitwise",
+            claim: "the untraced run() is bitwise the traced run — telemetry off costs nothing",
+            passed: off_mismatch.is_none(),
+            detail: match &off_mismatch {
+                None => "identical reports".to_string(),
+                Some(m) => m.clone(),
+            },
+        });
+
+        rep.metric("events_total", events.len() as f64);
+        rep.metric("events_arrived", live.arrived as f64);
+        rep.metric("live_ms", live_s * 1e3);
+        rep.metric("traced_ms", traced_s * 1e3);
+        if live_s > 0.0 {
+            rep.metric("overhead_pct", 100.0 * (traced_s - live_s) / live_s);
+        }
+        if traced_s > 0.0 {
+            rep.metric("events_per_s", events.len() as f64 / traced_s);
+        }
+        Ok(rep)
+    }
+}
+
+/// Virtual duration covered by the stream (the `run_end` stamp).
+fn sim_duration(events: &[Event]) -> f64 {
+    events
+        .iter()
+        .rev()
+        .find_map(|e| match e {
+            Event::RunEnd { t, .. } => Some(*t),
+            _ => None,
+        })
+        .unwrap_or(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiment::ExpContext;
+
+    #[test]
+    fn telemetry_experiment_passes_its_own_checks() {
+        let mut ctx = ExpContext::default();
+        ctx.fleet_streams = 8;
+        ctx.duration_s = 3.0;
+        let rep = Telemetry.run(&ctx).unwrap();
+        assert_eq!(rep.checks.len(), 4);
+        for c in &rep.checks {
+            assert!(c.passed, "{}: {}", c.id, c.detail);
+        }
+        assert!(rep.metrics.iter().any(|(k, _)| k == "events_total"));
+    }
+}

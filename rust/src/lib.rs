@@ -20,4 +20,5 @@ pub mod sim;
 pub mod model;
 pub mod profile;
 pub mod report;
+pub mod telemetry;
 pub mod util;

@@ -100,6 +100,44 @@ pub enum ScaleDecision {
     Hold,
 }
 
+impl ScaleDecision {
+    pub fn label(self) -> &'static str {
+        match self {
+            ScaleDecision::Up => "up",
+            ScaleDecision::Down => "down",
+            ScaleDecision::Hold => "hold",
+        }
+    }
+}
+
+/// Which rule of the state machine produced a decision. Telemetry-facing:
+/// the decision alone says *what* happened, the trigger says *why*.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleTrigger {
+    /// Alive engines fell below `min_engines` (fail-stop replacement).
+    Failover,
+    /// Queue depth crossed `queue_up`.
+    QueueDepth,
+    /// Window p99 delay crossed `p99_up_s`.
+    TailLatency,
+    /// Queue depth fell below `queue_down` with spare engines.
+    QueueDrained,
+    /// No rule fired (includes up/down rules blocked by min/max caps).
+    Steady,
+}
+
+impl ScaleTrigger {
+    pub fn label(self) -> &'static str {
+        match self {
+            ScaleTrigger::Failover => "failover",
+            ScaleTrigger::QueueDepth => "queue-depth",
+            ScaleTrigger::TailLatency => "tail-latency",
+            ScaleTrigger::QueueDrained => "queue-drained",
+            ScaleTrigger::Steady => "steady",
+        }
+    }
+}
+
 /// Live autoscaler state: the config plus the delay window accumulated
 /// since the last check.
 #[derive(Debug, Clone)]
@@ -120,20 +158,32 @@ impl Autoscaler {
 
     /// Evaluate the state machine at a check point. Consumes the window.
     pub fn decide(&mut self, queued: usize, alive: usize) -> ScaleDecision {
+        self.decide_traced(queued, alive).0
+    }
+
+    /// [`Autoscaler::decide`] plus the rule that fired. The decision path is
+    /// the untraced one verbatim — the trigger is derived alongside, never
+    /// by re-running the rules.
+    pub fn decide_traced(&mut self, queued: usize, alive: usize) -> (ScaleDecision, ScaleTrigger) {
         let p99 = Summary::of(&self.window).p99;
         self.window.clear();
         if alive < self.cfg.min_engines {
             // failover replacement beats every other rule
-            return ScaleDecision::Up;
+            return (ScaleDecision::Up, ScaleTrigger::Failover);
         }
         let tail_hot = self.cfg.p99_up_s.is_some_and(|thr| p99 > thr);
         if (queued > self.cfg.queue_up || tail_hot) && alive < self.cfg.max_engines {
-            return ScaleDecision::Up;
+            let trigger = if queued > self.cfg.queue_up {
+                ScaleTrigger::QueueDepth
+            } else {
+                ScaleTrigger::TailLatency
+            };
+            return (ScaleDecision::Up, trigger);
         }
         if queued < self.cfg.queue_down && alive > self.cfg.min_engines {
-            return ScaleDecision::Down;
+            return (ScaleDecision::Down, ScaleTrigger::QueueDrained);
         }
-        ScaleDecision::Hold
+        (ScaleDecision::Hold, ScaleTrigger::Steady)
     }
 }
 
@@ -186,5 +236,42 @@ mod tests {
         assert_eq!(a.decide(0, 2), ScaleDecision::Down);
         // alive below min_engines is an unconditional replacement
         assert_eq!(a.decide(0, 0), ScaleDecision::Up);
+    }
+
+    #[test]
+    fn traced_decisions_name_the_rule_that_fired() {
+        let mut a = Autoscaler::new(cfg());
+        assert_eq!(
+            a.decide_traced(0, 0),
+            (ScaleDecision::Up, ScaleTrigger::Failover)
+        );
+        assert_eq!(
+            a.decide_traced(10, 1),
+            (ScaleDecision::Up, ScaleTrigger::QueueDepth)
+        );
+        for _ in 0..100 {
+            a.observe(0.5);
+        }
+        assert_eq!(
+            a.decide_traced(0, 2),
+            (ScaleDecision::Up, ScaleTrigger::TailLatency),
+            "shallow queue + hot tail is the tail-latency rule"
+        );
+        assert_eq!(
+            a.decide_traced(0, 2),
+            (ScaleDecision::Down, ScaleTrigger::QueueDrained)
+        );
+        assert_eq!(
+            a.decide_traced(2, 2),
+            (ScaleDecision::Hold, ScaleTrigger::Steady)
+        );
+        // deep queue at max_engines: the up rule is capped, reported Steady
+        assert_eq!(
+            a.decide_traced(10, 3),
+            (ScaleDecision::Hold, ScaleTrigger::Steady)
+        );
+        // traced and untraced agree by construction
+        let mut b = Autoscaler::new(cfg());
+        assert_eq!(b.decide(10, 1), b.decide_traced(10, 1).0);
     }
 }

@@ -39,7 +39,7 @@ pub mod event;
 pub mod policy;
 pub mod sim;
 
-pub use autoscale::{Autoscaler, AutoscalerConfig, ScaleDecision};
+pub use autoscale::{Autoscaler, AutoscalerConfig, ScaleDecision, ScaleTrigger};
 pub use event::{EventQueue, FleetEvent};
 pub use policy::{AdmissionPolicy, SchedulingPolicy};
 pub use sim::{FleetConfig, FleetReport, FleetSim, ShardSpec};

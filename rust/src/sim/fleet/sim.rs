@@ -23,6 +23,10 @@ use super::arrivals::{build_poisson_arrivals, Request};
 use super::autoscale::{Autoscaler, AutoscalerConfig, ScaleDecision};
 use super::event::{EventQueue, FleetEvent};
 use super::policy::{AdmissionPolicy, SchedulingPolicy, TokenBucket};
+use crate::telemetry::{
+    DropReason, Event, EventSink, NullSink, RejectReason, RunMeta, RunMode, RunStartInfo,
+    ShardEcho,
+};
 use crate::util::prng::Prng;
 use crate::util::stats::Summary;
 use std::cmp::Reverse;
@@ -410,11 +414,54 @@ impl FleetSim {
     /// Run the simulation to completion (deterministic; pure function of
     /// the config + specs).
     pub fn run(&self) -> FleetReport {
+        self.run_traced(&RunMeta::default(), &mut NullSink)
+    }
+
+    /// [`FleetSim::run`] narrating the run into an [`EventSink`]. The
+    /// arithmetic is the untraced path verbatim — with [`NullSink`] (the
+    /// `run()` delegate) every emission is a no-op and all tracing-only
+    /// bookkeeping is skipped, so the report stays bitwise-identical.
+    pub fn run_traced<S: EventSink + ?Sized>(&self, meta: &RunMeta, sink: &mut S) -> FleetReport {
         if self.is_degenerate_single_lane() {
-            self.run_single_lane()
+            self.run_single_lane(meta, sink)
         } else {
-            self.run_event_loop()
+            self.run_event_loop_traced(meta, sink)
         }
+    }
+
+    /// The `run_start` config echo for this simulation.
+    fn run_start_info(&self, meta: &RunMeta, mode: RunMode) -> RunStartInfo {
+        let cfg = &self.cfg;
+        let mut info = RunStartInfo {
+            platform: meta.platform.clone(),
+            scenario: meta.scenario.clone(),
+            mode,
+            config_fp: 0,
+            streams: cfg.streams,
+            rate_hz: cfg.rate_hz,
+            duration_s: cfg.duration_s,
+            seed: cfg.seed,
+            deadline_s: cfg.deadline_s,
+            admission: cfg.admission.label(),
+            scheduling: cfg.scheduling.label().to_string(),
+            slo_mults: cfg.slo_mults(),
+            autoscaler: cfg.autoscaler.is_some(),
+            failure_rate_hz: cfg.failure_rate_hz,
+            engines: self.static_engines(),
+            shards: self
+                .shards
+                .iter()
+                .map(|s| ShardEcho {
+                    label: s.label.clone(),
+                    lanes: s.lanes,
+                    step_s: s.step_s,
+                    actions_per_step: s.actions_per_step,
+                    j_per_action: s.j_per_action,
+                })
+                .collect(),
+        };
+        info.config_fp = info.fingerprint();
+        info
     }
 
     /// The degenerate configuration whose semantics are exactly the legacy
@@ -439,7 +486,21 @@ impl FleetSim {
     /// `start = clock.max(arrival)` / `clock = start + service` float
     /// chain, the same `clock.max(1e-12)` makespan floor — operation for
     /// operation, so the report is bitwise the legacy batcher's.
-    fn run_single_lane(&self) -> FleetReport {
+    ///
+    /// Event-stream notes (mode `single-lane`): the mirror emits `arrival`
+    /// (as requests are pulled into the queues — sorted order), `dispatch`,
+    /// `drop` and the run frame. No `admit` events (admission is vacuously
+    /// drop-on-deadline here) and no `completion` events — a completion at
+    /// `start + service` could precede a later-pulled arrival's smaller
+    /// timestamp, and the stream stays monotone without them.
+    fn run_single_lane<S: EventSink + ?Sized>(&self, meta: &RunMeta, sink: &mut S) -> FleetReport {
+        let on = sink.enabled();
+        if on {
+            sink.emit(&Event::RunStart {
+                t: 0.0,
+                info: Box::new(self.run_start_info(meta, RunMode::SingleLane)),
+            });
+        }
         let cfg = &self.cfg;
         let shard = &self.shards[0];
         let (arrivals, per_stream_arrived) =
@@ -463,6 +524,13 @@ impl FleetSim {
             while let Some(r) = pending.peek() {
                 if r.arrival <= clock {
                     let r = pending.next().unwrap();
+                    if on {
+                        sink.emit(&Event::Arrival {
+                            t: r.arrival,
+                            stream: r.stream as u32,
+                            step: r.step,
+                        });
+                    }
                     queues[r.stream].push_back(r);
                 } else {
                     break;
@@ -472,6 +540,13 @@ impl FleetSim {
                 match pending.next() {
                     Some(r) => {
                         clock = r.arrival;
+                        if on {
+                            sink.emit(&Event::Arrival {
+                                t: r.arrival,
+                                stream: r.stream as u32,
+                                step: r.step,
+                            });
+                        }
                         queues[r.stream].push_back(r);
                         continue;
                     }
@@ -486,6 +561,13 @@ impl FleetSim {
             if let Some(deadline) = cfg.deadline_s {
                 if delay > deadline {
                     per_stream_dropped[s] += 1;
+                    if on {
+                        sink.emit(&Event::Drop {
+                            t: start,
+                            stream: s as u32,
+                            reason: DropReason::Stale,
+                        });
+                    }
                     continue;
                 }
             }
@@ -497,6 +579,17 @@ impl FleetSim {
             }
             max_burst = max_burst.max(burst);
 
+            if on {
+                sink.emit(&Event::Dispatch {
+                    t: start,
+                    engine: 0,
+                    stream: s as u32,
+                    delay_s: delay,
+                    service_s,
+                    actions_per_step: shard.actions_per_step,
+                    j_per_action: shard.j_per_action,
+                });
+            }
             delays.push(delay);
             services.push(service_s);
             per_stream[s] += 1;
@@ -509,7 +602,7 @@ impl FleetSim {
         let total_time = clock.max(1e-12);
         let actions = served as f64 * shard.actions_per_step;
         let energy_j = actions * shard.j_per_action;
-        FleetReport {
+        let report = FleetReport {
             arrived,
             served,
             dropped,
@@ -531,14 +624,27 @@ impl FleetSim {
             scale_ups: 0,
             scale_downs: 0,
             makespan_s: total_time,
+        };
+        if on {
+            sink.emit(&Event::run_end(&report, 0.0));
         }
+        report
     }
 
     /// The general typed-event-queue engine (public for cross-validation:
     /// tests pin its degenerate-config output against the single-lane
     /// mirror).
     pub fn run_event_loop(&self) -> FleetReport {
-        EventLoop::new(self).run()
+        self.run_event_loop_traced(&RunMeta::default(), &mut NullSink)
+    }
+
+    /// [`FleetSim::run_event_loop`] with telemetry.
+    pub fn run_event_loop_traced<S: EventSink + ?Sized>(
+        &self,
+        meta: &RunMeta,
+        sink: &mut S,
+    ) -> FleetReport {
+        EventLoop::new(self, sink).run(meta)
     }
 }
 
@@ -564,9 +670,30 @@ fn pick_stream_single(
     }
 }
 
+/// One in-flight step on an engine, remembered only when tracing so the
+/// telemetry `completion` event can name the stream. `completes_bits` is
+/// the engine-free time of the dispatch: the dynamic-engine warm-up wake is
+/// also a `Completion` event with no work behind it, and matching the
+/// popped event time bitwise against the deque front filters those out.
+#[derive(Debug, Clone, Copy)]
+struct Inflight {
+    stream: u32,
+    service_s: f64,
+    completes_bits: u64,
+}
+
 /// All mutable state of one general-engine run.
-struct EventLoop<'a> {
+struct EventLoop<'a, S: EventSink + ?Sized> {
     sim: &'a FleetSim,
+    sink: &'a mut S,
+    /// `sink.enabled()` memoized: gates event construction and all
+    /// tracing-only bookkeeping (`inflight`, the alive_after scan).
+    on: bool,
+    /// Per-engine FIFO of in-flight steps; empty when `on` is false.
+    inflight: Vec<VecDeque<Inflight>>,
+    /// Timestamp of the last popped event (the `run_end` floor — a trailing
+    /// admission reject can land after the last service completes).
+    last_now: f64,
     mults: Vec<f64>,
     engines: Vec<EngineState>,
     ready: ReadyQueue,
@@ -596,13 +723,18 @@ struct EventLoop<'a> {
     next_uid: u64,
 }
 
-impl<'a> EventLoop<'a> {
-    fn new(sim: &'a FleetSim) -> EventLoop<'a> {
+impl<'a, S: EventSink + ?Sized> EventLoop<'a, S> {
+    fn new(sim: &'a FleetSim, sink: &'a mut S) -> EventLoop<'a, S> {
         let cfg = &sim.cfg;
         let (arrivals, per_stream_arrived) =
             build_poisson_arrivals(cfg.streams, cfg.rate_hz, cfg.duration_s, cfg.seed);
+        let on = sink.enabled();
         let mut el = EventLoop {
             sim,
+            sink,
+            on,
+            inflight: Vec::new(),
+            last_now: 0.0,
             mults: cfg.slo_mults(),
             engines: Vec::new(),
             ready: ReadyQueue::new(cfg.scheduling, cfg.streams),
@@ -672,6 +804,7 @@ impl<'a> EventLoop<'a> {
             self.evq.push(eng.free, FleetEvent::Completion { engine: id });
         }
         self.engines.push(eng);
+        self.inflight.push(VecDeque::new());
     }
 
     fn alive_engines(&self) -> usize {
@@ -704,27 +837,60 @@ impl<'a> EventLoop<'a> {
         }
     }
 
-    fn run(mut self) -> FleetReport {
+    fn run(mut self, meta: &RunMeta) -> FleetReport {
+        if self.on {
+            let info = self.sim.run_start_info(meta, RunMode::EventLoop);
+            self.sink.emit(&Event::RunStart { t: 0.0, info: Box::new(info) });
+        }
         let arrived = self.arrivals.len();
         while self.completed < arrived {
             let Some((now, ev)) = self.evq.pop() else {
                 // no events left but work remains: every serving path is
                 // gone (all engines failed, no autoscaler) — flush
-                self.flush_unservable();
+                let t = self.last_now;
+                self.flush_unservable(t);
                 break;
             };
+            self.last_now = now;
             match ev {
-                FleetEvent::Arrival { stream, .. } => {
+                FleetEvent::Arrival { stream, step } => {
+                    if self.on {
+                        self.sink.emit(&Event::Arrival { t: now, stream, step });
+                    }
                     self.cursor += 1;
                     self.push_next_arrival();
                     self.handle_arrival(stream as usize, now);
                 }
-                FleetEvent::Completion { .. } => self.dispatch_all(now),
+                FleetEvent::Completion { engine } => {
+                    self.note_completion(engine as usize, now);
+                    self.dispatch_all(now);
+                }
                 FleetEvent::ScaleCheck => self.handle_scale_check(now),
-                FleetEvent::Failure { engine } => self.handle_failure(engine as usize),
+                FleetEvent::Failure { engine } => self.handle_failure(engine as usize, now),
             }
         }
         self.into_report(arrived)
+    }
+
+    /// Emit the telemetry `completion` for a popped `Completion` event iff
+    /// it corresponds to a real dispatched step (warm-up wakes don't).
+    /// Per-engine free times strictly increase through dispatches, so only
+    /// the deque front can match the popped event time.
+    fn note_completion(&mut self, engine: usize, now: f64) {
+        if !self.on {
+            return;
+        }
+        if let Some(front) = self.inflight[engine].front() {
+            if front.completes_bits == now.to_bits() {
+                let f = self.inflight[engine].pop_front().unwrap();
+                self.sink.emit(&Event::Completion {
+                    t: now,
+                    engine: engine as u32,
+                    stream: f.stream,
+                    service_s: f.service_s,
+                });
+            }
+        }
     }
 
     fn handle_arrival(&mut self, stream: usize, now: f64) {
@@ -739,7 +905,17 @@ impl<'a> EventLoop<'a> {
         if !admit {
             self.per_stream_rejected[stream] += 1;
             self.completed += 1;
+            if self.on {
+                let reason = match self.sim.cfg.admission {
+                    AdmissionPolicy::TokenBucket { .. } => RejectReason::TokenBucket,
+                    _ => RejectReason::SloShed,
+                };
+                self.sink.emit(&Event::Reject { t: now, stream: stream as u32, reason });
+            }
             return;
+        }
+        if self.on {
+            self.sink.emit(&Event::Admit { t: now, stream: stream as u32 });
         }
         let key = self.ready_key(stream, now);
         self.ready.push(Ready { stream, arrival: now }, key);
@@ -787,6 +963,13 @@ impl<'a> EventLoop<'a> {
                 if delay > d {
                     self.per_stream_dropped[r.stream] += 1;
                     self.completed += 1;
+                    if self.on {
+                        self.sink.emit(&Event::Drop {
+                            t: now,
+                            stream: r.stream as u32,
+                            reason: DropReason::Stale,
+                        });
+                    }
                     continue; // the engine stays idle; try the next request
                 }
             }
@@ -810,6 +993,22 @@ impl<'a> EventLoop<'a> {
             self.actions += spec.actions_per_step;
             self.energy_j += spec.j_per_action * spec.actions_per_step;
             self.makespan = self.makespan.max(free_at);
+            if self.on {
+                self.sink.emit(&Event::Dispatch {
+                    t: now,
+                    engine: e as u32,
+                    stream: r.stream as u32,
+                    delay_s: delay,
+                    service_s: service,
+                    actions_per_step: spec.actions_per_step,
+                    j_per_action: spec.j_per_action,
+                });
+                self.inflight[e].push_back(Inflight {
+                    stream: r.stream as u32,
+                    service_s: service,
+                    completes_bits: free_at.to_bits(),
+                });
+            }
             self.delays.push(delay);
             self.services.push(service);
             self.per_stream_served[r.stream] += 1;
@@ -821,15 +1020,20 @@ impl<'a> EventLoop<'a> {
     fn handle_scale_check(&mut self, now: f64) {
         let alive = self.alive_engines();
         let queued = self.queued;
-        let (decision, warmup, interval) = match self.scaler.as_mut() {
-            Some(sc) => (sc.decide(queued, alive), sc.cfg.warmup_s, sc.cfg.check_interval_s),
+        let (decision, trigger, warmup, interval) = match self.scaler.as_mut() {
+            Some(sc) => {
+                let (decision, trigger) = sc.decide_traced(queued, alive);
+                (decision, trigger, sc.cfg.warmup_s, sc.cfg.check_interval_s)
+            }
             None => return,
         };
+        let mut applied = false;
         match decision {
             ScaleDecision::Up => {
                 self.spawn_engine(0, now + warmup, true);
                 self.scale_ups += 1;
                 self.peak_engines = self.peak_engines.max(self.alive_engines());
+                applied = true;
             }
             ScaleDecision::Down => {
                 // retire the newest idle dynamic engine; never kill
@@ -844,42 +1048,78 @@ impl<'a> EventLoop<'a> {
                 {
                     self.engines[i].alive = false;
                     self.scale_downs += 1;
+                    applied = true;
                 }
             }
             ScaleDecision::Hold => {}
+        }
+        if self.on {
+            self.sink.emit(&Event::Scale {
+                t: now,
+                decision,
+                trigger,
+                queued,
+                alive_before: alive,
+                alive_after: self.alive_engines(),
+                applied,
+            });
         }
         if self.completed < self.arrivals.len() {
             self.evq.push(now + interval, FleetEvent::ScaleCheck);
         }
     }
 
-    fn handle_failure(&mut self, engine: usize) {
+    fn handle_failure(&mut self, engine: usize, now: f64) {
         if self.engines[engine].alive {
             self.engines[engine].alive = false;
             self.failures += 1;
+            if self.on {
+                self.sink.emit(&Event::Failure { t: now, engine: engine as u32 });
+            }
         }
         if self.scaler.is_none() && self.engines.iter().all(|e| !e.alive) {
-            self.flush_unservable();
+            self.flush_unservable(now);
         }
     }
 
     /// Every serving path is gone: the queue and the untraced remainder of
     /// the arrival process count as dropped (conservation holds).
-    fn flush_unservable(&mut self) {
+    ///
+    /// Telemetry: drained-queue drops stamp `now`; the never-pulled
+    /// remainder emits a synthetic `arrival` + `drop(flush)` pair at each
+    /// request's arrival time so the stream conserves on its own. Those
+    /// arrival times are `>= now` — the cursor's arrival event is still in
+    /// the queue (unpopped) whenever this runs, so the stream stays
+    /// monotone.
+    fn flush_unservable(&mut self, now: f64) {
         for r in self.ready.drain() {
             self.per_stream_dropped[r.stream] += 1;
             self.completed += 1;
+            if self.on {
+                self.sink.emit(&Event::Drop {
+                    t: now,
+                    stream: r.stream as u32,
+                    reason: DropReason::Flush,
+                });
+            }
         }
         self.queued = 0;
         while self.cursor < self.arrivals.len() {
             let r = &self.arrivals[self.cursor];
-            self.per_stream_dropped[r.stream] += 1;
+            if self.on {
+                let stream = r.stream as u32;
+                let (t, step) = (r.arrival, r.step);
+                self.sink.emit(&Event::Arrival { t, stream, step });
+                self.sink.emit(&Event::Drop { t, stream, reason: DropReason::Flush });
+            }
+            let stream = r.stream;
+            self.per_stream_dropped[stream] += 1;
             self.completed += 1;
             self.cursor += 1;
         }
     }
 
-    fn into_report(self, arrived: usize) -> FleetReport {
+    fn into_report(mut self, arrived: usize) -> FleetReport {
         let served = self.services.len();
         let dropped: usize = self.per_stream_dropped.iter().sum();
         let rejected: usize = self.per_stream_rejected.iter().sum();
@@ -890,7 +1130,7 @@ impl<'a> EventLoop<'a> {
         );
         let total_time = self.makespan.max(1e-12);
         let actions = self.actions;
-        FleetReport {
+        let report = FleetReport {
             arrived,
             served,
             dropped,
@@ -912,7 +1152,11 @@ impl<'a> EventLoop<'a> {
             scale_ups: self.scale_ups,
             scale_downs: self.scale_downs,
             makespan_s: total_time,
+        };
+        if self.on {
+            self.sink.emit(&Event::run_end(&report, self.last_now));
         }
+        report
     }
 }
 

@@ -321,6 +321,12 @@ impl EvalCache {
                 as u64,
         }
     }
+
+    /// Current counters as a telemetry `cache` event (the preamble record
+    /// the fleet experiments stamp before `run_start`).
+    pub fn snapshot_event(&self, t: f64, label: &str) -> crate::telemetry::Event {
+        crate::telemetry::Event::cache(t, label, self.stats())
+    }
 }
 
 #[cfg(test)]

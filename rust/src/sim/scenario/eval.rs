@@ -371,6 +371,13 @@ impl Evaluator {
         &self.cache
     }
 
+    /// The evaluator's cache counters as a telemetry `cache` event —
+    /// what the fleet experiments stamp into the NDJSON preamble so a
+    /// stream records how much lowering work backed its shard specs.
+    pub fn cache_snapshot(&self, t: f64, label: &str) -> crate::telemetry::Event {
+        self.cache.snapshot_event(t, label)
+    }
+
     /// Lazily integrated PIM-resident draft step, shared across the
     /// context: per-token (time, dynamic energy).
     fn pim_draft_step(&self) -> (f64, f64) {

@@ -1,0 +1,1188 @@
+//! Typed, versioned telemetry event stream for the serving simulators.
+//!
+//! The fleet simulator ([`crate::sim::fleet::FleetSim`]), the shard batcher
+//! ([`crate::engine::shard::run_shard_batcher`]), the autoscaler, and the
+//! scenario evaluator can all narrate their execution as a stream of typed
+//! [`Event`]s through an [`EventSink`]. The wire format is newline-delimited
+//! JSON (NDJSON) built on [`crate::util::json`] — zero external
+//! dependencies — with a `v` schema-version field on every line.
+//!
+//! Three invariants make the stream useful rather than decorative:
+//!
+//! 1. **NullSink is free.** Every traced entry point has an untraced
+//!    delegate (`run()` → `run_traced(&RunMeta::default(), &mut NullSink)`);
+//!    the traced body performs *identical arithmetic* in the same order, and
+//!    all sink-only bookkeeping is gated on [`EventSink::enabled`]. The
+//!    existing bitwise pins (degenerate-fleet == batcher, parallel ==
+//!    serial, incremental == fresh) therefore hold with tracing compiled in.
+//! 2. **The stream is self-certifying.** [`replay`](crate::telemetry::replay)
+//!    folds an event stream back into a [`FleetReport`] that is
+//!    bitwise-equal to the live report — conservation counts, throughput,
+//!    p50/p99 bits and all. A stream that replays is a faithful record.
+//! 3. **Timestamps are monotone** between `run_start` and `run_end`
+//!    (preamble `cache`/`phase` events may precede `run_start`).
+//!    `scripts/check_events.py` enforces this from the stream alone.
+//!
+//! See `docs/TELEMETRY.md` for the full wire-format reference.
+
+pub mod replay;
+
+use std::fs::File;
+use std::io::{BufWriter, Write as IoWrite};
+use std::path::Path;
+
+use crate::model::Phase;
+use crate::sim::fleet::{FleetReport, ScaleDecision, ScaleTrigger};
+use crate::sim::scenario::CacheStats;
+use crate::util::json::Json;
+
+/// Wire schema version. Bump on any breaking change to the NDJSON format.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Which serving loop produced a stream. Replay arithmetic branches on this
+/// (the single-lane mirror computes `actions`/`J/action` from end-of-run
+/// totals; the event loop and the multi-lane batcher accumulate per
+/// dispatch), so it is part of the wire format, not a display hint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunMode {
+    /// `FleetSim::run_single_lane` — the degenerate bitwise mirror.
+    SingleLane,
+    /// `FleetSim` discrete event loop.
+    EventLoop,
+    /// `engine::shard::run_shard_batcher` multi-lane loop.
+    Batcher,
+}
+
+impl RunMode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RunMode::SingleLane => "single-lane",
+            RunMode::EventLoop => "event-loop",
+            RunMode::Batcher => "batcher",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<RunMode> {
+        match s {
+            "single-lane" => Ok(RunMode::SingleLane),
+            "event-loop" => Ok(RunMode::EventLoop),
+            "batcher" => Ok(RunMode::Batcher),
+            other => Err(anyhow::anyhow!("unknown run mode `{other}`")),
+        }
+    }
+}
+
+/// Why a request was rejected at admission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// Token-bucket admission ran dry.
+    TokenBucket,
+    /// SLO-priority admission shed the best-effort class.
+    SloShed,
+}
+
+impl RejectReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RejectReason::TokenBucket => "token_bucket",
+            RejectReason::SloShed => "slo_shed",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<RejectReason> {
+        match s {
+            "token_bucket" => Ok(RejectReason::TokenBucket),
+            "slo_shed" => Ok(RejectReason::SloShed),
+            other => Err(anyhow::anyhow!("unknown reject reason `{other}`")),
+        }
+    }
+}
+
+/// Why an admitted request was dropped before service.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DropReason {
+    /// Queue delay exceeded the (class-scaled) deadline at dispatch.
+    Stale,
+    /// Fleet died or ran out of events; the remainder was flushed.
+    Flush,
+}
+
+impl DropReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DropReason::Stale => "stale",
+            DropReason::Flush => "flush",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<DropReason> {
+        match s {
+            "stale" => Ok(DropReason::Stale),
+            "flush" => Ok(DropReason::Flush),
+            other => Err(anyhow::anyhow!("unknown drop reason `{other}`")),
+        }
+    }
+}
+
+/// Caller-supplied context echoed into `run_start` (the simulators do not
+/// know which platform/scenario their shard specs were lowered from).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RunMeta {
+    pub platform: String,
+    pub scenario: String,
+}
+
+/// One shard spec echoed into `run_start` so replay can reconstruct
+/// single-lane energy totals without the original `FleetConfig`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardEcho {
+    pub label: String,
+    pub lanes: usize,
+    pub step_s: f64,
+    pub actions_per_step: f64,
+    pub j_per_action: f64,
+}
+
+/// Everything `run_start` carries: enough config echo to replay the stream
+/// and to fingerprint the run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunStartInfo {
+    pub platform: String,
+    pub scenario: String,
+    pub mode: RunMode,
+    /// FNV-1a fingerprint over the canonical config encoding (see
+    /// [`RunStartInfo::fingerprint`]). Serialized as a 16-hex-digit string —
+    /// `Json::Num` is an f64 and would corrupt u64s above 2^53.
+    pub config_fp: u64,
+    pub streams: usize,
+    pub rate_hz: f64,
+    pub duration_s: f64,
+    /// Serialized as a decimal string for the same 2^53 reason.
+    pub seed: u64,
+    pub deadline_s: Option<f64>,
+    pub admission: String,
+    pub scheduling: String,
+    pub slo_mults: Vec<f64>,
+    pub autoscaler: bool,
+    pub failure_rate_hz: f64,
+    /// Engines alive at t=0 (static lanes).
+    pub engines: usize,
+    pub shards: Vec<ShardEcho>,
+}
+
+impl RunStartInfo {
+    /// FNV-1a over a canonical byte encoding of every field except
+    /// `config_fp` itself (floats by their IEEE bits, so the fingerprint is
+    /// exactly as strict as the bitwise pins).
+    pub fn fingerprint(&self) -> u64 {
+        let mut s = String::new();
+        use std::fmt::Write as _;
+        let _ = write!(
+            s,
+            "{}|{}|{}|{}|{:x}|{:x}|{}|",
+            self.platform,
+            self.scenario,
+            self.mode.as_str(),
+            self.streams,
+            self.rate_hz.to_bits(),
+            self.duration_s.to_bits(),
+            self.seed,
+        );
+        match self.deadline_s {
+            Some(d) => {
+                let _ = write!(s, "d{:x}|", d.to_bits());
+            }
+            None => s.push_str("d-|"),
+        }
+        let _ = write!(s, "{}|{}|", self.admission, self.scheduling);
+        for m in &self.slo_mults {
+            let _ = write!(s, "m{:x}|", m.to_bits());
+        }
+        let _ = write!(
+            s,
+            "{}|{:x}|{}|",
+            self.autoscaler,
+            self.failure_rate_hz.to_bits(),
+            self.engines
+        );
+        for sh in &self.shards {
+            let _ = write!(
+                s,
+                "s{}:{}:{:x}:{:x}:{:x}|",
+                sh.label,
+                sh.lanes,
+                sh.step_s.to_bits(),
+                sh.actions_per_step.to_bits(),
+                sh.j_per_action.to_bits()
+            );
+        }
+        fnv1a64(s.as_bytes())
+    }
+}
+
+/// End-of-run summary — a flat mirror of [`FleetReport`]'s headline fields.
+/// Replay cross-checks its folded counts against these before returning.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunEndInfo {
+    pub arrived: usize,
+    pub served: usize,
+    pub dropped: usize,
+    pub rejected: usize,
+    pub throughput: f64,
+    pub delay_p50_s: f64,
+    pub delay_p99_s: f64,
+    pub max_burst: usize,
+    pub actions: f64,
+    pub energy_j: f64,
+    pub j_per_action: f64,
+    pub peak_engines: usize,
+    pub failures: usize,
+    pub scale_ups: usize,
+    pub scale_downs: usize,
+    pub makespan_s: f64,
+}
+
+impl RunEndInfo {
+    pub fn of(r: &FleetReport) -> RunEndInfo {
+        RunEndInfo {
+            arrived: r.arrived,
+            served: r.served,
+            dropped: r.dropped,
+            rejected: r.rejected,
+            throughput: r.throughput,
+            delay_p50_s: r.queue_delay.p50,
+            delay_p99_s: r.queue_delay.p99,
+            max_burst: r.max_burst,
+            actions: r.actions,
+            energy_j: r.energy_j,
+            j_per_action: r.j_per_action,
+            peak_engines: r.peak_engines,
+            failures: r.failures,
+            scale_ups: r.scale_ups,
+            scale_downs: r.scale_downs,
+            makespan_s: r.makespan_s,
+        }
+    }
+}
+
+/// One telemetry event. Hot-path variants (`Arrival`..`Failure`) are
+/// allocation-free; the boxed start/end summaries keep the enum small.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    RunStart {
+        t: f64,
+        info: Box<RunStartInfo>,
+    },
+    Arrival {
+        t: f64,
+        stream: u32,
+        step: u64,
+    },
+    Admit {
+        t: f64,
+        stream: u32,
+    },
+    Reject {
+        t: f64,
+        stream: u32,
+        reason: RejectReason,
+    },
+    Dispatch {
+        t: f64,
+        engine: u32,
+        stream: u32,
+        delay_s: f64,
+        service_s: f64,
+        actions_per_step: f64,
+        j_per_action: f64,
+    },
+    Completion {
+        t: f64,
+        engine: u32,
+        stream: u32,
+        service_s: f64,
+    },
+    Drop {
+        t: f64,
+        stream: u32,
+        reason: DropReason,
+    },
+    Scale {
+        t: f64,
+        decision: ScaleDecision,
+        trigger: ScaleTrigger,
+        queued: usize,
+        alive_before: usize,
+        alive_after: usize,
+        applied: bool,
+    },
+    Failure {
+        t: f64,
+        engine: u32,
+    },
+    CacheSnapshot {
+        t: f64,
+        label: String,
+        stats: CacheStats,
+    },
+    PhaseSpan {
+        t: f64,
+        phase: Phase,
+        dur_s: f64,
+    },
+    RunEnd {
+        t: f64,
+        info: Box<RunEndInfo>,
+    },
+}
+
+impl Event {
+    /// The `ev` discriminator on the wire.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::RunStart { .. } => "run_start",
+            Event::Arrival { .. } => "arrival",
+            Event::Admit { .. } => "admit",
+            Event::Reject { .. } => "reject",
+            Event::Dispatch { .. } => "dispatch",
+            Event::Completion { .. } => "completion",
+            Event::Drop { .. } => "drop",
+            Event::Scale { .. } => "scale",
+            Event::Failure { .. } => "failure",
+            Event::CacheSnapshot { .. } => "cache",
+            Event::PhaseSpan { .. } => "phase",
+            Event::RunEnd { .. } => "run_end",
+        }
+    }
+
+    /// Virtual timestamp (seconds). For `PhaseSpan` this is relative to the
+    /// start of one control step, not to the run clock.
+    pub fn t(&self) -> f64 {
+        match self {
+            Event::RunStart { t, .. }
+            | Event::Arrival { t, .. }
+            | Event::Admit { t, .. }
+            | Event::Reject { t, .. }
+            | Event::Dispatch { t, .. }
+            | Event::Completion { t, .. }
+            | Event::Drop { t, .. }
+            | Event::Scale { t, .. }
+            | Event::Failure { t, .. }
+            | Event::CacheSnapshot { t, .. }
+            | Event::PhaseSpan { t, .. }
+            | Event::RunEnd { t, .. } => *t,
+        }
+    }
+
+    /// Build a `run_end` from a finished report. `t_floor` is the last
+    /// event-loop timestamp (a trailing admission reject can land after the
+    /// last dispatch completes); the stamp never precedes the makespan.
+    pub fn run_end(report: &FleetReport, t_floor: f64) -> Event {
+        Event::RunEnd {
+            t: t_floor.max(report.makespan_s),
+            info: Box::new(RunEndInfo::of(report)),
+        }
+    }
+
+    /// Build a `cache` snapshot from live [`CacheStats`].
+    pub fn cache(t: f64, label: &str, stats: CacheStats) -> Event {
+        Event::CacheSnapshot {
+            t,
+            label: label.to_string(),
+            stats,
+        }
+    }
+
+    /// Serialize to a [`Json`] object (always carries `v` and `ev`).
+    pub fn to_json(&self) -> Json {
+        let head = |kind: &'static str, t: f64| {
+            vec![
+                ("v", Json::Num(SCHEMA_VERSION as f64)),
+                ("ev", Json::Str(kind.to_string())),
+                ("t", Json::Num(t)),
+            ]
+        };
+        match self {
+            Event::RunStart { t, info } => {
+                let mut pairs = head("run_start", *t);
+                pairs.extend([
+                    ("platform", Json::Str(info.platform.clone())),
+                    ("scenario", Json::Str(info.scenario.clone())),
+                    ("mode", Json::Str(info.mode.as_str().to_string())),
+                    ("fp", Json::Str(format!("{:016x}", info.config_fp))),
+                    ("streams", Json::Num(info.streams as f64)),
+                    ("rate_hz", Json::Num(info.rate_hz)),
+                    ("duration_s", Json::Num(info.duration_s)),
+                    ("seed", Json::Str(info.seed.to_string())),
+                    (
+                        "deadline_s",
+                        info.deadline_s.map_or(Json::Null, Json::Num),
+                    ),
+                    ("admission", Json::Str(info.admission.clone())),
+                    ("scheduling", Json::Str(info.scheduling.clone())),
+                    (
+                        "slo_mults",
+                        Json::Arr(info.slo_mults.iter().map(|m| Json::Num(*m)).collect()),
+                    ),
+                    ("autoscaler", Json::Bool(info.autoscaler)),
+                    ("failure_rate_hz", Json::Num(info.failure_rate_hz)),
+                    ("engines", Json::Num(info.engines as f64)),
+                    (
+                        "shards",
+                        Json::Arr(
+                            info.shards
+                                .iter()
+                                .map(|s| {
+                                    Json::obj(vec![
+                                        ("label", Json::Str(s.label.clone())),
+                                        ("lanes", Json::Num(s.lanes as f64)),
+                                        ("step_s", Json::Num(s.step_s)),
+                                        ("actions_per_step", Json::Num(s.actions_per_step)),
+                                        ("j_per_action", Json::Num(s.j_per_action)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ]);
+                Json::obj(pairs)
+            }
+            Event::Arrival { t, stream, step } => {
+                let mut pairs = head("arrival", *t);
+                pairs.extend([
+                    ("stream", Json::Num(*stream as f64)),
+                    ("step", Json::Num(*step as f64)),
+                ]);
+                Json::obj(pairs)
+            }
+            Event::Admit { t, stream } => {
+                let mut pairs = head("admit", *t);
+                pairs.push(("stream", Json::Num(*stream as f64)));
+                Json::obj(pairs)
+            }
+            Event::Reject { t, stream, reason } => {
+                let mut pairs = head("reject", *t);
+                pairs.extend([
+                    ("stream", Json::Num(*stream as f64)),
+                    ("reason", Json::Str(reason.as_str().to_string())),
+                ]);
+                Json::obj(pairs)
+            }
+            Event::Dispatch {
+                t,
+                engine,
+                stream,
+                delay_s,
+                service_s,
+                actions_per_step,
+                j_per_action,
+            } => {
+                let mut pairs = head("dispatch", *t);
+                pairs.extend([
+                    ("engine", Json::Num(*engine as f64)),
+                    ("stream", Json::Num(*stream as f64)),
+                    ("delay_s", Json::Num(*delay_s)),
+                    ("service_s", Json::Num(*service_s)),
+                    ("actions_per_step", Json::Num(*actions_per_step)),
+                    ("j_per_action", Json::Num(*j_per_action)),
+                ]);
+                Json::obj(pairs)
+            }
+            Event::Completion {
+                t,
+                engine,
+                stream,
+                service_s,
+            } => {
+                let mut pairs = head("completion", *t);
+                pairs.extend([
+                    ("engine", Json::Num(*engine as f64)),
+                    ("stream", Json::Num(*stream as f64)),
+                    ("service_s", Json::Num(*service_s)),
+                ]);
+                Json::obj(pairs)
+            }
+            Event::Drop { t, stream, reason } => {
+                let mut pairs = head("drop", *t);
+                pairs.extend([
+                    ("stream", Json::Num(*stream as f64)),
+                    ("reason", Json::Str(reason.as_str().to_string())),
+                ]);
+                Json::obj(pairs)
+            }
+            Event::Scale {
+                t,
+                decision,
+                trigger,
+                queued,
+                alive_before,
+                alive_after,
+                applied,
+            } => {
+                let mut pairs = head("scale", *t);
+                pairs.extend([
+                    ("decision", Json::Str(decision.label().to_string())),
+                    ("trigger", Json::Str(trigger.label().to_string())),
+                    ("queued", Json::Num(*queued as f64)),
+                    ("alive_before", Json::Num(*alive_before as f64)),
+                    ("alive_after", Json::Num(*alive_after as f64)),
+                    ("applied", Json::Bool(*applied)),
+                ]);
+                Json::obj(pairs)
+            }
+            Event::Failure { t, engine } => {
+                let mut pairs = head("failure", *t);
+                pairs.push(("engine", Json::Num(*engine as f64)));
+                Json::obj(pairs)
+            }
+            Event::CacheSnapshot { t, label, stats } => {
+                let mut pairs = head("cache", *t);
+                pairs.extend([
+                    ("label", Json::Str(label.clone())),
+                    ("evals", Json::Num(stats.evals as f64)),
+                    (
+                        "integrals_requested",
+                        Json::Num(stats.integrals_requested as f64),
+                    ),
+                    (
+                        "integrals_computed",
+                        Json::Num(stats.integrals_computed as f64),
+                    ),
+                    ("decode_cost_hits", Json::Num(stats.decode_cost_hits as f64)),
+                    (
+                        "baselines_computed",
+                        Json::Num(stats.baselines_computed as f64),
+                    ),
+                    ("contexts", Json::Num(stats.contexts as f64)),
+                ]);
+                Json::obj(pairs)
+            }
+            Event::PhaseSpan { t, phase, dur_s } => {
+                let mut pairs = head("phase", *t);
+                pairs.extend([
+                    ("phase", Json::Str(phase.name().to_string())),
+                    ("dur_s", Json::Num(*dur_s)),
+                ]);
+                Json::obj(pairs)
+            }
+            Event::RunEnd { t, info } => {
+                let mut pairs = head("run_end", *t);
+                pairs.extend([
+                    ("arrived", Json::Num(info.arrived as f64)),
+                    ("served", Json::Num(info.served as f64)),
+                    ("dropped", Json::Num(info.dropped as f64)),
+                    ("rejected", Json::Num(info.rejected as f64)),
+                    ("throughput", Json::Num(info.throughput)),
+                    ("delay_p50_s", Json::Num(info.delay_p50_s)),
+                    ("delay_p99_s", Json::Num(info.delay_p99_s)),
+                    ("max_burst", Json::Num(info.max_burst as f64)),
+                    ("actions", Json::Num(info.actions)),
+                    ("energy_j", Json::Num(info.energy_j)),
+                    ("j_per_action", Json::Num(info.j_per_action)),
+                    ("peak_engines", Json::Num(info.peak_engines as f64)),
+                    ("failures", Json::Num(info.failures as f64)),
+                    ("scale_ups", Json::Num(info.scale_ups as f64)),
+                    ("scale_downs", Json::Num(info.scale_downs as f64)),
+                    ("makespan_s", Json::Num(info.makespan_s)),
+                ]);
+                Json::obj(pairs)
+            }
+        }
+    }
+
+    /// Deserialize from a parsed [`Json`] object. Rejects unknown schema
+    /// versions and unknown `ev` kinds.
+    pub fn from_json(j: &Json) -> anyhow::Result<Event> {
+        let v = j.req_u64("v")?;
+        if v != SCHEMA_VERSION {
+            anyhow::bail!("unsupported telemetry schema version {v} (expected {SCHEMA_VERSION})");
+        }
+        let kind = j.req_str("ev")?;
+        let t = j.req_f64("t")?;
+        let stream_of = |j: &Json| -> anyhow::Result<u32> { Ok(j.req_u64("stream")? as u32) };
+        let engine_of = |j: &Json| -> anyhow::Result<u32> { Ok(j.req_u64("engine")? as u32) };
+        match kind {
+            "run_start" => {
+                let fp_hex = j.req_str("fp")?;
+                let config_fp = u64::from_str_radix(fp_hex, 16)
+                    .map_err(|e| anyhow::anyhow!("bad run_start fp `{fp_hex}`: {e}"))?;
+                let seed_str = j.req_str("seed")?;
+                let seed = seed_str
+                    .parse::<u64>()
+                    .map_err(|e| anyhow::anyhow!("bad run_start seed `{seed_str}`: {e}"))?;
+                let deadline_s = match j.get("deadline_s") {
+                    Some(Json::Null) | None => None,
+                    Some(d) => Some(
+                        d.as_f64()
+                            .ok_or_else(|| anyhow::anyhow!("non-numeric deadline_s"))?,
+                    ),
+                };
+                let slo_mults = j
+                    .get("slo_mults")
+                    .and_then(|m| m.as_arr())
+                    .ok_or_else(|| anyhow::anyhow!("missing slo_mults array"))?
+                    .iter()
+                    .map(|m| m.as_f64().ok_or_else(|| anyhow::anyhow!("bad slo mult")))
+                    .collect::<anyhow::Result<Vec<f64>>>()?;
+                let shards = j
+                    .get("shards")
+                    .and_then(|s| s.as_arr())
+                    .ok_or_else(|| anyhow::anyhow!("missing shards array"))?
+                    .iter()
+                    .map(|s| {
+                        Ok(ShardEcho {
+                            label: s.req_str("label")?.to_string(),
+                            lanes: s.req_u64("lanes")? as usize,
+                            step_s: s.req_f64("step_s")?,
+                            actions_per_step: s.req_f64("actions_per_step")?,
+                            j_per_action: s.req_f64("j_per_action")?,
+                        })
+                    })
+                    .collect::<anyhow::Result<Vec<ShardEcho>>>()?;
+                Ok(Event::RunStart {
+                    t,
+                    info: Box::new(RunStartInfo {
+                        platform: j.req_str("platform")?.to_string(),
+                        scenario: j.req_str("scenario")?.to_string(),
+                        mode: RunMode::parse(j.req_str("mode")?)?,
+                        config_fp,
+                        streams: j.req_u64("streams")? as usize,
+                        rate_hz: j.req_f64("rate_hz")?,
+                        duration_s: j.req_f64("duration_s")?,
+                        seed,
+                        deadline_s,
+                        admission: j.req_str("admission")?.to_string(),
+                        scheduling: j.req_str("scheduling")?.to_string(),
+                        slo_mults,
+                        autoscaler: j.req_bool("autoscaler")?,
+                        failure_rate_hz: j.req_f64("failure_rate_hz")?,
+                        engines: j.req_u64("engines")? as usize,
+                        shards,
+                    }),
+                })
+            }
+            "arrival" => Ok(Event::Arrival {
+                t,
+                stream: stream_of(j)?,
+                step: j.req_u64("step")?,
+            }),
+            "admit" => Ok(Event::Admit {
+                t,
+                stream: stream_of(j)?,
+            }),
+            "reject" => Ok(Event::Reject {
+                t,
+                stream: stream_of(j)?,
+                reason: RejectReason::parse(j.req_str("reason")?)?,
+            }),
+            "dispatch" => Ok(Event::Dispatch {
+                t,
+                engine: engine_of(j)?,
+                stream: stream_of(j)?,
+                delay_s: j.req_f64("delay_s")?,
+                service_s: j.req_f64("service_s")?,
+                actions_per_step: j.req_f64("actions_per_step")?,
+                j_per_action: j.req_f64("j_per_action")?,
+            }),
+            "completion" => Ok(Event::Completion {
+                t,
+                engine: engine_of(j)?,
+                stream: stream_of(j)?,
+                service_s: j.req_f64("service_s")?,
+            }),
+            "drop" => Ok(Event::Drop {
+                t,
+                stream: stream_of(j)?,
+                reason: DropReason::parse(j.req_str("reason")?)?,
+            }),
+            "scale" => Ok(Event::Scale {
+                t,
+                decision: parse_decision(j.req_str("decision")?)?,
+                trigger: parse_trigger(j.req_str("trigger")?)?,
+                queued: j.req_u64("queued")? as usize,
+                alive_before: j.req_u64("alive_before")? as usize,
+                alive_after: j.req_u64("alive_after")? as usize,
+                applied: j.req_bool("applied")?,
+            }),
+            "failure" => Ok(Event::Failure {
+                t,
+                engine: engine_of(j)?,
+            }),
+            "cache" => Ok(Event::CacheSnapshot {
+                t,
+                label: j.req_str("label")?.to_string(),
+                stats: CacheStats {
+                    evals: j.req_u64("evals")?,
+                    integrals_requested: j.req_u64("integrals_requested")?,
+                    integrals_computed: j.req_u64("integrals_computed")?,
+                    decode_cost_hits: j.req_u64("decode_cost_hits")?,
+                    baselines_computed: j.req_u64("baselines_computed")?,
+                    contexts: j.req_u64("contexts")?,
+                },
+            }),
+            "phase" => Ok(Event::PhaseSpan {
+                t,
+                phase: parse_phase(j.req_str("phase")?)?,
+                dur_s: j.req_f64("dur_s")?,
+            }),
+            "run_end" => Ok(Event::RunEnd {
+                t,
+                info: Box::new(RunEndInfo {
+                    arrived: j.req_u64("arrived")? as usize,
+                    served: j.req_u64("served")? as usize,
+                    dropped: j.req_u64("dropped")? as usize,
+                    rejected: j.req_u64("rejected")? as usize,
+                    throughput: j.req_f64("throughput")?,
+                    delay_p50_s: j.req_f64("delay_p50_s")?,
+                    delay_p99_s: j.req_f64("delay_p99_s")?,
+                    max_burst: j.req_u64("max_burst")? as usize,
+                    actions: j.req_f64("actions")?,
+                    energy_j: j.req_f64("energy_j")?,
+                    j_per_action: j.req_f64("j_per_action")?,
+                    peak_engines: j.req_u64("peak_engines")? as usize,
+                    failures: j.req_u64("failures")? as usize,
+                    scale_ups: j.req_u64("scale_ups")? as usize,
+                    scale_downs: j.req_u64("scale_downs")? as usize,
+                    makespan_s: j.req_f64("makespan_s")?,
+                }),
+            }),
+            other => Err(anyhow::anyhow!("unknown telemetry event kind `{other}`")),
+        }
+    }
+
+    /// One NDJSON line (no trailing newline).
+    pub fn to_ndjson_line(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+
+    /// Parse one NDJSON line.
+    pub fn parse_line(line: &str) -> anyhow::Result<Event> {
+        let j = Json::parse(line)?;
+        Event::from_json(&j)
+    }
+}
+
+fn parse_decision(s: &str) -> anyhow::Result<ScaleDecision> {
+    match s {
+        "up" => Ok(ScaleDecision::Up),
+        "down" => Ok(ScaleDecision::Down),
+        "hold" => Ok(ScaleDecision::Hold),
+        other => Err(anyhow::anyhow!("unknown scale decision `{other}`")),
+    }
+}
+
+fn parse_trigger(s: &str) -> anyhow::Result<ScaleTrigger> {
+    match s {
+        "failover" => Ok(ScaleTrigger::Failover),
+        "queue-depth" => Ok(ScaleTrigger::QueueDepth),
+        "tail-latency" => Ok(ScaleTrigger::TailLatency),
+        "queue-drained" => Ok(ScaleTrigger::QueueDrained),
+        "steady" => Ok(ScaleTrigger::Steady),
+        other => Err(anyhow::anyhow!("unknown scale trigger `{other}`")),
+    }
+}
+
+fn parse_phase(s: &str) -> anyhow::Result<Phase> {
+    match s {
+        "vision" => Ok(Phase::Vision),
+        "prefill" => Ok(Phase::Prefill),
+        "decode" => Ok(Phase::Decode),
+        "action" => Ok(Phase::Action),
+        other => Err(anyhow::anyhow!("unknown phase `{other}`")),
+    }
+}
+
+/// FNV-1a 64-bit hash — the config fingerprint in `run_start`.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Where events go. Implementations must be cheap when disabled: the
+/// simulators gate every allocation and all sink-only bookkeeping on
+/// [`EventSink::enabled`], and the hot-path emit compiles away entirely for
+/// the monomorphized [`NullSink`].
+pub trait EventSink {
+    fn emit(&mut self, event: &Event);
+
+    /// `false` means the producer may skip event construction and any
+    /// tracing-only bookkeeping. Default `true` (a method, not an associated
+    /// const, so the trait stays object-safe).
+    fn enabled(&self) -> bool {
+        true
+    }
+}
+
+/// Discards everything. The default sink on every untraced entry point.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NullSink;
+
+impl EventSink for NullSink {
+    fn emit(&mut self, _event: &Event) {}
+
+    fn enabled(&self) -> bool {
+        false
+    }
+}
+
+/// Collects events in memory — the test and replay-in-process sink.
+#[derive(Debug, Default)]
+pub struct VecSink {
+    pub events: Vec<Event>,
+}
+
+impl VecSink {
+    pub fn new() -> VecSink {
+        VecSink::default()
+    }
+}
+
+impl EventSink for VecSink {
+    fn emit(&mut self, event: &Event) {
+        self.events.push(event.clone());
+    }
+}
+
+/// Buffered NDJSON writer over any `io::Write` — file or stdout. IO errors
+/// latch (the simulator has no error channel mid-run) and surface from
+/// [`NdjsonSink::finish`].
+pub struct NdjsonSink<W: IoWrite> {
+    out: BufWriter<W>,
+    written: u64,
+    /// Flush after every line (live daemon mode wants line-buffered output).
+    line_flush: bool,
+    error: Option<std::io::Error>,
+}
+
+impl NdjsonSink<File> {
+    /// Block-buffered sink writing to a file path.
+    pub fn create(path: impl AsRef<Path>) -> std::io::Result<NdjsonSink<File>> {
+        Ok(NdjsonSink {
+            out: BufWriter::new(File::create(path)?),
+            written: 0,
+            line_flush: false,
+            error: None,
+        })
+    }
+}
+
+impl NdjsonSink<std::io::Stdout> {
+    /// Line-flushed sink over stdout — the `--events -` / `--daemon` path.
+    pub fn stdout() -> NdjsonSink<std::io::Stdout> {
+        NdjsonSink {
+            out: BufWriter::new(std::io::stdout()),
+            written: 0,
+            line_flush: true,
+            error: None,
+        }
+    }
+}
+
+impl<W: IoWrite> NdjsonSink<W> {
+    /// Block-buffered sink over any writer (`Vec<u8>` for in-memory
+    /// streams, `io::sink()` for serialization benchmarks, a socket, ...).
+    pub fn new(out: W) -> NdjsonSink<W> {
+        NdjsonSink {
+            out: BufWriter::new(out),
+            written: 0,
+            line_flush: false,
+            error: None,
+        }
+    }
+
+    /// Flush and return the number of lines written, or the first IO error.
+    pub fn finish(mut self) -> std::io::Result<u64> {
+        if let Some(e) = self.error.take() {
+            return Err(e);
+        }
+        self.out.flush()?;
+        Ok(self.written)
+    }
+
+    /// Flush and hand back the inner writer plus the line count — the
+    /// in-memory (`Vec<u8>`) path reads the stream it just wrote.
+    pub fn finish_into(mut self) -> std::io::Result<(W, u64)> {
+        if let Some(e) = self.error.take() {
+            return Err(e);
+        }
+        let out = self.out.into_inner().map_err(|e| e.into_error())?;
+        Ok((out, self.written))
+    }
+}
+
+impl<W: IoWrite> EventSink for NdjsonSink<W> {
+    fn emit(&mut self, event: &Event) {
+        if self.error.is_some() {
+            return;
+        }
+        let line = event.to_ndjson_line();
+        let res = self
+            .out
+            .write_all(line.as_bytes())
+            .and_then(|()| self.out.write_all(b"\n"))
+            .and_then(|()| if self.line_flush { self.out.flush() } else { Ok(()) });
+        if let Err(e) = res {
+            self.error = Some(e);
+            return;
+        }
+        self.written += 1;
+    }
+}
+
+/// Forwarding impl so `&mut sink` works where a sink is expected (the
+/// experiments hand the same sink to the preamble and the run).
+impl<T: EventSink + ?Sized> EventSink for &mut T {
+    fn emit(&mut self, event: &Event) {
+        (**self).emit(event)
+    }
+
+    fn enabled(&self) -> bool {
+        (**self).enabled()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<Event> {
+        vec![
+            Event::CacheSnapshot {
+                t: 0.0,
+                label: "lowering".to_string(),
+                stats: CacheStats {
+                    evals: 3,
+                    integrals_requested: 12,
+                    integrals_computed: 4,
+                    decode_cost_hits: 8,
+                    baselines_computed: 1,
+                    contexts: 2,
+                },
+            },
+            Event::PhaseSpan {
+                t: 0.0,
+                phase: Phase::Vision,
+                dur_s: 0.0125,
+            },
+            Event::RunStart {
+                t: 0.0,
+                info: Box::new(RunStartInfo {
+                    platform: "jetson_orin_nano".to_string(),
+                    scenario: "baseline".to_string(),
+                    mode: RunMode::EventLoop,
+                    config_fp: 0xdead_beef_0123_4567,
+                    streams: 3,
+                    rate_hz: 2.0,
+                    duration_s: 10.0,
+                    seed: u64::MAX - 1,
+                    deadline_s: Some(0.4),
+                    admission: "token(4/s,b8)".to_string(),
+                    scheduling: "edf".to_string(),
+                    slo_mults: vec![0.5, 1.0, 2.0],
+                    autoscaler: true,
+                    failure_rate_hz: 0.05,
+                    engines: 2,
+                    shards: vec![ShardEcho {
+                        label: "baseline/rep2".to_string(),
+                        lanes: 2,
+                        step_s: 0.04,
+                        actions_per_step: 8.0,
+                        j_per_action: 0.125,
+                    }],
+                }),
+            },
+            Event::Arrival {
+                t: 0.1875,
+                stream: 2,
+                step: 0,
+            },
+            Event::Admit {
+                t: 0.1875,
+                stream: 2,
+            },
+            Event::Reject {
+                t: 0.25,
+                stream: 1,
+                reason: RejectReason::TokenBucket,
+            },
+            Event::Dispatch {
+                t: 0.1875,
+                engine: 1,
+                stream: 2,
+                delay_s: 0.0,
+                service_s: 0.04,
+                actions_per_step: 8.0,
+                j_per_action: 0.125,
+            },
+            Event::Completion {
+                t: 0.2275,
+                engine: 1,
+                stream: 2,
+                service_s: 0.04,
+            },
+            Event::Drop {
+                t: 0.5,
+                stream: 0,
+                reason: DropReason::Stale,
+            },
+            Event::Scale {
+                t: 0.25,
+                decision: ScaleDecision::Up,
+                trigger: ScaleTrigger::QueueDepth,
+                queued: 9,
+                alive_before: 2,
+                alive_after: 3,
+                applied: true,
+            },
+            Event::Failure { t: 0.75, engine: 0 },
+            Event::RunEnd {
+                t: 10.0,
+                info: Box::new(RunEndInfo {
+                    arrived: 60,
+                    served: 50,
+                    dropped: 6,
+                    rejected: 4,
+                    throughput: 5.0,
+                    delay_p50_s: 0.01,
+                    delay_p99_s: 0.35,
+                    max_burst: 4,
+                    actions: 400.0,
+                    energy_j: 50.0,
+                    j_per_action: 0.125,
+                    peak_engines: 3,
+                    failures: 1,
+                    scale_ups: 1,
+                    scale_downs: 0,
+                    makespan_s: 10.0,
+                }),
+            },
+        ]
+    }
+
+    #[test]
+    fn every_variant_round_trips_bitwise() {
+        for ev in sample_events() {
+            let line = ev.to_ndjson_line();
+            let back = Event::parse_line(&line)
+                .unwrap_or_else(|e| panic!("parse failed for {line}: {e}"));
+            assert_eq!(back, ev, "round trip mismatch for {line}");
+            // PartialEq on f64 is value equality; re-serialize to prove the
+            // bits survived too (fmt_num is shortest-round-trip).
+            assert_eq!(back.to_ndjson_line(), line);
+        }
+    }
+
+    #[test]
+    fn u64_fields_survive_beyond_f64_precision() {
+        let evs = sample_events();
+        let Event::RunStart { info, .. } = &evs[2] else {
+            panic!("expected run_start at index 2");
+        };
+        let line = evs[2].to_ndjson_line();
+        let Event::RunStart { info: back, .. } = Event::parse_line(&line).unwrap() else {
+            panic!("round trip changed kind");
+        };
+        assert_eq!(back.seed, u64::MAX - 1, "seed must not pass through f64");
+        assert_eq!(back.config_fp, info.config_fp);
+    }
+
+    #[test]
+    fn schema_version_is_enforced() {
+        let good = Event::Failure { t: 1.0, engine: 0 }.to_ndjson_line();
+        assert!(Event::parse_line(&good).is_ok());
+        let bad = good.replace("\"v\":1", "\"v\":99");
+        let err = Event::parse_line(&bad).unwrap_err().to_string();
+        assert!(err.contains("schema version"), "got: {err}");
+    }
+
+    #[test]
+    fn malformed_lines_are_rejected() {
+        assert!(Event::parse_line("").is_err());
+        assert!(Event::parse_line("not json").is_err());
+        assert!(Event::parse_line("{\"v\":1,\"ev\":\"nope\",\"t\":0}").is_err());
+        assert!(Event::parse_line("{\"v\":1,\"ev\":\"failure\",\"t\":0}").is_err(), "missing field");
+    }
+
+    #[test]
+    fn kind_and_t_accessors_cover_every_variant() {
+        let kinds: Vec<&str> = sample_events().iter().map(|e| e.kind()).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                "cache", "phase", "run_start", "arrival", "admit", "reject", "dispatch",
+                "completion", "drop", "scale", "failure", "run_end"
+            ]
+        );
+        for ev in sample_events() {
+            assert!(ev.t().is_finite());
+        }
+    }
+
+    #[test]
+    fn fingerprint_tracks_config_bits() {
+        let evs = sample_events();
+        let Event::RunStart { info, .. } = &evs[2] else {
+            panic!();
+        };
+        let base = info.fingerprint();
+        assert_eq!(base, info.fingerprint(), "fingerprint is deterministic");
+        let mut bumped = (**info).clone();
+        bumped.rate_hz = 2.0 + 1e-12;
+        assert_ne!(base, bumped.fingerprint(), "fingerprint sees f64 bits");
+        let mut relabeled = (**info).clone();
+        relabeled.scheduling = "fifo".to_string();
+        assert_ne!(base, relabeled.fingerprint());
+    }
+
+    #[test]
+    fn null_sink_is_disabled_and_vec_sink_collects() {
+        let mut null = NullSink;
+        assert!(!null.enabled());
+        null.emit(&Event::Failure { t: 0.0, engine: 1 });
+        let mut vec = VecSink::new();
+        assert!(vec.enabled());
+        for ev in sample_events() {
+            vec.emit(&ev);
+        }
+        assert_eq!(vec.events.len(), sample_events().len());
+        assert_eq!(vec.events[3], sample_events()[3]);
+        // forwarding impl: &mut VecSink is itself a sink
+        let mut fwd: &mut VecSink = &mut vec;
+        assert!(fwd.enabled());
+        fwd.emit(&Event::Failure { t: 9.0, engine: 7 });
+        assert_eq!(vec.events.last().unwrap().kind(), "failure");
+    }
+
+    #[test]
+    fn ndjson_sink_writes_parseable_lines() {
+        let dir = std::env::temp_dir().join("vla_char_telemetry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("events.ndjson");
+        let mut sink = NdjsonSink::create(&path).unwrap();
+        let events = sample_events();
+        for ev in &events {
+            sink.emit(ev);
+        }
+        let written = sink.finish().unwrap();
+        assert_eq!(written, events.len() as u64);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed: Vec<Event> = text
+            .lines()
+            .map(|l| Event::parse_line(l).unwrap())
+            .collect();
+        assert_eq!(parsed, events);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+}

@@ -1,0 +1,430 @@
+//! Fold a telemetry event stream back into a [`FleetReport`].
+//!
+//! The replay is the proof that a stream is a *faithful record* of a run:
+//! for every mode the folded report is bitwise-equal to the live one —
+//! same conservation counts, same throughput bits, same p50/p99 bits. The
+//! fold mirrors the live arithmetic exactly:
+//!
+//! - `dispatch` events carry `(t, service_s, delay_s, actions_per_step,
+//!   j_per_action)`; the makespan folds `max(t + service_s)` over them,
+//!   which is operand-for-operand the live `free_at` computation.
+//! - Mode `event-loop` / `batcher` accumulates actions and energy per
+//!   dispatch (the live loop's order); mode `single-lane` recomputes them
+//!   from end-of-run totals (`served × actions_per_step`), exactly like
+//!   the live mirror. The two are *not* interchangeable at the bit level,
+//!   which is why [`RunMode`] is on the wire.
+//! - `scale` / `failure` events rebuild the autoscaler counters and the
+//!   peak-engine fold.
+//!
+//! Before returning, the fold cross-checks its counts against the
+//! `run_end` summary and fails on any mismatch — a truncated stream or a
+//! summary-only stream (the single-lane batcher delegation emits no
+//! per-request events) produces an error, never a silently-wrong report.
+
+use super::{Event, RunMode};
+use crate::sim::fleet::{FleetReport, ScaleDecision};
+use crate::util::stats::Summary;
+
+/// Replay a parsed event stream into the report it certifies.
+pub fn replay(events: &[Event]) -> anyhow::Result<FleetReport> {
+    // `cache` / `phase` preamble (lowering stats, per-phase spans) may
+    // precede the run frame.
+    let mut idx = 0;
+    while matches!(
+        events.get(idx),
+        Some(Event::CacheSnapshot { .. } | Event::PhaseSpan { .. })
+    ) {
+        idx += 1;
+    }
+    let Some(Event::RunStart { info, .. }) = events.get(idx) else {
+        anyhow::bail!(
+            "stream has no run_start (found {})",
+            events.get(idx).map_or("end of stream", |e| e.kind())
+        );
+    };
+    idx += 1;
+
+    let streams = info.streams;
+    let check_stream = |s: u32| -> anyhow::Result<usize> {
+        let s = s as usize;
+        anyhow::ensure!(s < streams, "stream index {s} out of bounds (streams={streams})");
+        Ok(s)
+    };
+
+    let mut per_stream_arrived = vec![0usize; streams];
+    let mut per_stream_served = vec![0usize; streams];
+    let mut per_stream_dropped = vec![0usize; streams];
+    let mut per_stream_rejected = vec![0usize; streams];
+    let mut delays: Vec<f64> = Vec::new();
+    let mut services: Vec<f64> = Vec::new();
+    let mut last_stream = usize::MAX;
+    let mut burst = 0usize;
+    let mut max_burst = 0usize;
+    let mut actions = 0.0f64;
+    let mut energy_j = 0.0f64;
+    let mut makespan = 0.0f64;
+    let mut peak_engines = info.engines;
+    let mut failures = 0usize;
+    let mut scale_ups = 0usize;
+    let mut scale_downs = 0usize;
+    let mut end: Option<&super::RunEndInfo> = None;
+
+    for ev in &events[idx..] {
+        if end.is_some() {
+            anyhow::bail!("event after run_end: {}", ev.kind());
+        }
+        match ev {
+            Event::Arrival { stream, .. } => {
+                per_stream_arrived[check_stream(*stream)?] += 1;
+            }
+            Event::Reject { stream, .. } => {
+                per_stream_rejected[check_stream(*stream)?] += 1;
+            }
+            Event::Drop { stream, .. } => {
+                per_stream_dropped[check_stream(*stream)?] += 1;
+            }
+            Event::Dispatch {
+                t,
+                stream,
+                delay_s,
+                service_s,
+                actions_per_step,
+                j_per_action,
+                ..
+            } => {
+                let s = check_stream(*stream)?;
+                if s == last_stream {
+                    burst += 1;
+                } else {
+                    burst = 1;
+                    last_stream = s;
+                }
+                max_burst = max_burst.max(burst);
+                actions += actions_per_step;
+                energy_j += j_per_action * actions_per_step;
+                makespan = makespan.max(t + service_s);
+                delays.push(*delay_s);
+                services.push(*service_s);
+                per_stream_served[s] += 1;
+            }
+            Event::Scale {
+                decision,
+                alive_after,
+                applied,
+                ..
+            } => match decision {
+                // live: every Up spawns (the autoscaler caps at
+                // max_engines before deciding), and the peak fold samples
+                // alive engines right after the spawn
+                ScaleDecision::Up => {
+                    scale_ups += 1;
+                    peak_engines = peak_engines.max(*alive_after);
+                }
+                ScaleDecision::Down => {
+                    if *applied {
+                        scale_downs += 1;
+                    }
+                }
+                ScaleDecision::Hold => {}
+            },
+            Event::Failure { .. } => failures += 1,
+            Event::RunEnd { info, .. } => end = Some(&**info),
+            Event::RunStart { .. } => anyhow::bail!("second run_start mid-stream"),
+            // bookkeeping-free kinds
+            Event::Admit { .. }
+            | Event::Completion { .. }
+            | Event::CacheSnapshot { .. }
+            | Event::PhaseSpan { .. } => {}
+        }
+    }
+    let Some(end) = end else {
+        anyhow::bail!("stream has no run_end (truncated?)");
+    };
+
+    let arrived: usize = per_stream_arrived.iter().sum();
+    let served = services.len();
+    let dropped: usize = per_stream_dropped.iter().sum();
+    let rejected: usize = per_stream_rejected.iter().sum();
+    anyhow::ensure!(
+        (arrived, served, dropped, rejected)
+            == (end.arrived, end.served, end.dropped, end.rejected),
+        "stream does not self-certify: folded arrived/served/dropped/rejected \
+         {arrived}/{served}/{dropped}/{rejected} != run_end {}/{}/{}/{} \
+         (summary-only or truncated stream)",
+        end.arrived,
+        end.served,
+        end.dropped,
+        end.rejected
+    );
+
+    let total_time = makespan.max(1e-12);
+    let (actions, energy_j, j_per_action, peak_engines) = match info.mode {
+        RunMode::SingleLane => {
+            // the live mirror computes these from end-of-run totals
+            let shard = info
+                .shards
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("single-lane run_start without a shard echo"))?;
+            let actions = served as f64 * shard.actions_per_step;
+            (actions, actions * shard.j_per_action, shard.j_per_action, 1)
+        }
+        RunMode::EventLoop | RunMode::Batcher => {
+            let jpa = if actions > 0.0 { energy_j / actions } else { 0.0 };
+            (actions, energy_j, jpa, peak_engines)
+        }
+    };
+
+    Ok(FleetReport {
+        arrived,
+        served,
+        dropped,
+        rejected,
+        throughput: served as f64 / total_time,
+        queue_delay: Summary::of(&delays),
+        service: Summary::of(&services),
+        per_stream_served,
+        per_stream_arrived,
+        per_stream_dropped,
+        per_stream_rejected,
+        max_burst,
+        actions,
+        agg_actions_s: actions / total_time,
+        energy_j,
+        j_per_action,
+        peak_engines,
+        failures,
+        scale_ups,
+        scale_downs,
+        makespan_s: total_time,
+    })
+}
+
+/// Parse an NDJSON text (one event per line, blank lines ignored) and
+/// replay it.
+pub fn replay_ndjson(text: &str) -> anyhow::Result<FleetReport> {
+    let mut events = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let ev =
+            Event::parse_line(line).map_err(|e| anyhow::anyhow!("events line {}: {e}", i + 1))?;
+        events.push(ev);
+    }
+    replay(&events)
+}
+
+/// Bitwise report comparison: `None` when every field of `a` matches `b`
+/// bit for bit, otherwise the first mismatching field with both values.
+/// This is the yardstick for the replay invariant (tests and the
+/// `telemetry` experiment both check through it).
+pub fn report_mismatch(a: &FleetReport, b: &FleetReport) -> Option<String> {
+    fn num(field: &str, x: f64, y: f64) -> Option<String> {
+        (x.to_bits() != y.to_bits()).then(|| format!("{field}: {x:?} != {y:?}"))
+    }
+    fn summary(field: &str, x: &Summary, y: &Summary) -> Option<String> {
+        if x.n != y.n {
+            return Some(format!("{field}.n: {} != {}", x.n, y.n));
+        }
+        num(&format!("{field}.mean"), x.mean, y.mean)
+            .or_else(|| num(&format!("{field}.std"), x.std, y.std))
+            .or_else(|| num(&format!("{field}.min"), x.min, y.min))
+            .or_else(|| num(&format!("{field}.p50"), x.p50, y.p50))
+            .or_else(|| num(&format!("{field}.p90"), x.p90, y.p90))
+            .or_else(|| num(&format!("{field}.p99"), x.p99, y.p99))
+            .or_else(|| num(&format!("{field}.max"), x.max, y.max))
+    }
+    fn count(field: &str, x: usize, y: usize) -> Option<String> {
+        (x != y).then(|| format!("{field}: {x} != {y}"))
+    }
+    fn counts(field: &str, x: &[usize], y: &[usize]) -> Option<String> {
+        (x != y).then(|| format!("{field}: {x:?} != {y:?}"))
+    }
+    count("arrived", a.arrived, b.arrived)
+        .or_else(|| count("served", a.served, b.served))
+        .or_else(|| count("dropped", a.dropped, b.dropped))
+        .or_else(|| count("rejected", a.rejected, b.rejected))
+        .or_else(|| num("throughput", a.throughput, b.throughput))
+        .or_else(|| summary("queue_delay", &a.queue_delay, &b.queue_delay))
+        .or_else(|| summary("service", &a.service, &b.service))
+        .or_else(|| counts("per_stream_served", &a.per_stream_served, &b.per_stream_served))
+        .or_else(|| counts("per_stream_arrived", &a.per_stream_arrived, &b.per_stream_arrived))
+        .or_else(|| counts("per_stream_dropped", &a.per_stream_dropped, &b.per_stream_dropped))
+        .or_else(|| {
+            counts("per_stream_rejected", &a.per_stream_rejected, &b.per_stream_rejected)
+        })
+        .or_else(|| count("max_burst", a.max_burst, b.max_burst))
+        .or_else(|| num("actions", a.actions, b.actions))
+        .or_else(|| num("agg_actions_s", a.agg_actions_s, b.agg_actions_s))
+        .or_else(|| num("energy_j", a.energy_j, b.energy_j))
+        .or_else(|| num("j_per_action", a.j_per_action, b.j_per_action))
+        .or_else(|| count("peak_engines", a.peak_engines, b.peak_engines))
+        .or_else(|| count("failures", a.failures, b.failures))
+        .or_else(|| count("scale_ups", a.scale_ups, b.scale_ups))
+        .or_else(|| count("scale_downs", a.scale_downs, b.scale_downs))
+        .or_else(|| num("makespan_s", a.makespan_s, b.makespan_s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{RunMeta, VecSink};
+    use super::*;
+    use crate::sim::fleet::{
+        AdmissionPolicy, AutoscalerConfig, FleetConfig, FleetSim, SchedulingPolicy, ShardSpec,
+    };
+
+    fn traced(cfg: FleetConfig, shards: Vec<ShardSpec>) -> (FleetReport, Vec<Event>) {
+        let sim = FleetSim::new(cfg, shards).unwrap();
+        let mut sink = VecSink::new();
+        let live = sim.run_traced(&RunMeta::default(), &mut sink);
+        (live, sink.events)
+    }
+
+    fn busy_cfg() -> FleetConfig {
+        FleetConfig {
+            streams: 4,
+            rate_hz: 3.0,
+            duration_s: 8.0,
+            seed: 13,
+            deadline_s: Some(0.3),
+            admission: AdmissionPolicy::TokenBucket { rate_hz: 6.0, burst: 4 },
+            scheduling: SchedulingPolicy::Edf,
+            slo_deadline_mults: vec![0.5, 1.0, 2.0],
+            autoscaler: Some(AutoscalerConfig {
+                check_interval_s: 0.25,
+                queue_up: 3,
+                queue_down: 1,
+                p99_up_s: Some(0.2),
+                warmup_s: 0.25,
+                min_engines: 1,
+                max_engines: 4,
+            }),
+            failure_rate_hz: 0.05,
+        }
+    }
+
+    #[test]
+    fn event_loop_stream_replays_bitwise() {
+        let (live, events) = traced(busy_cfg(), vec![ShardSpec::uniform("a", 1, 0.2)]);
+        let replayed = replay(&events).unwrap();
+        assert_eq!(report_mismatch(&live, &replayed), None);
+    }
+
+    #[test]
+    fn single_lane_stream_replays_bitwise() {
+        let cfg = FleetConfig {
+            streams: 3,
+            rate_hz: 2.0,
+            duration_s: 10.0,
+            seed: 11,
+            deadline_s: Some(0.3),
+            ..Default::default()
+        };
+        let spec = ShardSpec {
+            label: "one".to_string(),
+            lanes: 1,
+            step_s: 0.4,
+            actions_per_step: 8.0,
+            j_per_action: 0.5,
+        };
+        let (live, events) = traced(cfg, vec![spec]);
+        // the degenerate path really ran: peak is the hard-coded 1
+        assert_eq!(live.peak_engines, 1);
+        let replayed = replay(&events).unwrap();
+        assert_eq!(report_mismatch(&live, &replayed), None);
+    }
+
+    #[test]
+    fn collapsed_fleet_flush_replays_bitwise() {
+        // mean fail time 20 ms on the only engine: the fleet collapses and
+        // the flush emits synthetic arrival+drop pairs for the remainder
+        let cfg = FleetConfig {
+            streams: 2,
+            rate_hz: 2.0,
+            duration_s: 10.0,
+            seed: 29,
+            failure_rate_hz: 50.0,
+            ..Default::default()
+        };
+        let (live, events) = traced(cfg, vec![ShardSpec::uniform("a", 1, 0.1)]);
+        assert!(live.failures >= 1 && live.dropped > 0, "{live:?}");
+        let replayed = replay(&events).unwrap();
+        assert_eq!(report_mismatch(&live, &replayed), None);
+    }
+
+    #[test]
+    fn ndjson_round_trip_replays_bitwise() {
+        let (live, events) = traced(busy_cfg(), vec![ShardSpec::uniform("a", 2, 0.15)]);
+        let text: String =
+            events.iter().map(|e| e.to_ndjson_line() + "\n").collect();
+        let replayed = replay_ndjson(&text).unwrap();
+        assert_eq!(report_mismatch(&live, &replayed), None);
+    }
+
+    #[test]
+    fn timestamps_are_monotone_between_run_frames() {
+        let (_, events) = traced(busy_cfg(), vec![ShardSpec::uniform("a", 1, 0.2)]);
+        assert_eq!(events.first().unwrap().kind(), "run_start");
+        assert_eq!(events.last().unwrap().kind(), "run_end");
+        let mut prev = f64::NEG_INFINITY;
+        for ev in &events {
+            assert!(
+                ev.t() >= prev,
+                "timestamp regression at {} ({} < {prev})",
+                ev.kind(),
+                ev.t()
+            );
+            prev = ev.t();
+        }
+    }
+
+    #[test]
+    fn malformed_streams_are_rejected() {
+        let (_, events) = traced(
+            FleetConfig { streams: 2, rate_hz: 2.0, duration_s: 5.0, seed: 7, ..Default::default() },
+            vec![ShardSpec::uniform("a", 2, 0.05)],
+        );
+        // no run_start
+        assert!(replay(&events[1..]).is_err());
+        // truncated: no run_end
+        assert!(replay(&events[..events.len() - 1])
+            .unwrap_err()
+            .to_string()
+            .contains("run_end"));
+        // counts no longer self-certify with a dispatch removed
+        let di = events.iter().position(|e| e.kind() == "dispatch").unwrap();
+        let mut cut = events.clone();
+        cut.remove(di);
+        assert!(cut.len() < events.len());
+        let err = replay(&cut).unwrap_err().to_string();
+        assert!(err.contains("self-certify"), "got: {err}");
+        // second run_start mid-stream
+        let mut doubled = events.clone();
+        doubled.insert(1, events[0].clone());
+        assert!(replay(&doubled).is_err());
+        // event after run_end
+        let mut trailing = events.clone();
+        trailing.push(events[di].clone());
+        assert!(replay(&trailing).is_err());
+        // empty stream
+        assert!(replay(&[]).is_err());
+    }
+
+    #[test]
+    fn report_mismatch_localizes_the_field() {
+        let (live, events) = traced(
+            FleetConfig { streams: 2, rate_hz: 2.0, duration_s: 5.0, seed: 7, ..Default::default() },
+            vec![ShardSpec::uniform("a", 2, 0.05)],
+        );
+        let replayed = replay(&events).unwrap();
+        assert_eq!(report_mismatch(&live, &replayed), None);
+        let mut bumped = replayed.clone();
+        bumped.throughput += 1e-9;
+        let m = report_mismatch(&live, &bumped).unwrap();
+        assert!(m.starts_with("throughput"), "got: {m}");
+        let mut counted = replayed;
+        counted.max_burst += 1;
+        assert!(report_mismatch(&live, &counted).unwrap().starts_with("max_burst"));
+    }
+}

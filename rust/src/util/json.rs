@@ -90,6 +90,12 @@ impl Json {
             .ok_or_else(|| anyhow::anyhow!("missing or non-integer field `{key}`"))
     }
 
+    pub fn req_bool(&self, key: &str) -> anyhow::Result<bool> {
+        self.get(key)
+            .and_then(|v| v.as_bool())
+            .ok_or_else(|| anyhow::anyhow!("missing or non-boolean field `{key}`"))
+    }
+
     /// Serialize compactly.
     pub fn to_string_compact(&self) -> String {
         let mut s = String::new();
@@ -479,12 +485,14 @@ mod tests {
 
     #[test]
     fn req_accessors() {
-        let j = Json::parse(r#"{"bw": 203, "name": "orin"}"#).unwrap();
+        let j = Json::parse(r#"{"bw": 203, "name": "orin", "pim": true}"#).unwrap();
         assert_eq!(j.req_f64("bw").unwrap(), 203.0);
         assert_eq!(j.req_str("name").unwrap(), "orin");
         assert_eq!(j.req_u64("bw").unwrap(), 203);
+        assert!(j.req_bool("pim").unwrap());
         assert!(j.req_f64("missing").is_err());
         assert!(j.req_str("bw").is_err());
+        assert!(j.req_bool("bw").is_err());
     }
 
     #[test]

@@ -1,0 +1,199 @@
+//! Integration tests of the telemetry subsystem: the replay invariant over
+//! randomized fleet configurations, the events-off pin (NullSink leaves the
+//! whole PR-7 policy grid bitwise-identical), the NDJSON wire round-trip,
+//! and the traced shard batcher.
+
+use vla_char::engine::{run_shard_batcher_traced, BatcherConfig, Policy, ShardModel};
+use vla_char::sim::fleet::{
+    AdmissionPolicy, AutoscalerConfig, FleetConfig, FleetReport, FleetSim, SchedulingPolicy,
+    ShardSpec,
+};
+use vla_char::telemetry::replay::{replay, replay_ndjson, report_mismatch};
+use vla_char::telemetry::{Event, RunMeta, VecSink};
+use vla_char::util::prop::{ensure, prop_check};
+
+/// Trace a fleet run into a `VecSink` alongside the live report.
+fn traced(cfg: FleetConfig, specs: Vec<ShardSpec>) -> (FleetReport, Vec<Event>) {
+    let sim = FleetSim::new(cfg, specs).unwrap();
+    let mut sink = VecSink::new();
+    let live = sim.run_traced(&RunMeta::default(), &mut sink);
+    (live, sink.events)
+}
+
+/// The replay invariant survives randomized admission, scheduling,
+/// autoscaler, deadline, and failure configurations — the property the
+/// `fleet --events` mode stands on.
+#[test]
+fn replay_reconstructs_live_reports_under_random_configs() {
+    prop_check("replayed == live bitwise", 60, |rng| {
+        let admission = match rng.uniform_u64(0, 2) {
+            0 => AdmissionPolicy::DropOnDeadline,
+            1 => AdmissionPolicy::TokenBucket {
+                rate_hz: rng.uniform_f64(0.5, 6.0),
+                burst: rng.uniform_u64(1, 5) as u32,
+            },
+            _ => AdmissionPolicy::SloPriority { depth_limit: rng.uniform_usize(0, 4) },
+        };
+        let scheduling = *rng.choose(&[
+            SchedulingPolicy::EarliestFree,
+            SchedulingPolicy::RoundRobin,
+            SchedulingPolicy::LeastLoaded,
+            SchedulingPolicy::Edf,
+        ]);
+        let autoscaler = if rng.next_f64() < 0.4 {
+            Some(AutoscalerConfig {
+                check_interval_s: rng.uniform_f64(0.1, 0.5),
+                queue_up: rng.uniform_usize(2, 8),
+                queue_down: rng.uniform_usize(0, 2),
+                p99_up_s: None,
+                warmup_s: rng.uniform_f64(0.0, 0.5),
+                min_engines: 1,
+                max_engines: rng.uniform_usize(2, 6),
+            })
+        } else {
+            None
+        };
+        let cfg = FleetConfig {
+            streams: rng.uniform_usize(1, 6),
+            rate_hz: rng.uniform_f64(0.5, 6.0),
+            duration_s: rng.uniform_f64(0.5, 6.0),
+            seed: rng.next_u64(),
+            deadline_s: if rng.next_f64() < 0.7 { Some(rng.uniform_f64(0.05, 0.6)) } else { None },
+            admission,
+            scheduling,
+            slo_deadline_mults: vec![0.25, 1.0, 4.0],
+            autoscaler,
+            failure_rate_hz: if rng.next_f64() < 0.5 { rng.uniform_f64(0.05, 2.0) } else { 0.0 },
+        };
+        let lanes = rng.uniform_usize(1, 4);
+        let specs = vec![ShardSpec::uniform("a", lanes, rng.uniform_f64(0.02, 0.4))];
+        let (live, events) = traced(cfg, specs);
+        let replayed = replay(&events).map_err(|e| e.to_string())?;
+        ensure(
+            report_mismatch(&live, &replayed).is_none(),
+            format!("replay diverged: {:?}", report_mismatch(&live, &replayed)),
+        )?;
+        // the NDJSON wire adds nothing and loses nothing
+        let text: String = events.iter().map(|e| e.to_ndjson_line() + "\n").collect();
+        let rewired = replay_ndjson(&text).map_err(|e| e.to_string())?;
+        ensure(
+            report_mismatch(&live, &rewired).is_none(),
+            "NDJSON round-trip changed the replayed report",
+        )
+    });
+}
+
+/// The PR-7 acceptance grid (3 admissions x 4 schedulings x 2 fleets),
+/// re-run with telemetry attached: the traced report matches the untraced
+/// `run()` bitwise on every cell (NullSink pin), and every cell's stream
+/// replays into the same report.
+#[test]
+fn policy_grid_is_bitwise_unchanged_by_telemetry_and_every_cell_replays() {
+    let admissions = [
+        AdmissionPolicy::DropOnDeadline,
+        AdmissionPolicy::TokenBucket { rate_hz: 4.0, burst: 3 },
+        AdmissionPolicy::SloPriority { depth_limit: 2 },
+    ];
+    let schedulings = [
+        SchedulingPolicy::EarliestFree,
+        SchedulingPolicy::RoundRobin,
+        SchedulingPolicy::LeastLoaded,
+        SchedulingPolicy::Edf,
+    ];
+    let fleets: [Vec<ShardSpec>; 2] = [
+        vec![ShardSpec::uniform("uniform", 2, 0.15)],
+        vec![ShardSpec::uniform("fast", 1, 0.08), ShardSpec::uniform("slow", 2, 0.3)],
+    ];
+    let mut cells = 0;
+    for &admission in &admissions {
+        for &scheduling in &schedulings {
+            for fleet in &fleets {
+                let cfg = FleetConfig {
+                    streams: 5,
+                    rate_hz: 3.0,
+                    duration_s: 8.0,
+                    seed: 13,
+                    deadline_s: Some(0.4),
+                    admission,
+                    scheduling,
+                    slo_deadline_mults: vec![0.5, 1.0, 2.0],
+                    autoscaler: None,
+                    failure_rate_hz: 0.0,
+                };
+                let sim = FleetSim::new(cfg.clone(), fleet.clone()).unwrap();
+                let untraced = sim.run();
+                let (live, events) = traced(cfg, fleet.clone());
+                let tag = format!("{admission:?} + {scheduling:?} on {} specs", fleet.len());
+                assert!(live.arrived > 0 && live.served > 0, "{tag}: empty run proves nothing");
+                assert_eq!(
+                    report_mismatch(&untraced, &live),
+                    None,
+                    "{tag}: tracing changed the report"
+                );
+                let replayed = replay(&events).unwrap();
+                assert_eq!(
+                    report_mismatch(&live, &replayed),
+                    None,
+                    "{tag}: stream does not replay"
+                );
+                cells += 1;
+            }
+        }
+    }
+    assert_eq!(cells, 24);
+}
+
+/// Streams stay parseable and monotone through the wire format, and the
+/// traced shard batcher's stream certifies the live `ServeReport`.
+#[test]
+fn shard_batcher_stream_replays_through_the_wire() {
+    use std::time::Duration;
+    use vla_char::engine::{Frame, StepServer};
+
+    struct Fixed(Duration);
+    impl StepServer for Fixed {
+        fn serve(&mut self, _f: &Frame, _p: &[i32]) -> anyhow::Result<Duration> {
+            Ok(self.0)
+        }
+    }
+
+    let cfg = BatcherConfig {
+        streams: 3,
+        rate_hz: 30.0,
+        duration_s: 2.0,
+        policy: Policy::Fifo,
+        seed: 17,
+        deadline_s: Some(0.08),
+    };
+    let model = ShardModel { mode: vla_char::engine::ShardMode::Replicate, engines: 2 };
+    let mut sink = VecSink::new();
+    let mut server = Fixed(Duration::from_millis(40));
+    let live = run_shard_batcher_traced(
+        &mut server,
+        2,
+        2,
+        &[1],
+        &cfg,
+        &model,
+        &RunMeta::default(),
+        &mut sink,
+    )
+    .unwrap();
+
+    // monotone timestamps end to end
+    let mut prev = f64::NEG_INFINITY;
+    for e in &sink.events {
+        assert!(e.t() >= prev, "timestamp regression at {}", e.kind());
+        prev = e.t();
+    }
+
+    let text: String = sink.events.iter().map(|e| e.to_ndjson_line() + "\n").collect();
+    let replayed = replay_ndjson(&text).unwrap();
+    assert_eq!(replayed.arrived, live.arrived);
+    assert_eq!(replayed.served, live.served);
+    assert_eq!(replayed.dropped, live.dropped);
+    assert_eq!(replayed.throughput.to_bits(), live.throughput.to_bits());
+    assert_eq!(replayed.queue_delay.p99.to_bits(), live.queue_delay.p99.to_bits());
+    assert_eq!(replayed.per_stream_served, live.per_stream_served);
+    assert_eq!(replayed.max_burst, live.max_burst);
+}

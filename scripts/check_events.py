@@ -1,0 +1,160 @@
+#!/usr/bin/env python3
+"""Validate a vla-char telemetry NDJSON event stream from outside Rust.
+
+Usage: check_events.py [PATH]         (reads stdin when PATH is omitted
+                                       or `-`; pipe `fleet --daemon` in)
+
+Checks, from the stream alone — no access to the live FleetReport:
+
+  schema    every line is a JSON object carrying `v` == 1, a known `ev`
+            kind, and a finite numeric `t`.
+
+  framing   exactly one `run_start` and one `run_end`; only `cache` /
+            `phase` preamble events before `run_start`; nothing after
+            `run_end`.
+
+  monotone  timestamps are non-decreasing *within the run frame*
+            (`run_start` .. `run_end`). Preamble `phase` spans are
+            step-relative by design (docs/TELEMETRY.md) and are NOT
+            held to the run clock.
+
+  conserve  arrivals == dispatches + drops + rejects counted from the
+            individual events, and those counts match the `run_end`
+            summary's arrived/served/dropped/rejected.
+
+Summary-only streams (a `run_start` + `run_end` frame with no body
+events, e.g. the single-lane batcher delegation) cannot be certified
+from their events; they are skipped with a warning, exit code 0.
+
+Exit code 0 on pass, 1 on any violation (all violations are listed).
+"""
+
+import json
+import sys
+
+KINDS = {
+    "run_start", "arrival", "admit", "reject", "dispatch", "completion",
+    "drop", "scale", "failure", "cache", "phase", "run_end",
+}
+PREAMBLE_KINDS = {"cache", "phase"}
+SCHEMA_VERSION = 1
+
+
+def check(lines):
+    violations = []
+    counts = {}
+    in_frame = False
+    ended = False
+    prev_t = None
+    end_summary = None
+    n_events = 0
+
+    for lineno, raw in enumerate(lines, 1):
+        raw = raw.strip()
+        if not raw:
+            continue
+        try:
+            obj = json.loads(raw)
+        except json.JSONDecodeError as e:
+            violations.append(f"line {lineno}: not JSON ({e})")
+            continue
+        if not isinstance(obj, dict):
+            violations.append(f"line {lineno}: not a JSON object")
+            continue
+
+        v, ev, t = obj.get("v"), obj.get("ev"), obj.get("t")
+        if v != SCHEMA_VERSION:
+            violations.append(f"line {lineno}: schema version {v!r} (want {SCHEMA_VERSION})")
+            continue
+        if ev not in KINDS:
+            violations.append(f"line {lineno}: unknown event kind {ev!r}")
+            continue
+        if not isinstance(t, (int, float)) or t != t or t in (float("inf"), float("-inf")):
+            violations.append(f"line {lineno}: bad timestamp {t!r}")
+            continue
+
+        n_events += 1
+        counts[ev] = counts.get(ev, 0) + 1
+
+        if ended:
+            violations.append(f"line {lineno}: {ev} after run_end")
+            continue
+
+        if ev == "run_start":
+            if in_frame:
+                violations.append(f"line {lineno}: second run_start")
+            in_frame = True
+            prev_t = t
+            continue
+
+        if not in_frame:
+            if ev not in PREAMBLE_KINDS:
+                violations.append(f"line {lineno}: {ev} before run_start")
+            continue
+
+        # inside the run frame: the clock only moves forward
+        if t < prev_t:
+            violations.append(
+                f"line {lineno}: timestamp regression {t} < {prev_t} at {ev}")
+        prev_t = max(prev_t, t)
+
+        if ev == "run_end":
+            ended = True
+            end_summary = obj
+
+    if not in_frame:
+        violations.append("no run_start in stream")
+    if not ended:
+        violations.append("no run_end in stream (truncated stream?)")
+
+    arrivals = counts.get("arrival", 0)
+    dispatches = counts.get("dispatch", 0)
+    drops = counts.get("drop", 0)
+    rejects = counts.get("reject", 0)
+
+    if not violations and end_summary is not None and arrivals == 0 \
+            and end_summary.get("arrived", 0) > 0:
+        print(
+            "WARNING: summary-only stream (run_end reports "
+            f"{end_summary.get('arrived')} arrived but the stream carries no "
+            "body events); cannot certify from events alone — skipping",
+            file=sys.stderr)
+        return 0
+
+    if end_summary is not None:
+        if arrivals != dispatches + drops + rejects:
+            violations.append(
+                f"conservation: {arrivals} arrivals != {dispatches} dispatches "
+                f"+ {drops} drops + {rejects} rejects")
+        for key, got in (("arrived", arrivals), ("served", dispatches),
+                         ("dropped", drops), ("rejected", rejects)):
+            want = end_summary.get(key)
+            if want != got:
+                violations.append(
+                    f"run_end.{key} = {want!r} but the stream carries {got}")
+
+    if violations:
+        for m in violations:
+            print(f"FAIL: {m}", file=sys.stderr)
+        print(f"\nevent stream FAILED ({len(violations)} violation(s))",
+              file=sys.stderr)
+        return 1
+
+    kinds = ", ".join(f"{k}={n}" for k, n in sorted(counts.items()))
+    print(f"event stream OK: {n_events} events ({kinds})")
+    return 0
+
+
+def main():
+    args = sys.argv[1:]
+    if len(args) > 1:
+        print(__doc__, file=sys.stderr)
+        return 2
+    if not args or args[0] == "-":
+        return check(sys.stdin)
+    with open(args[0]) as f:
+        return check(f)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -66,6 +66,22 @@ grep -E "Fleet policy matrix" reports/fleet_10k.txt >/dev/null \
 grep -E "earliest-free|round-robin|least-loaded|edf" reports/fleet_10k.txt >/dev/null \
     || { echo "ERROR: empty policy table in fleet report"; exit 1; }
 
+echo "==> vla-char telemetry daemon smoke (NDJSON stream -> check_events.py)"
+cargo run --release -- fleet --daemon --fleet-streams 50 --rate 1 \
+    --duration 5 --deadline-ms 400 | tee reports/fleet_daemon.ndjson \
+    | python3 scripts/check_events.py
+cargo run --release -- fleet --events reports/fleet_events.ndjson \
+    --fleet-streams 50 --rate 1 --duration 5 --deadline-ms 400 \
+    | tee reports/fleet_events.txt
+grep -E "FL5-events-replay" reports/fleet_events.txt >/dev/null \
+    || { echo "ERROR: no FL5 replay check in fleet --events report"; exit 1; }
+python3 scripts/check_events.py reports/fleet_events.ndjson
+
+echo "==> vla-char telemetry experiment smoke (TL1-TL4)"
+cargo run --release -- telemetry | tee reports/telemetry.txt
+grep -E "TL1-replay-bitwise" reports/telemetry.txt >/dev/null \
+    || { echo "ERROR: no TL1 check in telemetry report"; exit 1; }
+
 if command -v pytest >/dev/null 2>&1 || python3 -c 'import pytest' >/dev/null 2>&1; then
     echo "==> python -m pytest python/tests -q (soft gate until L1/L2 artifacts land)"
     python3 -m pytest python/tests -q || echo "WARNING: python tests failed (soft gate)"
