@@ -428,3 +428,30 @@ mod tests {
         assert!(report_mismatch(&live, &counted).unwrap().starts_with("max_burst"));
     }
 }
+
+#[cfg(test)]
+mod review_probe {
+    use super::super::{RunMeta, VecSink};
+    use crate::sim::fleet::{FleetConfig, FleetSim, ShardSpec};
+
+    #[test]
+    fn review_probe_monotone_collapsed() {
+        let cfg = FleetConfig {
+            streams: 2,
+            rate_hz: 2.0,
+            duration_s: 10.0,
+            seed: 29,
+            failure_rate_hz: 50.0,
+            ..Default::default()
+        };
+        let sim = FleetSim::new(cfg, vec![ShardSpec::uniform("a", 1, 0.1)]).unwrap();
+        let mut sink = VecSink::new();
+        let live = sim.run_traced(&RunMeta::default(), &mut sink);
+        assert!(live.failures >= 1 && live.dropped > 0);
+        let mut prev = f64::NEG_INFINITY;
+        for ev in &sink.events {
+            assert!(ev.t() >= prev, "regression at {} ({} < {prev})", ev.kind(), ev.t());
+            prev = ev.t();
+        }
+    }
+}
