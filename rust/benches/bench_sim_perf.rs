@@ -162,6 +162,36 @@ fn main() {
         matrix.len()
     );
 
+    // pass E: the placement axis at full width — the offload grid (both
+    // modes x every link preset, 7x the sharded matrix) through the
+    // incremental evaluator on a cold shared cache; the dec@cloud rows
+    // lower on the cloud tier, so this also exercises the two-context path
+    let offload_grid = LeverGrid::default_phase2_offload();
+    let offload_matrix = scenario_matrix_grid(&p, &offload_grid);
+    assert_eq!(
+        offload_matrix.len(),
+        matrix_size_grid(&p, &offload_grid),
+        "offload matrix must match its closed form"
+    );
+    assert_eq!(offload_matrix.len(), 7 * matrix.len(), "placement axis must multiply by 7");
+    let off_cache = EvalCache::shared();
+    let ev_off = Evaluator::with_cache(&p, &opts, &cfg, &draft, &off_cache);
+    let t3 = Instant::now();
+    for sc in &offload_matrix {
+        black_box(ev_off.eval(sc).expect("grid scenarios are valid"));
+    }
+    let t_off = t3.elapsed().as_secs_f64();
+    let off_rate = offload_matrix.len() as f64 / t_off.max(1e-12);
+    let sims_off = off_cache.stats().integrals_computed;
+    println!(
+        "offload grid eval ({}): {} placements | {} full sims | {:.1} ms | {:.0} evals/s",
+        p.name,
+        offload_matrix.len(),
+        sims_off,
+        t_off * 1e3,
+        off_rate
+    );
+
     // shard serving scaling: simulator-backed batcher cells (topology x
     // streams x rate) on the worker pool — the `serve` experiment's shape
     {
@@ -226,6 +256,7 @@ fn main() {
                 "exact",
                 Json::obj(vec![
                     ("scenarios", Json::Num(matrix.len() as f64)),
+                    ("offload_scenarios", Json::Num(offload_matrix.len() as f64)),
                     ("full_sims_fresh", Json::Num(sims_fresh as f64)),
                     ("full_sims_incremental", Json::Num(sims_inc as f64)),
                 ]),
@@ -239,6 +270,7 @@ fn main() {
                     ("incremental_speedup_x", Json::Num(speedup)),
                     ("scenarios_per_s_parallel", Json::Num(grid_scaling.parallel_rate())),
                     ("cached_evals_per_s", Json::Num(warm_rate)),
+                    ("offload_evals_per_s", Json::Num(off_rate)),
                 ]),
             ),
             ("host", Json::obj(vec![("workers", Json::Num(grid_scaling.workers as f64))])),

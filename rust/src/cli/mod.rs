@@ -56,6 +56,8 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "shard-mode", value_name: Some("M"), help: "shard topologies for `serve`: replicate (rep) | pipeline (pipe) | both", default: Some("both") },
         OptSpec { name: "deadline-ms", value_name: Some("MS"), help: "queueing-delay deadline for `serve` (0 = serve everything)", default: Some("0") },
         OptSpec { name: "pim-shards", value_name: Some("LIST"), help: "shard-serving engine counts in the `pim` lever grid (`none` drops the axis)", default: Some("none") },
+        OptSpec { name: "links", value_name: Some("LIST"), help: "network links of the placement axis: 5g | wifi6 | wired (`none` drops the axis; `offload` defaults to all presets)", default: Some("none") },
+        OptSpec { name: "offload-modes", value_name: Some("LIST"), help: "placement modes of the offload axis: vp | decode | both | none", default: Some("both") },
         OptSpec { name: "fleet-streams", value_name: Some("N"), help: "robot streams served by `fleet`", default: Some("64") },
         OptSpec { name: "admission", value_name: Some("P"), help: "fleet admission policy: drop | token | slo | all (sweep the grid)", default: Some("all") },
         OptSpec { name: "scheduling", value_name: Some("P"), help: "fleet scheduling policy: earliest | rr | least | edf | all (sweep the grid)", default: Some("all") },

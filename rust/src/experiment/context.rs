@@ -5,7 +5,9 @@
 use crate::hw::{config_file, platform, Platform};
 use crate::model::scaling::{scaled_vla, ANCHOR_SIZES_B};
 use crate::model::VlaConfig;
-use crate::sim::scenario::{LeverGrid, BATCH_STREAMS, SPEC_ALPHA, SPEC_GAMMA, TRACE_FACTOR};
+use crate::sim::scenario::{
+    LeverGrid, NetLink, OffloadMode, BATCH_STREAMS, SPEC_ALPHA, SPEC_GAMMA, TRACE_FACTOR,
+};
 use crate::sim::SimOptions;
 use crate::util::cli::Args;
 
@@ -66,8 +68,14 @@ pub struct ExpContext {
     pub spec_gammas: Vec<u64>,
     /// Draft acceptance rates of the `pim` lever grid (right of the `x`).
     pub spec_alphas: Vec<f64>,
-    /// Trace-compression factors of the `pim` lever grid.
+    /// Trace-compression factors of the `pim` lever grid (each in (0, 1]).
     pub trace_factors: Vec<f64>,
+    /// Placement modes of the offload axis (`--offload-modes`; empty =
+    /// no placement levers even when links are given).
+    pub offload_modes: Vec<OffloadMode>,
+    /// Network links the offload axis sweeps (`--links`; empty = no
+    /// placement axis, the pre-offload matrix).
+    pub offload_links: Vec<NetLink>,
     /// Batched-stream values of the `pim` lever grid (empty = no batch
     /// axis; `--pim-batches none`).
     pub pim_batches: Vec<u64>,
@@ -180,6 +188,39 @@ impl ExpContext {
             None => (vec![SPEC_GAMMA], vec![SPEC_ALPHA]),
             Some(v) => parse_spec_grid(v)?,
         };
+        // `as u64` casts downstream saturate: a negative factor would
+        // silently become a 1-token trace and a factor > 1 would silently
+        // expand the trace, so reject both (and non-finite values) here.
+        let trace_factors = args.get_f64_list("trace-factors", &[TRACE_FACTOR])?;
+        anyhow::ensure!(
+            !trace_factors.is_empty()
+                && trace_factors.iter().all(|f| f.is_finite() && 0.0 < *f && *f <= 1.0),
+            "`--trace-factors` expects compression factors in (0, 1], got {trace_factors:?}"
+        );
+        let offload_links: Vec<NetLink> = match args.get("links") {
+            None | Some("none") | Some("") => Vec::new(),
+            Some(list) => {
+                let mut links = Vec::new();
+                for name in list.split(',') {
+                    links.push(NetLink::parse(name).map_err(|e| anyhow::anyhow!("`--links`: {e}"))?);
+                }
+                links
+            }
+        };
+        let offload_modes: Vec<OffloadMode> = match args.get("offload-modes") {
+            None | Some("both") | Some("") => OffloadMode::all(),
+            Some("none") => Vec::new(),
+            Some(list) => {
+                let mut modes = Vec::new();
+                for name in list.split(',') {
+                    modes.push(
+                        OffloadMode::parse(name)
+                            .map_err(|e| anyhow::anyhow!("`--offload-modes`: {e}"))?,
+                    );
+                }
+                modes
+            }
+        };
         let pim_batches: Vec<u64> = match args.get("pim-batches") {
             Some("none") | Some("") => Vec::new(),
             _ => {
@@ -254,7 +295,9 @@ impl ExpContext {
             pim_sizes: args.get_f64_list("pim-sizes", &[7.0, 30.0])?,
             spec_gammas,
             spec_alphas,
-            trace_factors: args.get_f64_list("trace-factors", &[TRACE_FACTOR])?,
+            trace_factors,
+            offload_modes,
+            offload_links,
             pim_batches,
             pareto: args.flag("pareto"),
             top: args.get_usize("top", 10)?,
@@ -304,6 +347,8 @@ impl ExpContext {
             trace_factors: self.trace_factors.clone(),
             batch_streams: self.pim_batches.clone(),
             shard_engines: self.pim_shards.clone(),
+            offload_modes: self.offload_modes.clone(),
+            offload_links: self.offload_links.clone(),
         }
     }
 
@@ -336,6 +381,8 @@ impl Default for ExpContext {
             spec_gammas: vec![SPEC_GAMMA],
             spec_alphas: vec![SPEC_ALPHA],
             trace_factors: vec![TRACE_FACTOR],
+            offload_modes: OffloadMode::all(),
+            offload_links: Vec::new(),
             pim_batches: vec![BATCH_STREAMS],
             pareto: false,
             top: 10,
@@ -401,6 +448,8 @@ mod tests {
             OptSpec { name: "shard-mode", value_name: Some("M"), help: "", default: None },
             OptSpec { name: "deadline-ms", value_name: Some("MS"), help: "", default: None },
             OptSpec { name: "pim-shards", value_name: Some("LIST"), help: "", default: None },
+            OptSpec { name: "links", value_name: Some("LIST"), help: "", default: None },
+            OptSpec { name: "offload-modes", value_name: Some("LIST"), help: "", default: None },
             OptSpec { name: "fleet-streams", value_name: Some("N"), help: "", default: None },
             OptSpec { name: "admission", value_name: Some("P"), help: "", default: None },
             OptSpec { name: "scheduling", value_name: Some("P"), help: "", default: None },
@@ -496,6 +545,52 @@ mod tests {
         for bad in ["0", "-2", "4.5", "8,0"] {
             let args = parse(&["pim", "--pim-batches", bad]);
             assert!(ExpContext::from_args(&args).is_err(), "`{bad}` must be rejected");
+        }
+    }
+
+    #[test]
+    fn trace_factors_validated_at_context_build() {
+        // in-range factors flow through untouched
+        let ok = parse(&["pim", "--trace-factors", "0.25,1"]);
+        assert_eq!(ExpContext::from_args(&ok).unwrap().trace_factors, vec![0.25, 1.0]);
+        // out-of-range factors used to slip through and saturate the
+        // `decode_tokens as u64` cast downstream (negative -> a silent
+        // 1-token trace; > 1 -> a silently expanded trace): each field of
+        // the invalid set is rejected at context build now
+        for bad in ["0", "-0.5", "1.5", "nan", "inf", "-inf", "0.5,0", "0.5,2"] {
+            let args = parse(&["pim", "--trace-factors", bad]);
+            assert!(ExpContext::from_args(&args).is_err(), "`{bad}` must be rejected");
+        }
+    }
+
+    #[test]
+    fn offload_flags_resolve() {
+        // defaults: both placement modes armed, but no links -> the
+        // placement axis is dropped and the grid is the pre-offload matrix
+        let ctx = ExpContext::from_args(&parse(&["pim"])).unwrap();
+        assert_eq!(ctx.offload_modes, OffloadMode::all());
+        assert!(ctx.offload_links.is_empty());
+        assert_eq!(ctx.lever_grid(), LeverGrid::default_phase2());
+        // explicit links arm the axis; entries resolve through NetLink::parse
+        let a = parse(&["offload", "--links", "5g,wired", "--offload-modes", "vp"]);
+        let ctx = ExpContext::from_args(&a).unwrap();
+        assert_eq!(ctx.offload_links, vec![NetLink::five_g(), NetLink::wired()]);
+        assert_eq!(ctx.offload_modes, vec![OffloadMode::VisionPrefillRemote]);
+        assert_eq!(ctx.lever_grid().offload_links, vec![NetLink::five_g(), NetLink::wired()]);
+        // `none` on either flag drops the axis
+        let none = parse(&["offload", "--links", "none"]);
+        assert!(ExpContext::from_args(&none).unwrap().offload_links.is_empty());
+        let none = parse(&["offload", "--links", "5g", "--offload-modes", "none"]);
+        assert!(ExpContext::from_args(&none).unwrap().offload_modes.is_empty());
+        // unknown presets / modes are rejected at context build
+        for (flag, bad) in [
+            ("--links", "mesh"),
+            ("--links", "5g,oops"),
+            ("--offload-modes", "gpu"),
+            ("--offload-modes", "vp,oops"),
+        ] {
+            let args = parse(&["offload", flag, bad]);
+            assert!(ExpContext::from_args(&args).is_err(), "`{flag} {bad}` must be rejected");
         }
     }
 

@@ -21,6 +21,7 @@ mod context;
 mod engine_exps;
 mod experiments;
 mod fleet_exp;
+mod offload_exp;
 mod report;
 mod serve_exp;
 mod telemetry_exp;
@@ -29,6 +30,7 @@ pub use context::ExpContext;
 pub use engine_exps::{ControlLoop, StepOnce, Validate};
 pub use experiments::{Ablate, Batch, Characterize, Codesign, Energy, PimScenarios, Project, Table1};
 pub use fleet_exp::Fleet;
+pub use offload_exp::Offload;
 pub use report::{DirSink, Item, Report, ReportSink, StdoutSink};
 pub use serve_exp::Serve;
 pub use telemetry_exp::Telemetry;
@@ -55,6 +57,7 @@ pub static REGISTRY: &[&dyn Experiment] = &[
     &Ablate,
     &Codesign,
     &PimScenarios,
+    &Offload,
     &Energy,
     &Batch,
     &StepOnce,

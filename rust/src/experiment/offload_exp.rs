@@ -1,0 +1,337 @@
+//! The `offload` experiment: the edge-to-cloud placement study.
+//!
+//! Sweeps the full lever grid with the placement axis armed (both offload
+//! modes across the link presets unless `--offload-modes` / `--links`
+//! narrow them), ranks the resulting placement matrix, and emits the
+//! three-objective Pareto front (Hz up, J/action down, $/action down).
+//! The all-local rows of the expanded matrix are checked bitwise against
+//! an independently evaluated non-offload matrix, so arming the axis is
+//! proven to leave the local economics untouched.
+
+use super::{ExpContext, Experiment, Report};
+use crate::hw::Platform;
+use crate::model::scaling::scaled_vla;
+use crate::report::checks::Check;
+use crate::sim::scenario::{
+    matrix_size_grid, pareto_front3, scenario_matrix_grid, EvalCache, Evaluator, Lever, LeverGroup,
+    NetLink, OffloadMode, Scenario, ScenarioResult,
+};
+use crate::sim::sweep;
+use crate::util::table::Table;
+
+/// Edge-to-cloud offload placement matrix with link-cost Pareto ranking.
+pub struct Offload;
+
+impl Offload {
+    /// One formatted row of the ranked placement matrix.
+    fn placement_row(rank: usize, r: &ScenarioResult) -> Vec<String> {
+        vec![
+            format!("{rank}"),
+            r.platform.clone(),
+            r.model.clone(),
+            r.scenario.clone(),
+            format!("{:.2}", r.step_latency),
+            format!("{:.3}", r.control_hz),
+            format!("{:.3}", r.aggregate_hz),
+            format!("{:.2}", r.j_per_action),
+            format!("{:.2e}", r.usd_per_action),
+            format!("{:.1}", r.link_s * 1e3),
+            format!("{:.1}", r.footprint_gb),
+            if r.fits_capacity { "yes".to_string() } else { "no".to_string() },
+        ]
+    }
+
+    /// Header of the ranked placement matrix (kept next to
+    /// [`Offload::placement_row`] so the two cannot drift apart).
+    const HEADERS: [&'static str; 12] = [
+        "#",
+        "Platform",
+        "model",
+        "scenario",
+        "step (s)",
+        "Hz",
+        "agg act/s",
+        "J/action",
+        "$/action",
+        "link (ms)",
+        "mem GB",
+        "fits",
+    ];
+}
+
+impl Experiment for Offload {
+    fn name(&self) -> &'static str {
+        "offload"
+    }
+
+    fn description(&self) -> &'static str {
+        "edge-to-cloud placement matrix: phase offload over 5G/WiFi-6/wired with $/action ranking"
+    }
+
+    fn run(&self, ctx: &ExpContext) -> anyhow::Result<Report> {
+        let mut options = ctx.options.clone();
+        options.decode_stride = options.decode_stride.max(8);
+        // Same discipline as `pim`: exploiting PIM is an explicit lever,
+        // not an ambient simulator option.
+        options.pim = false;
+        // The placement axis is always armed here: without flags, every
+        // link preset crossed with both offload modes.
+        let mut grid = ctx.lever_grid();
+        if grid.offload_links.is_empty() {
+            grid.offload_links = NetLink::presets();
+        }
+        if grid.offload_modes.is_empty() {
+            grid.offload_modes = OffloadMode::all();
+        }
+        // The control matrix: the same grid with the placement axis
+        // dropped, evaluated through its OWN cache so the bitwise check
+        // below compares two independent lowering paths.
+        let mut base_grid = grid.clone();
+        base_grid.offload_modes = Vec::new();
+        base_grid.offload_links = Vec::new();
+
+        let mut cells: Vec<(Platform, f64)> = Vec::new();
+        for &size in &ctx.pim_sizes {
+            for p in &ctx.platforms {
+                cells.push((p.clone(), size));
+            }
+        }
+        let cache = EvalCache::shared();
+        let per_cell: Vec<Vec<(f64, Scenario, ScenarioResult)>> =
+            sweep::parallel_map(&cells, |(p, size)| {
+                let model = scaled_vla(*size);
+                let ev = Evaluator::with_cache(p, &options, &model, &ctx.draft, &cache);
+                scenario_matrix_grid(p, &grid)
+                    .into_iter()
+                    .map(|sc| {
+                        let r = ev.eval(&sc).expect("matrix scenarios are valid");
+                        (*size, sc, r)
+                    })
+                    .collect()
+            });
+        let mut ranked: Vec<(f64, Scenario, ScenarioResult)> =
+            per_cell.into_iter().flatten().collect();
+        let n_total = ranked.len();
+        anyhow::ensure!(n_total > 0, "empty placement sweep (no platforms or sizes)");
+
+        let base_cache = EvalCache::shared();
+        let base_cells: Vec<Vec<(f64, Scenario, ScenarioResult)>> =
+            sweep::parallel_map(&cells, |(p, size)| {
+                let model = scaled_vla(*size);
+                let ev = Evaluator::with_cache(p, &options, &model, &ctx.draft, &base_cache);
+                scenario_matrix_grid(p, &base_grid)
+                    .into_iter()
+                    .map(|sc| {
+                        let r = ev.eval(&sc).expect("matrix scenarios are valid");
+                        (*size, sc, r)
+                    })
+                    .collect()
+            });
+        let base_rows: Vec<(f64, Scenario, ScenarioResult)> =
+            base_cells.into_iter().flatten().collect();
+
+        // capacity-valid rows first, control-loop Hz within each class
+        // (same no-silent-drop ranking as the `pim` matrix)
+        ranked.sort_by(|a, b| {
+            b.2.fits_capacity
+                .cmp(&a.2.fits_capacity)
+                .then(b.2.control_hz.partial_cmp(&a.2.control_hz).unwrap())
+        });
+        let n_valid = ranked.iter().filter(|c| c.2.fits_capacity).count();
+
+        // three-objective Pareto front over the capacity-valid rows:
+        // Hz up, J/action down, $/action down
+        let valid_idx: Vec<usize> =
+            (0..ranked.len()).filter(|&i| ranked[i].2.fits_capacity).collect();
+        let points: Vec<(f64, f64, f64)> = valid_idx
+            .iter()
+            .map(|&i| {
+                (ranked[i].2.control_hz, ranked[i].2.j_per_action, ranked[i].2.usd_per_action)
+            })
+            .collect();
+        let front: Vec<usize> =
+            pareto_front3(&points).into_iter().map(|k| valid_idx[k]).collect();
+
+        // --pareto replaces the single-key ranking: front members first
+        let order: Vec<usize> = if ctx.pareto {
+            let (f, rest): (Vec<usize>, Vec<usize>) =
+                (0..ranked.len()).partition(|&i| front.contains(&i));
+            f.into_iter().chain(rest).collect()
+        } else {
+            (0..ranked.len()).collect()
+        };
+
+        let mut rep = Report::new(self.name());
+        let top = if ctx.top == 0 { n_total } else { ctx.top.min(n_total) };
+        let ranking = if ctx.pareto {
+            "Pareto-front-first (Hz vs J/action vs $/action)"
+        } else {
+            "projected control-loop Hz, capacity-valid rows first"
+        };
+        let links: Vec<String> = grid.offload_links.iter().map(NetLink::label).collect();
+        let mut t = Table::new(
+            &format!(
+                "Edge-to-cloud placement matrix (top {top} of {n_total}, links {}, ranked by \
+                 {ranking})",
+                links.join("/")
+            ),
+            &Self::HEADERS,
+        )
+        .left_first();
+        for (rank, &i) in order.iter().take(top).enumerate() {
+            t.row(Self::placement_row(rank + 1, &ranked[i].2));
+        }
+        rep.push_table("offload_matrix", t);
+        if top < n_total {
+            rep.note(format!(
+                "placement matrix truncated to {top} of {n_total} rows (`--top 0` emits all)"
+            ));
+        }
+        rep.note(format!(
+            "link-cost Pareto front (Hz vs J/action vs $/action): {} of {n_valid} valid scenarios",
+            front.len()
+        ));
+        let (_, _, best) = &ranked[order[0]];
+        rep.note(format!(
+            "evaluated {n_total} placements across {} platforms x {:?}B over {}; best: `{}` on \
+             {} — {:.2} Hz, {:.2} J/action, {:.2e} $/action",
+            ctx.platforms.len(),
+            ctx.pim_sizes,
+            links.join("/"),
+            best.scenario,
+            best.platform,
+            best.control_hz,
+            best.j_per_action,
+            best.usd_per_action,
+        ));
+        rep.metric("scenarios_evaluated", n_total as f64);
+        rep.metric("pareto3_front_size", front.len() as f64);
+        rep.metric("best_control_hz", best.control_hz);
+
+        // O1: arming the placement axis must not perturb local economics —
+        // every all-local row of the expanded matrix is bitwise-equal to
+        // the independently evaluated non-offload matrix (and carries an
+        // exact-zero link bill)
+        let mut o1_ok = true;
+        let mut o1_checked = 0usize;
+        for (s, _, br) in &base_rows {
+            match ranked.iter().find(|(rs, _, rr)| {
+                rs == s && rr.platform == br.platform && rr.scenario == br.scenario
+            }) {
+                Some((_, _, rr)) => {
+                    o1_checked += 1;
+                    if rr.step_latency.to_bits() != br.step_latency.to_bits()
+                        || rr.control_hz.to_bits() != br.control_hz.to_bits()
+                        || rr.decode_time.to_bits() != br.decode_time.to_bits()
+                        || rr.total_j.to_bits() != br.total_j.to_bits()
+                        || rr.j_per_action.to_bits() != br.j_per_action.to_bits()
+                        || rr.link_s != 0.0
+                        || rr.usd_per_action != 0.0
+                    {
+                        o1_ok = false;
+                    }
+                }
+                None => o1_ok = false,
+            }
+        }
+        rep.checks.push(Check {
+            id: "O1-all-local-bitwise",
+            claim: "all-local rows are bitwise-equal to the non-offload matrix (zero link bill)",
+            passed: o1_ok && o1_checked == base_rows.len(),
+            detail: format!("{o1_checked}/{} baseline rows matched bitwise", base_rows.len()),
+        });
+
+        // O2: the link-cost floor — an offload row whose link time exceeds
+        // the local time of the phase it hides can never beat its all-local
+        // counterpart (a sign error in the link accounting would break
+        // this). The hidden-phase time comes from the counterpart row:
+        // decode_time for dec@cloud, the non-decode remainder (an upper
+        // bound on vision+prefill) for vp@cloud.
+        let mut o2_ok = true;
+        let mut o2_floor = 0usize;
+        for (s, sc, r) in &ranked {
+            let mode = match sc.lever(LeverGroup::Placement) {
+                Some(Lever::Offload { mode, .. }) => *mode,
+                _ => continue,
+            };
+            let local_name = Scenario::of(
+                sc.levers
+                    .iter()
+                    .filter(|l| l.group() != LeverGroup::Placement)
+                    .cloned()
+                    .collect(),
+            )
+            .name;
+            let local = ranked
+                .iter()
+                .find(|(ls, _, lr)| {
+                    ls == s && lr.platform == r.platform && lr.scenario == local_name
+                })
+                .map(|(_, _, lr)| lr)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("`{local_name}` missing from the placement matrix")
+                })?;
+            let hidden = match mode {
+                OffloadMode::DecodeRemote => local.decode_time,
+                OffloadMode::VisionPrefillRemote => local.step_latency - local.decode_time,
+            };
+            if r.link_s > hidden {
+                o2_floor += 1;
+                if r.control_hz > local.control_hz {
+                    o2_ok = false;
+                }
+            }
+        }
+        rep.checks.push(Check {
+            id: "O2-link-cost-floor",
+            claim: "offload never beats local once link time exceeds the phase time it hides",
+            passed: o2_ok,
+            detail: format!("{o2_floor} rows past the floor, none beat their local counterpart"),
+        });
+
+        // O3: no silent drops — every enumerated cell of the expanded grid
+        // is present in the ranked output, and the control matrix is the
+        // expected placement-free slice of it
+        let per_platform: usize = ctx.platforms.iter().map(|p| matrix_size_grid(p, &grid)).sum();
+        let expect_total = per_platform * ctx.pim_sizes.len();
+        let per_platform_base: usize =
+            ctx.platforms.iter().map(|p| matrix_size_grid(p, &base_grid)).sum();
+        let expect_base = per_platform_base * ctx.pim_sizes.len();
+        rep.checks.push(Check {
+            id: "O3-no-silent-drops",
+            claim: "every enumerated placement is reported (closed-form row accounting)",
+            passed: n_total == expect_total && base_rows.len() == expect_base,
+            detail: format!(
+                "{n_total}/{expect_total} placement rows, {}/{expect_base} baseline rows",
+                base_rows.len()
+            ),
+        });
+
+        // O4: the three-objective front is sane — non-empty whenever any
+        // row fits, and mutually non-dominated (re-verified from scratch)
+        let mut o4_ok = n_valid == 0 || !front.is_empty();
+        for &i in &front {
+            for &j in &front {
+                let (a, b) = (&ranked[i].2, &ranked[j].2);
+                if i != j
+                    && a.control_hz >= b.control_hz
+                    && a.j_per_action <= b.j_per_action
+                    && a.usd_per_action <= b.usd_per_action
+                    && (a.control_hz > b.control_hz
+                        || a.j_per_action < b.j_per_action
+                        || a.usd_per_action < b.usd_per_action)
+                {
+                    o4_ok = false;
+                }
+            }
+        }
+        rep.checks.push(Check {
+            id: "O4-pareto3-front",
+            claim: "3-objective front members are mutually non-dominated (Hz, J/action, $/action)",
+            passed: o4_ok,
+            detail: format!("{} front members over {n_valid} valid rows", front.len()),
+        });
+
+        Ok(rep)
+    }
+}

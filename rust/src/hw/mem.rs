@@ -106,6 +106,20 @@ impl MemDevice {
         }
     }
 
+    /// HBM3E: the stacked memory of H100/H200-class cloud accelerators —
+    /// five (H100 SXM) to six stacks aggregating ~3.35 TB/s. Exists here as
+    /// the memory system of the *remote* tier in edge-to-cloud offload
+    /// scenarios; it is deliberately not part of any edge platform registry.
+    pub fn hbm3e(capacity_gb: f64) -> MemDevice {
+        MemDevice {
+            name: "HBM3E".into(),
+            peak_bw: 3350.0 * GB,
+            capacity: capacity_gb * GB,
+            stream_efficiency: 0.85,
+            pim: None,
+        }
+    }
+
     /// HBM4: the JEDEC 2048-bit interface at 6.4 Gbps — 1638 GB/s per
     /// stack. Capacity-cost note: 16-high stacks reach ~36-48 GB, but the
     /// wider base die and hybrid bonding push cost and thermals further

@@ -149,6 +149,22 @@ pub fn thor_hbm4_pim() -> Platform {
     }
 }
 
+/// Cloud tier for edge-to-cloud offload scenarios: an H100 SXM-class
+/// accelerator with HBM3E. This is the remote end of the
+/// `Lever::Offload` placement family — the Evaluator costs offloaded
+/// phases on these roofline coefficients and charges the network link
+/// separately. Deliberately NOT part of `table1_platforms`,
+/// `sweep_platforms`, or `by_name`: it is not an edge deployment target,
+/// and keeping it out preserves every pinned platform count.
+pub fn cloud_h100() -> Platform {
+    Platform {
+        name: "Cloud+H100".into(),
+        soc: SocSpec::cloud_h100(),
+        mem: MemDevice::hbm3e(80.0),
+        hypothetical: false,
+    }
+}
+
 /// Calibration target: this machine's CPU running XLA-CPU via PJRT.
 /// Effective GFLOPS/BW are fitted by `sim::calibrate`; the defaults here are
 /// conservative placeholders used before calibration.
@@ -340,6 +356,35 @@ mod tests {
         let md = t.to_markdown();
         assert!(md.contains("2180"));
         assert!(md.contains("3993"));
+    }
+
+    #[test]
+    fn cloud_tier_dominates_every_edge_soc_and_stays_out_of_the_registry() {
+        let cloud = cloud_h100();
+        assert_eq!(cloud.name, "Cloud+H100");
+        assert_eq!(cloud.mem.name, "HBM3E");
+        assert!((cloud.mem.capacity_gb() - 80.0).abs() < 1e-9);
+        assert!(cloud.mem.pim.is_none());
+        // the offload lever relies on the remote tier being strictly faster
+        // per-phase: every roofline coefficient must dominate the edge SoCs
+        for edge in sweep_platforms() {
+            assert!(cloud.soc.flops_bf16 > edge.soc.flops_bf16, "{}", edge.name);
+            assert!(cloud.soc.flops_f32 > edge.soc.flops_f32, "{}", edge.name);
+            assert!(cloud.soc.l2_bw > edge.soc.l2_bw, "{}", edge.name);
+            assert!(cloud.soc.smem_per_sm >= edge.soc.smem_per_sm, "{}", edge.name);
+            assert!(
+                cloud.soc.kernel_launch_overhead <= edge.soc.kernel_launch_overhead,
+                "{}",
+                edge.name
+            );
+            assert!(cloud.mem.effective_bw() > edge.mem.effective_bw(), "{}", edge.name);
+        }
+        // the cloud tier is not an edge deployment target: it must not leak
+        // into the pinned platform sets or name lookup
+        assert!(sweep_platforms().iter().all(|p| p.name != "Cloud+H100"));
+        assert!(table1_platforms().iter().all(|p| p.name != "Cloud+H100"));
+        assert!(by_name("cloud+h100").is_err());
+        assert!(by_name("h100").is_err());
     }
 
     #[test]

@@ -81,6 +81,29 @@ impl SocSpec {
         }
     }
 
+    /// Cloud-tier accelerator (H100 SXM class) — the remote end of the
+    /// edge-to-cloud offload lever family. Datacenter parts dominate the
+    /// edge SoCs on every roofline coefficient (compute, clock, SRAM, L2),
+    /// so a phase moved to the cloud is never slower *on-device*; the link
+    /// is the only thing that can make offload lose.
+    pub fn cloud_h100() -> SocSpec {
+        SocSpec {
+            name: "H100 SXM".into(),
+            sms: 132,
+            clock: 1.8e9,
+            flops_bf16: 989.0 * TERA,
+            flops_f32: 67.0 * TERA,
+            smem_per_sm: 228.0 * KIB,
+            l2_bytes: 50.0 * MIB,
+            l2_bw: 1.2e13,
+            mma_m: 16,
+            mma_n: 16,
+            mma_k: 16,
+            reduction_bw_penalty: 1.10,
+            kernel_launch_overhead: 3e-6,
+        }
+    }
+
     /// The host CPU running our PJRT CPU backend — used for simulator
     /// calibration (E-C6): predicted-vs-measured on the same machine.
     /// `flops_*` here are *effective* single-stream XLA-CPU throughputs,

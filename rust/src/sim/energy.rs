@@ -37,6 +37,7 @@ impl EnergyModel {
             "LPDDR5X" => 44.0,
             "GDDR7" => 64.0, // faster but hungrier per byte
             "HBM3" => 31.0,  // short TSV paths beat off-package PHYs
+            "HBM3E" => 28.0, // cloud-tier stacks (offload remote end)
             "HBM4" => 26.0,
             "HBM4 PIM" => 26.0,
             "LPDDR6X PIM" => 40.0,

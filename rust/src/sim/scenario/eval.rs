@@ -25,7 +25,7 @@ use super::cache::{
     IntegralKey, SpecKey,
 };
 use super::lever::expected_accepted;
-use super::{EvalCache, Lever, LeverGroup, Scenario};
+use super::{EvalCache, Lever, LeverGroup, NetLink, OffloadMode, Scenario};
 use crate::engine::shard::{link_demand_bw, ShardMode, ShardModel};
 use crate::hw::Platform;
 use crate::model::vla::VlaConfig;
@@ -130,6 +130,14 @@ pub struct ScenarioResult {
     pub j_per_action: f64,
     /// Average power draw of the whole deployment over the step (W).
     pub avg_watts: f64,
+    /// Per-frame network time on the offload link (s): two latency
+    /// crossings plus the activation/KV transfer at link bandwidth,
+    /// per stream. Exactly 0 for all-local (placement-free) scenarios.
+    pub link_s: f64,
+    /// Amortized link cost per emitted action (USD): the link's monthly
+    /// price prorated over each step window, split across the actions the
+    /// deployment emits in it. Exactly 0 for all-local scenarios.
+    pub usd_per_action: f64,
     /// Lowered weights + KV (+ draft) footprint (GB).
     pub footprint_gb: f64,
     /// The platform's memory capacity (GB).
@@ -148,6 +156,27 @@ pub struct ScenarioResult {
 pub fn pareto_front(points: &[(f64, f64)]) -> Vec<usize> {
     let dominates = |a: (f64, f64), b: (f64, f64)| -> bool {
         a.0 >= b.0 && a.1 <= b.1 && (a.0 > b.0 || a.1 < b.1)
+    };
+    let mut front = Vec::new();
+    for (i, &pt) in points.iter().enumerate() {
+        if !points.iter().enumerate().any(|(j, &p)| j != i && dominates(p, pt)) {
+            front.push(i);
+        }
+    }
+    front
+}
+
+/// Indices of the Pareto-optimal points among three-objective points,
+/// where `.0` is maximized (a rate: aggregate actions/s) and `.1`, `.2`
+/// are minimized (costs: J/action, $/action). Same contract as
+/// [`pareto_front`]: O(n^2), deterministic, input order preserved,
+/// duplicates mutually non-dominating. When every `.2` is equal (e.g. an
+/// all-local matrix, where $/action is identically 0) the front
+/// degenerates to the two-objective [`pareto_front`] of `(.0, .1)` —
+/// pinned by the property tests.
+pub fn pareto_front3(points: &[(f64, f64, f64)]) -> Vec<usize> {
+    let dominates = |a: (f64, f64, f64), b: (f64, f64, f64)| -> bool {
+        a.0 >= b.0 && a.1 <= b.1 && a.2 <= b.2 && (a.0 > b.0 || a.1 < b.1 || a.2 < b.2)
     };
     let mut front = Vec::new();
     for (i, &pt) in points.iter().enumerate() {
@@ -434,14 +463,20 @@ impl Evaluator {
                 }
                 Lever::Batch { streams } => key.spec = SpecKey::Batch { streams: *streams },
                 Lever::Shard { .. } => {}
+                // placement is a step-assembly decision, not a decode
+                // lowering: a vp@cloud stack shares its LOCAL decode cost
+                // with the placement-free stack beside it, and a dec@cloud
+                // stack costs decode on the REMOTE evaluator's own context
+                // (a different ContextKey), so neither can alias here
+                Lever::Offload { .. } => {}
             }
         }
         key
     }
 
-    fn eval_inner(&self, scenario: &Scenario, use_cache: bool) -> anyhow::Result<ScenarioResult> {
-        scenario.validate(&self.platform)?;
-        self.cache.count_eval();
+    /// Lower `scenario`'s config and options (every lever applied, nothing
+    /// integrated yet).
+    fn lowered_config(&self, scenario: &Scenario) -> (VlaConfig, SimOptions) {
         let mut cfg = self.target.clone();
         let mut options = self.options.clone();
         for lever in &scenario.levers {
@@ -450,6 +485,16 @@ impl Evaluator {
         for lever in &scenario.levers {
             lever.apply_options(&mut options);
         }
+        (cfg, options)
+    }
+
+    /// Lower `scenario` and cost its decode phase: apply the levers, build
+    /// the canonical [`DecodeKey`], and walk the decode-cost cache level.
+    /// Factored out of `eval_inner` so the placement branch can cost a
+    /// stripped lever stack on the remote (cloud-tier) evaluator through
+    /// the identical machinery.
+    fn lowered_decode_cost(&self, scenario: &Scenario, use_cache: bool) -> (VlaConfig, DecodeCost) {
+        let (cfg, options) = self.lowered_config(scenario);
         let dkey = Self::decode_key(scenario);
         let cached_dc = if use_cache {
             let map = self.ctx.decode_costs.read().expect("decode cache lock poisoned");
@@ -473,6 +518,83 @@ impl Evaluator {
                 }
                 dc
             }
+        };
+        (cfg, dc)
+    }
+
+    /// The cloud-tier evaluator of this context: same target, draft, and
+    /// ambient options, [`cloud_h100`](crate::hw::platform::cloud_h100)
+    /// roofline coefficients, on the SAME shared [`EvalCache`] — the cloud
+    /// platform resolves to its own [`ContextCache`], so remote baselines
+    /// and integrals memoize exactly like local ones.
+    fn remote(&self) -> Evaluator {
+        Evaluator::with_cache(
+            &crate::hw::platform::cloud_h100(),
+            &self.options,
+            &self.target,
+            &self.draft,
+            &self.cache,
+        )
+    }
+
+    fn eval_inner(&self, scenario: &Scenario, use_cache: bool) -> anyhow::Result<ScenarioResult> {
+        scenario.validate(&self.platform)?;
+        self.cache.count_eval();
+        // edge-to-cloud placement: placement-free scenarios take the `None`
+        // arms of every match below, whose expressions are bitwise the
+        // pre-offload evaluator
+        let placement = match scenario.lever(LeverGroup::Placement) {
+            Some(Lever::Offload { mode, link }) => Some((*mode, *link)),
+            _ => None,
+        };
+        let (cfg, dc) = match placement {
+            Some((OffloadMode::DecodeRemote, _)) => {
+                // cost the decode phase on the cloud tier. The placement and
+                // serving levers never lower decode, and the PIM-residency
+                // levers are a property of the LOCAL memory device — bank
+                // residency (and the quantization width bundled with it)
+                // does not travel, so the stripped stack keeps only the
+                // portable algorithmic levers (W8/W4, KV8, trace, SoC
+                // speculation, batching)
+                let stripped = Scenario::of(
+                    scenario
+                        .levers
+                        .iter()
+                        .filter(|l| {
+                            !l.requires_pim()
+                                && l.group() != LeverGroup::Serving
+                                && l.group() != LeverGroup::Placement
+                        })
+                        .cloned()
+                        .collect(),
+                );
+                let (_, rdc) = self.remote().lowered_decode_cost(&stripped, use_cache);
+                // the LOCAL lowering still shapes the assembled step (trace
+                // compression shortens the chunk a pipeline would split;
+                // the config drives the shard link-demand model)
+                let (cfg, _) = self.lowered_config(scenario);
+                (cfg, rdc)
+            }
+            _ => self.lowered_decode_cost(scenario, use_cache),
+        };
+        // vision + prefill: remote substitution swaps in the cloud tier's
+        // phase times and drops their LOCAL dynamic energy (the cloud's
+        // joules do not drain the edge battery; $/action carries the
+        // deployment-side cost of the remote tier's link instead)
+        let (vp_t, vp_j) = match placement {
+            Some((OffloadMode::VisionPrefillRemote, _)) => {
+                let remote = self.remote();
+                (remote.base.vision.time + remote.base.prefill.time, 0.0)
+            }
+            _ => (
+                self.base.vision.time + self.base.prefill.time,
+                self.base_vision_j + self.base_prefill_j,
+            ),
+        };
+        // decode energy: a remote decode burns cloud joules, not edge ones
+        let decode_j = match placement {
+            Some((OffloadMode::DecodeRemote, _)) => 0.0,
+            _ => dc.energy,
         };
         let streams = match scenario.lever(LeverGroup::Batching) {
             Some(Lever::Batch { streams }) => (*streams).max(1),
@@ -506,9 +628,7 @@ impl Evaluator {
                     idle_engines = shard.engines;
                 }
                 ShardMode::Replicate => {
-                    let step0 = (self.base.vision.time + self.base.prefill.time) * s
-                        + decode_time
-                        + self.base.action.time * s;
+                    let step0 = vp_t * s + decode_time + self.base.action.time * s;
                     let demand = link_demand_bw(scenario, &cfg, step0);
                     decode_time *= shard.contention(demand, self.platform.mem.effective_bw());
                     // each replica produces its own streams' actions
@@ -516,13 +636,36 @@ impl Evaluator {
                 }
             }
         }
-        let total = (self.base.vision.time + self.base.prefill.time) * s
-            + decode_time
-            + self.base.action.time * s;
+        // the link is charged once per control-loop crossing: two latency
+        // hops (request out, result back) plus the per-stream activation/KV
+        // payload at link bandwidth. `+ link_s` at 0.0 is a bitwise no-op
+        // on the strictly positive placement-free total.
+        let link_s = match placement {
+            Some((mode, link)) => {
+                let act_byte = cfg.decoder.dims.hidden as f64 * cfg.decoder.dims.dtype.bytes();
+                let (up, down) = match mode {
+                    // the camera frame's visual tokens go up; the prefix KV
+                    // comes back so local decode can attend over it
+                    OffloadMode::VisionPrefillRemote => (
+                        cfg.shape.image_tokens as f64 * act_byte,
+                        cfg.shape.prefill_len() as f64 * cfg.decoder.kv_bytes_per_token(),
+                    ),
+                    // the prefix KV moves up so the cloud can decode; the
+                    // generated tokens' activations come back (trace
+                    // compression shrinks exactly this payload)
+                    OffloadMode::DecodeRemote => (
+                        cfg.shape.prefill_len() as f64 * cfg.decoder.kv_bytes_per_token(),
+                        cfg.shape.decode_tokens as f64 * act_byte,
+                    ),
+                };
+                2.0 * link.latency_s + (up + down) * s / (link.bw_gbps * 1e9)
+            }
+            None => 0.0,
+        };
+        let total = vp_t * s + decode_time + self.base.action.time * s + link_s;
         let horizon = self.target.action.horizon.max(1);
         let amortized_hz = horizon as f64 / total;
-        let dynamic_j =
-            (self.base_vision_j + self.base_prefill_j) * s + dc.energy + self.base_action_j * s;
+        let dynamic_j = vp_j * s + decode_j + self.base_action_j * s;
         // one engine's energy over the step: every pipeline stage idles for
         // the one logical step, so its static share is R x
         let engine_j = if idle_engines > 1 {
@@ -535,6 +678,16 @@ impl Evaluator {
         // invariant — R x the energy produces R x the actions). At one
         // engine the `* 1.0` is a bitwise no-op.
         let total_j = agg_engines as f64 * engine_j;
+        // link rent prorated over this step window, split across the
+        // actions the whole deployment emits in it ($/action is then
+        // topology-invariant the same way J/action is)
+        let usd_per_action = match placement {
+            Some((_, link)) => {
+                let usd_per_s = link.usd_per_month / (30.0 * 24.0 * 3600.0);
+                usd_per_s * total / (agg_engines * streams * horizon) as f64
+            }
+            None => 0.0,
+        };
         let footprint = scenario.memory_footprint(&self.target, &self.draft);
         Ok(ScenarioResult {
             scenario: scenario.name.clone(),
@@ -553,6 +706,8 @@ impl Evaluator {
             total_j,
             j_per_action: total_j / (agg_engines * streams * horizon) as f64,
             avg_watts: total_j / total.max(1e-12),
+            link_s,
+            usd_per_action,
             footprint_gb: footprint / GB,
             capacity_gb: self.platform.mem.capacity_gb(),
             fits_capacity: footprint <= self.platform.mem.capacity,
@@ -951,5 +1106,155 @@ mod tests {
         assert_eq!(pareto_front(&[(1.0, 1.0), (1.0, 1.0)]), vec![0, 1]);
         assert_eq!(pareto_front(&[]), Vec::<usize>::new());
         assert_eq!(pareto_front(&[(2.0, 3.0)]), vec![0]);
+    }
+
+    #[test]
+    fn pareto_front3_basics() {
+        // b dominates a on all three; c survives by its cheap third axis;
+        // d trades rate against b
+        let pts =
+            [(1.0, 5.0, 3.0), (2.0, 2.0, 2.0), (1.5, 3.0, 0.0), (3.0, 4.0, 4.0)];
+        assert_eq!(pareto_front3(&pts), vec![1, 2, 3]);
+        // duplicates are mutually non-dominating; degenerate inputs hold
+        assert_eq!(pareto_front3(&[(1.0, 1.0, 1.0), (1.0, 1.0, 1.0)]), vec![0, 1]);
+        assert_eq!(pareto_front3(&[]), Vec::<usize>::new());
+        assert_eq!(pareto_front3(&[(2.0, 3.0, 1.0)]), vec![0]);
+        // equal third axis everywhere -> exactly the two-objective front
+        let flat = [(1.0, 5.0), (2.0, 2.0), (1.5, 2.0), (3.0, 4.0)];
+        let lifted: Vec<(f64, f64, f64)> = flat.iter().map(|&(a, b)| (a, b, 7.0)).collect();
+        assert_eq!(pareto_front3(&lifted), pareto_front(&flat));
+    }
+
+    #[test]
+    fn all_local_rows_carry_zero_link_cost() {
+        let ev = evaluator(&platform::orin());
+        for s in [
+            Scenario::baseline(),
+            Scenario::of(vec![Lever::QuantizeWeights { bits: 8 }]),
+            Scenario::of(vec![Lever::Batch { streams: 8 }]),
+        ] {
+            let r = ev.eval(&s).unwrap();
+            assert_eq!(r.link_s.to_bits(), 0.0f64.to_bits(), "{}", s.name);
+            assert_eq!(r.usd_per_action.to_bits(), 0.0f64.to_bits(), "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn vision_prefill_offload_substitutes_remote_phases_and_charges_the_link() {
+        let ev = evaluator(&platform::orin());
+        let base = ev.eval(&Scenario::baseline()).unwrap();
+        let remote =
+            Evaluator::new(&platform::cloud_h100(), &opts(), &molmoact_7b(), &scaled_vla(2.0));
+        let link = NetLink::wired();
+        let vp = ev
+            .eval(&Scenario::of(vec![Lever::Offload {
+                mode: OffloadMode::VisionPrefillRemote,
+                link,
+            }]))
+            .unwrap();
+        // the cloud tier's vision/prefill are strictly faster than Orin's
+        let rvp = remote.base.vision.time + remote.base.prefill.time;
+        let lvp = ev.base.vision.time + ev.base.prefill.time;
+        assert!(rvp < lvp, "H100 must beat Orin on the compute-bound front: {rvp} vs {lvp}");
+        // the link charge is exactly 2 latency hops + payload/bandwidth
+        let t = molmoact_7b();
+        let act_byte = t.decoder.dims.hidden as f64 * t.decoder.dims.dtype.bytes();
+        let up = t.shape.image_tokens as f64 * act_byte;
+        let down = t.shape.prefill_len() as f64 * t.decoder.kv_bytes_per_token();
+        let want_link = 2.0 * link.latency_s + (up + down) * 1.0 / (link.bw_gbps * 1e9);
+        assert_eq!(vp.link_s.to_bits(), want_link.to_bits());
+        // the step swaps exactly the vision/prefill phases and adds the link
+        let want_total = rvp * 1.0 + base.decode_time + ev.base.action.time * 1.0 + vp.link_s;
+        assert_eq!(vp.step_latency.to_bits(), want_total.to_bits());
+        // decode is untouched (same local integration, cached or not)
+        assert_eq!(vp.decode_time.to_bits(), base.decode_time.to_bits());
+        // the edge battery stops paying vision/prefill joules...
+        assert!(vp.total_j < base.total_j || vp.step_latency > base.step_latency);
+        // ...and the row carries a nonzero link rent
+        let want_usd = link.usd_per_month / (30.0 * 24.0 * 3600.0) * vp.step_latency
+            / ev.target.action.horizon as f64;
+        assert_eq!(vp.usd_per_action.to_bits(), want_usd.to_bits());
+        assert!(vp.usd_per_action > 0.0);
+    }
+
+    #[test]
+    fn decode_offload_costs_decode_on_the_cloud_roofline() {
+        let ev = evaluator(&platform::orin());
+        let base = ev.eval(&Scenario::baseline()).unwrap();
+        let remote =
+            Evaluator::new(&platform::cloud_h100(), &opts(), &molmoact_7b(), &scaled_vla(2.0));
+        let rbase = remote.eval(&Scenario::baseline()).unwrap();
+        let dec = ev
+            .eval(&Scenario::of(vec![Lever::Offload {
+                mode: OffloadMode::DecodeRemote,
+                link: NetLink::wired(),
+            }]))
+            .unwrap();
+        // the decode phase is the remote tier's own baseline integration
+        assert_eq!(dec.decode_time.to_bits(), rbase.decode_time.to_bits());
+        assert!(dec.decode_time < base.decode_time, "HBM3E must beat LPDDR5 on decode");
+        // remote decode burns cloud joules, not edge ones: the edge step's
+        // dynamic energy drops by exactly the decode share
+        let edge_dynamic = dec.total_j - ev.idle_watts * dec.step_latency;
+        let want_dynamic = ev.base_vision_j + ev.base_prefill_j + ev.base_action_j;
+        assert!(
+            (edge_dynamic - want_dynamic).abs() < 1e-9,
+            "edge dynamic {edge_dynamic} vs {want_dynamic}"
+        );
+        assert!(dec.usd_per_action > 0.0 && dec.link_s > 0.0);
+    }
+
+    #[test]
+    fn pim_residency_does_not_travel_to_the_cloud() {
+        // `W8@PIM + dec@cloud`: bank residency (and the width bundled with
+        // it) is a property of the LOCAL memory device, so the remote
+        // decode is the cloud tier's UNQUANTIZED baseline integration
+        let p = platform::orin_pim();
+        let ev = evaluator(&p);
+        let remote =
+            Evaluator::new(&platform::cloud_h100(), &opts(), &molmoact_7b(), &scaled_vla(2.0));
+        let combo = ev
+            .eval(&Scenario::of(vec![
+                Lever::PimWeightStream { bits: 8 },
+                Lever::Offload { mode: OffloadMode::DecodeRemote, link: NetLink::five_g() },
+            ]))
+            .unwrap();
+        let rbase = remote.eval(&Scenario::baseline()).unwrap();
+        assert_eq!(combo.decode_time.to_bits(), rbase.decode_time.to_bits());
+        assert_eq!(combo.pim_util.to_bits(), 0.0f64.to_bits(), "no PIM on the cloud tier");
+        // the portable W8 quantization DOES travel when it is not a
+        // residency lever
+        let w8combo = ev
+            .eval(&Scenario::of(vec![
+                Lever::QuantizeWeights { bits: 8 },
+                Lever::Offload { mode: OffloadMode::DecodeRemote, link: NetLink::five_g() },
+            ]))
+            .unwrap();
+        let rw8 = remote.eval(&Scenario::of(vec![Lever::QuantizeWeights { bits: 8 }])).unwrap();
+        assert_eq!(w8combo.decode_time.to_bits(), rw8.decode_time.to_bits());
+        assert!(w8combo.decode_time < combo.decode_time);
+    }
+
+    #[test]
+    fn slow_links_lose_to_local_execution() {
+        // a link whose round trip exceeds the phase time it hides can never
+        // win: the offload experiment's O2 check, pinned here at the unit
+        // level with a pathologically slow link
+        let ev = evaluator(&platform::orin());
+        let base = ev.eval(&Scenario::baseline()).unwrap();
+        let slow = NetLink { latency_s: 5.0, bw_gbps: 0.001, usd_per_month: 1.0 };
+        for mode in OffloadMode::all() {
+            let r = ev.eval(&Scenario::of(vec![Lever::Offload { mode, link: slow }])).unwrap();
+            let hidden = match mode {
+                OffloadMode::VisionPrefillRemote => base.step_latency - base.decode_time,
+                OffloadMode::DecodeRemote => base.decode_time,
+            };
+            assert!(r.link_s > hidden, "the slow link must dominate the hidden phase");
+            assert!(
+                r.control_hz < base.control_hz,
+                "{}: offload over a dead link cannot beat local",
+                mode.tag()
+            );
+        }
     }
 }

@@ -21,6 +21,14 @@ use crate::sim::simulator::SimOptions;
 /// (`speedup >= 1/overhead`) drifts when the γ/α grid moves off the
 /// canonical point.
 pub(crate) fn expected_accepted(gamma: u64, alpha: f64) -> f64 {
+    // α → 1 is a 0/0 of the closed form: the numerator hits exactly 0 while
+    // the denominator clamp keeps a 1e-9 floor, collapsing E to 0 and blowing
+    // `modeled_overhead` up to inf. The analytic limit is E(γ, 1) = γ + 1
+    // (every proposed token plus the verify token is accepted). CLI grids are
+    // range-checked to α < 1, but programmatic `LeverGrid`s are not.
+    if alpha >= 1.0 {
+        return gamma as f64 + 1.0;
+    }
     (1.0 - alpha.powi(gamma as i32 + 1)) / (1.0 - alpha).max(1e-9)
 }
 
@@ -57,6 +65,104 @@ pub enum LeverGroup {
     Batching,
     /// Serving topology (multi-engine sharding).
     Serving,
+    /// Phase placement across the edge-to-cloud boundary (offload).
+    Placement,
+}
+
+/// A typed edge-to-cloud network link: one-way latency, usable bandwidth,
+/// and the monthly subscription the deployment pays for it. The evaluator
+/// charges `bytes / bw + latency` per control-loop crossing on it, and the
+/// subscription amortizes into the $/action Pareto objective.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetLink {
+    /// One-way latency per crossing (s).
+    pub latency_s: f64,
+    /// Usable link bandwidth (Gbit/s).
+    pub bw_gbps: f64,
+    /// Monthly link cost (USD) — amortized per action by the evaluator.
+    pub usd_per_month: f64,
+}
+
+impl NetLink {
+    /// Public 5G slice: tens-of-ms latency, sub-Gbit usable uplink.
+    pub fn five_g() -> NetLink {
+        NetLink { latency_s: 0.015, bw_gbps: 0.5, usd_per_month: 60.0 }
+    }
+
+    /// On-prem WiFi-6: single-digit-ms latency, ~2 Gbit/s effective.
+    pub fn wifi6() -> NetLink {
+        NetLink { latency_s: 0.005, bw_gbps: 2.0, usd_per_month: 25.0 }
+    }
+
+    /// Wired fiber uplink: ~1 ms to the edge PoP, 10 Gbit/s.
+    pub fn wired() -> NetLink {
+        NetLink { latency_s: 0.001, bw_gbps: 10.0, usd_per_month: 150.0 }
+    }
+
+    /// The canonical preset sweep, in ranking order: 5G / WiFi-6 / wired.
+    pub fn presets() -> Vec<NetLink> {
+        vec![NetLink::five_g(), NetLink::wifi6(), NetLink::wired()]
+    }
+
+    /// Parse a preset name (the `--links` CLI grammar).
+    pub fn parse(name: &str) -> anyhow::Result<NetLink> {
+        match name.trim().to_ascii_lowercase().as_str() {
+            "5g" => Ok(NetLink::five_g()),
+            "wifi6" | "wifi-6" => Ok(NetLink::wifi6()),
+            "wired" | "fiber" => Ok(NetLink::wired()),
+            other => anyhow::bail!("unknown link preset `{other}` (known: 5g, wifi6, wired)"),
+        }
+    }
+
+    /// Compact label: the preset name when the parameters match one
+    /// bit-for-bit, otherwise the raw latency/bandwidth pair.
+    pub fn label(&self) -> String {
+        for (name, preset) in
+            [("5g", NetLink::five_g()), ("wifi6", NetLink::wifi6()), ("wired", NetLink::wired())]
+        {
+            if *self == preset {
+                return name.to_string();
+            }
+        }
+        format!("{}ms/{}g", self.latency_s * 1e3, self.bw_gbps)
+    }
+}
+
+/// Which phases of the control loop run on the remote cloud tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OffloadMode {
+    /// Vision encoding + prefill run remote; the memory-bound action
+    /// generation stays on the edge device (the paper's bottleneck phase
+    /// keeps its local placement; the link hides the compute-bound front).
+    VisionPrefillRemote,
+    /// Action generation (decode) runs remote on the cloud roofline; the
+    /// edge device keeps vision/prefill/action-head local.
+    DecodeRemote,
+}
+
+impl OffloadMode {
+    /// Compact tag used in scenario names.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            OffloadMode::VisionPrefillRemote => "vp@cloud",
+            OffloadMode::DecodeRemote => "dec@cloud",
+        }
+    }
+
+    /// Both placement modes, in matrix axis order (`vp@cloud` before
+    /// `dec@cloud`).
+    pub fn all() -> Vec<OffloadMode> {
+        vec![OffloadMode::VisionPrefillRemote, OffloadMode::DecodeRemote]
+    }
+
+    /// Parse an `--offload-modes` entry.
+    pub fn parse(name: &str) -> anyhow::Result<OffloadMode> {
+        match name.trim().to_ascii_lowercase().as_str() {
+            "vp" | "vision-prefill" => Ok(OffloadMode::VisionPrefillRemote),
+            "decode" | "dec" => Ok(OffloadMode::DecodeRemote),
+            other => anyhow::bail!("unknown offload mode `{other}` (known: vp, decode, both)"),
+        }
+    }
 }
 
 /// One co-design lever.
@@ -93,6 +199,12 @@ pub enum Lever {
     /// across `R` engines (weights shard `1/R` per engine, per-token
     /// latency = max stage time + inter-stage hop).
     Shard { mode: ShardMode, engines: u64 },
+    /// Edge-to-cloud phase placement: run `mode`'s phases on the cloud
+    /// tier (`hw::platform::cloud_h100`), paying `bytes / bw + latency` on
+    /// `link` per control-loop crossing. The evaluator substitutes the
+    /// remote roofline for the offloaded phases and reports the link time
+    /// and the amortized link cost as `link_s` / `usd_per_action`.
+    Offload { mode: OffloadMode, link: NetLink },
 }
 
 impl Lever {
@@ -109,6 +221,7 @@ impl Lever {
             Lever::Batch { streams } => format!("b{streams}"),
             Lever::Shard { mode: ShardMode::Replicate, engines } => format!("rep{engines}"),
             Lever::Shard { mode: ShardMode::PipelineDecoder, engines } => format!("pipe{engines}"),
+            Lever::Offload { mode, link } => format!("{}({})", mode.tag(), link.label()),
         }
     }
 
@@ -120,6 +233,7 @@ impl Lever {
             Lever::Speculate { .. } | Lever::PimDraft { .. } => LeverGroup::Speculation,
             Lever::Batch { .. } => LeverGroup::Batching,
             Lever::Shard { .. } => LeverGroup::Serving,
+            Lever::Offload { .. } => LeverGroup::Placement,
         }
     }
 
@@ -156,6 +270,12 @@ impl Lever {
             // per-token cost floor — so even a hop-dominated deep pipeline
             // stays within Rx of the unsharded step
             Lever::Shard { engines, .. } => (*engines).max(1) as f64,
+            // a link can stall the loop arbitrarily relative to the step it
+            // feeds (the transfer time is workload-sized, the step is not),
+            // so placement carries no finite platform-free slowdown bound;
+            // the `offload` experiment checks the exact accounting instead
+            // (link time exceeding the hidden phase must never win)
+            Lever::Offload { .. } => f64::INFINITY,
             _ => 1.02,
         }
     }
@@ -246,6 +366,20 @@ mod tests {
     }
 
     #[test]
+    fn acceptance_expectation_clamps_the_alpha_one_singularity() {
+        // REGRESSION: at α = 1.0 the closed form is 0/0 — the numerator is
+        // exactly 0.0, the clamped denominator 1e-9, so E collapsed to 0 and
+        // `modeled_overhead` divided to inf. The analytic limit is γ + 1.
+        assert_eq!(expected_accepted(4, 1.0), 5.0);
+        assert_eq!(expected_accepted(2, 1.5), 3.0, "α past 1 clamps to the same limit");
+        let spec = Lever::Speculate { gamma: 4, alpha: 1.0 };
+        assert!(spec.modeled_overhead().is_finite());
+        assert_eq!(spec.modeled_overhead(), (4.0 + 2.0) / 5.0);
+        // the limit is continuous: α = 1 - ε must land next to γ + 1
+        assert!((expected_accepted(4, 1.0 - 1e-7) - 5.0).abs() < 1e-4);
+    }
+
+    #[test]
     fn shard_lever_surface() {
         let rep = Lever::Shard { mode: ShardMode::Replicate, engines: 4 };
         let pipe = Lever::Shard { mode: ShardMode::PipelineDecoder, engines: 4 };
@@ -264,6 +398,44 @@ mod tests {
         let mut o = SimOptions::default();
         pipe.apply_options(&mut o);
         assert_eq!(o.pim_scope, SimOptions::default().pim_scope);
+    }
+
+    #[test]
+    fn offload_lever_surface() {
+        let vp = Lever::Offload { mode: OffloadMode::VisionPrefillRemote, link: NetLink::five_g() };
+        let dec = Lever::Offload { mode: OffloadMode::DecodeRemote, link: NetLink::wired() };
+        assert_eq!(vp.short(), "vp@cloud(5g)");
+        assert_eq!(dec.short(), "dec@cloud(wired)");
+        assert_eq!(vp.group(), LeverGroup::Placement);
+        assert_eq!(dec.group(), LeverGroup::Placement);
+        assert!(!vp.requires_pim() && !dec.requires_pim());
+        assert!(vp.valid_on(&platform::orin()), "offload needs no PIM hardware");
+        assert!(vp.modeled_overhead().is_infinite(), "no finite platform-free slowdown bound");
+        // placement transforms neither the workload config nor the options:
+        // the evaluator owns the phase substitution and the link charge
+        let mut c = tiny_test_config();
+        vp.apply_config(&mut c);
+        assert_eq!(c, tiny_test_config());
+        let mut o = SimOptions::default();
+        dec.apply_options(&mut o);
+        assert_eq!(o.pim_scope, SimOptions::default().pim_scope);
+        assert_eq!(o.pim_stream_dispatch, SimOptions::default().pim_stream_dispatch);
+        // link grammar: presets parse, garbage is rejected, labels roundtrip
+        assert_eq!(NetLink::parse("5g").unwrap(), NetLink::five_g());
+        assert_eq!(NetLink::parse("WiFi6").unwrap(), NetLink::wifi6());
+        assert_eq!(NetLink::parse("fiber").unwrap(), NetLink::wired());
+        assert!(NetLink::parse("frobnicate").is_err());
+        assert_eq!(NetLink::presets().len(), 3);
+        for l in NetLink::presets() {
+            assert_eq!(NetLink::parse(&l.label()).unwrap(), l);
+        }
+        assert_eq!(
+            NetLink { latency_s: 0.002, bw_gbps: 4.0, usd_per_month: 1.0 }.label(),
+            "2ms/4g"
+        );
+        assert_eq!(OffloadMode::parse("vp").unwrap(), OffloadMode::VisionPrefillRemote);
+        assert_eq!(OffloadMode::parse("decode").unwrap(), OffloadMode::DecodeRemote);
+        assert!(OffloadMode::parse("sideways").is_err());
     }
 
     #[test]

@@ -11,6 +11,8 @@
 //! | spec/batch | — · spec(γ,α) per γ×α point (4×0.7) · spec@PIM(γ,α) per   |
 //! |            | γ×α point · b`s` per `g.batch_streams` (b8)               |
 //! | serving    | — · rep`R` · pipe`R` per `g.shard_engines` (empty)        |
+//! | placement  | — · mode(link) per `g.offload_modes` × `g.offload_links`  |
+//! |            | (both empty)                                              |
 //!
 //! Speculation and batching share one axis because they are mutually
 //! exclusive (verification already batches the target pass), so the axis is
@@ -20,13 +22,15 @@
 //! need a PIM device, and a PIM-resident draft claims the PIM units, so it
 //! excludes the weight/KV residency values. The serving axis (shard
 //! topologies, from `engine::shard`) is valid everywhere and composes with
-//! everything, so it multiplies the count. Closed form of the valid total,
-//! with `T = 1 + |trace|`, `G = |γ|·|α|`, `B = |batch|`,
-//! `S = 1 + 2·|shards|`:
+//! everything, so it multiplies the count — and so does the placement axis
+//! (edge-to-cloud offload, `Lever::Offload`), which has no validity
+//! interaction with any other group. Closed form of the valid total, with
+//! `T = 1 + |trace|`, `G = |γ|·|α|`, `B = |batch|`, `S = 1 + 2·|shards|`,
+//! `O = 1 + |offload modes|·|links|`:
 //!
-//! - non-PIM platform: `3 (weights) x 2 (kv) x T x (1 + G + B) x S`
+//! - non-PIM platform: `3 (weights) x 2 (kv) x T x (1 + G + B) x S x O`
 //! - PIM platform:     `[5 x 3 x T x (1 + G + B)`  (SoC spec/batch branch)
-//!                     `+ 3 x 2 x T x G] x S`      (PIM-draft branch)
+//!                     `+ 3 x 2 x T x G] x S x O`  (PIM-draft branch)
 //!
 //! At the degenerate [`LeverGrid::legacy`] (γ×α = {4}×{0.7}, trace {0.5},
 //! no batch axis) this is the original 72 (PIM) / 24 (SoC) matrix, element
@@ -34,7 +38,7 @@
 //! the tests pin it against the enumeration so an axis or rule change
 //! cannot silently shrink coverage.
 
-use super::{Lever, Scenario};
+use super::{Lever, NetLink, OffloadMode, Scenario};
 use crate::engine::shard::ShardMode;
 use crate::hw::Platform;
 
@@ -65,6 +69,12 @@ pub struct LeverGrid {
     /// a pipeline-decoder point to the serving axis. Empty = no shard axis
     /// (the pre-serving matrix, bit for bit).
     pub shard_engines: Vec<u64>,
+    /// Phase-placement modes of the offload axis; crossed with
+    /// `offload_links`. Either empty = no placement axis (the pre-offload
+    /// matrix, bit for bit — the same discipline as the shard axis).
+    pub offload_modes: Vec<OffloadMode>,
+    /// Network links the offload modes are evaluated over.
+    pub offload_links: Vec<NetLink>,
 }
 
 impl LeverGrid {
@@ -78,6 +88,20 @@ impl LeverGrid {
             trace_factors: vec![TRACE_FACTOR],
             batch_streams: Vec::new(),
             shard_engines: Vec::new(),
+            offload_modes: Vec::new(),
+            offload_links: Vec::new(),
+        }
+    }
+
+    /// The sharded default extended with the canonical placement axis:
+    /// both offload modes over the three link presets (5G / WiFi-6 /
+    /// wired), `O = 7` — what the `offload` experiment and the perf bench
+    /// sweep: 3570 scenarios on a PIM platform, 1260 on a SoC.
+    pub fn default_phase2_offload() -> LeverGrid {
+        LeverGrid {
+            offload_modes: OffloadMode::all(),
+            offload_links: NetLink::presets(),
+            ..LeverGrid::default_phase2_sharded()
         }
     }
 
@@ -160,6 +184,21 @@ fn shard_axis(grid: &LeverGrid) -> Vec<Option<Lever>> {
     v
 }
 
+/// The placement axis: none, then mode-major over the link grid
+/// (`vp@cloud` across every link, then `dec@cloud` across every link).
+/// Valid on every platform — the cloud tier and the link are lever
+/// parameters, not platform properties — so it multiplies the closed form
+/// like the serving axis does.
+fn offload_axis(grid: &LeverGrid) -> Vec<Option<Lever>> {
+    let mut v = vec![None];
+    for &mode in &grid.offload_modes {
+        for &link in &grid.offload_links {
+            v.push(Some(Lever::Offload { mode, link }));
+        }
+    }
+    v
+}
+
 /// Every valid scenario for `platform` at the grid's parameter points, in
 /// deterministic axis order. The first entry is always the baseline (all
 /// axes at `None`).
@@ -170,11 +209,13 @@ pub fn scenario_matrix_grid(platform: &Platform, grid: &LeverGrid) -> Vec<Scenar
             for t in &trace_axis(grid) {
                 for s in &spec_batch_axis(grid) {
                     for sh in &shard_axis(grid) {
-                        let levers: Vec<Lever> =
-                            [w, k, t, s, sh].into_iter().cloned().flatten().collect();
-                        let scenario = Scenario::of(levers);
-                        if scenario.validate(platform).is_ok() {
-                            out.push(scenario);
+                        for of in &offload_axis(grid) {
+                            let levers: Vec<Lever> =
+                                [w, k, t, s, sh, of].into_iter().cloned().flatten().collect();
+                            let scenario = Scenario::of(levers);
+                            if scenario.validate(platform).is_ok() {
+                                out.push(scenario);
+                            }
                         }
                     }
                 }
@@ -200,12 +241,13 @@ pub fn matrix_size_grid(platform: &Platform, grid: &LeverGrid) -> usize {
     let b = grid.batch_streams.len();
     // the serving axis (none + replicate-R + pipeline-R per engine count)
     // composes with every other lever on every platform, so it multiplies
-    // the whole count
+    // the whole count — and so does the placement axis (none + mode × link)
     let sh = 1 + 2 * grid.shard_engines.len();
+    let o = 1 + grid.offload_modes.len() * grid.offload_links.len();
     if platform.mem.pim.is_some() {
-        (5 * 3 * t * (1 + g + b) + 3 * 2 * t * g) * sh
+        (5 * 3 * t * (1 + g + b) + 3 * 2 * t * g) * sh * o
     } else {
-        3 * 2 * t * (1 + g + b) * sh
+        3 * 2 * t * (1 + g + b) * sh * o
     }
 }
 
@@ -254,6 +296,8 @@ mod tests {
             trace_factors: vec![0.25, 0.5],
             batch_streams: vec![4, 16],
             shard_engines: Vec::new(),
+            offload_modes: Vec::new(),
+            offload_links: Vec::new(),
         };
         // T = 3, G = 9, B = 2
         let pim = scenario_matrix_grid(&platform::orin_pim(), &grid);
@@ -302,6 +346,60 @@ mod tests {
         // and the empty shard axis is the pre-serving matrix, bit for bit
         let legacy = scenario_matrix_grid(&platform::orin_pim(), &LeverGrid::default_phase2());
         assert_eq!(legacy.len(), 102);
+    }
+
+    #[test]
+    fn offload_axis_multiplies_the_closed_form() {
+        // 2 modes x 3 links -> O = 7: the placement axis composes with
+        // every other lever on every platform (no validity interactions)
+        let grid = LeverGrid::default_phase2_offload();
+        for p in [platform::orin(), platform::orin_pim()] {
+            let m = scenario_matrix_grid(&p, &grid);
+            assert_eq!(m.len(), matrix_size_grid(&p, &grid), "{}", p.name);
+            let base = matrix_size_grid(&p, &LeverGrid::default_phase2_sharded());
+            assert_eq!(m.len(), base * 7, "{}", p.name);
+            // every mode x link point surfaces as its own scenario tag
+            for tag in [
+                "vp@cloud(5g)",
+                "vp@cloud(wifi6)",
+                "vp@cloud(wired)",
+                "dec@cloud(5g)",
+                "dec@cloud(wifi6)",
+                "dec@cloud(wired)",
+            ] {
+                assert!(
+                    m.iter().any(|s| s.name.split(" + ").any(|part| part == tag)),
+                    "{}: `{tag}` missing from the placement axis",
+                    p.name
+                );
+            }
+        }
+        // the canonical offload grid sizes the perf bench pins
+        assert_eq!(matrix_size_grid(&platform::thor_hbm4_pim(), &grid), 3570);
+        assert_eq!(matrix_size_grid(&platform::orin(), &grid), 1260);
+    }
+
+    #[test]
+    fn empty_offload_axis_is_the_pre_offload_matrix() {
+        // either empty vector drops the whole axis: the enumeration must be
+        // EQUAL (same scenarios, same order) to the pre-offload matrix
+        let base = scenario_matrix_grid(&platform::orin_pim(), &LeverGrid::default_phase2());
+        for grid in [
+            LeverGrid::default_phase2(),
+            LeverGrid {
+                offload_modes: OffloadMode::all(),
+                offload_links: Vec::new(),
+                ..LeverGrid::default_phase2()
+            },
+            LeverGrid {
+                offload_modes: Vec::new(),
+                offload_links: NetLink::presets(),
+                ..LeverGrid::default_phase2()
+            },
+        ] {
+            assert_eq!(scenario_matrix_grid(&platform::orin_pim(), &grid), base);
+            assert_eq!(matrix_size_grid(&platform::orin_pim(), &grid), 102);
+        }
     }
 
     #[test]

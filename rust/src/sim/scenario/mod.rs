@@ -56,9 +56,10 @@ mod matrix;
 
 pub use cache::{CacheStats, EvalCache};
 pub use eval::{
-    pareto_front, pim_speculative_decode, speculative_decode, Evaluator, ScenarioResult,
+    pareto_front, pareto_front3, pim_speculative_decode, speculative_decode, Evaluator,
+    ScenarioResult,
 };
-pub use lever::{quantize_weights, Lever, LeverGroup};
+pub use lever::{quantize_weights, Lever, LeverGroup, NetLink, OffloadMode};
 pub use matrix::{
     matrix_size, matrix_size_grid, scenario_matrix, scenario_matrix_grid, LeverGrid, BATCH_STREAMS,
     SPEC_ALPHA, SPEC_GAMMA, TRACE_FACTOR,
@@ -166,7 +167,9 @@ impl Scenario {
     /// - a PIM-resident draft claims the PIM units, excluding the other
     ///   PIM-residency levers;
     /// - batching does not compose with speculation (verification already
-    ///   batches the target pass).
+    ///   batches the target pass);
+    /// - an offload link must be physically meaningful: finite latency
+    ///   ≥ 0, finite bandwidth > 0, finite cost ≥ 0.
     pub fn validate(&self, platform: &Platform) -> anyhow::Result<()> {
         for (i, a) in self.levers.iter().enumerate() {
             for b in &self.levers[i + 1..] {
@@ -212,6 +215,26 @@ impl Scenario {
                 *engines >= 1,
                 "scenario `{}`: a shard topology needs at least one engine",
                 self.name
+            );
+        }
+        if let Some(Lever::Offload { link, .. }) = self.lever(LeverGroup::Placement) {
+            anyhow::ensure!(
+                link.latency_s.is_finite() && link.latency_s >= 0.0,
+                "scenario `{}`: offload link latency must be finite and >= 0 (got {})",
+                self.name,
+                link.latency_s
+            );
+            anyhow::ensure!(
+                link.bw_gbps.is_finite() && link.bw_gbps > 0.0,
+                "scenario `{}`: offload link bandwidth must be finite and > 0 (got {})",
+                self.name,
+                link.bw_gbps
+            );
+            anyhow::ensure!(
+                link.usd_per_month.is_finite() && link.usd_per_month >= 0.0,
+                "scenario `{}`: offload link cost must be finite and >= 0 (got {})",
+                self.name,
+                link.usd_per_month
             );
         }
         Ok(())
@@ -342,6 +365,53 @@ mod tests {
         // zero engines is structurally invalid
         let zero = Scenario::of(vec![Lever::Shard { mode: ShardMode::Replicate, engines: 0 }]);
         assert!(zero.validate(&platform::orin()).is_err());
+    }
+
+    #[test]
+    fn offload_lever_validity_and_footprint() {
+        // offload is valid on every platform — the cloud tier and the link
+        // are lever parameters, not platform properties
+        let s = Scenario::of(vec![Lever::Offload {
+            mode: OffloadMode::VisionPrefillRemote,
+            link: NetLink::five_g(),
+        }]);
+        assert!(s.validate(&platform::orin()).is_ok());
+        assert!(s.validate(&platform::thor_hbm4_pim()).is_ok());
+        assert_eq!(s.name, "vp@cloud(5g)");
+        // ...and it composes with every other group
+        let stacked = Scenario::of(vec![
+            Lever::QuantizeWeights { bits: 4 },
+            Lever::Offload { mode: OffloadMode::DecodeRemote, link: NetLink::wired() },
+        ]);
+        assert!(stacked.validate(&platform::orin()).is_ok());
+        // degenerate link parameters are structurally invalid
+        for bad in [
+            NetLink { latency_s: -0.001, ..NetLink::five_g() },
+            NetLink { latency_s: f64::NAN, ..NetLink::five_g() },
+            NetLink { bw_gbps: 0.0, ..NetLink::five_g() },
+            NetLink { bw_gbps: -1.0, ..NetLink::five_g() },
+            NetLink { bw_gbps: f64::INFINITY, ..NetLink::five_g() },
+            NetLink { usd_per_month: -5.0, ..NetLink::five_g() },
+            NetLink { usd_per_month: f64::NAN, ..NetLink::five_g() },
+        ] {
+            let s = Scenario::of(vec![Lever::Offload {
+                mode: OffloadMode::VisionPrefillRemote,
+                link: bad,
+            }]);
+            assert!(s.validate(&platform::orin()).is_err(), "{bad:?} should be rejected");
+        }
+        // the edge device keeps the full model resident (fallback-local
+        // operation), so placement does not change the local footprint
+        use crate::model::molmoact::molmoact_7b;
+        use crate::model::scaling::scaled_vla;
+        let target = molmoact_7b();
+        let draft = scaled_vla(2.0);
+        let base = Scenario::baseline().memory_footprint(&target, &draft);
+        let off = Scenario::of(vec![Lever::Offload {
+            mode: OffloadMode::DecodeRemote,
+            link: NetLink::wifi6(),
+        }]);
+        assert_eq!(off.memory_footprint(&target, &draft).to_bits(), base.to_bits());
     }
 
     #[test]

@@ -27,18 +27,20 @@ fn registry_covers_every_subcommand() {
         "ablate",
         "codesign",
         "pim",
+        "offload",
         "energy",
         "batch",
         "step",
         "control-loop",
         "serve",
         "fleet",
+        "telemetry",
         "validate",
     ] {
         assert!(names.contains(&want), "subcommand `{want}` has no registered experiment");
         assert!(experiment::by_name(want).is_some());
     }
-    assert_eq!(names.len(), 13, "new experiments must be added to this completeness list");
+    assert_eq!(names.len(), 15, "new experiments must be added to this completeness list");
 }
 
 /// Every registered experiment runs against one shared context, passes its
@@ -74,6 +76,7 @@ fn every_experiment_runs_and_emits() {
         "codesign_matrix.md",
         "energy.csv",
         "pim_matrix.csv",
+        "offload_matrix.csv",
         "serve_matrix.csv",
         "serve_topology.md",
         "fleet_policies.csv",
@@ -120,6 +123,36 @@ fn serve_experiment_runs_without_pjrt_and_checks_pass() {
     assert_eq!(topo.n_rows(), 5);
     let (_, matrix) = rep.tables().find(|(s, _)| *s == "serve_matrix").unwrap();
     assert_eq!(matrix.n_rows(), 5 * 3 * 3);
+}
+
+/// The `offload` experiment emits the ranked placement matrix (with the
+/// Hz / J/action / $/action objective columns), covers every enumerated
+/// placement, and passes its O1..O4 checks — including the bitwise
+/// all-local-vs-baseline comparison and the link-cost floor.
+#[test]
+fn offload_experiment_emits_ranked_placement_matrix() {
+    let ctx = ExpContext {
+        options: SimOptions { decode_stride: 32, ..Default::default() },
+        platforms: vec![platform::orin(), platform::orin_pim()],
+        pim_sizes: vec![7.0],
+        top: 0,
+        ..Default::default()
+    };
+    let rep = experiment::by_name("offload").unwrap().run(&ctx).unwrap();
+    assert!(rep.passed(), "offload checks must pass");
+    let ids: Vec<&str> = rep.checks.iter().map(|c| c.id).collect();
+    for want in
+        ["O1-all-local-bitwise", "O2-link-cost-floor", "O3-no-silent-drops", "O4-pareto3-front"]
+    {
+        assert!(ids.contains(&want), "missing check {want}");
+    }
+    let (_, t) = rep.tables().find(|(s, _)| *s == "offload_matrix").unwrap();
+    assert!(t.title.contains("placement matrix"), "title: {}", t.title);
+    // default grid (102 PIM + 36 SoC rows) x the armed axis (1 + 2x3)
+    assert_eq!(t.n_rows(), (102 + 36) * 7);
+    for col in ["Hz", "J/action", "$/action", "link (ms)"] {
+        assert!(t.headers().iter().any(|h| h.as_str() == col), "missing column {col}");
+    }
 }
 
 /// The refactor of `sim::codesign` onto the scenario engine must reproduce

@@ -12,7 +12,8 @@ use vla_char::model::molmoact::molmoact_7b;
 use vla_char::model::scaling::{scaled_vla, ANCHOR_SIZES_B};
 use vla_char::model::Operator;
 use vla_char::sim::scenario::{
-    matrix_size_grid, pareto_front, scenario_matrix_grid, Lever, LeverGrid, Scenario,
+    matrix_size_grid, pareto_front, pareto_front3, scenario_matrix_grid, Lever, LeverGrid, NetLink,
+    OffloadMode, Scenario,
 };
 use vla_char::sim::{cost_on_soc, cost_op, SimOptions, Simulator};
 use vla_char::util::json::Json;
@@ -199,6 +200,53 @@ fn pareto_front_laws_on_random_point_clouds() {
             }
         }
         Ok(())
+    });
+}
+
+#[test]
+fn pareto_front3_laws_on_random_point_clouds() {
+    // the three-objective ranking's laws: mutual non-domination, full
+    // coverage of the dominated set, and 2-objective degeneracy when the
+    // third axis carries no information (all-local rows share $/action 0)
+    prop_check("3-objective pareto front laws", 200, |rng| {
+        let n = rng.uniform_usize(1, 60);
+        let pts: Vec<(f64, f64, f64)> = (0..n)
+            .map(|_| {
+                (
+                    rng.uniform_f64(0.1, 10.0),
+                    rng.uniform_f64(0.1, 10.0),
+                    rng.uniform_f64(0.1, 10.0),
+                )
+            })
+            .collect();
+        let front = pareto_front3(&pts);
+        ensure(!front.is_empty(), "front of a non-empty set is non-empty")?;
+        let dom = |a: (f64, f64, f64), b: (f64, f64, f64)| -> bool {
+            a.0 >= b.0 && a.1 <= b.1 && a.2 <= b.2 && (a.0 > b.0 || a.1 < b.1 || a.2 < b.2)
+        };
+        for &i in &front {
+            for &j in &front {
+                if i != j {
+                    ensure(!dom(pts[j], pts[i]), format!("front member {j} dominates {i}"))?;
+                }
+            }
+        }
+        for k in 0..n {
+            if !front.contains(&k) {
+                ensure(
+                    front.iter().any(|&i| dom(pts[i], pts[k])),
+                    format!("non-front point {k} undominated"),
+                )?;
+            }
+        }
+        // a constant third objective must reduce to the 2-objective front,
+        // index for index (both functions preserve input order)
+        let flat: Vec<(f64, f64, f64)> = pts.iter().map(|p| (p.0, p.1, 1.0)).collect();
+        let flat2: Vec<(f64, f64)> = pts.iter().map(|p| (p.0, p.1)).collect();
+        ensure(
+            pareto_front3(&flat) == pareto_front(&flat2),
+            "constant $/action must degenerate to the 2-objective front",
+        )
     });
 }
 
@@ -424,12 +472,24 @@ fn grid_closed_form_matches_enumeration_on_random_grids() {
         };
         let n_alpha = rng.uniform_usize(1, 4);
         let n_trace = rng.uniform_usize(0, 3);
+        let mut modes = Vec::new();
+        if rng.next_f64() < 0.5 {
+            modes.push(OffloadMode::VisionPrefillRemote);
+        }
+        if rng.next_f64() < 0.5 {
+            modes.push(OffloadMode::DecodeRemote);
+        }
+        let links: Vec<NetLink> = (0..rng.uniform_usize(0, 3))
+            .map(|_| *rng.choose(&[NetLink::five_g(), NetLink::wifi6(), NetLink::wired()]))
+            .collect();
         let grid = LeverGrid {
             spec_gammas: list_u64(rng, 3, 1, 9),
             spec_alphas: (0..n_alpha).map(|_| rng.uniform_f64(0.1, 0.9)).collect(),
             trace_factors: (0..n_trace).map(|_| rng.uniform_f64(0.1, 0.9)).collect(),
             batch_streams: list_u64(rng, 2, 2, 33),
             shard_engines: list_u64(rng, 2, 1, 9),
+            offload_modes: modes,
+            offload_links: links,
         };
         for p in [platform::orin(), platform::orin_pim()] {
             let n = scenario_matrix_grid(&p, &grid).len();

@@ -11,7 +11,8 @@ use vla_char::model::molmoact::molmoact_7b;
 use vla_char::model::scaling::scaled_vla;
 use vla_char::sim::scenario::{
     matrix_size, matrix_size_grid, pareto_front, scenario_matrix, scenario_matrix_grid, EvalCache,
-    Evaluator, Lever, LeverGrid, LeverGroup, Scenario, ScenarioResult, SPEC_ALPHA, SPEC_GAMMA,
+    Evaluator, Lever, LeverGrid, LeverGroup, NetLink, OffloadMode, Scenario, ScenarioResult,
+    SPEC_ALPHA, SPEC_GAMMA,
 };
 use vla_char::sim::{sweep, Bound, SimOptions};
 
@@ -54,6 +55,8 @@ fn grid_closed_form_pinned_against_enumeration() {
         trace_factors: vec![0.25, 0.5],
         batch_streams: vec![4, 16],
         shard_engines: Vec::new(),
+        offload_modes: Vec::new(),
+        offload_links: Vec::new(),
     };
     let sharded = LeverGrid { shard_engines: vec![2, 4], ..LeverGrid::default_phase2() };
     for grid in [LeverGrid::legacy(), LeverGrid::default_phase2(), expanded, sharded] {
@@ -107,7 +110,7 @@ fn validity_rules_reject_impossible_combos() {
 
 /// ACCEPTANCE: the scenario sweep must be a pure reordering of the serial
 /// path — bitwise, over every cell of the EXPANDED (grid) matrix of a PIM
-/// platform, energy and capacity outputs included.
+/// platform, energy, capacity, AND placement (link/$) outputs included.
 #[test]
 fn parallel_scenario_sweep_matches_serial_bitwise() {
     let p = platform::orin_pim();
@@ -118,6 +121,8 @@ fn parallel_scenario_sweep_matches_serial_bitwise() {
         trace_factors: vec![0.5],
         batch_streams: vec![8],
         shard_engines: vec![2],
+        offload_modes: OffloadMode::all(),
+        offload_links: vec![NetLink::five_g()],
     };
     let matrix = scenario_matrix_grid(&p, &grid);
     assert!(matrix.len() > 72, "the grid must EXPAND the legacy matrix");
@@ -132,6 +137,8 @@ fn parallel_scenario_sweep_matches_serial_bitwise() {
             r.total_j.to_bits(),
             r.j_per_action.to_bits(),
             r.aggregate_hz.to_bits(),
+            r.link_s.to_bits(),
+            r.usd_per_action.to_bits(),
             (r.footprint_gb.to_bits(), r.fits_capacity, r.streams, r.engines),
         )
     };
@@ -334,6 +341,8 @@ fn result_bits(r: &ScenarioResult) -> (Vec<String>, Vec<u64>, (Bound, u64, u64, 
             r.total_j.to_bits(),
             r.j_per_action.to_bits(),
             r.avg_watts.to_bits(),
+            r.link_s.to_bits(),
+            r.usd_per_action.to_bits(),
             r.footprint_gb.to_bits(),
             r.capacity_gb.to_bits(),
         ],
@@ -429,6 +438,13 @@ fn random_lever_stacks_cached_eval_is_bitwise_fresh() {
                 mode: *rng.choose(&[ShardMode::Replicate, ShardMode::PipelineDecoder]),
                 engines: *rng.choose(&[2u64, 4]),
             },
+            Lever::Offload {
+                mode: *rng.choose(&[
+                    OffloadMode::VisionPrefillRemote,
+                    OffloadMode::DecodeRemote,
+                ]),
+                link: *rng.choose(&[NetLink::five_g(), NetLink::wifi6(), NetLink::wired()]),
+            },
         ];
         let mut stack: Vec<Lever> =
             candidates.into_iter().filter(|_| rng.next_f64() < 0.4).collect();
@@ -455,6 +471,63 @@ fn random_lever_stacks_cached_eval_is_bitwise_fresh() {
             )),
         }
     });
+}
+
+/// ACCEPTANCE: the placement axis multiplies the closed form like every
+/// other axis — the full offload grid (both modes x three link presets,
+/// O = 7) enumerates, validates, and pins at 3570/1260 rows on the
+/// PIM/SoC archetypes; dropping EITHER offload vector collapses the grid
+/// back to the pre-offload sharded matrix.
+#[test]
+fn offload_grid_closed_form_pinned_against_enumeration() {
+    let grid = LeverGrid::default_phase2_offload();
+    for p in platform::sweep_platforms() {
+        let m = scenario_matrix_grid(&p, &grid);
+        assert_eq!(m.len(), matrix_size_grid(&p, &grid), "{}: closed form diverged", p.name);
+        for s in &m {
+            assert!(s.validate(&p).is_ok(), "{}: `{}` invalid", p.name, s.name);
+        }
+    }
+    assert_eq!(matrix_size_grid(&platform::orin_pim(), &grid), 3570, "510 x (1 + 2x3)");
+    assert_eq!(matrix_size_grid(&platform::orin(), &grid), 1260, "180 x (1 + 2x3)");
+    for dropped in [
+        LeverGrid { offload_links: Vec::new(), ..grid.clone() },
+        LeverGrid { offload_modes: Vec::new(), ..grid.clone() },
+    ] {
+        assert_eq!(
+            matrix_size_grid(&platform::orin_pim(), &dropped),
+            matrix_size_grid(&platform::orin_pim(), &LeverGrid::default_phase2_sharded()),
+            "an empty offload vector must drop the placement axis"
+        );
+    }
+}
+
+/// TENTPOLE ACCEPTANCE: incremental evaluation stays bitwise the fresh
+/// path once placement levers enter the grid — the full offload legacy
+/// grid (72 x 7 = 504 rows) on the PIM ceiling, every output field
+/// including the link/$ columns, with warm repeats pinned too. The remote
+/// evaluator must register the cloud tier as its own cache context.
+#[test]
+fn incremental_eval_bitwise_matches_fresh_with_offload_levers() {
+    let p = platform::thor_hbm4_pim();
+    let cache = EvalCache::shared();
+    let ev = Evaluator::with_cache(&p, &opts(), &molmoact_7b(), &scaled_vla(2.0), &cache);
+    let grid = LeverGrid {
+        offload_modes: OffloadMode::all(),
+        offload_links: NetLink::presets(),
+        ..LeverGrid::legacy()
+    };
+    let matrix = scenario_matrix_grid(&p, &grid);
+    assert_eq!(matrix.len(), 72 * 7);
+    for sc in &matrix {
+        let fresh = ev.eval_fresh(sc).unwrap();
+        let inc = ev.eval(sc).unwrap();
+        let warm = ev.eval(sc).unwrap();
+        assert_eq!(result_bits(&fresh), result_bits(&inc), "`{}`", sc.name);
+        assert_eq!(result_bits(&inc), result_bits(&warm), "`{}` warm", sc.name);
+    }
+    // the edge context plus the cloud tier the remote phases lower on
+    assert!(cache.stats().contexts >= 2, "cloud context missing: {:?}", cache.stats());
 }
 
 /// Every scenario of the matrix reports a sane classification and a

@@ -48,6 +48,15 @@ cargo run --release -- pim --pareto --top 10 | tee reports/pim_pareto_top10.txt
 grep -E "Pareto front \(per-stream\): [1-9]" reports/pim_pareto_top10.txt >/dev/null \
     || { echo "ERROR: empty Pareto front in pim report"; exit 1; }
 
+echo "==> vla-char offload smoke (edge-to-cloud placement matrix, link presets)"
+cargo run --release -- offload --top 10 | tee reports/offload_top10.txt
+grep -E "placement matrix" reports/offload_top10.txt >/dev/null \
+    || { echo "ERROR: no ranked placement matrix in offload report"; exit 1; }
+grep -E "5g/wifi6/wired" reports/offload_top10.txt >/dev/null \
+    || { echo "ERROR: link presets missing from the placement matrix title"; exit 1; }
+grep -E "Pareto front \(Hz vs J/action vs [\$]/action\): [1-9]" reports/offload_top10.txt >/dev/null \
+    || { echo "ERROR: empty 3-objective Pareto front in offload report"; exit 1; }
+
 echo "==> vla-char serve smoke (simulator-backed shard serving, both topologies)"
 cargo run --release -- serve --shards 1,2,4 --deadline-ms 200 --top 0 \
     | tee reports/serve_shards.txt
