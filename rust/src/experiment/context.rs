@@ -202,7 +202,9 @@ impl ExpContext {
             Some(list) => {
                 let mut links = Vec::new();
                 for name in list.split(',') {
-                    links.push(NetLink::parse(name).map_err(|e| anyhow::anyhow!("`--links`: {e}"))?);
+                    links.push(
+                        NetLink::parse(name).map_err(|e| anyhow::anyhow!("`--links`: {e}"))?,
+                    );
                 }
                 links
             }
@@ -211,12 +213,23 @@ impl ExpContext {
             None | Some("both") | Some("") => OffloadMode::all(),
             Some("none") => Vec::new(),
             Some(list) => {
-                let mut modes = Vec::new();
+                // `both` expands to the full pair wherever it appears in
+                // the list (so `vp,both` works, not only bare `both`);
+                // dedup keeps the matrix axis free of duplicate scenarios
+                let mut modes: Vec<OffloadMode> = Vec::new();
                 for name in list.split(',') {
-                    modes.push(
-                        OffloadMode::parse(name)
-                            .map_err(|e| anyhow::anyhow!("`--offload-modes`: {e}"))?,
-                    );
+                    let adds = if name.trim().eq_ignore_ascii_case("both") {
+                        OffloadMode::all()
+                    } else {
+                        let m = OffloadMode::parse(name)
+                            .map_err(|e| anyhow::anyhow!("`--offload-modes`: {e}"))?;
+                        vec![m]
+                    };
+                    for m in adds {
+                        if !modes.contains(&m) {
+                            modes.push(m);
+                        }
+                    }
                 }
                 modes
             }
@@ -577,6 +590,13 @@ mod tests {
         assert_eq!(ctx.offload_links, vec![NetLink::five_g(), NetLink::wired()]);
         assert_eq!(ctx.offload_modes, vec![OffloadMode::VisionPrefillRemote]);
         assert_eq!(ctx.lever_grid().offload_links, vec![NetLink::five_g(), NetLink::wired()]);
+        // `both` expands inside a list too (it used to be accepted only
+        // as the entire flag value, while the parse error claimed it was
+        // a known mode), and the expansion dedups against explicit entries
+        let a = parse(&["offload", "--offload-modes", "vp,both"]);
+        assert_eq!(ExpContext::from_args(&a).unwrap().offload_modes, OffloadMode::all());
+        let a = parse(&["offload", "--offload-modes", "both,dec"]);
+        assert_eq!(ExpContext::from_args(&a).unwrap().offload_modes, OffloadMode::all());
         // `none` on either flag drops the axis
         let none = parse(&["offload", "--links", "none"]);
         assert!(ExpContext::from_args(&none).unwrap().offload_links.is_empty());

@@ -8,6 +8,8 @@
 //! an independently evaluated non-offload matrix, so arming the axis is
 //! proven to leave the local economics untouched.
 
+use std::collections::HashMap;
+
 use super::{ExpContext, Experiment, Report};
 use crate::hw::Platform;
 use crate::model::scaling::scaled_vla;
@@ -208,6 +210,15 @@ impl Experiment for Offload {
         rep.metric("pareto3_front_size", front.len() as f64);
         rep.metric("best_control_hz", best.control_hz);
 
+        // Index of the expanded matrix keyed on (size, platform, scenario):
+        // O1 looks up every baseline row and O2 every offload row's local
+        // counterpart, so linear scans over `ranked` would make the checks
+        // O(n*m) in the grid size (O3 guarantees the key is unique)
+        let by_key: HashMap<(u64, &str, &str), &ScenarioResult> = ranked
+            .iter()
+            .map(|(s, _, r)| ((s.to_bits(), r.platform.as_str(), r.scenario.as_str()), r))
+            .collect();
+
         // O1: arming the placement axis must not perturb local economics —
         // every all-local row of the expanded matrix is bitwise-equal to
         // the independently evaluated non-offload matrix (and carries an
@@ -215,10 +226,8 @@ impl Experiment for Offload {
         let mut o1_ok = true;
         let mut o1_checked = 0usize;
         for (s, _, br) in &base_rows {
-            match ranked.iter().find(|(rs, _, rr)| {
-                rs == s && rr.platform == br.platform && rr.scenario == br.scenario
-            }) {
-                Some((_, _, rr)) => {
+            match by_key.get(&(s.to_bits(), br.platform.as_str(), br.scenario.as_str())) {
+                Some(rr) => {
                     o1_checked += 1;
                     if rr.step_latency.to_bits() != br.step_latency.to_bits()
                         || rr.control_hz.to_bits() != br.control_hz.to_bits()
@@ -262,12 +271,9 @@ impl Experiment for Offload {
                     .collect(),
             )
             .name;
-            let local = ranked
-                .iter()
-                .find(|(ls, _, lr)| {
-                    ls == s && lr.platform == r.platform && lr.scenario == local_name
-                })
-                .map(|(_, _, lr)| lr)
+            let local = by_key
+                .get(&(s.to_bits(), r.platform.as_str(), local_name.as_str()))
+                .copied()
                 .ok_or_else(|| {
                     anyhow::anyhow!("`{local_name}` missing from the placement matrix")
                 })?;

@@ -658,7 +658,8 @@ impl Evaluator {
                         cfg.shape.decode_tokens as f64 * act_byte,
                     ),
                 };
-                2.0 * link.latency_s + (up + down) * s / (link.bw_gbps * 1e9)
+                // payloads are bytes, NetLink bandwidth is Gbit/s: x8
+                2.0 * link.latency_s + (up + down) * 8.0 * s / (link.bw_gbps * 1e9)
             }
             None => 0.0,
         };
@@ -679,12 +680,15 @@ impl Evaluator {
         // engine the `* 1.0` is a bitwise no-op.
         let total_j = agg_engines as f64 * engine_j;
         // link rent prorated over this step window, split across the
-        // actions the whole deployment emits in it ($/action is then
-        // topology-invariant the same way J/action is)
+        // actions the whole deployment emits in it. Each replica runs
+        // its own step and its own link (`link_s` charges one engine's
+        // `s` streams), so replicate-R rents R links — the engine count
+        // cancels and $/action is topology-invariant the same way
+        // J/action is. At one engine the `* 1.0` is a bitwise no-op.
         let usd_per_action = match placement {
             Some((_, link)) => {
                 let usd_per_s = link.usd_per_month / (30.0 * 24.0 * 3600.0);
-                usd_per_s * total / (agg_engines * streams * horizon) as f64
+                usd_per_s * agg_engines as f64 * total / (agg_engines * streams * horizon) as f64
             }
             None => 0.0,
         };
@@ -1161,7 +1165,9 @@ mod tests {
         let act_byte = t.decoder.dims.hidden as f64 * t.decoder.dims.dtype.bytes();
         let up = t.shape.image_tokens as f64 * act_byte;
         let down = t.shape.prefill_len() as f64 * t.decoder.kv_bytes_per_token();
-        let want_link = 2.0 * link.latency_s + (up + down) * 1.0 / (link.bw_gbps * 1e9);
+        // byte payload over a Gbit/s link: the bytes-to-bits x8 must be
+        // in the charge (a 10 Gbit wired link moves 1.25 GB/s, not 10)
+        let want_link = 2.0 * link.latency_s + (up + down) * 8.0 * 1.0 / (link.bw_gbps * 1e9);
         assert_eq!(vp.link_s.to_bits(), want_link.to_bits());
         // the step swaps exactly the vision/prefill phases and adds the link
         let want_total = rvp * 1.0 + base.decode_time + ev.base.action.time * 1.0 + vp.link_s;
@@ -1202,6 +1208,42 @@ mod tests {
             "edge dynamic {edge_dynamic} vs {want_dynamic}"
         );
         assert!(dec.usd_per_action > 0.0 && dec.link_s > 0.0);
+    }
+
+    #[test]
+    fn replicate_shards_get_no_link_rent_discount() {
+        // each replica runs its own step over its own link (`link_s`
+        // charges one engine's streams), so $/action can only grow under
+        // replication (contention lengthens the step) — the R-fold
+        // discount a shared-rent formula would grant is the bug pinned
+        // here: before the fix rep4 paid ~1/4 of solo's rent
+        let ev = evaluator(&platform::orin());
+        let link = NetLink::wifi6();
+        let solo = ev
+            .eval(&Scenario::of(vec![Lever::Offload {
+                mode: OffloadMode::VisionPrefillRemote,
+                link,
+            }]))
+            .unwrap();
+        let rep4 = ev
+            .eval(&Scenario::of(vec![
+                Lever::Shard { mode: ShardMode::Replicate, engines: 4 },
+                Lever::Offload { mode: OffloadMode::VisionPrefillRemote, link },
+            ]))
+            .unwrap();
+        assert!(
+            rep4.usd_per_action >= solo.usd_per_action,
+            "replication must not discount the link rent: {} vs {}",
+            rep4.usd_per_action,
+            solo.usd_per_action
+        );
+        // pinned: R links' rent over the step window, split across the
+        // R replicas' streams x horizon actions — the engine count
+        // cancels exactly, same topology invariance as J/action
+        let usd_per_s = link.usd_per_month / (30.0 * 24.0 * 3600.0);
+        let horizon = ev.target.action.horizon.max(1);
+        let want = usd_per_s * 4.0 * rep4.step_latency / ((4 * horizon) as f64);
+        assert_eq!(rep4.usd_per_action.to_bits(), want.to_bits());
     }
 
     #[test]

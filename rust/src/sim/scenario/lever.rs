@@ -71,8 +71,8 @@ pub enum LeverGroup {
 
 /// A typed edge-to-cloud network link: one-way latency, usable bandwidth,
 /// and the monthly subscription the deployment pays for it. The evaluator
-/// charges `bytes / bw + latency` per control-loop crossing on it, and the
-/// subscription amortizes into the $/action Pareto objective.
+/// charges `payload bits / bw + 2 x latency` per control-loop crossing on
+/// it, and the subscription amortizes into the $/action Pareto objective.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct NetLink {
     /// One-way latency per crossing (s).
@@ -155,12 +155,13 @@ impl OffloadMode {
         vec![OffloadMode::VisionPrefillRemote, OffloadMode::DecodeRemote]
     }
 
-    /// Parse an `--offload-modes` entry.
+    /// Parse an `--offload-modes` entry. `both` is not a mode — the CLI
+    /// list parser expands it to [`OffloadMode::all`] before it gets here.
     pub fn parse(name: &str) -> anyhow::Result<OffloadMode> {
         match name.trim().to_ascii_lowercase().as_str() {
             "vp" | "vision-prefill" => Ok(OffloadMode::VisionPrefillRemote),
             "decode" | "dec" => Ok(OffloadMode::DecodeRemote),
-            other => anyhow::bail!("unknown offload mode `{other}` (known: vp, decode, both)"),
+            other => anyhow::bail!("unknown offload mode `{other}` (known: vp, decode)"),
         }
     }
 }
@@ -200,8 +201,8 @@ pub enum Lever {
     /// latency = max stage time + inter-stage hop).
     Shard { mode: ShardMode, engines: u64 },
     /// Edge-to-cloud phase placement: run `mode`'s phases on the cloud
-    /// tier (`hw::platform::cloud_h100`), paying `bytes / bw + latency` on
-    /// `link` per control-loop crossing. The evaluator substitutes the
+    /// tier (`hw::platform::cloud_h100`), paying `payload bits / bw +
+    /// 2 x latency` on `link` per control-loop crossing. The evaluator substitutes the
     /// remote roofline for the offloaded phases and reports the link time
     /// and the amortized link cost as `link_s` / `usd_per_action`.
     Offload { mode: OffloadMode, link: NetLink },
