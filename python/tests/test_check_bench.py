@@ -1,0 +1,138 @@
+"""Unit tests for scripts/check_bench.py (the perf-baseline CI gate).
+
+The gate is exercised the way CI uses it — as a subprocess — over small
+baseline/current JSON pairs written to tmp_path: passing runs, each
+violation class (exact drift, missing metric, below-floor metric, bench
+name mismatch), tolerance behaviour, and malformed input.
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+SCRIPT = Path(__file__).resolve().parents[2] / "scripts" / "check_bench.py"
+
+
+def run_gate(*args):
+    return subprocess.run(
+        [sys.executable, str(SCRIPT), *map(str, args)],
+        capture_output=True,
+        text=True,
+    )
+
+
+def write(path, doc):
+    path.write_text(json.dumps(doc))
+    return path
+
+
+def baseline_doc():
+    return {
+        "bench": "sim_perf",
+        "exact": {"scenarios": 690},
+        "metrics": {"scenarios_per_s": 100.0},
+    }
+
+
+def matching_current():
+    return {
+        "bench": "sim_perf",
+        "exact": {"scenarios": 690},
+        "metrics": {"scenarios_per_s": 120.0},
+    }
+
+
+def test_matching_documents_pass(tmp_path):
+    base = write(tmp_path / "base.json", baseline_doc())
+    cur = write(tmp_path / "cur.json", matching_current())
+    r = run_gate(base, cur)
+    assert r.returncode == 0, r.stderr
+    assert "bench gate PASSED" in r.stdout
+
+
+def test_extra_current_keys_are_ignored(tmp_path):
+    cur_doc = matching_current()
+    cur_doc["exact"]["new_counter"] = 7
+    cur_doc["metrics"]["new_rate"] = 1.0
+    base = write(tmp_path / "base.json", baseline_doc())
+    cur = write(tmp_path / "cur.json", cur_doc)
+    assert run_gate(base, cur).returncode == 0
+
+
+def test_exact_drift_fails(tmp_path):
+    cur_doc = matching_current()
+    cur_doc["exact"]["scenarios"] = 691
+    base = write(tmp_path / "base.json", baseline_doc())
+    cur = write(tmp_path / "cur.json", cur_doc)
+    r = run_gate(base, cur)
+    assert r.returncode == 1
+    assert "exact.scenarios: expected 690, got 691" in r.stderr
+
+
+def test_missing_metric_fails(tmp_path):
+    cur_doc = matching_current()
+    del cur_doc["metrics"]["scenarios_per_s"]
+    base = write(tmp_path / "base.json", baseline_doc())
+    cur = write(tmp_path / "cur.json", cur_doc)
+    r = run_gate(base, cur)
+    assert r.returncode == 1
+    assert "metrics.scenarios_per_s: missing" in r.stderr
+
+
+def test_metric_below_floor_fails(tmp_path):
+    cur_doc = matching_current()
+    cur_doc["metrics"]["scenarios_per_s"] = 60.0  # floor 100, bound 75
+    base = write(tmp_path / "base.json", baseline_doc())
+    cur = write(tmp_path / "cur.json", cur_doc)
+    r = run_gate(base, cur)
+    assert r.returncode == 1
+    assert "below" in r.stderr
+
+
+def test_metric_within_tolerance_passes(tmp_path):
+    cur_doc = matching_current()
+    cur_doc["metrics"]["scenarios_per_s"] = 80.0  # >= 100 * (1 - 0.25)
+    base = write(tmp_path / "base.json", baseline_doc())
+    cur = write(tmp_path / "cur.json", cur_doc)
+    assert run_gate(base, cur).returncode == 0
+
+
+def test_tolerance_flag_tightens_the_bound(tmp_path):
+    cur_doc = matching_current()
+    cur_doc["metrics"]["scenarios_per_s"] = 95.0
+    base = write(tmp_path / "base.json", baseline_doc())
+    cur = write(tmp_path / "cur.json", cur_doc)
+    assert run_gate(base, cur, "--tolerance", "0.1").returncode == 0
+    assert run_gate(base, cur, "--tolerance", "0.01").returncode == 1
+
+
+def test_bench_name_mismatch_fails(tmp_path):
+    cur_doc = matching_current()
+    cur_doc["bench"] = "fleet"
+    base = write(tmp_path / "base.json", baseline_doc())
+    cur = write(tmp_path / "cur.json", cur_doc)
+    r = run_gate(base, cur)
+    assert r.returncode == 1
+    assert "bench name mismatch" in r.stderr
+
+
+def test_malformed_current_is_an_error(tmp_path):
+    base = write(tmp_path / "base.json", baseline_doc())
+    cur = tmp_path / "cur.json"
+    cur.write_text("{not json")
+    assert run_gate(base, cur).returncode != 0
+
+
+def test_usage_error_without_arguments():
+    assert run_gate().returncode == 2
+
+
+def test_checked_in_baselines_are_wellformed():
+    # the real baselines must stay loadable with the sections the gate reads
+    repo = SCRIPT.parents[1]
+    for name in ("BENCH_sim.json", "BENCH_fleet.json"):
+        doc = json.loads((repo / name).read_text())
+        assert isinstance(doc.get("bench"), str), name
+        assert doc.get("exact"), name
+        assert doc.get("metrics"), name

@@ -1,0 +1,155 @@
+"""Unit tests for scripts/check_events.py (the NDJSON telemetry validator).
+
+Each test pipes a small hand-built event stream through the script the way
+CI does (stdin or a file argument) and asserts the exit code plus the
+violation text: valid streams, every violation class (schema, framing,
+monotonicity, conservation, malformed lines), and the summary-only
+warn-and-skip path.
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+SCRIPT = Path(__file__).resolve().parents[2] / "scripts" / "check_events.py"
+
+
+def run_check(stream, *args):
+    return subprocess.run(
+        [sys.executable, str(SCRIPT), *map(str, args)],
+        input=stream,
+        capture_output=True,
+        text=True,
+    )
+
+
+def ev(kind, t, **extra):
+    return json.dumps({"v": 1, "ev": kind, "t": t, **extra})
+
+
+def valid_stream():
+    return "\n".join(
+        [
+            ev("cache", 0.0),
+            ev("run_start", 0.0),
+            ev("arrival", 0.5),
+            ev("dispatch", 0.6),
+            ev("completion", 0.9),
+            ev("run_end", 1.0, arrived=1, served=1, dropped=0, rejected=0),
+        ]
+    )
+
+
+def test_valid_stream_passes():
+    r = run_check(valid_stream())
+    assert r.returncode == 0, r.stderr
+    assert "event stream OK" in r.stdout
+
+
+def test_file_argument_matches_stdin(tmp_path):
+    path = tmp_path / "events.ndjson"
+    path.write_text(valid_stream() + "\n")
+    assert run_check("", path).returncode == 0
+
+
+def test_unknown_kind_fails():
+    stream = valid_stream().replace('"ev": "completion"', '"ev": "warp"')
+    r = run_check(stream)
+    assert r.returncode == 1
+    assert "unknown event kind 'warp'" in r.stderr
+
+
+def test_wrong_schema_version_fails():
+    stream = "\n".join([ev("run_start", 0.0), '{"v": 2, "ev": "run_end", "t": 1.0}'])
+    r = run_check(stream)
+    assert r.returncode == 1
+    assert "schema version 2" in r.stderr
+
+
+def test_timestamp_regression_fails():
+    stream = "\n".join(
+        [
+            ev("run_start", 0.0),
+            ev("arrival", 0.5),
+            ev("dispatch", 0.4),  # clock moved backwards inside the frame
+            ev("run_end", 1.0, arrived=1, served=1, dropped=0, rejected=0),
+        ]
+    )
+    r = run_check(stream)
+    assert r.returncode == 1
+    assert "timestamp regression" in r.stderr
+
+
+def test_conservation_against_summary_fails():
+    stream = "\n".join(
+        [
+            ev("run_start", 0.0),
+            ev("arrival", 0.5),
+            ev("dispatch", 0.6),
+            ev("run_end", 1.0, arrived=2, served=1, dropped=0, rejected=0),
+        ]
+    )
+    r = run_check(stream)
+    assert r.returncode == 1
+    assert "run_end.arrived = 2 but the stream carries 1" in r.stderr
+
+
+def test_unbalanced_arrivals_fail():
+    stream = "\n".join(
+        [
+            ev("run_start", 0.0),
+            ev("arrival", 0.5),
+            ev("arrival", 0.6),
+            ev("dispatch", 0.7),
+            ev("run_end", 1.0, arrived=2, served=1, dropped=0, rejected=0),
+        ]
+    )
+    r = run_check(stream)
+    assert r.returncode == 1
+    assert "conservation" in r.stderr
+
+
+def test_malformed_line_fails():
+    stream = valid_stream() + "\nnot json at all"
+    r = run_check(stream)
+    assert r.returncode == 1
+    assert "not JSON" in r.stderr
+
+
+def test_missing_run_end_fails():
+    stream = "\n".join([ev("run_start", 0.0), ev("arrival", 0.5)])
+    r = run_check(stream)
+    assert r.returncode == 1
+    assert "no run_end" in r.stderr
+
+
+def test_body_event_before_run_start_fails():
+    stream = "\n".join(
+        [
+            ev("arrival", 0.0),  # only cache/phase may precede run_start
+            ev("run_start", 0.1),
+            ev("run_end", 1.0, arrived=0, served=0, dropped=0, rejected=0),
+        ]
+    )
+    r = run_check(stream)
+    assert r.returncode == 1
+    assert "arrival before run_start" in r.stderr
+
+
+def test_summary_only_stream_warns_and_passes():
+    stream = "\n".join(
+        [
+            ev("run_start", 0.0),
+            ev("run_end", 1.0, arrived=5, served=5, dropped=0, rejected=0),
+        ]
+    )
+    r = run_check(stream)
+    assert r.returncode == 0
+    assert "summary-only" in r.stderr
+
+
+def test_usage_error_with_two_arguments(tmp_path):
+    path = tmp_path / "events.ndjson"
+    path.write_text(valid_stream())
+    assert run_check("", path, path).returncode == 2

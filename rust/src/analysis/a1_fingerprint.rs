@@ -1,0 +1,84 @@
+//! A1 — fingerprint exhaustiveness.
+//!
+//! `sim::scenario::cache` keys its two-level memoization on fingerprints of
+//! `SimOptions` and the lowered `VlaConfig`. If a config struct grows a
+//! field the fingerprint does not cover, the cache silently aliases two
+//! configurations the simulator distinguishes — the worst failure mode the
+//! incremental-evaluation pins can have, because both sides of the
+//! incremental==fresh comparison go through the same (wrong) cache key.
+//! `options_fp` defends itself with an exhaustive destructuring (adding a
+//! field is a compile error there); this rule extends the same discipline
+//! to every fingerprinted struct by checking that `cache.rs` contains a
+//! `Name { ... }` destructuring naming every field parsed from the struct's
+//! definition (a `field: _` entry counts — the point is that covering or
+//! deliberately ignoring a new field is an explicit decision in cache.rs).
+
+use super::scan;
+use super::{Diagnostic, SourceTree};
+
+const RULE: &str = "A1";
+const CACHE: &str = "rust/src/sim/scenario/cache.rs";
+
+/// Structs the lowering cache fingerprints, and where they are defined.
+const TARGETS: &[(&str, &str)] = &[
+    ("SimOptions", "rust/src/sim/simulator.rs"),
+    ("VlaConfig", "rust/src/model/vla.rs"),
+    ("DecoderConfig", "rust/src/model/vla.rs"),
+    ("WorkloadShape", "rust/src/model/vla.rs"),
+];
+
+pub(super) fn run(tree: &SourceTree) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let Some(cache) = tree.get(CACHE) else {
+        out.push(Diagnostic::missing_file(RULE, CACHE));
+        return out;
+    };
+    for &(name, def_file) in TARGETS {
+        let Some(def) = tree.get(def_file) else {
+            out.push(Diagnostic::missing_file(RULE, def_file));
+            continue;
+        };
+        let Some((_, fields)) = scan::struct_fields(def, name) else {
+            out.push(Diagnostic::new(
+                RULE,
+                def_file,
+                1,
+                format!("struct `{name}` not found (fingerprint target of {CACHE})"),
+            ));
+            continue;
+        };
+        let blocks = scan::delim_blocks(cache, name, '{', '}');
+        if blocks.is_empty() {
+            out.push(Diagnostic::new(
+                RULE,
+                CACHE,
+                1,
+                format!("no `{name} {{ .. }}` destructuring in the lowering cache"),
+            ));
+            continue;
+        }
+        // the block covering the most fields is the fingerprint destructuring
+        let (line, missing) = blocks
+            .iter()
+            .map(|(l, inner)| {
+                let miss: Vec<&scan::FieldDef> =
+                    fields.iter().filter(|f| !scan::contains_word(inner, &f.name)).collect();
+                (*l, miss)
+            })
+            .min_by_key(|(_, miss)| miss.len())
+            .expect("non-empty blocks");
+        for f in missing {
+            out.push(Diagnostic::new(
+                RULE,
+                CACHE,
+                line,
+                format!(
+                    "field `{name}.{}` ({def_file}:{}) is not covered by the `{name}` \
+                     destructuring — the cache could alias two configs that differ in it",
+                    f.name, f.line
+                ),
+            ));
+        }
+    }
+    out
+}

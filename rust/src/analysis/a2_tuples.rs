@@ -1,0 +1,95 @@
+//! A2 — bitwise comparison-tuple coverage.
+//!
+//! The acceptance pins compare whole results through reduction functions
+//! (`result_bits`, `fingerprint`, `report_mismatch`). A pin only protects
+//! the fields its reduction reads: PR 9 had to hand-extend the scenario
+//! tuples with the new `link_s`/`usd_per_action` columns, and this PR's
+//! first audit run found the parallel-sweep closure missing four
+//! `ScenarioResult` fields and the fleet fingerprint missing seven
+//! `FleetReport` fields. This rule parses each compared struct's definition
+//! and requires every field to be *read* (`.field`) inside the reduction
+//! function body, so a new result column cannot land without joining the
+//! bitwise comparison key.
+
+use super::scan;
+use super::{Diagnostic, SourceTree};
+
+const RULE: &str = "A2";
+
+/// (struct, defining file, comparator file, comparator fn).
+const COMPARISONS: &[(&str, &str, &str, &str)] = &[
+    (
+        "ScenarioResult",
+        "rust/src/sim/scenario/eval.rs",
+        "rust/tests/scenario_tests.rs",
+        "result_bits",
+    ),
+    ("FleetReport", "rust/src/sim/fleet/sim.rs", "rust/tests/fleet_tests.rs", "fingerprint"),
+    ("FleetReport", "rust/src/sim/fleet/sim.rs", "rust/src/telemetry/replay.rs", "report_mismatch"),
+];
+
+/// The traced==untraced suite must compare through the complete comparator
+/// rather than an ad-hoc tuple of its own.
+const TELEMETRY_TESTS: &str = "rust/tests/telemetry_tests.rs";
+
+pub(super) fn run(tree: &SourceTree) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for &(name, def_file, cmp_file, cmp_fn) in COMPARISONS {
+        let Some(def) = tree.get(def_file) else {
+            out.push(Diagnostic::missing_file(RULE, def_file));
+            continue;
+        };
+        let Some(cmp) = tree.get(cmp_file) else {
+            out.push(Diagnostic::missing_file(RULE, cmp_file));
+            continue;
+        };
+        let Some((_, fields)) = scan::struct_fields(def, name) else {
+            out.push(Diagnostic::new(
+                RULE,
+                def_file,
+                1,
+                format!("struct `{name}` not found (compared by {cmp_file}::{cmp_fn})"),
+            ));
+            continue;
+        };
+        let anchor = format!("fn {cmp_fn}");
+        let Some((line, body)) = scan::delim_block(cmp, &anchor, '{', '}') else {
+            out.push(Diagnostic::new(
+                RULE,
+                cmp_file,
+                1,
+                format!("comparison fn `{cmp_fn}` not found (must reduce `{name}` bit-exactly)"),
+            ));
+            continue;
+        };
+        for f in &fields {
+            if !scan::contains_field_access(&body, &f.name) {
+                out.push(Diagnostic::new(
+                    RULE,
+                    cmp_file,
+                    line,
+                    format!(
+                        "`{name}.{}` ({def_file}:{}) is not read by `{cmp_fn}` — the bitwise \
+                         pin would not notice it diverging",
+                        f.name, f.line
+                    ),
+                ));
+            }
+        }
+    }
+    match tree.get(TELEMETRY_TESTS) {
+        None => out.push(Diagnostic::missing_file(RULE, TELEMETRY_TESTS)),
+        Some(tt) if !scan::contains_word(tt, "report_mismatch") => {
+            out.push(Diagnostic::new(
+                RULE,
+                TELEMETRY_TESTS,
+                1,
+                "telemetry tests must compare reports through `report_mismatch` (the \
+                 field-complete comparator), not an ad-hoc tuple"
+                    .to_string(),
+            ));
+        }
+        Some(_) => {}
+    }
+    out
+}

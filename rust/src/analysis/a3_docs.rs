@@ -1,0 +1,341 @@
+//! A3 — registry / CLI / doc drift.
+//!
+//! The experiment registry is the single source of truth for subcommands,
+//! but three other surfaces restate it: the README subcommand table, the
+//! completeness want-list in `experiment_tests.rs` (which silently missed
+//! `telemetry` for a whole PR), and the `docs/ARCHITECTURE.md` module map.
+//! This rule parses all four surfaces plus the CLI's extra (non-registry)
+//! subcommands and diagnoses every disagreement, in both directions.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::scan;
+use super::{Diagnostic, SourceTree};
+
+const RULE: &str = "A3";
+const MOD_RS: &str = "rust/src/experiment/mod.rs";
+const CLI_RS: &str = "rust/src/cli/mod.rs";
+const TESTS: &str = "rust/tests/experiment_tests.rs";
+const README: &str = "README.md";
+const ARCH: &str = "docs/ARCHITECTURE.md";
+
+pub(super) fn run(tree: &SourceTree) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let Some(idents) = registry_idents(tree, &mut out) else {
+        return out;
+    };
+    let impls = experiment_impls(tree);
+    let mut names = Vec::new();
+    for (ident, line) in &idents {
+        match impls.get(ident.as_str()) {
+            None => out.push(Diagnostic::new(
+                RULE,
+                MOD_RS,
+                *line,
+                format!("registry entry `&{ident}` has no `impl Experiment` with a parsed name"),
+            )),
+            Some(imp) => {
+                if imp.name.is_empty() {
+                    out.push(Diagnostic::new(
+                        RULE,
+                        &imp.file,
+                        imp.line,
+                        format!("experiment `{ident}` has an empty name()"),
+                    ));
+                }
+                if imp.description.is_empty() {
+                    out.push(Diagnostic::new(
+                        RULE,
+                        &imp.file,
+                        imp.line,
+                        format!("experiment `{ident}` has an empty description()"),
+                    ));
+                }
+                names.push(imp.name.clone());
+            }
+        }
+    }
+    let mut seen = BTreeSet::new();
+    for n in &names {
+        if !seen.insert(n.clone()) {
+            out.push(Diagnostic::new(
+                RULE,
+                MOD_RS,
+                1,
+                format!("duplicate experiment name `{n}` in the registry"),
+            ));
+        }
+    }
+    let extras = cli_extras(tree, &mut out);
+    check_readme(tree, &names, &extras, &mut out);
+    check_want_list(tree, &names, &mut out);
+    check_module_map(tree, &mut out);
+    out
+}
+
+/// `&Ident` entries of `static REGISTRY`, with the line each sits on.
+///
+/// The declaration is `static REGISTRY: &[&dyn Experiment] = &[..]` — the
+/// first `[` after the anchor is in the *type*, so the value list is the
+/// first block after the `=`.
+fn registry_idents(tree: &SourceTree, out: &mut Vec<Diagnostic>) -> Option<Vec<(String, usize)>> {
+    let Some(mod_rs) = tree.get(MOD_RS) else {
+        out.push(Diagnostic::missing_file(RULE, MOD_RS));
+        return None;
+    };
+    let code = scan::code_view(mod_rs);
+    let block = scan::find_word_from(&code, "static REGISTRY", 0)
+        .and_then(|at| code[at..].find('=').map(|eq| at + eq))
+        .and_then(|eq| scan::block_at(&code, eq, '[', ']'));
+    let Some((line, inner)) = block else {
+        out.push(Diagnostic::new(RULE, MOD_RS, 1, "no `static REGISTRY` list found".into()));
+        return None;
+    };
+    let mut idents = Vec::new();
+    for (k, raw) in inner.lines().enumerate() {
+        let mut rest = raw.trim();
+        while let Some(at) = rest.find('&') {
+            let ident: String = rest[at + 1..]
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                .collect();
+            if !ident.is_empty() {
+                idents.push((ident, line + k));
+            }
+            rest = &rest[at + 1..];
+        }
+    }
+    if idents.is_empty() {
+        out.push(Diagnostic::new(RULE, MOD_RS, line, "REGISTRY list parsed empty".into()));
+        return None;
+    }
+    Some(idents)
+}
+
+struct ExpImpl {
+    name: String,
+    description: String,
+    file: String,
+    line: usize,
+}
+
+/// Every `impl Experiment for X` under `rust/src/experiment/`, mapped by
+/// type name, with the `fn name()` / `fn description()` string literals.
+fn experiment_impls(tree: &SourceTree) -> BTreeMap<String, ExpImpl> {
+    let mut impls = BTreeMap::new();
+    for (path, text) in tree.files_under("rust/src/experiment/") {
+        if !path.ends_with(".rs") {
+            continue;
+        }
+        for (line, body) in scan::delim_blocks(text, "impl Experiment for", '{', '}') {
+            let Some(ident) = impl_target(text, line) else {
+                continue;
+            };
+            let first_lit = |anchor: &str| {
+                let Some((_, b)) = scan::delim_block(&body, anchor, '{', '}') else {
+                    return String::new();
+                };
+                scan::string_literals(&b).first().map(|(_, s)| s.clone()).unwrap_or_default()
+            };
+            let name = first_lit("fn name");
+            let description = first_lit("fn description");
+            impls.insert(ident, ExpImpl { name, description, file: path.to_string(), line });
+        }
+    }
+    impls
+}
+
+/// The type name on an `impl Experiment for X` line.
+fn impl_target(text: &str, line: usize) -> Option<String> {
+    let raw = text.lines().nth(line.checked_sub(1)?)?;
+    let code = scan::strip_comment(raw);
+    let rest = code.split("impl Experiment for").nth(1)?.trim_start();
+    let ident: String =
+        rest.chars().take_while(|c| c.is_ascii_alphanumeric() || *c == '_').collect();
+    (!ident.is_empty()).then_some(ident)
+}
+
+/// Non-registry subcommands declared in `cli::EXTRA_SUBCOMMANDS`. As with
+/// `REGISTRY`, the first `[` after the anchor belongs to the *type*, so the
+/// value table is the first block after the `=`.
+fn cli_extras(tree: &SourceTree, out: &mut Vec<Diagnostic>) -> BTreeSet<String> {
+    let Some(cli) = tree.get(CLI_RS) else {
+        out.push(Diagnostic::missing_file(RULE, CLI_RS));
+        return BTreeSet::new();
+    };
+    let code = scan::code_view(cli);
+    let block = scan::find_word_from(&code, "EXTRA_SUBCOMMANDS", 0)
+        .and_then(|at| code[at..].find('=').map(|eq| at + eq))
+        .and_then(|eq| scan::block_at(&code, eq, '[', ']'));
+    let Some((_, inner)) = block else {
+        out.push(Diagnostic::new(RULE, CLI_RS, 1, "no EXTRA_SUBCOMMANDS table found".into()));
+        return BTreeSet::new();
+    };
+    scan::paren_keys(&inner).into_iter().map(|(_, k)| k).collect()
+}
+
+/// README subcommand table rows vs the registry (both directions).
+fn check_readme(
+    tree: &SourceTree,
+    names: &[String],
+    extras: &BTreeSet<String>,
+    out: &mut Vec<Diagnostic>,
+) {
+    let Some(readme) = tree.get(README) else {
+        out.push(Diagnostic::missing_file(RULE, README));
+        return;
+    };
+    let mut rows: BTreeMap<String, usize> = BTreeMap::new();
+    let mut table_line = 1;
+    for (i, line) in readme.lines().enumerate() {
+        if line.starts_with("| Subcommand") {
+            table_line = i + 1;
+        }
+        if !line.starts_with("| `") {
+            continue;
+        }
+        let Some(first_cell) = line.split('|').nth(1) else {
+            continue;
+        };
+        for tok in scan::backticked(first_cell) {
+            rows.entry(tok).or_insert(i + 1);
+        }
+    }
+    for name in names {
+        if !rows.contains_key(name) {
+            out.push(Diagnostic::new(
+                RULE,
+                README,
+                table_line,
+                format!("experiment `{name}` is missing from the README subcommand table"),
+            ));
+        }
+    }
+    for (tok, line) in &rows {
+        if !names.contains(tok) && !extras.contains(tok) {
+            out.push(Diagnostic::new(
+                RULE,
+                README,
+                *line,
+                format!("`{tok}` in the README subcommand table is not a CLI subcommand"),
+            ));
+        }
+    }
+}
+
+/// The completeness want-list in `experiment_tests.rs` must name every
+/// registry experiment, and its count assertion must match.
+fn check_want_list(tree: &SourceTree, names: &[String], out: &mut Vec<Diagnostic>) {
+    let Some(tests) = tree.get(TESTS) else {
+        out.push(Diagnostic::missing_file(RULE, TESTS));
+        return;
+    };
+    let anchor = "fn registry_covers_every_subcommand";
+    let Some((line, body)) = scan::delim_block(tests, anchor, '{', '}') else {
+        out.push(Diagnostic::new(RULE, TESTS, 1, "no registry completeness test found".into()));
+        return;
+    };
+    fn is_name_token(s: &str) -> bool {
+        !s.is_empty()
+            && s.bytes().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == b'-')
+    }
+    let wants: BTreeSet<String> = scan::string_literals(&body)
+        .into_iter()
+        .map(|(_, s)| s)
+        .filter(|s| is_name_token(s))
+        .collect();
+    for name in names {
+        if !wants.contains(name) {
+            out.push(Diagnostic::new(
+                RULE,
+                TESTS,
+                line,
+                format!("`{name}` is missing from the registry completeness want-list"),
+            ));
+        }
+    }
+    match scan::int_after(tests, "names.len(),") {
+        Some((count_line, n)) if n != names.len() as u64 => out.push(Diagnostic::new(
+            RULE,
+            TESTS,
+            count_line,
+            format!("registry count assertion says {n} but the registry has {}", names.len()),
+        )),
+        Some(_) => {}
+        None => out.push(Diagnostic::new(
+            RULE,
+            TESTS,
+            line,
+            "no `names.len()` count assertion in the completeness test".into(),
+        )),
+    }
+}
+
+/// `docs/ARCHITECTURE.md` module map vs the actual `rust/src/` layout.
+fn check_module_map(tree: &SourceTree, out: &mut Vec<Diagnostic>) {
+    let Some(arch) = tree.get(ARCH) else {
+        out.push(Diagnostic::missing_file(RULE, ARCH));
+        return;
+    };
+    // map entries: `├── name/` / `└── name.rs` tree-glyph lines
+    let mut entries: BTreeMap<String, usize> = BTreeMap::new();
+    let mut map_line = 1;
+    for (i, line) in arch.lines().enumerate() {
+        let Some(at) = line.find("── ") else {
+            continue;
+        };
+        if entries.is_empty() {
+            map_line = i + 1;
+        }
+        let tok: String = line[at + "── ".len()..]
+            .chars()
+            .take_while(|c| !c.is_whitespace())
+            .collect();
+        entries.entry(tok).or_insert(i + 1);
+    }
+    let top_dirs: BTreeSet<String> = tree
+        .files_under("rust/src/")
+        .filter_map(|(p, _)| {
+            let rest = p.strip_prefix("rust/src/")?;
+            let (first, remainder) = rest.split_once('/')?;
+            (!remainder.is_empty()).then(|| first.to_string())
+        })
+        .collect();
+    for d in &top_dirs {
+        if !entries.contains_key(&format!("{d}/")) {
+            out.push(Diagnostic::new(
+                RULE,
+                ARCH,
+                map_line,
+                format!("module `rust/src/{d}/` is missing from the module map"),
+            ));
+        }
+    }
+    for (tok, line) in &entries {
+        if let Some(dir) = tok.strip_suffix('/') {
+            let mut exists = false;
+            for p in tree.paths() {
+                let in_dir = p.starts_with("rust/src/") && p.split('/').any(|s| s == dir);
+                exists |= in_dir && !p.ends_with(dir);
+            }
+            if !exists {
+                out.push(Diagnostic::new(
+                    RULE,
+                    ARCH,
+                    *line,
+                    format!("`{tok}` in the module map does not exist under rust/src/"),
+                ));
+            }
+        } else if tok.ends_with(".rs") {
+            let suffix = format!("/{tok}");
+            if !tree.paths().any(|p| p.starts_with("rust/src/") && p.ends_with(&suffix)) {
+                out.push(Diagnostic::new(
+                    RULE,
+                    ARCH,
+                    *line,
+                    format!("`{tok}` in the module map does not exist under rust/src/"),
+                ));
+            }
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! A4 — telemetry wire-schema coverage.
+//!
+//! The NDJSON wire format is consumed by three parties that cannot see each
+//! other: the Rust emitter (`telemetry::Event::to_json`), the external
+//! validator (`scripts/check_events.py`), and the human-facing schema table
+//! in `docs/TELEMETRY.md`. A kind or key added to one and not the others is
+//! exactly the drift the replay==live pin cannot catch, because the pin
+//! only exercises the Rust side. This rule extracts the wire kinds from the
+//! `kind()` match, the JSON keys from the `to_json()` tuple literals, the
+//! `KINDS` set from the Python validator, and the schema version constants
+//! from both sides, and requires: kinds agree in both directions, preamble
+//! kinds are a subset, schema versions are equal, and every kind and key is
+//! mentioned in `docs/TELEMETRY.md`.
+
+use std::collections::BTreeSet;
+
+use super::scan;
+use super::{Diagnostic, SourceTree};
+
+const RULE: &str = "A4";
+const TEL: &str = "rust/src/telemetry/mod.rs";
+const DOCS: &str = "docs/TELEMETRY.md";
+const PY: &str = "scripts/check_events.py";
+
+pub(super) fn run(tree: &SourceTree) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let (Some(tel), Some(docs), Some(py)) = (tree.get(TEL), tree.get(DOCS), tree.get(PY)) else {
+        for (path, got) in [(TEL, tree.get(TEL)), (DOCS, tree.get(DOCS)), (PY, tree.get(PY))] {
+            if got.is_none() {
+                out.push(Diagnostic::missing_file(RULE, path));
+            }
+        }
+        return out;
+    };
+
+    // wire kinds: the string literals of the `kind()` match arms
+    let Some((kind_line, kind_body)) = scan::delim_block(tel, "pub fn kind", '{', '}') else {
+        out.push(Diagnostic::new(RULE, TEL, 1, "no `pub fn kind` match found".into()));
+        return out;
+    };
+    let kinds_rs: Vec<(usize, String)> = scan::string_literals(&kind_body)
+        .into_iter()
+        .map(|(l, s)| (kind_line + l - 1, s))
+        .collect();
+    if kinds_rs.is_empty() {
+        out.push(Diagnostic::new(RULE, TEL, kind_line, "`kind()` yields no kind strings".into()));
+        return out;
+    }
+
+    // the validator's KINDS / PREAMBLE_KINDS sets
+    let kinds_py = literal_set(py, "KINDS =", &mut out, "KINDS");
+    let preamble_py = literal_set(py, "PREAMBLE_KINDS =", &mut out, "PREAMBLE_KINDS");
+
+    let rs_set: BTreeSet<&str> = kinds_rs.iter().map(|(_, s)| s.as_str()).collect();
+    for (line, kind) in &kinds_rs {
+        if !kinds_py.iter().any(|(_, k)| k == kind) {
+            out.push(Diagnostic::new(
+                RULE,
+                TEL,
+                *line,
+                format!("wire kind `{kind}` is missing from check_events.py KINDS"),
+            ));
+        }
+        if !scan::contains_word(docs, kind) {
+            out.push(Diagnostic::new(
+                RULE,
+                TEL,
+                *line,
+                format!("wire kind `{kind}` is not documented in {DOCS}"),
+            ));
+        }
+    }
+    for (line, kind) in &kinds_py {
+        if !rs_set.contains(kind.as_str()) {
+            out.push(Diagnostic::new(
+                RULE,
+                PY,
+                *line,
+                format!("KINDS entry `{kind}` is not a wire kind emitted by `kind()`"),
+            ));
+        }
+    }
+    for (line, kind) in &preamble_py {
+        if !kinds_py.iter().any(|(_, k)| k == kind) {
+            out.push(Diagnostic::new(
+                RULE,
+                PY,
+                *line,
+                format!("PREAMBLE_KINDS entry `{kind}` is not in KINDS"),
+            ));
+        }
+    }
+
+    // schema version constants must agree
+    let rs_v = scan::int_after(tel, "SCHEMA_VERSION: u64 =");
+    let py_v = scan::int_after(py, "SCHEMA_VERSION = ");
+    match (rs_v, py_v) {
+        (Some((l, a)), Some((_, b))) if a != b => out.push(Diagnostic::new(
+            RULE,
+            TEL,
+            l,
+            format!("SCHEMA_VERSION {a} != check_events.py SCHEMA_VERSION {b}"),
+        )),
+        (None, _) => out.push(Diagnostic::new(RULE, TEL, 1, "no SCHEMA_VERSION const".into())),
+        (_, None) => out.push(Diagnostic::new(RULE, PY, 1, "no SCHEMA_VERSION const".into())),
+        _ => {}
+    }
+
+    // every JSON key written by to_json must be documented
+    let Some((json_line, json_body)) = scan::delim_block(tel, "pub fn to_json", '{', '}') else {
+        out.push(Diagnostic::new(RULE, TEL, 1, "no `pub fn to_json` emitter found".into()));
+        return out;
+    };
+    let mut seen = BTreeSet::new();
+    for (l, key) in scan::paren_keys(&json_body) {
+        if !seen.insert(key.clone()) {
+            continue;
+        }
+        if !scan::contains_word(docs, &key) {
+            out.push(Diagnostic::new(
+                RULE,
+                TEL,
+                json_line + l - 1,
+                format!("wire key `{key}` emitted by to_json() is not documented in {DOCS}"),
+            ));
+        }
+    }
+    out
+}
+
+/// String-literal entries of a `NAME = {..}` Python set, with file lines.
+fn literal_set(
+    py: &str,
+    anchor: &str,
+    out: &mut Vec<Diagnostic>,
+    what: &str,
+) -> Vec<(usize, String)> {
+    let Some((line, body)) = scan::delim_block(py, anchor, '{', '}') else {
+        out.push(Diagnostic::new(RULE, PY, 1, format!("no `{what}` set in check_events.py")));
+        return Vec::new();
+    };
+    scan::string_literals(&body).into_iter().map(|(l, s)| (line + l - 1, s)).collect()
+}

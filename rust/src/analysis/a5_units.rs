@@ -1,0 +1,261 @@
+//! A5 — unit-of-measure lint.
+//!
+//! PR 9's one functional bug was a silent unit mixup: `NetLink` payload
+//! *bytes* were divided by a *Gbit/s* bandwidth without the x8, making
+//! every link 8x faster than configured. No bitwise pin can catch that —
+//! the wrong number is perfectly deterministic — so this rule lints the
+//! *source*: an identifier chain ending in a unit suffix (`_gbps`, `_ms`,
+//! `_us`, `_gb`) that participates in `*`/`/` arithmetic must share its
+//! line with the explicit conversion factor the unit demands, and every
+//! public `f64` field must carry a unit suffix (or `_per_`) so the next
+//! reader knows what the number means. Lines are comment-stripped and
+//! string-blanked before scanning (a `"live_ms"` metric name is not
+//! arithmetic); a left-hand `*` whose own left neighbour is not a value
+//! is a dereference, not a multiplication. Fields that predate the rule
+//! are grandfathered by name — the list only ever shrinks.
+
+use super::scan;
+use super::{Diagnostic, SourceTree};
+
+const RULE: &str = "A5";
+
+struct UnitRule {
+    /// Identifier-chain suffix that marks the unit.
+    suffix: &'static str,
+    /// Fire only when the line also contains this token (unit *mixing*).
+    only_if: Option<&'static str>,
+    /// Conversion-factor groups: each group must be satisfied by at least
+    /// one of its tokens appearing word-bounded on the line.
+    factors: &'static [&'static [&'static str]],
+    why: &'static str,
+}
+
+const UNIT_RULES: &[UnitRule] = &[
+    UnitRule {
+        suffix: "_gbps",
+        only_if: None,
+        factors: &[&["8", "BITS_PER_BYTE"], &["1e9", "1_000_000_000"]],
+        why: "Gbit/s arithmetic needs an explicit x8 bits-per-byte and a 1e9 factor",
+    },
+    UnitRule {
+        suffix: "_ms",
+        only_if: None,
+        factors: &[&["1e3", "1e-3", "1000", "0.001"]],
+        why: "millisecond arithmetic needs an explicit 1e3 factor",
+    },
+    UnitRule {
+        suffix: "_us",
+        only_if: None,
+        factors: &[&["1e6", "1e-6", "1_000_000"]],
+        why: "microsecond arithmetic needs an explicit 1e6 factor",
+    },
+    UnitRule {
+        suffix: "_gb",
+        only_if: Some("_bytes"),
+        factors: &[&["1e9", "GB"]],
+        why: "bytes-to-GB arithmetic needs an explicit 1e9 (or GB const) factor",
+    },
+];
+
+/// Suffixes that make a public `f64` field self-describing.
+const APPROVED_SUFFIXES: &[&str] = &[
+    "_s", "_ms", "_us", "_hz", "_j", "_w", "_watts", "_gb", "_gbps", "_bytes", "_byte", "_frac",
+    "_share", "_util", "_pct", "_x", "_b",
+];
+
+/// Unsuffixed public `f64` fields that predate this rule. New fields must
+/// not join this list — name the unit instead.
+const GRANDFATHERED: &[&str] = &[
+    "action",
+    "actions",
+    "actions_sum",
+    "arrival",
+    "base_total",
+    "bytes",
+    "capacity",
+    "clock",
+    "decode",
+    "decode_time",
+    "decode_tps",
+    "dispatch_overhead",
+    "draft_step",
+    "eff_bw",
+    "eff_gflops",
+    "efficiency",
+    "embeds_sum",
+    "energy",
+    "flops",
+    "flops_bf16",
+    "flops_f32",
+    "host_dispatch",
+    "hz",
+    "internal_bw",
+    "kernel_launch_overhead",
+    "l2_bw",
+    "link_utilization",
+    "max",
+    "mean",
+    "min",
+    "p50",
+    "p90",
+    "p99",
+    "peak_bw",
+    "prefill",
+    "prefill_logits_l2",
+    "reduction_bw_penalty",
+    "speedup_vs_baseline",
+    "std",
+    "step_latency",
+    "stream_efficiency",
+    "t_compute",
+    "t_compute_bound",
+    "t_mem_other",
+    "t_mem_weights",
+    "t_memory",
+    "t_memory_bound",
+    "t_overhead",
+    "t_overhead_bound",
+    "t_parallel",
+    "t_serial",
+    "throughput",
+    "time",
+    "time_serial",
+    "total_latency",
+    "vision",
+    "weight_scale",
+];
+
+pub(super) fn run(tree: &SourceTree) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for (path, text) in tree.rust_src() {
+        for (i, raw) in text.lines().enumerate() {
+            let code = scan::blank_strings(raw);
+            check_arithmetic(path, i + 1, &code, &mut out);
+            check_field(path, i + 1, &code, &mut out);
+        }
+    }
+    out
+}
+
+fn check_arithmetic(path: &str, line: usize, code: &str, out: &mut Vec<Diagnostic>) {
+    for rule in UNIT_RULES {
+        if let Some(cond) = rule.only_if {
+            if !code.contains(cond) {
+                continue;
+            }
+        }
+        for (start, end, chain) in suffixed_chains(code, rule.suffix) {
+            if !arith_adjacent(code.as_bytes(), start, end) {
+                continue;
+            }
+            let ok = rule
+                .factors
+                .iter()
+                .all(|group| group.iter().any(|tok| scan::contains_word(code, tok)));
+            if !ok {
+                out.push(Diagnostic::new(
+                    RULE,
+                    path,
+                    line,
+                    format!("`{chain}` is scaled without its unit conversion — {}", rule.why),
+                ));
+            }
+            break; // one diagnostic per rule per line is enough
+        }
+    }
+}
+
+/// Identifier chains (idents joined by `.`) whose final segment ends in
+/// `suffix`: `(start, end, chain)` with byte-offsets into `code`.
+fn suffixed_chains(code: &str, suffix: &str) -> Vec<(usize, usize, String)> {
+    let b = code.as_bytes();
+    let is_chain = |c: u8| c.is_ascii_alphanumeric() || c == b'_' || c == b'.';
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < b.len() {
+        if !is_chain(b[i]) {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        while i < b.len() && is_chain(b[i]) {
+            i += 1;
+        }
+        let chain = code[start..i].trim_matches('.');
+        if chain.ends_with(suffix) && chain.len() > suffix.len() {
+            out.push((start, i, chain.to_string()));
+        }
+    }
+    out
+}
+
+/// Whether the span `start..end` has a `*` or `/` as its nearest non-space
+/// neighbour on either side; a left `*` whose own left context is not a
+/// value expression is a dereference and does not count.
+fn arith_adjacent(b: &[u8], start: usize, end: usize) -> bool {
+    let mut r = end;
+    while r < b.len() && b[r] == b' ' {
+        r += 1;
+    }
+    if r < b.len() && (b[r] == b'*' || b[r] == b'/') {
+        return true;
+    }
+    let mut l = start;
+    while l > 0 && b[l - 1] == b' ' {
+        l -= 1;
+    }
+    if l == 0 {
+        return false;
+    }
+    match b[l - 1] {
+        b'/' => true,
+        b'*' => {
+            let mut m = l - 1;
+            while m > 0 && b[m - 1] == b' ' {
+                m -= 1;
+            }
+            m > 0 && {
+                let p = b[m - 1];
+                p.is_ascii_alphanumeric() || p == b'_' || p == b')' || p == b'"'
+            }
+        }
+        _ => false,
+    }
+}
+
+fn check_field(path: &str, line: usize, code: &str, out: &mut Vec<Diagnostic>) {
+    let Some(name) = f64_field(code) else {
+        return;
+    };
+    let named = name.contains("_per_")
+        || APPROVED_SUFFIXES.iter().any(|s| name.ends_with(s))
+        || GRANDFATHERED.contains(&name);
+    if !named {
+        out.push(Diagnostic::new(
+            RULE,
+            path,
+            line,
+            format!(
+                "public f64 field `{name}` does not name its unit — add a suffix \
+                 ({}, ...) or `_per_`",
+                APPROVED_SUFFIXES[..4].join(", ")
+            ),
+        ));
+    }
+}
+
+/// The field name of a `pub <ident>: f64,` line, if that is what it is.
+fn f64_field(code: &str) -> Option<&str> {
+    let t = code.trim();
+    let rest = t.strip_prefix("pub ")?;
+    let (name, ty) = rest.split_once(':')?;
+    let name = name.trim();
+    let ty = ty.trim().trim_end_matches(',').trim();
+    if ty != "f64" {
+        return None;
+    }
+    let ok = !name.is_empty()
+        && name.bytes().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == b'_')
+        && !name.as_bytes()[0].is_ascii_digit();
+    ok.then_some(name)
+}

@@ -1,0 +1,153 @@
+//! A6 — bench-key sync.
+//!
+//! The perf regression gate is a three-way contract: the bench binaries
+//! emit `--json` key/value payloads, the checked-in `BENCH_*.json`
+//! baselines pin expected values for those keys, and `check_bench.py`
+//! fails CI when they drift. The gate compares *baseline* keys against the
+//! fresh emission, so a baseline key the bench no longer emits fails
+//! loudly — but a bench that stops being invoked, a baseline CI forgets to
+//! gate, or a bench name mismatch all fail silently. This rule pins the
+//! silent half: every baseline `exact`/`metrics` key and the `bench` name
+//! must appear as a string literal in the emitting bench source, every
+//! bench binary must support `--json` via `json_path_from_args`, and both
+//! CI surfaces (`scripts/ci.sh`, `.github/workflows/ci.yml`) must invoke
+//! `check_bench.py` against every checked-in baseline.
+
+use super::scan;
+use super::{Diagnostic, SourceTree};
+
+const RULE: &str = "A6";
+const CI_SH: &str = "scripts/ci.sh";
+const CI_YML: &str = ".github/workflows/ci.yml";
+
+/// Checked-in baseline → the bench source that must emit its keys.
+const BASELINES: &[(&str, &str)] = &[
+    ("BENCH_sim.json", "rust/benches/bench_sim_perf.rs"),
+    ("BENCH_fleet.json", "rust/benches/bench_fleet.rs"),
+];
+
+pub(super) fn run(tree: &SourceTree) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for &(baseline, bench_src) in BASELINES {
+        let Some(base) = tree.get(baseline) else {
+            out.push(Diagnostic::missing_file(RULE, baseline));
+            continue;
+        };
+        let Some(src) = tree.get(bench_src) else {
+            out.push(Diagnostic::missing_file(RULE, bench_src));
+            continue;
+        };
+        let src_lits: Vec<String> =
+            scan::string_literals(src).into_iter().map(|(_, s)| s).collect();
+
+        match bench_name(base) {
+            None => out.push(Diagnostic::new(
+                RULE,
+                baseline,
+                1,
+                "baseline has no `\"bench\": \"<name>\"` entry".into(),
+            )),
+            Some((line, name)) if !src_lits.iter().any(|s| s == &name) => {
+                out.push(Diagnostic::new(
+                    RULE,
+                    baseline,
+                    line,
+                    format!("bench name `{name}` is not emitted by {bench_src}"),
+                ));
+            }
+            Some(_) => {}
+        }
+
+        for section in ["\"exact\"", "\"metrics\""] {
+            let Some((sec_line, inner)) = scan::delim_block(base, section, '{', '}') else {
+                out.push(Diagnostic::new(
+                    RULE,
+                    baseline,
+                    1,
+                    format!("baseline has no {section} object"),
+                ));
+                continue;
+            };
+            for (line, key) in object_keys(&inner, sec_line) {
+                if !src_lits.iter().any(|s| s == &key) {
+                    out.push(Diagnostic::new(
+                        RULE,
+                        baseline,
+                        line,
+                        format!(
+                            "baseline key `{key}` is not emitted by {bench_src} — the gate \
+                             would fail on every run (or the key was renamed on one side only)"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    // every bench binary must accept `--json` so the gate *can* run it
+    for (path, text) in tree.files_under("rust/benches/") {
+        if path.ends_with(".rs") && !scan::contains_word(text, "json_path_from_args") {
+            out.push(Diagnostic::new(
+                RULE,
+                path,
+                1,
+                "bench binary does not call `json_path_from_args` — it cannot be gated".into(),
+            ));
+        }
+    }
+
+    // both CI surfaces must gate every checked-in baseline
+    for ci in [CI_SH, CI_YML] {
+        let Some(text) = tree.get(ci) else {
+            out.push(Diagnostic::missing_file(RULE, ci));
+            continue;
+        };
+        for &(baseline, _) in BASELINES {
+            let gated = text.lines().any(|l| l.contains("check_bench.py") && l.contains(baseline));
+            if !gated {
+                out.push(Diagnostic::new(
+                    RULE,
+                    ci,
+                    1,
+                    format!("{ci} never runs check_bench.py against {baseline}"),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// `("bench", name)` from the baseline's `"bench": "<name>"` line.
+fn bench_name(base: &str) -> Option<(usize, String)> {
+    for (i, raw) in base.lines().enumerate() {
+        if !raw.trim_start().starts_with("\"bench\"") {
+            continue;
+        }
+        let mut lits = scan::string_literals(raw).into_iter().map(|(_, s)| s);
+        let (first, second) = (lits.next(), lits.next());
+        if first.as_deref() == Some("bench") {
+            if let Some(name) = second {
+                return Some((i + 1, name));
+            }
+        }
+    }
+    None
+}
+
+/// `"key":` entries of a JSON object body, with absolute file lines.
+fn object_keys(inner: &str, base_line: usize) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    for (k, raw) in inner.lines().enumerate() {
+        let t = raw.trim();
+        let Some(rest) = t.strip_prefix('"') else {
+            continue;
+        };
+        let Some(endq) = rest.find('"') else {
+            continue;
+        };
+        if rest[endq + 1..].trim_start().starts_with(':') {
+            out.push((base_line + k, rest[..endq].to_string()));
+        }
+    }
+    out
+}

@@ -1,0 +1,322 @@
+//! Self-audit static analysis: the `vla-char audit` pass.
+//!
+//! The repo's correctness regime is its bitwise-pin discipline (parallel ==
+//! serial, incremental == fresh, traced == untraced, replay == live, all
+//! compared through `f64::to_bits`), and the pins only bite when the
+//! comparison *keys* cover every field and the docs/validators agree with
+//! the code. Each of the last several PRs shipped a hand-found violation of
+//! exactly that: a registry want-list silently missing `telemetry`, bitwise
+//! tuples missing newly added `ScenarioResult` columns, and a bytes-vs-bits
+//! mixup that made every `NetLink` 8x too fast. This module turns those
+//! one-off audits into named, file/line-anchored lint rules over the repo's
+//! own sources, docs, and checked-in artifacts:
+//!
+//! | rule | invariant |
+//! |------|-----------|
+//! | A1   | lowering-cache fingerprints destructure every config field    |
+//! | A2   | bitwise comparison tuples cover every result field            |
+//! | A3   | registry / CLI / README / test want-list / module map agree   |
+//! | A4   | telemetry wire kinds+keys match docs and `check_events.py`    |
+//! | A5   | unit-suffixed arithmetic carries explicit conversion factors  |
+//! | A6   | bench emitters, `BENCH_*.json` baselines and the gate agree   |
+//!
+//! Everything is built on the zero-dependency scanner in [`scan`] (no
+//! syn/proc-macro, consistent with the vendored-shim policy). Rules run
+//! over an in-memory [`SourceTree`] so the fixture tests can seed synthetic
+//! violations without touching disk; `vla-char audit` loads the real tree
+//! from the repo root and gates CI on a clean run. A diagnostic on line N
+//! is suppressed by `audit:allow(<RULE>)` on line N or N-1 of the same
+//! file; see `docs/ANALYSIS.md` for the rule catalog.
+
+pub mod scan;
+
+mod a1_fingerprint;
+mod a2_tuples;
+mod a3_docs;
+mod a4_wire;
+mod a5_units;
+mod a6_bench;
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// One audit finding, anchored to a repo-relative file and 1-based line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} {}:{}: {}", self.rule, self.file, self.line, self.message)
+    }
+}
+
+impl Diagnostic {
+    pub(crate) fn new(rule: &'static str, file: &str, line: usize, message: String) -> Diagnostic {
+        Diagnostic { rule, file: file.to_string(), line, message }
+    }
+
+    pub(crate) fn missing_file(rule: &'static str, file: &str) -> Diagnostic {
+        Diagnostic::new(rule, file, 1, format!("required file `{file}` is missing from the tree"))
+    }
+}
+
+/// The file set a rule pass sees: repo-relative forward-slash paths mapped
+/// to contents. Fixture tests build small synthetic trees; the audit
+/// experiment loads the real one via [`SourceTree::load`].
+#[derive(Debug, Default, Clone)]
+pub struct SourceTree {
+    files: BTreeMap<String, String>,
+}
+
+impl SourceTree {
+    pub fn from_entries(entries: &[(&str, &str)]) -> SourceTree {
+        let mut t = SourceTree::default();
+        for (path, content) in entries {
+            t.insert(path, content);
+        }
+        t
+    }
+
+    pub fn insert(&mut self, path: &str, content: &str) {
+        self.files.insert(path.to_string(), content.to_string());
+    }
+
+    pub fn get(&self, path: &str) -> Option<&str> {
+        self.files.get(path).map(String::as_str)
+    }
+
+    pub fn len(&self) -> usize {
+        self.files.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.files.is_empty()
+    }
+
+    pub fn paths(&self) -> impl Iterator<Item = &str> {
+        self.files.keys().map(String::as_str)
+    }
+
+    /// `(path, content)` pairs under a path prefix, in sorted order.
+    pub fn files_under<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = (&'a str, &'a str)> {
+        self.files
+            .range(prefix.to_string()..)
+            .take_while(move |(p, _)| p.starts_with(prefix))
+            .map(|(p, c)| (p.as_str(), c.as_str()))
+    }
+
+    /// Every `.rs` file under `rust/src/`.
+    pub fn rust_src(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.files_under("rust/src/").filter(|(p, _)| p.ends_with(".rs"))
+    }
+
+    /// Load the audited file set from a repo root: all Rust sources, the
+    /// integration tests and benches, the docs the rules cross-check, the
+    /// external validators, the CI definitions, and the checked-in bench
+    /// baselines. Missing optional files simply stay absent — each rule
+    /// reports its own required files.
+    pub fn load(root: &Path) -> anyhow::Result<SourceTree> {
+        let mut tree = SourceTree::default();
+        for dir in ["rust/src", "rust/tests", "rust/benches", "examples"] {
+            load_rs_dir(root, dir, &mut tree)?;
+        }
+        for extra in [
+            "README.md",
+            "docs/ARCHITECTURE.md",
+            "docs/TELEMETRY.md",
+            "docs/ANALYSIS.md",
+            "scripts/check_bench.py",
+            "scripts/check_events.py",
+            "scripts/ci.sh",
+            ".github/workflows/ci.yml",
+            "BENCH_sim.json",
+            "BENCH_fleet.json",
+        ] {
+            let p = root.join(extra);
+            if p.is_file() {
+                tree.insert(extra, &std::fs::read_to_string(&p)?);
+            }
+        }
+        anyhow::ensure!(
+            !tree.is_empty(),
+            "no auditable files under {} — not a vla-char repo root?",
+            root.display()
+        );
+        Ok(tree)
+    }
+}
+
+fn load_rs_dir(root: &Path, rel: &str, tree: &mut SourceTree) -> anyhow::Result<()> {
+    let dir = root.join(rel);
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    let mut entries = std::fs::read_dir(&dir)?.collect::<Result<Vec<_>, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let rel_child = format!("{rel}/{name}");
+        let path = entry.path();
+        if path.is_dir() {
+            load_rs_dir(root, &rel_child, tree)?;
+        } else if name.ends_with(".rs") {
+            tree.insert(&rel_child, &std::fs::read_to_string(&path)?);
+        }
+    }
+    Ok(())
+}
+
+/// Walk up from `start` to the first directory that looks like the repo
+/// root (has both `rust/src/lib.rs` and `README.md`).
+pub fn repo_root_from(start: &Path) -> Option<PathBuf> {
+    let mut dir = Some(start);
+    while let Some(d) = dir {
+        if d.join("rust/src/lib.rs").is_file() && d.join("README.md").is_file() {
+            return Some(d.to_path_buf());
+        }
+        dir = d.parent();
+    }
+    None
+}
+
+/// Repo root resolved from the current working directory — works from the
+/// repo root (CI), from `rust/` (cargo test), and from any subdirectory.
+pub fn repo_root() -> anyhow::Result<PathBuf> {
+    let cwd = std::env::current_dir()?;
+    repo_root_from(&cwd).ok_or_else(|| {
+        anyhow::anyhow!("no repo root (rust/src/lib.rs + README.md) above {}", cwd.display())
+    })
+}
+
+/// One registered lint rule.
+pub struct RuleDef {
+    /// Short rule ID — the suppression key (`audit:allow(A1)`).
+    pub id: &'static str,
+    /// Check ID reported by the `audit` experiment.
+    pub name: &'static str,
+    /// The invariant, one line.
+    pub claim: &'static str,
+    run: fn(&SourceTree) -> Vec<Diagnostic>,
+}
+
+/// Every audit rule, in catalog order.
+pub static RULES: &[RuleDef] = &[
+    RuleDef {
+        id: "A1",
+        name: "A1-fingerprint-exhaustive",
+        claim: "lowering-cache fingerprints destructure every SimOptions/VlaConfig field",
+        run: a1_fingerprint::run,
+    },
+    RuleDef {
+        id: "A2",
+        name: "A2-bitwise-tuple-coverage",
+        claim: "bitwise comparison tuples cover every ScenarioResult/FleetReport field",
+        run: a2_tuples::run,
+    },
+    RuleDef {
+        id: "A3",
+        name: "A3-registry-doc-sync",
+        claim: "registry, CLI extras, README table, test want-list and module map agree",
+        run: a3_docs::run,
+    },
+    RuleDef {
+        id: "A4",
+        name: "A4-wire-schema-coverage",
+        claim: "telemetry wire kinds and keys match docs/TELEMETRY.md and check_events.py",
+        run: a4_wire::run,
+    },
+    RuleDef {
+        id: "A5",
+        name: "A5-unit-of-measure",
+        claim: "unit-suffixed arithmetic carries explicit conversion factors",
+        run: a5_units::run,
+    },
+    RuleDef {
+        id: "A6",
+        name: "A6-bench-key-sync",
+        claim: "bench emitters, BENCH_*.json baselines and the check_bench.py gate agree",
+        run: a6_bench::run,
+    },
+];
+
+/// Look up a rule by its short ID (`"A1"`).
+pub fn rule(id: &str) -> Option<&'static RuleDef> {
+    RULES.iter().find(|r| r.id == id)
+}
+
+/// Run one rule and drop suppressed diagnostics (`audit:allow(<RULE>)` on
+/// the diagnostic line or the line above it).
+pub fn run_rule(def: &RuleDef, tree: &SourceTree) -> Vec<Diagnostic> {
+    (def.run)(tree).into_iter().filter(|d| !is_suppressed(tree, d)).collect()
+}
+
+/// Run every rule over the tree, in catalog order.
+pub fn run_all(tree: &SourceTree) -> Vec<Diagnostic> {
+    RULES.iter().flat_map(|def| run_rule(def, tree)).collect()
+}
+
+fn is_suppressed(tree: &SourceTree, d: &Diagnostic) -> bool {
+    let Some(text) = tree.get(&d.file) else {
+        return false;
+    };
+    let marker = format!("audit:allow({})", d.rule);
+    let has = |line_no: usize| {
+        line_no >= 1 && text.lines().nth(line_no - 1).is_some_and(|l| l.contains(&marker))
+    };
+    has(d.line) || (d.line >= 2 && has(d.line - 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rules_are_registered_and_unique() {
+        assert_eq!(RULES.len(), 6);
+        let mut ids: Vec<&str> = RULES.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 6, "rule IDs must be unique");
+        assert!(rule("A1").is_some());
+        assert!(rule("A9").is_none());
+        for r in RULES {
+            assert!(r.name.starts_with(r.id), "check id must embed the rule id");
+            assert!(!r.claim.is_empty());
+        }
+    }
+
+    #[test]
+    fn suppression_matches_same_and_previous_line() {
+        let tree = SourceTree::from_entries(&[(
+            "rust/src/x.rs",
+            "// audit:allow(A5)\nlet a = 1;\nlet b = 2; // audit:allow(A5)\nlet c = 3;\n",
+        )]);
+        let d = |line| Diagnostic::new("A5", "rust/src/x.rs", line, "m".into());
+        assert!(is_suppressed(&tree, &d(1)));
+        assert!(is_suppressed(&tree, &d(2)), "marker on the previous line applies");
+        assert!(is_suppressed(&tree, &d(3)));
+        assert!(!is_suppressed(&tree, &d(4)), "a marker two lines up does not apply");
+        let other = Diagnostic::new("A1", "rust/src/x.rs", 2, "m".into());
+        assert!(!is_suppressed(&tree, &other), "markers are rule-scoped");
+    }
+
+    #[test]
+    fn tree_prefix_iteration() {
+        let tree = SourceTree::from_entries(&[
+            ("rust/src/a.rs", "a"),
+            ("rust/src/sub/b.rs", "b"),
+            ("rust/tests/c.rs", "c"),
+            ("rust/src/d.md", "d"),
+        ]);
+        let src: Vec<&str> = tree.rust_src().map(|(p, _)| p).collect();
+        assert_eq!(src, vec!["rust/src/a.rs", "rust/src/sub/b.rs"]);
+        assert_eq!(tree.files_under("rust/").count(), 4);
+        assert_eq!(tree.len(), 4);
+    }
+}

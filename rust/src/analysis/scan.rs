@@ -1,0 +1,428 @@
+//! Line/brace-aware scanning primitives shared by the audit rules.
+//!
+//! Deliberately NOT a Rust (or Python, or Markdown) parser: every rule in
+//! this subsystem needs only a handful of shapes — struct fields, match-arm
+//! string literals, `("key", ...)` tuple keys, brace-delimited fn bodies,
+//! markdown table cells — and a zero-dependency scanner over those shapes
+//! keeps the audit inside the vendored-shim policy. The scanners are
+//! comment- and string-literal-aware so tokens inside `//` comments or
+//! `"..."` literals never leak into code-shape matches, and every extractor
+//! reports 1-based line numbers so diagnostics stay file/line-anchored.
+
+/// Cut a line at the first `//` that sits outside a string or char literal.
+pub fn strip_comment(line: &str) -> &str {
+    let b = line.as_bytes();
+    let mut i = 0;
+    let mut in_str = false;
+    while i < b.len() {
+        let c = b[i];
+        if in_str {
+            if c == b'\\' {
+                i += 2;
+            } else {
+                in_str = c != b'"';
+                i += 1;
+            }
+            continue;
+        }
+        match c {
+            b'"' => {
+                in_str = true;
+                i += 1;
+            }
+            // `'x'` / `'\x'` char literals; a lone tick is a lifetime
+            b'\'' if i + 3 < b.len() && b[i + 1] == b'\\' && b[i + 3] == b'\'' => i += 4,
+            b'\'' if i + 2 < b.len() && b[i + 2] == b'\'' => i += 3,
+            b'/' if i + 1 < b.len() && b[i + 1] == b'/' => return &line[..i],
+            _ => i += 1,
+        }
+    }
+    line
+}
+
+/// Blank the *contents* of string literals (delimiters kept) so identifier
+/// scans never match inside them. Comment-stripped first.
+pub fn blank_strings(line: &str) -> String {
+    let stripped = strip_comment(line);
+    let b = stripped.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let mut i = 0;
+    let mut in_str = false;
+    while i < b.len() {
+        let c = b[i];
+        if in_str {
+            if c == b'\\' {
+                out.push(b' ');
+                if i + 1 < b.len() {
+                    out.push(b' ');
+                }
+                i += 2;
+                continue;
+            }
+            if c == b'"' {
+                in_str = false;
+                out.push(c);
+            } else {
+                out.push(b' ');
+            }
+        } else {
+            if c == b'"' {
+                in_str = true;
+            }
+            out.push(c);
+        }
+        i += 1;
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// Every line comment-stripped and rejoined — the canonical "code view" the
+/// block extractors walk.
+pub fn code_view(text: &str) -> String {
+    let mut out = String::with_capacity(text.len());
+    for line in text.lines() {
+        out.push_str(strip_comment(line));
+        out.push('\n');
+    }
+    out
+}
+
+fn is_word_byte(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+fn is_key_byte(c: u8) -> bool {
+    c.is_ascii_lowercase() || c.is_ascii_digit() || c == b'_' || c == b'-'
+}
+
+/// Whether `text` contains `word` with non-identifier characters (or the
+/// text boundary) on both sides.
+pub fn contains_word(text: &str, word: &str) -> bool {
+    find_word_from(text, word, 0).is_some()
+}
+
+/// Byte offset of the first word-boundary occurrence of `word` at or after
+/// `from`.
+pub fn find_word_from(text: &str, word: &str, from: usize) -> Option<usize> {
+    if word.is_empty() || from > text.len() {
+        return None;
+    }
+    let b = text.as_bytes();
+    let mut start = from;
+    while let Some(pos) = text[start..].find(word) {
+        let at = start + pos;
+        let end = at + word.len();
+        let left_ok = at == 0 || !is_word_byte(b[at - 1]);
+        let right_ok = end == b.len() || !is_word_byte(b[end]);
+        if left_ok && right_ok {
+            return Some(at);
+        }
+        start = at + 1;
+    }
+    None
+}
+
+/// Whether `body` reads `.field` somewhere (a field access or method-style
+/// projection), word-boundary on the right.
+pub fn contains_field_access(body: &str, field: &str) -> bool {
+    let b = body.as_bytes();
+    let mut from = 0;
+    while let Some(at) = find_word_from(body, field, from) {
+        if at > 0 && b[at - 1] == b'.' {
+            return true;
+        }
+        from = at + 1;
+    }
+    false
+}
+
+/// 1-based line number of the byte offset `at` in `text`.
+pub fn line_of_offset(text: &str, at: usize) -> usize {
+    text.as_bytes()[..at.min(text.len())].iter().filter(|&&c| c == b'\n').count() + 1
+}
+
+/// All double-quoted string literal contents in `text`, comment-aware, with
+/// 1-based line numbers. Multi-line literals are not supported (the audited
+/// shapes never use them); escapes are passed through minus the backslash.
+pub fn string_literals(text: &str) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw);
+        let b = line.as_bytes();
+        let mut j = 0;
+        while j < b.len() {
+            if b[j] == b'"' {
+                let mut lit = String::new();
+                j += 1;
+                while j < b.len() && b[j] != b'"' {
+                    if b[j] == b'\\' && j + 1 < b.len() {
+                        j += 1;
+                    }
+                    lit.push(char::from(b[j]));
+                    j += 1;
+                }
+                out.push((i + 1, lit));
+            }
+            j += 1;
+        }
+    }
+    out
+}
+
+/// The delimited block opening at the first `open` after the first
+/// word-boundary occurrence of `anchor` in the code view. Returns the
+/// 1-based line of the anchor and the block's inner text. Inner line `k`
+/// (0-based) sits on file line `anchor_line(open) + k`, which is exact for
+/// the repo's one-item-per-line style.
+pub fn delim_block(text: &str, anchor: &str, open: char, close: char) -> Option<(usize, String)> {
+    let code = code_view(text);
+    let at = find_anchor(&code, anchor)?;
+    let anchor_line = line_of_offset(&code, at);
+    let (_, inner) = block_at(&code, at, open, close)?;
+    Some((anchor_line, inner))
+}
+
+/// Every word-boundary occurrence of `anchor` followed by an `open`-block:
+/// `(anchor_line, inner)` pairs, in file order.
+pub fn delim_blocks(text: &str, anchor: &str, open: char, close: char) -> Vec<(usize, String)> {
+    let code = code_view(text);
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(at) = find_word_from(&code, anchor, from) {
+        if let Some((_, inner)) = block_at(&code, at, open, close) {
+            out.push((line_of_offset(&code, at), inner));
+        }
+        from = at + 1;
+    }
+    out
+}
+
+fn find_anchor(code: &str, anchor: &str) -> Option<usize> {
+    // multi-token anchors ("fn kind", "static REGISTRY") get a word
+    // boundary on both ends of the full phrase
+    find_word_from(code, anchor, 0)
+}
+
+/// The first `open`..`close` block at or after byte offset `from` in an
+/// already comment-stripped code view: `(line of the opening delimiter,
+/// inner text)`.
+pub fn block_at(code: &str, from: usize, open: char, close: char) -> Option<(usize, String)> {
+    let b = code.as_bytes();
+    let mut i = from;
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    let mut in_str = false;
+    while i < b.len() {
+        let c = b[i];
+        if in_str {
+            if c == b'\\' {
+                i += 2;
+                continue;
+            }
+            in_str = c != b'"';
+            i += 1;
+            continue;
+        }
+        if c == b'"' {
+            in_str = true;
+        } else if c == open as u8 {
+            depth += 1;
+            if depth == 1 {
+                start = i + 1;
+            }
+        } else if c == close as u8 {
+            if depth == 0 {
+                return None;
+            }
+            depth -= 1;
+            if depth == 0 {
+                return Some((line_of_offset(code, start), code[start..i].to_string()));
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+/// One named field of a struct definition.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FieldDef {
+    pub name: String,
+    pub line: usize,
+}
+
+/// Named fields of `struct <name> { ... }`: the 1-based line the struct
+/// opens on, plus each field with its own line.
+pub fn struct_fields(text: &str, name: &str) -> Option<(usize, Vec<FieldDef>)> {
+    let anchor = format!("struct {name}");
+    let (anchor_line, inner) = delim_block(text, &anchor, '{', '}')?;
+    let mut fields = Vec::new();
+    let mut depth = 0usize;
+    for (k, raw) in inner.lines().enumerate() {
+        let line = raw.trim();
+        if depth == 0 && !line.starts_with("#[") {
+            if let Some(f) = field_name(line) {
+                fields.push(FieldDef { name: f, line: anchor_line + k });
+            }
+        }
+        depth = depth.saturating_add(raw.matches(['{', '(']).count());
+        depth = depth.saturating_sub(raw.matches(['}', ')']).count());
+    }
+    Some((anchor_line, fields))
+}
+
+fn field_name(line: &str) -> Option<String> {
+    let rest = line
+        .strip_prefix("pub(crate) ")
+        .or_else(|| line.strip_prefix("pub(super) "))
+        .or_else(|| line.strip_prefix("pub "))
+        .unwrap_or(line);
+    let colon = rest.find(':')?;
+    let ident = rest[..colon].trim();
+    let ident_ok = !ident.is_empty()
+        && ident.bytes().all(is_word_byte)
+        && !ident.as_bytes()[0].is_ascii_digit();
+    if !ident_ok {
+        return None;
+    }
+    Some(ident.to_string())
+}
+
+/// `("key", ...)` tuple keys: every string literal that directly follows an
+/// opening paren (whitespace allowed) and is directly followed by a comma.
+/// Matches the repo's `(name, Json)` pair idiom and `(&str, &str)` tables.
+pub fn paren_keys(text: &str) -> Vec<(usize, String)> {
+    let code = code_view(text);
+    let b = code.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    let mut in_str = false;
+    while i < b.len() {
+        let c = b[i];
+        if in_str {
+            if c == b'\\' {
+                i += 2;
+                continue;
+            }
+            in_str = c != b'"';
+            i += 1;
+            continue;
+        }
+        if c == b'"' {
+            in_str = true;
+            i += 1;
+            continue;
+        }
+        if c != b'(' {
+            i += 1;
+            continue;
+        }
+        let line = line_of_offset(&code, i);
+        let mut j = i + 1;
+        while j < b.len() && b[j].is_ascii_whitespace() {
+            j += 1;
+        }
+        if j >= b.len() || b[j] != b'"' {
+            i += 1;
+            continue;
+        }
+        let lit_start = j + 1;
+        let mut k = lit_start;
+        while k < b.len() && b[k] != b'"' && b[k] != b'\\' && b[k] != b'\n' {
+            k += 1;
+        }
+        if k >= b.len() || b[k] != b'"' {
+            i += 1;
+            continue;
+        }
+        let key = &code[lit_start..k];
+        let mut m = k + 1;
+        while m < b.len() && b[m].is_ascii_whitespace() {
+            m += 1;
+        }
+        let key_ok = !key.is_empty() && key.bytes().all(is_key_byte);
+        if m < b.len() && b[m] == b',' && key_ok {
+            out.push((line, key.to_string()));
+        }
+        i = k + 1;
+    }
+    out
+}
+
+/// Backticked tokens in a markdown line: `` `a` `` and `` `b` `` from
+/// ``| `a`, `b` | ... |``.
+pub fn backticked(line: &str) -> Vec<String> {
+    line.split('`').skip(1).step_by(2).map(str::to_string).collect()
+}
+
+/// The first integer literal at or after `anchor` in the code view, with
+/// its line.
+pub fn int_after(text: &str, anchor: &str) -> Option<(usize, u64)> {
+    let code = code_view(text);
+    let at = code.find(anchor)?;
+    let rest = &code[at + anchor.len()..];
+    let digits: String = rest
+        .chars()
+        .skip_while(|c| !c.is_ascii_digit())
+        .take_while(|c| c.is_ascii_digit() || *c == '_')
+        .filter(|c| c.is_ascii_digit())
+        .collect();
+    let skipped = rest.chars().take_while(|c| !c.is_ascii_digit()).count();
+    // only look nearby: an anchor at the end of the file must not grab an
+    // unrelated number hundreds of lines later
+    if digits.is_empty() || skipped > 80 {
+        return None;
+    }
+    Some((line_of_offset(&code, at), digits.parse().ok()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_respected() {
+        assert_eq!(strip_comment("let x = 1; // y"), "let x = 1; ");
+        assert_eq!(strip_comment(r#"let u = "http://a"; // y"#), r#"let u = "http://a"; "#);
+        assert_eq!(strip_comment("let c = '\"'; // y"), "let c = '\"'; ");
+        assert_eq!(blank_strings(r#"x("a_ms", y)"#), r#"x("    ", y)"#);
+    }
+
+    #[test]
+    fn words_and_field_accesses() {
+        assert!(contains_word("let bw_gbps = 1;", "bw_gbps"));
+        assert!(!contains_word("let xbw_gbps = 1;", "bw_gbps"));
+        assert!(contains_field_access("r.decode_time.to_bits()", "decode_time"));
+        assert!(!contains_field_access("decode_time.to_bits()", "decode_time"));
+    }
+
+    #[test]
+    fn struct_fields_and_blocks() {
+        let src = "/// doc\npub struct Foo {\n    /// d\n    pub a: f64,\n    b: Vec<u8>,\n}\n";
+        let (line, fields) = struct_fields(src, "Foo").unwrap();
+        assert_eq!(line, 2);
+        assert_eq!(
+            fields,
+            vec![
+                FieldDef { name: "a".into(), line: 4 },
+                FieldDef { name: "b".into(), line: 5 }
+            ]
+        );
+        let (l, inner) = delim_block(src, "struct Foo", '{', '}').unwrap();
+        assert_eq!(l, 2);
+        assert!(inner.contains("b: Vec<u8>"));
+    }
+
+    #[test]
+    fn paren_keys_span_lines() {
+        let src = "(\"k1\", x),\n(\n    \"k_2\",\n    y,\n)\nf(\"not a key\")\n";
+        let keys: Vec<String> = paren_keys(src).into_iter().map(|(_, k)| k).collect();
+        assert_eq!(keys, vec!["k1".to_string(), "k_2".to_string()]);
+    }
+
+    #[test]
+    fn markdown_and_ints() {
+        assert_eq!(backticked("| `a`, `b-c` | x |"), vec!["a".to_string(), "b-c".to_string()]);
+        assert_eq!(int_after("assert_eq!(names.len(), 15, \"m\")", "names.len(),").unwrap().1, 15);
+    }
+}

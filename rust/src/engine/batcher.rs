@@ -11,6 +11,12 @@
 //! [`shard`](super::shard); its single-engine path delegates here so a
 //! one-shard deployment is bitwise the legacy batcher.
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use super::frames::Frame;
 use crate::util::stats::Summary;
 use std::collections::VecDeque;

@@ -2,6 +2,12 @@
 //! frequency (the paper's 10–20 Hz bar) and reports achieved frequency,
 //! deadline misses, and jitter — the measured counterpart of Fig 3.
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use super::engine::{PhaseTimes, VlaEngine};
 use super::frames::FrameSource;
 use crate::util::stats::Summary;

@@ -2,6 +2,12 @@
 //! through the compiled artifacts, with per-phase wall-clock timing matching
 //! the paper's Fig 2 decomposition.
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use super::frames::Frame;
 use super::vla_model::VlaModel;
 use crate::model::Phase;

@@ -5,6 +5,12 @@
 //! frames are correlated, as a real camera stream's would be), plus a fixed
 //! instruction prompt per stream.
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use crate::util::prng::Prng;
 
 /// A camera frame ready for the vision encoder.

@@ -25,6 +25,12 @@
 //! single-engine path delegates to the legacy [`run_batcher`] verbatim, so
 //! one shard is bitwise the pre-shard serving stack (pinned by tests).
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use super::batcher::{
     build_arrivals, pick_stream, run_batcher, BatcherConfig, Policy, Request, ServeReport,
     StepServer,

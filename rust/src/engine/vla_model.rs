@@ -2,6 +2,12 @@
 //! literal, with phase-timed entry points mirroring the paper's
 //! vision / prefill / decode / action decomposition.
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use crate::runtime::artifacts::{artifacts_dir, load_manifest, load_params, Manifest};
 use crate::runtime::client::{
     argmax, f32_literal, i32_scalar, i32_vec, to_f32_vec, CompiledModule, Runtime,

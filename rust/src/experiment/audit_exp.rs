@@ -1,0 +1,75 @@
+//! `audit` — the static self-analysis pass as a registry experiment.
+//!
+//! Loads the real repo tree (found by walking up from the current
+//! directory, so it works from the repo root in CI and from `rust/` under
+//! `cargo run`/`cargo test`) and runs every [`crate::analysis`] rule over
+//! it. Each rule becomes one report [`Check`], so `vla-char audit` exits
+//! non-zero on any diagnostic and `scripts/ci.sh` can gate on it exactly
+//! like the simulation experiments' acceptance checks. Diagnostics are
+//! rendered file/line-anchored in their own table; see `docs/ANALYSIS.md`
+//! for the rule catalog and the `audit:allow(<RULE>)` suppression syntax.
+
+use crate::analysis::{self, SourceTree};
+use crate::report::checks::Check;
+use crate::util::table::Table;
+
+use super::{ExpContext, Experiment, Report};
+
+pub struct Audit;
+
+impl Experiment for Audit {
+    fn name(&self) -> &'static str {
+        "audit"
+    }
+
+    fn description(&self) -> &'static str {
+        "static self-audit: pin coverage, doc/wire drift, unit and bench-key lints"
+    }
+
+    fn run(&self, _ctx: &ExpContext) -> anyhow::Result<Report> {
+        let root = analysis::repo_root()?;
+        let tree = SourceTree::load(&root)?;
+        let mut rep = Report::new("audit");
+        rep.note(format!("audited {} files under {}", tree.len(), root.display()));
+
+        let mut summary =
+            Table::new("Audit rules", &["rule", "invariant", "diagnostics", "status"]).left_first();
+        let mut details = Table::new("Diagnostics", &["rule", "location", "message"]).left_first();
+        let mut total = 0usize;
+        for def in analysis::RULES {
+            let diags = analysis::run_rule(def, &tree);
+            total += diags.len();
+            summary.row(vec![
+                def.id.to_string(),
+                def.claim.to_string(),
+                diags.len().to_string(),
+                if diags.is_empty() { "ok" } else { "FAIL" }.to_string(),
+            ]);
+            for d in &diags {
+                details.row(vec![
+                    d.rule.to_string(),
+                    format!("{}:{}", d.file, d.line),
+                    d.message.clone(),
+                ]);
+            }
+            let detail = if diags.is_empty() {
+                "clean".to_string()
+            } else {
+                diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("; ")
+            };
+            rep.checks.push(Check {
+                id: def.name,
+                claim: def.claim,
+                passed: diags.is_empty(),
+                detail,
+            });
+        }
+        rep.metric("files_scanned", tree.len() as f64);
+        rep.metric("diagnostics_total", total as f64);
+        rep.push_table("audit-rules", summary);
+        if details.n_rows() > 0 {
+            rep.push_table("audit-diagnostics", details);
+        }
+        Ok(rep)
+    }
+}

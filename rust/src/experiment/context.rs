@@ -2,6 +2,12 @@
 //! needs to run, resolved ONCE from the parsed CLI arguments instead of
 //! being re-derived inside each command.
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use crate::hw::{config_file, platform, Platform};
 use crate::model::scaling::{scaled_vla, ANCHOR_SIZES_B};
 use crate::model::VlaConfig;

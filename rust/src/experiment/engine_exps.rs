@@ -9,6 +9,12 @@
 //! experiments" item). The `serve` flow is no longer one of them: it runs
 //! simulator-backed (see [`super::serve_exp`]) on every machine.
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use super::experiments::slug;
 use super::{ExpContext, Experiment, Report};
 use crate::engine::{run_control_loop, ControlLoopConfig, FrameSource, VlaEngine, VlaModel};

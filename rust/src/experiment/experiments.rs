@@ -2,6 +2,12 @@
 //! artifact. Each consumes the shared [`ExpContext`] and returns a
 //! [`Report`]; nothing here prints or touches the filesystem.
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use super::{ExpContext, Experiment, Report};
 use crate::hw::{platform, Platform};
 use crate::model::molmoact::molmoact_7b;

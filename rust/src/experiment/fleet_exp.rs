@@ -17,6 +17,12 @@
 //! never worse than FIFO on miss rate at saturation, and the autoscaler
 //! reacting to overload within its engine bound.
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use super::experiments::slug;
 use super::{ExpContext, Experiment, Report, Serve};
 use crate::engine::shard::{run_shard_batcher, ShardModel, ShardService, SimStepServer};

@@ -17,6 +17,7 @@
 //! to [`REGISTRY`]; it immediately appears in `--help`, gains a CLI
 //! subcommand, and is included in `report` output.
 
+mod audit_exp;
 mod context;
 mod engine_exps;
 mod experiments;
@@ -26,6 +27,7 @@ mod report;
 mod serve_exp;
 mod telemetry_exp;
 
+pub use audit_exp::Audit;
 pub use context::ExpContext;
 pub use engine_exps::{ControlLoop, StepOnce, Validate};
 pub use experiments::{Ablate, Batch, Characterize, Codesign, Energy, PimScenarios, Project, Table1};
@@ -66,6 +68,7 @@ pub static REGISTRY: &[&dyn Experiment] = &[
     &Fleet,
     &Telemetry,
     &Validate,
+    &Audit,
 ];
 
 /// The experiment registry.

@@ -8,6 +8,12 @@
 //! an independently evaluated non-offload matrix, so arming the axis is
 //! proven to leave the local economics untouched.
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use std::collections::HashMap;
 
 use super::{ExpContext, Experiment, Report};

@@ -15,6 +15,12 @@
 //! weights per engine, the single-shard path is bitwise the legacy
 //! batcher, and every arrival is served or dropped — never lost.
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use super::experiments::slug;
 use super::{ExpContext, Experiment, Report};
 use crate::engine::shard::{run_shard_batcher, ShardMode, ShardModel, ShardService, SimStepServer};

@@ -21,6 +21,12 @@
 //! the events-on wall-clock overhead (`bench_fleet` gates the same number
 //! in `BENCH_fleet.json`).
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use super::experiments::slug;
 use super::{ExpContext, Experiment, Report};
 use crate::engine::shard::{ShardModel, ShardService};

@@ -2,6 +2,12 @@
 //! users evaluate hardware points and model shapes beyond Table 1 without
 //! recompiling (`vla-char characterize --platform-file my_soc.json`).
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use super::mem::{MemDevice, PimSpec};
 use super::platform::Platform;
 use super::soc::SocSpec;

@@ -4,6 +4,12 @@
 //! bandwidth characteristics across different dimensions of the XPU's matrix
 //! engine").
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use crate::util::units::{KIB, MIB, TERA};
 
 /// A GPU-like SoC compute description.

@@ -11,6 +11,7 @@
 //!   to HLO text artifacts consumed by `runtime`.
 //! - **L1** (`python/compile/kernels/`): Pallas decode-attention and fused
 //!   FFN kernels (interpret mode), lowered inside the L2 graph.
+pub mod analysis;
 pub mod cli;
 pub mod engine;
 pub mod experiment;

@@ -2,6 +2,12 @@
 //! for prefill (seq-parallel), decode (single token against a KV cache), and
 //! ViT (bidirectional, no cache) execution modes.
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use super::op::Operator;
 use crate::hw::DType;
 

@@ -7,6 +7,12 @@
 //! reasoning traces (depth/trajectory tokens) followed by action tokens —
 //! the ~192-token autoregressive decode that Fig 2 shows dominating latency.
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use super::layer::BlockDims;
 use super::vla::{ActionConfig, DecoderConfig, VitConfig, VlaConfig, WorkloadShape};
 use crate::hw::DType;

@@ -6,6 +6,12 @@
 //! einsum shape plus explicit FLOP and byte counts so the roofline model
 //! needs no further shape reasoning.
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use crate::hw::DType;
 
 /// Broad operator class — drives tiling, PIM eligibility and bandwidth

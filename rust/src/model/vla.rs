@@ -6,6 +6,12 @@
 //! reasoning/action tokens, diffusion steps). [`VlaWorkload`] expands it into
 //! operator stages for the simulator.
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use super::layer::{decoder_block_decode, decoder_block_prefill, vit_block, BlockDims};
 use super::op::Operator;
 use super::stage::{Phase, Stage};

@@ -3,6 +3,12 @@
 //! track, phases become nested spans — the simulated twin of the Nsight
 //! timeline the paper captures on hardware.
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use crate::hw::Platform;
 use crate::model::VlaConfig;
 use crate::sim::{cost_op_scoped, Engine, SimOptions};

@@ -5,6 +5,12 @@
 //! module locates that directory and exposes the manifest to the runtime —
 //! python is never imported at run time.
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use crate::util::json::Json;
 use std::path::{Path, PathBuf};
 

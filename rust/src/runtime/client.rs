@@ -1,6 +1,12 @@
 //! PJRT runtime wrapper: load HLO-text artifacts, compile once, execute from
 //! the rust hot path with wall-clock phase timing.
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use std::path::Path;
 use std::time::{Duration, Instant};
 

@@ -7,6 +7,12 @@
 //! (effective FLOP/s and effective DRAM bandwidth) on a subset of phases,
 //! then report per-phase prediction accuracy on all of them.
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use crate::hw::platform::cpu_host_with;
 use crate::model::layer::BlockDims;
 use crate::model::vla::{ActionConfig, DecoderConfig, VitConfig, VlaConfig, WorkloadShape};

@@ -19,6 +19,12 @@
 //! module has always produced bitwise-identical to the pre-scenario
 //! implementation (pinned by `experiment_tests`).
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use super::scenario::{Evaluator, Lever, Scenario};
 use super::simulator::{SimOptions, Simulator};
 use crate::hw::Platform;

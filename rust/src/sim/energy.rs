@@ -7,6 +7,12 @@
 //! of Table 1. PIM's energy win (no off-chip movement for offloaded ops) is
 //! a first-class result in the HBM/LPDDR-PIM literature the paper cites [3].
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use super::roofline::{Engine, OpCost, PimScope};
 use super::simulator::{SimOptions, Simulator, VlaSimResult};
 use crate::hw::Platform;

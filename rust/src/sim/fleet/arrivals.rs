@@ -11,6 +11,12 @@
 //! collapse to the raw seed, so arrival noise never aliases other
 //! consumers of the same base seed (e.g. the engine frame source).
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use crate::util::prng::Prng;
 
 /// One step request in virtual time.

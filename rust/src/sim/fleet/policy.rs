@@ -8,6 +8,12 @@
 //! legacy batcher rule, so the drop-on-deadline admission policy with
 //! earliest-free scheduling IS the legacy serving stack.
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 /// Admission control applied when a request arrives.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum AdmissionPolicy {

@@ -19,6 +19,12 @@
 //! for bit, which is what lets `sim::sweep` parallelize fleet grids with
 //! bitwise-identical results.
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use super::arrivals::{build_poisson_arrivals, Request};
 use super::autoscale::{Autoscaler, AutoscalerConfig, ScaleDecision};
 use super::event::{EventQueue, FleetEvent};

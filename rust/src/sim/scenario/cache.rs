@@ -30,12 +30,18 @@
 //! [`sim::sweep`](crate::sim::sweep) workers; duplicated computation under
 //! races is benign because every value is deterministic.
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock, RwLock};
 
 use crate::hw::{DType, Platform};
-use crate::model::vla::VlaConfig;
+use crate::model::vla::{DecoderConfig, VlaConfig, WorkloadShape};
 use crate::sim::roofline::PimScope;
 use crate::sim::simulator::{SimOptions, VlaSimResult};
 
@@ -94,12 +100,25 @@ pub(crate) struct ConfigFp {
 }
 
 pub(crate) fn config_fp(c: &VlaConfig) -> ConfigFp {
+    // exhaustive destructuring on purpose, mirroring `options_fp`: adding
+    // a field to any fingerprinted struct is a compile error here until
+    // the fingerprint covers it or explicitly opts out with `_` — levers
+    // must never produce two configs that alias one cache key
+    let VlaConfig { name: _, towers: _, projector_hidden: _, decoder, action: _, shape } = c;
+    let DecoderConfig { layers: _, dims, vocab: _, weight_scale } = decoder;
+    let WorkloadShape {
+        crops: _,
+        patches_per_crop: _,
+        image_tokens,
+        prompt_tokens,
+        decode_tokens,
+    } = *shape;
     ConfigFp {
-        dtype: c.decoder.dims.dtype,
-        weight_scale_bits: c.decoder.weight_scale.to_bits(),
-        decode_tokens: c.shape.decode_tokens,
-        prompt_tokens: c.shape.prompt_tokens,
-        image_tokens: c.shape.image_tokens,
+        dtype: dims.dtype,
+        weight_scale_bits: weight_scale.to_bits(),
+        decode_tokens,
+        prompt_tokens,
+        image_tokens,
     }
 }
 

@@ -9,6 +9,12 @@
 //! ones `sim::codesign` has always modeled; the three `Pim*` levers are the
 //! paper's forward-looking hardware/software co-design points.
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use crate::engine::shard::ShardMode;
 use crate::hw::{DType, Platform};
 use crate::model::vla::VlaConfig;

@@ -49,6 +49,12 @@
 //! ones. [`Evaluator::eval_fresh`] keeps the uncached path alive as the
 //! reference the tests pin `eval` against, bit for bit.
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 mod cache;
 mod eval;
 mod lever;

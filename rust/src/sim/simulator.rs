@@ -3,6 +3,12 @@
 //! autoregressive decode loop over KV-cache growth, and aggregates per-phase
 //! latencies and control frequency.
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use super::roofline::{cost_op_scoped_unnamed, Bound, Engine, OpCost, PimScope};
 use crate::hw::Platform;
 use crate::model::{Phase, Stage, VlaConfig};

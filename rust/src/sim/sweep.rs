@@ -12,6 +12,12 @@
 //!   atomic counter, which load-balances the heavy large-model cells
 //!   without any channel machinery.
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Worker count for a sweep of `items` work items: the smaller of the

@@ -3,6 +3,12 @@
 //! and SM wave quantization — the "number of SMs, tiling strategies"
 //! micro-architectural fidelity the paper's simulator incorporates (§3.2).
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use crate::hw::{DType, SocSpec};
 
 /// Result of tile selection for a matmul of logical shape batch x (m, n, k).

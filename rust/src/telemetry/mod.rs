@@ -25,6 +25,12 @@
 //!
 //! See `docs/TELEMETRY.md` for the full wire-format reference.
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 pub mod replay;
 
 use std::fs::File;

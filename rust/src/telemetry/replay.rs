@@ -21,6 +21,12 @@
 //! summary-only stream (the single-lane batcher delegation emits no
 //! per-request events) produces an error, never a silently-wrong report.
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use super::{Event, RunMode};
 use crate::sim::fleet::{FleetReport, ScaleDecision};
 use crate::util::stats::Summary;

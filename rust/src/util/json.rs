@@ -7,6 +7,12 @@
 //! preserves object key insertion order (important for stable, diffable
 //! emitted reports).
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 use std::collections::BTreeMap;
 use std::fmt;
 

@@ -4,6 +4,12 @@
 //! `rand` is unavailable offline; we need reproducible streams anyway so that
 //! every experiment in EXPERIMENTS.md is re-runnable bit-for-bit.
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 /// xoshiro256++ — fast, high-quality, 256-bit state.
 #[derive(Debug, Clone)]
 pub struct Prng {

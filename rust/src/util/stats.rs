@@ -2,6 +2,12 @@
 //! jitter. Used by the phase profiler, the control-loop driver, and the
 //! micro-benchmark harness.
 
+// Numeric casts in this module predate the workspace-level
+// `cast_possible_truncation`/`cast_lossless` denies and are deliberate
+// (indices, bit packing, display rounding); new code converts
+// explicitly (`u64::from`, `try_into`) instead of widening this allow.
+#![allow(clippy::cast_possible_truncation, clippy::cast_lossless)]
+
 /// Summary statistics of a sample set.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {

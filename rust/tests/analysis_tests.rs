@@ -1,0 +1,411 @@
+//! Fixture tests for the `vla-char audit` static-analysis rules.
+//!
+//! Each rule gets a minimal synthetic [`SourceTree`] in two variants: a
+//! clean one that must produce zero diagnostics, and one with a single
+//! seeded violation that must produce exactly the expected diagnostic
+//! (rule ID, file, line, and message substance). The final test is the
+//! golden pin: the audit must run clean over the real checked-in tree, so
+//! any drift a future PR introduces fails `cargo test` with the same
+//! file/line-anchored message CI prints.
+
+use std::path::Path;
+
+use vla_char::analysis::{self, Diagnostic, SourceTree};
+
+/// Run one rule by ID, with suppression filtering, as the audit does.
+fn run(id: &str, tree: &SourceTree) -> Vec<Diagnostic> {
+    analysis::run_rule(analysis::rule(id).expect("registered rule"), tree)
+}
+
+fn assert_clean(id: &str, tree: &SourceTree) {
+    let diags = run(id, tree);
+    assert!(diags.is_empty(), "{id} fixture expected clean, got: {diags:?}");
+}
+
+/// Assert exactly one diagnostic with the expected anchor and content.
+fn assert_one(diags: &[Diagnostic], rule: &str, file: &str, line: usize, needle: &str) {
+    assert_eq!(diags.len(), 1, "expected one {rule} diagnostic, got: {diags:?}");
+    let d = &diags[0];
+    assert_eq!(d.rule, rule);
+    assert_eq!(d.file, file);
+    assert_eq!(d.line, line, "wrong line anchor in: {d}");
+    assert!(d.message.contains(needle), "message should mention `{needle}`: {d}");
+}
+
+// ---------------------------------------------------------------- A1
+
+const A1_CACHE: &str = "rust/src/sim/scenario/cache.rs";
+
+const A1_SIM_DEFS: &str = concat!(
+    "pub struct SimOptions {\n",
+    "    pub prefetch: bool,\n",
+    "    pub pim_new_knob: bool,\n",
+    "}\n",
+);
+
+const A1_CONFIG_DEFS: &str = concat!(
+    "pub struct VlaConfig {\n",
+    "    pub decoder: DecoderConfig,\n",
+    "}\n",
+    "pub struct DecoderConfig {\n",
+    "    pub dims: u64,\n",
+    "}\n",
+    "pub struct WorkloadShape {\n",
+    "    pub decode_tokens: u64,\n",
+    "}\n",
+);
+
+const A1_CACHE_PREFIX: &str = concat!(
+    "fn fp(c, o, shape) {\n",
+    "    let VlaConfig { decoder } = c;\n",
+    "    let DecoderConfig { dims } = decoder;\n",
+    "    let WorkloadShape { decode_tokens } = shape;\n",
+);
+
+fn a1_tree(sim_options_line: &str) -> SourceTree {
+    let mut t = SourceTree::default();
+    t.insert("rust/src/sim/simulator.rs", A1_SIM_DEFS);
+    t.insert("rust/src/model/vla.rs", A1_CONFIG_DEFS);
+    t.insert(A1_CACHE, &format!("{A1_CACHE_PREFIX}{sim_options_line}}}\n"));
+    t
+}
+
+#[test]
+fn a1_clean_fixture_passes() {
+    assert_clean("A1", &a1_tree("    let SimOptions { prefetch, pim_new_knob } = o;\n"));
+}
+
+#[test]
+fn a1_catches_uncovered_fingerprint_field() {
+    // `pim_new_knob` exists on SimOptions but the cache destructuring
+    // (line 5) does not name it — the cache could alias two configs
+    let tree = a1_tree("    let SimOptions { prefetch } = o;\n");
+    assert_one(&run("A1", &tree), "A1", A1_CACHE, 5, "SimOptions.pim_new_knob");
+}
+
+// ---------------------------------------------------------------- A2
+
+const A2_SCEN_TESTS: &str = "rust/tests/scenario_tests.rs";
+
+fn a2_tree(result_bits: &str) -> SourceTree {
+    let mut t = SourceTree::default();
+    t.insert(
+        "rust/src/sim/scenario/eval.rs",
+        "pub struct ScenarioResult {\n    pub time: f64,\n    pub link_s: f64,\n}\n",
+    );
+    t.insert(A2_SCEN_TESTS, result_bits);
+    t.insert("rust/src/sim/fleet/sim.rs", "pub struct FleetReport {\n    pub served: usize,\n}\n");
+    t.insert("rust/tests/fleet_tests.rs", "fn fingerprint(r) {\n    (r.served,)\n}\n");
+    t.insert(
+        "rust/src/telemetry/replay.rs",
+        "fn report_mismatch(a, b) {\n    a.served != b.served\n}\n",
+    );
+    t.insert("rust/tests/telemetry_tests.rs", "use replay::report_mismatch;\n");
+    t
+}
+
+#[test]
+fn a2_clean_fixture_passes() {
+    let tree = a2_tree("fn result_bits(r) {\n    (r.time.to_bits(), r.link_s.to_bits())\n}\n");
+    assert_clean("A2", &tree);
+}
+
+#[test]
+fn a2_catches_field_missing_from_bitwise_tuple() {
+    // ScenarioResult.link_s is never read by result_bits (fn opens line 1)
+    let tree = a2_tree("fn result_bits(r) {\n    (r.time.to_bits(),)\n}\n");
+    assert_one(&run("A2", &tree), "A2", A2_SCEN_TESTS, 1, "link_s");
+}
+
+// ---------------------------------------------------------------- A3
+
+const A3_README: &str = "README.md";
+
+const A3_MOD_RS: &str = concat!(
+    "pub static REGISTRY: &[&dyn Experiment] = &[\n",
+    "    &Alpha,\n",
+    "    &Beta,\n",
+    "];\n",
+    "\n",
+    "impl Experiment for Alpha {\n",
+    "    fn name(&self) -> &'static str {\n",
+    "        \"alpha\"\n",
+    "    }\n",
+    "    fn description(&self) -> &'static str {\n",
+    "        \"first\"\n",
+    "    }\n",
+    "}\n",
+    "\n",
+    "impl Experiment for Beta {\n",
+    "    fn name(&self) -> &'static str {\n",
+    "        \"beta\"\n",
+    "    }\n",
+    "    fn description(&self) -> &'static str {\n",
+    "        \"second\"\n",
+    "    }\n",
+    "}\n",
+);
+
+const A3_CLI_RS: &str = concat!(
+    "const EXTRA_SUBCOMMANDS: &[(&str, &str)] = &[\n",
+    "    (\"report\", \"registry loop\"),\n",
+    "];\n",
+);
+
+const A3_TESTS_RS: &str = concat!(
+    "#[test]\n",
+    "fn registry_covers_every_subcommand() {\n",
+    "    let want = [\"alpha\", \"beta\"];\n",
+    "    assert_eq!(names.len(), 2);\n",
+    "}\n",
+);
+
+const A3_ARCH_MD: &str = "rust/src/\n├── cli/\n└── experiment/\n";
+
+const A3_README_OK: &str = concat!(
+    "| Subcommand | What |\n",
+    "|---|---|\n",
+    "| `alpha` | first |\n",
+    "| `beta` | second |\n",
+    "| `report` | registry loop |\n",
+);
+
+fn a3_tree(readme: &str) -> SourceTree {
+    let mut t = SourceTree::default();
+    t.insert("rust/src/experiment/mod.rs", A3_MOD_RS);
+    t.insert("rust/src/cli/mod.rs", A3_CLI_RS);
+    t.insert("rust/tests/experiment_tests.rs", A3_TESTS_RS);
+    t.insert("docs/ARCHITECTURE.md", A3_ARCH_MD);
+    t.insert(A3_README, readme);
+    t
+}
+
+#[test]
+fn a3_clean_fixture_passes() {
+    assert_clean("A3", &a3_tree(A3_README_OK));
+}
+
+#[test]
+fn a3_catches_readme_table_drift() {
+    // drop the `beta` row: the registered experiment must be flagged
+    // against the table header (line 1)
+    let readme = concat!(
+        "| Subcommand | What |\n",
+        "|---|---|\n",
+        "| `alpha` | first |\n",
+        "| `report` | registry loop |\n",
+    );
+    assert_one(&run("A3", &a3_tree(readme)), "A3", A3_README, 1, "`beta` is missing");
+}
+
+// ---------------------------------------------------------------- A4
+
+const A4_TEL: &str = "rust/src/telemetry/mod.rs";
+
+const A4_TEL_RS: &str = concat!(
+    "pub const SCHEMA_VERSION: u64 = 1;\n",
+    "\n",
+    "impl Event {\n",
+    "    pub fn kind(&self) -> &'static str {\n",
+    "        match self {\n",
+    "            Event::Arrival { .. } => \"arrival\",\n",
+    "            Event::Scale { .. } => \"scale\",\n",
+    "        }\n",
+    "    }\n",
+    "\n",
+    "    pub fn to_json(&self) -> String {\n",
+    "        let pairs = [(\"t\", a), (\"n\", b)];\n",
+    "        render(pairs)\n",
+    "    }\n",
+    "}\n",
+);
+
+const A4_DOCS_MD: &str = "Wire kinds: `arrival`, `scale`. Keys: `t`, `n`.\n";
+
+fn a4_tree(py_kinds: &str) -> SourceTree {
+    let mut t = SourceTree::default();
+    t.insert(A4_TEL, A4_TEL_RS);
+    t.insert("docs/TELEMETRY.md", A4_DOCS_MD);
+    let mut py = format!("KINDS = {{{py_kinds}}}\n");
+    py.push_str("PREAMBLE_KINDS = {\"arrival\"}\nSCHEMA_VERSION = 1\n");
+    t.insert("scripts/check_events.py", &py);
+    t
+}
+
+#[test]
+fn a4_clean_fixture_passes() {
+    assert_clean("A4", &a4_tree("\"arrival\", \"scale\""));
+}
+
+#[test]
+fn a4_catches_kind_missing_from_validator() {
+    // kind() emits "scale" on line 7 but the validator's KINDS lacks it
+    let tree = a4_tree("\"arrival\"");
+    assert_one(&run("A4", &tree), "A4", A4_TEL, 7, "`scale` is missing from check_events.py");
+}
+
+// ---------------------------------------------------------------- A5
+
+const A5_NET: &str = "rust/src/sim/net.rs";
+
+const A5_LINK_OK: &str = concat!(
+    "pub struct Link {\n",
+    "    pub bw_gbps: f64,\n",
+    "}\n",
+    "\n",
+    "fn t(bytes: f64, l: &Link) -> f64 {\n",
+    "    bytes * 8.0 / (l.bw_gbps * 1e9)\n",
+    "}\n",
+);
+
+const A5_LINK_BAD: &str = concat!(
+    "pub struct Link {\n",
+    "    pub bw_gbps: f64,\n",
+    "}\n",
+    "\n",
+    "fn t(bytes: f64, l: &Link) -> f64 {\n",
+    "    bytes / (l.bw_gbps * 1e9)\n",
+    "}\n",
+);
+
+fn a5_tree(src: &str) -> SourceTree {
+    let mut t = SourceTree::default();
+    t.insert(A5_NET, src);
+    t
+}
+
+#[test]
+fn a5_clean_fixture_passes() {
+    assert_clean("A5", &a5_tree(A5_LINK_OK));
+}
+
+#[test]
+fn a5_catches_missing_unit_conversion() {
+    // the PR 9 bug shape: payload bytes divided by a Gbit/s bandwidth
+    // without the x8 bits-per-byte factor (line 6)
+    assert_one(&run("A5", &a5_tree(A5_LINK_BAD)), "A5", A5_NET, 6, "l.bw_gbps");
+}
+
+#[test]
+fn a5_catches_unitless_public_field() {
+    let tree = a5_tree("pub struct Link {\n    pub speed: f64,\n}\n");
+    assert_one(&run("A5", &tree), "A5", A5_NET, 2, "`speed` does not name its unit");
+}
+
+#[test]
+fn a5_suppression_marker_silences_the_line() {
+    let src = concat!(
+        "fn t(bytes: f64, bw_gbps: f64) -> f64 {\n",
+        "    // audit:allow(A5) the factor lives one call up\n",
+        "    bytes / (bw_gbps * 1e9)\n",
+        "}\n",
+    );
+    assert_clean("A5", &a5_tree(src));
+}
+
+// ---------------------------------------------------------------- A6
+
+const A6_BASE: &str = "BENCH_sim.json";
+
+const A6_SIM_JSON: &str = concat!(
+    "{\n",
+    "  \"bench\": \"sim_perf\",\n",
+    "  \"exact\": {\n",
+    "    \"scenarios\": 690\n",
+    "  },\n",
+    "  \"metrics\": {\n",
+    "    \"rate\": 1.5\n",
+    "  }\n",
+    "}\n",
+);
+
+const A6_FLEET_JSON: &str = concat!(
+    "{\n",
+    "  \"bench\": \"fleet\",\n",
+    "  \"exact\": {\n",
+    "    \"streams\": 2\n",
+    "  },\n",
+    "  \"metrics\": {\n",
+    "    \"x\": 1.0\n",
+    "  }\n",
+    "}\n",
+);
+
+const A6_SIM_BENCH_OK: &str = concat!(
+    "fn main() {\n",
+    "    let p = json_path_from_args();\n",
+    "    emit(\"sim_perf\");\n",
+    "    emit(\"scenarios\");\n",
+    "    emit(\"rate\");\n",
+    "}\n",
+);
+
+const A6_SIM_BENCH_BAD: &str = concat!(
+    "fn main() {\n",
+    "    let p = json_path_from_args();\n",
+    "    emit(\"sim_perf\");\n",
+    "    emit(\"scenarios\");\n",
+    "}\n",
+);
+
+const A6_FLEET_BENCH: &str = concat!(
+    "fn main() {\n",
+    "    let p = json_path_from_args();\n",
+    "    emit(\"fleet\");\n",
+    "    emit(\"streams\");\n",
+    "    emit(\"x\");\n",
+    "}\n",
+);
+
+const A6_CI_SH: &str = concat!(
+    "python3 scripts/check_bench.py BENCH_sim.json reports/sim.json\n",
+    "python3 scripts/check_bench.py BENCH_fleet.json reports/fleet.json\n",
+);
+
+const A6_CI_YML: &str = concat!(
+    "      - run: python3 scripts/check_bench.py BENCH_sim.json r/sim.json\n",
+    "      - run: python3 scripts/check_bench.py BENCH_fleet.json r/fleet.json\n",
+);
+
+fn a6_tree(sim_bench: &str) -> SourceTree {
+    let mut t = SourceTree::default();
+    t.insert(A6_BASE, A6_SIM_JSON);
+    t.insert("BENCH_fleet.json", A6_FLEET_JSON);
+    t.insert("rust/benches/bench_sim_perf.rs", sim_bench);
+    t.insert("rust/benches/bench_fleet.rs", A6_FLEET_BENCH);
+    t.insert("scripts/ci.sh", A6_CI_SH);
+    t.insert(".github/workflows/ci.yml", A6_CI_YML);
+    t
+}
+
+#[test]
+fn a6_clean_fixture_passes() {
+    assert_clean("A6", &a6_tree(A6_SIM_BENCH_OK));
+}
+
+#[test]
+fn a6_catches_baseline_key_the_bench_never_emits() {
+    // BENCH_sim.json pins `rate` (line 7) but the bench source never
+    // emits that literal
+    assert_one(&run("A6", &a6_tree(A6_SIM_BENCH_BAD)), "A6", A6_BASE, 7, "baseline key `rate`");
+}
+
+// ---------------------------------------------------------------- golden
+
+/// The audit must be clean on the real checked-in tree — the same gate
+/// `vla-char audit` enforces in CI, pinned here so `cargo test` fails with
+/// the full diagnostic list if any invariant drifts.
+#[test]
+fn audit_is_clean_on_the_real_tree() {
+    let root = analysis::repo_root_from(Path::new(env!("CARGO_MANIFEST_DIR")))
+        .expect("repo root above the rust/ crate");
+    let tree = SourceTree::load(&root).expect("load the audited file set");
+    assert!(tree.len() > 50, "expected the real tree, found only {} files", tree.len());
+    let diags = analysis::run_all(&tree);
+    let listing: Vec<String> = diags.iter().map(ToString::to_string).collect();
+    assert!(
+        diags.is_empty(),
+        "audit must run clean on the checked-in tree:\n{}",
+        listing.join("\n")
+    );
+}

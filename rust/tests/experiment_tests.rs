@@ -36,11 +36,12 @@ fn registry_covers_every_subcommand() {
         "fleet",
         "telemetry",
         "validate",
+        "audit",
     ] {
         assert!(names.contains(&want), "subcommand `{want}` has no registered experiment");
         assert!(experiment::by_name(want).is_some());
     }
-    assert_eq!(names.len(), 15, "new experiments must be added to this completeness list");
+    assert_eq!(names.len(), 16, "new experiments must be added to this completeness list");
 }
 
 /// Every registered experiment runs against one shared context, passes its

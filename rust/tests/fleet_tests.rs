@@ -21,6 +21,8 @@ use vla_char::util::prop::{ensure, prop_check};
 /// every float's bit pattern.
 fn fingerprint(r: &FleetReport) -> (Vec<usize>, Vec<u64>) {
     let mut counts = vec![r.arrived, r.served, r.dropped, r.rejected, r.max_burst, r.peak_engines];
+    counts.extend_from_slice(&[r.failures, r.scale_ups, r.scale_downs]);
+    counts.extend_from_slice(&r.per_stream_arrived);
     counts.extend_from_slice(&r.per_stream_served);
     counts.extend_from_slice(&r.per_stream_dropped);
     counts.extend_from_slice(&r.per_stream_rejected);
@@ -28,8 +30,12 @@ fn fingerprint(r: &FleetReport) -> (Vec<usize>, Vec<u64>) {
         r.throughput.to_bits(),
         r.queue_delay.p50.to_bits(),
         r.queue_delay.p99.to_bits(),
+        r.service.p50.to_bits(),
+        r.service.p99.to_bits(),
+        r.actions.to_bits(),
         r.agg_actions_s.to_bits(),
         r.energy_j.to_bits(),
+        r.j_per_action.to_bits(),
         r.makespan_s.to_bits(),
     ];
     (counts, bits)

@@ -126,22 +126,9 @@ fn parallel_scenario_sweep_matches_serial_bitwise() {
     };
     let matrix = scenario_matrix_grid(&p, &grid);
     assert!(matrix.len() > 72, "the grid must EXPAND the legacy matrix");
-    let eval = |sc: &Scenario| {
-        let r = ev.eval(sc).unwrap();
-        (
-            r.step_latency.to_bits(),
-            r.control_hz.to_bits(),
-            r.amortized_hz.to_bits(),
-            r.speedup_vs_baseline.to_bits(),
-            r.pim_util.to_bits(),
-            r.total_j.to_bits(),
-            r.j_per_action.to_bits(),
-            r.aggregate_hz.to_bits(),
-            r.link_s.to_bits(),
-            r.usd_per_action.to_bits(),
-            (r.footprint_gb.to_bits(), r.fits_capacity, r.streams, r.engines),
-        )
-    };
+    // compare through the field-complete reducer — an ad-hoc tuple here
+    // silently missed decode_time/avg_watts/capacity_gb/bound for two PRs
+    let eval = |sc: &Scenario| result_bits(&ev.eval(sc).unwrap());
     let serial = sweep::parallel_map_with(&matrix, 1, eval);
     let parallel = sweep::parallel_map_with(&matrix, 8, eval);
     assert_eq!(serial, parallel, "scenario evaluation must be deterministic under the pool");

@@ -91,6 +91,9 @@ cargo run --release -- telemetry | tee reports/telemetry.txt
 grep -E "TL1-replay-bitwise" reports/telemetry.txt >/dev/null \
     || { echo "ERROR: no TL1 check in telemetry report"; exit 1; }
 
+echo "==> vla-char audit (static self-analysis A1-A6, hard gate)"
+cargo run --release -- audit | tee reports/audit.txt
+
 if command -v pytest >/dev/null 2>&1 || python3 -c 'import pytest' >/dev/null 2>&1; then
     echo "==> python -m pytest python/tests -q (soft gate until L1/L2 artifacts land)"
     python3 -m pytest python/tests -q || echo "WARNING: python tests failed (soft gate)"

@@ -1,0 +1,972 @@
+#!/usr/bin/env python3
+"""Development mirror of the `vla-char audit` static-analysis pass.
+
+This is a line-for-line Python port of `rust/src/analysis/` (the scan
+primitives and rules A1-A6), kept so the audit's verdict can be
+cross-checked without a Rust toolchain — e.g. from a docs-only environment
+or while prototyping a new rule. The Rust implementation is the source of
+truth and the CI gate; if the two disagree, fix the mirror.
+
+Usage: mirror_audit.py [REPO_ROOT]     exit 0 when clean, 1 with
+                                       diagnostics listed on stdout
+"""
+
+import sys
+from pathlib import Path
+
+# ---------------------------------------------------------------- scan
+
+
+def is_word_byte(c):
+    return c.isalnum() and c.isascii() or c == "_"
+
+
+def is_key_byte(c):
+    return (c.islower() or c.isdigit()) and c.isascii() or c in "_-"
+
+
+def strip_comment(line):
+    i, n, in_str = 0, len(line), False
+    while i < n:
+        c = line[i]
+        if in_str:
+            if c == "\\":
+                i += 2
+            else:
+                in_str = c != '"'
+                i += 1
+            continue
+        if c == '"':
+            in_str = True
+            i += 1
+        elif c == "'" and i + 3 < n and line[i + 1] == "\\" and line[i + 3] == "'":
+            i += 4
+        elif c == "'" and i + 2 < n and line[i + 2] == "'":
+            i += 3
+        elif c == "/" and i + 1 < n and line[i + 1] == "/":
+            return line[:i]
+        else:
+            i += 1
+    return line
+
+
+def blank_strings(line):
+    stripped = strip_comment(line)
+    out, in_str, i, n = [], False, 0, len(stripped)
+    while i < n:
+        c = stripped[i]
+        if in_str:
+            if c == "\\":
+                out.append(" ")
+                if i + 1 < n:
+                    out.append(" ")
+                i += 2
+                continue
+            if c == '"':
+                in_str = False
+                out.append(c)
+            else:
+                out.append(" ")
+        else:
+            if c == '"':
+                in_str = True
+            out.append(c)
+        i += 1
+    return "".join(out)
+
+
+def rust_lines(text):
+    lines = text.split("\n")
+    if lines and lines[-1] == "":
+        lines.pop()
+    return lines
+
+
+def code_view(text):
+    return "".join(strip_comment(line) + "\n" for line in rust_lines(text))
+
+
+def find_word_from(text, word, start):
+    if not word or start > len(text):
+        return None
+    while True:
+        pos = text.find(word, start)
+        if pos < 0:
+            return None
+        end = pos + len(word)
+        left_ok = pos == 0 or not is_word_byte(text[pos - 1])
+        right_ok = end == len(text) or not is_word_byte(text[end])
+        if left_ok and right_ok:
+            return pos
+        start = pos + 1
+
+
+def contains_word(text, word):
+    return find_word_from(text, word, 0) is not None
+
+
+def contains_field_access(body, field):
+    at = find_word_from(body, field, 0)
+    while at is not None:
+        if at > 0 and body[at - 1] == ".":
+            return True
+        at = find_word_from(body, field, at + 1)
+    return False
+
+
+def line_of_offset(text, at):
+    return text.count("\n", 0, min(at, len(text))) + 1
+
+
+def string_literals(text):
+    out = []
+    for i, raw in enumerate(rust_lines(text)):
+        line = strip_comment(raw)
+        j, n = 0, len(line)
+        while j < n:
+            if line[j] == '"':
+                lit = []
+                j += 1
+                while j < n and line[j] != '"':
+                    if line[j] == "\\" and j + 1 < n:
+                        j += 1
+                    lit.append(line[j])
+                    j += 1
+                out.append((i + 1, "".join(lit)))
+            j += 1
+    return out
+
+
+def block_at(code, start, open_c, close_c):
+    i, depth, inner_start, in_str, n = start, 0, 0, False, len(code)
+    while i < n:
+        c = code[i]
+        if in_str:
+            if c == "\\":
+                i += 2
+                continue
+            in_str = c != '"'
+            i += 1
+            continue
+        if c == '"':
+            in_str = True
+        elif c == open_c:
+            depth += 1
+            if depth == 1:
+                inner_start = i + 1
+        elif c == close_c:
+            if depth == 0:
+                return None
+            depth -= 1
+            if depth == 0:
+                return (line_of_offset(code, inner_start), code[inner_start:i])
+        i += 1
+    return None
+
+
+def delim_block(text, anchor, open_c, close_c):
+    code = code_view(text)
+    at = find_word_from(code, anchor, 0)
+    if at is None:
+        return None
+    blk = block_at(code, at, open_c, close_c)
+    if blk is None:
+        return None
+    return (line_of_offset(code, at), blk[1])
+
+
+def delim_blocks(text, anchor, open_c, close_c):
+    code = code_view(text)
+    out, frm = [], 0
+    while True:
+        at = find_word_from(code, anchor, frm)
+        if at is None:
+            return out
+        blk = block_at(code, at, open_c, close_c)
+        if blk is not None:
+            out.append((line_of_offset(code, at), blk[1]))
+        frm = at + 1
+
+
+def field_name(line):
+    for p in ("pub(crate) ", "pub(super) ", "pub "):
+        if line.startswith(p):
+            line = line[len(p):]
+            break
+    colon = line.find(":")
+    if colon < 0:
+        return None
+    ident = line[:colon].strip()
+    if ident and all(is_word_byte(c) for c in ident) and not ident[0].isdigit():
+        return ident
+    return None
+
+
+def struct_fields(text, name):
+    blk = delim_block(text, f"struct {name}", "{", "}")
+    if blk is None:
+        return None
+    anchor_line, inner = blk
+    fields, depth = [], 0
+    for k, raw in enumerate(inner.split("\n")):
+        line = raw.strip()
+        if depth == 0 and not line.startswith("#["):
+            f = field_name(line)
+            if f is not None:
+                fields.append((f, anchor_line + k))
+        depth = max(0, depth + sum(raw.count(c) for c in "{(") - sum(raw.count(c) for c in "})"))
+    return (anchor_line, fields)
+
+
+def paren_keys(text):
+    code = code_view(text)
+    out, i, in_str, n = [], 0, False, len(code)
+    while i < n:
+        c = code[i]
+        if in_str:
+            if c == "\\":
+                i += 2
+                continue
+            in_str = c != '"'
+            i += 1
+            continue
+        if c == '"':
+            in_str = True
+            i += 1
+            continue
+        if c != "(":
+            i += 1
+            continue
+        line = line_of_offset(code, i)
+        j = i + 1
+        while j < n and code[j].isspace():
+            j += 1
+        if j >= n or code[j] != '"':
+            i += 1
+            continue
+        lit_start = j + 1
+        k = lit_start
+        while k < n and code[k] not in '"\\\n':
+            k += 1
+        if k >= n or code[k] != '"':
+            i += 1
+            continue
+        key = code[lit_start:k]
+        m = k + 1
+        while m < n and code[m].isspace():
+            m += 1
+        if m < n and code[m] == "," and key and all(is_key_byte(c) for c in key):
+            out.append((line, key))
+        i = k + 1
+    return out
+
+
+def backticked(line):
+    parts = line.split("`")
+    return parts[1::2]
+
+
+def int_after(text, anchor):
+    code = code_view(text)
+    at = code.find(anchor)
+    if at < 0:
+        return None
+    rest = code[at + len(anchor):]
+    skipped = 0
+    for c in rest:
+        if c.isdigit():
+            break
+        skipped += 1
+    digits = []
+    for c in rest[skipped:]:
+        if c.isdigit():
+            digits.append(c)
+        elif c != "_":
+            break
+    if not digits or skipped > 80:
+        return None
+    return (line_of_offset(code, at), int("".join(digits)))
+
+
+# ---------------------------------------------------------------- tree
+
+
+EXTRAS = [
+    "README.md",
+    "docs/ARCHITECTURE.md",
+    "docs/TELEMETRY.md",
+    "docs/ANALYSIS.md",
+    "scripts/check_bench.py",
+    "scripts/check_events.py",
+    "scripts/ci.sh",
+    ".github/workflows/ci.yml",
+    "BENCH_sim.json",
+    "BENCH_fleet.json",
+]
+
+
+def load_tree(root):
+    tree = {}
+    for rel in ("rust/src", "rust/tests", "rust/benches", "examples"):
+        base = root / rel
+        if base.is_dir():
+            for p in sorted(base.rglob("*.rs")):
+                tree[p.relative_to(root).as_posix()] = p.read_text()
+    for extra in EXTRAS:
+        p = root / extra
+        if p.is_file():
+            tree[extra] = p.read_text()
+    return tree
+
+
+def files_under(tree, prefix):
+    return [(p, tree[p]) for p in sorted(tree) if p.startswith(prefix)]
+
+
+def rust_src(tree):
+    return [(p, c) for p, c in files_under(tree, "rust/src/") if p.endswith(".rs")]
+
+
+def diag(out, rule, file, line, message):
+    out.append((rule, file, line, message))
+
+
+def missing_file(out, rule, file):
+    diag(out, rule, file, 1, f"required file `{file}` is missing from the tree")
+
+
+# ---------------------------------------------------------------- A1
+
+
+A1_CACHE = "rust/src/sim/scenario/cache.rs"
+A1_TARGETS = [
+    ("SimOptions", "rust/src/sim/simulator.rs"),
+    ("VlaConfig", "rust/src/model/vla.rs"),
+    ("DecoderConfig", "rust/src/model/vla.rs"),
+    ("WorkloadShape", "rust/src/model/vla.rs"),
+]
+
+
+def run_a1(tree):
+    out = []
+    cache = tree.get(A1_CACHE)
+    if cache is None:
+        missing_file(out, "A1", A1_CACHE)
+        return out
+    for name, def_file in A1_TARGETS:
+        text = tree.get(def_file)
+        if text is None:
+            missing_file(out, "A1", def_file)
+            continue
+        sf = struct_fields(text, name)
+        if sf is None:
+            diag(out, "A1", def_file, 1,
+                 f"struct `{name}` not found (fingerprint target of {A1_CACHE})")
+            continue
+        fields = sf[1]
+        blocks = delim_blocks(cache, name, "{", "}")
+        if not blocks:
+            diag(out, "A1", A1_CACHE, 1,
+                 f"no `{name} {{ .. }}` destructuring in the lowering cache")
+            continue
+        best = min(
+            ((line, [f for f in fields if not contains_word(inner, f[0])])
+             for line, inner in blocks),
+            key=lambda x: len(x[1]),
+        )
+        for fname, fline in best[1]:
+            diag(out, "A1", A1_CACHE, best[0],
+                 f"field `{name}.{fname}` ({def_file}:{fline}) is not covered by the "
+                 f"`{name}` destructuring — the cache could alias two configs that "
+                 "differ in it")
+    return out
+
+
+# ---------------------------------------------------------------- A2
+
+
+A2_COMPARISONS = [
+    ("ScenarioResult", "rust/src/sim/scenario/eval.rs",
+     "rust/tests/scenario_tests.rs", "result_bits"),
+    ("FleetReport", "rust/src/sim/fleet/sim.rs", "rust/tests/fleet_tests.rs", "fingerprint"),
+    ("FleetReport", "rust/src/sim/fleet/sim.rs", "rust/src/telemetry/replay.rs",
+     "report_mismatch"),
+]
+A2_TELEMETRY_TESTS = "rust/tests/telemetry_tests.rs"
+
+
+def run_a2(tree):
+    out = []
+    for name, def_file, cmp_file, cmp_fn in A2_COMPARISONS:
+        d, c = tree.get(def_file), tree.get(cmp_file)
+        if d is None:
+            missing_file(out, "A2", def_file)
+            continue
+        if c is None:
+            missing_file(out, "A2", cmp_file)
+            continue
+        sf = struct_fields(d, name)
+        if sf is None:
+            diag(out, "A2", def_file, 1,
+                 f"struct `{name}` not found (compared by {cmp_file}::{cmp_fn})")
+            continue
+        blk = delim_block(c, f"fn {cmp_fn}", "{", "}")
+        if blk is None:
+            diag(out, "A2", cmp_file, 1,
+                 f"comparison fn `{cmp_fn}` not found (must reduce `{name}` bit-exactly)")
+            continue
+        line, body = blk
+        for fname, fline in sf[1]:
+            if not contains_field_access(body, fname):
+                diag(out, "A2", cmp_file, line,
+                     f"`{name}.{fname}` ({def_file}:{fline}) is not read by `{cmp_fn}` "
+                     "— the bitwise pin would not notice it diverging")
+    tt = tree.get(A2_TELEMETRY_TESTS)
+    if tt is None:
+        missing_file(out, "A2", A2_TELEMETRY_TESTS)
+    elif not contains_word(tt, "report_mismatch"):
+        diag(out, "A2", A2_TELEMETRY_TESTS, 1,
+             "telemetry tests must compare reports through `report_mismatch` (the "
+             "field-complete comparator), not an ad-hoc tuple")
+    return out
+
+
+# ---------------------------------------------------------------- A3
+
+
+A3_MOD = "rust/src/experiment/mod.rs"
+A3_CLI = "rust/src/cli/mod.rs"
+A3_TESTS = "rust/tests/experiment_tests.rs"
+A3_README = "README.md"
+A3_ARCH = "docs/ARCHITECTURE.md"
+
+
+def a3_registry_idents(tree, out):
+    mod_rs = tree.get(A3_MOD)
+    if mod_rs is None:
+        missing_file(out, "A3", A3_MOD)
+        return None
+    code = code_view(mod_rs)
+    at = find_word_from(code, "static REGISTRY", 0)
+    blk = None
+    if at is not None:
+        eq = code.find("=", at)
+        if eq >= 0:
+            blk = block_at(code, eq, "[", "]")
+    if blk is None:
+        diag(out, "A3", A3_MOD, 1, "no `static REGISTRY` list found")
+        return None
+    line, inner = blk
+    idents = []
+    for k, raw in enumerate(inner.split("\n")):
+        rest = raw.strip()
+        while "&" in rest:
+            rest = rest[rest.index("&") + 1:]
+            ident = ""
+            for ch in rest:
+                if ch.isascii() and ch.isalnum() or ch == "_":
+                    ident += ch
+                else:
+                    break
+            if ident:
+                idents.append((ident, line + k))
+    if not idents:
+        diag(out, "A3", A3_MOD, line, "REGISTRY list parsed empty")
+        return None
+    return idents
+
+
+def a3_experiment_impls(tree):
+    impls = {}
+    for path, text in files_under(tree, "rust/src/experiment/"):
+        if not path.endswith(".rs"):
+            continue
+        for line, body in delim_blocks(text, "impl Experiment for", "{", "}"):
+            raw = text.split("\n")[line - 1]
+            code = strip_comment(raw)
+            after = code.split("impl Experiment for", 1)
+            if len(after) < 2:
+                continue
+            rest = after[1].lstrip()
+            ident = ""
+            for ch in rest:
+                if ch.isascii() and ch.isalnum() or ch == "_":
+                    ident += ch
+                else:
+                    break
+            if not ident:
+                continue
+
+            def first_lit(anchor):
+                blk = delim_block(body, anchor, "{", "}")
+                if blk is None:
+                    return ""
+                lits = string_literals(blk[1])
+                return lits[0][1] if lits else ""
+
+            impls[ident] = (first_lit("fn name"), first_lit("fn description"), path, line)
+    return impls
+
+
+def a3_cli_extras(tree, out):
+    cli = tree.get(A3_CLI)
+    if cli is None:
+        missing_file(out, "A3", A3_CLI)
+        return set()
+    code = code_view(cli)
+    at = find_word_from(code, "EXTRA_SUBCOMMANDS", 0)
+    blk = None
+    if at is not None:
+        eq = code.find("=", at)
+        if eq >= 0:
+            blk = block_at(code, eq, "[", "]")
+    if blk is None:
+        diag(out, "A3", A3_CLI, 1, "no EXTRA_SUBCOMMANDS table found")
+        return set()
+    return {k for _, k in paren_keys(blk[1])}
+
+
+def run_a3(tree):
+    out = []
+    idents = a3_registry_idents(tree, out)
+    if idents is None:
+        return out
+    impls = a3_experiment_impls(tree)
+    names = []
+    for ident, line in idents:
+        imp = impls.get(ident)
+        if imp is None:
+            diag(out, "A3", A3_MOD, line,
+                 f"registry entry `&{ident}` has no `impl Experiment` with a parsed name")
+            continue
+        name, desc, file, iline = imp
+        if not name:
+            diag(out, "A3", file, iline, f"experiment `{ident}` has an empty name()")
+        if not desc:
+            diag(out, "A3", file, iline, f"experiment `{ident}` has an empty description()")
+        names.append(name)
+    seen = set()
+    for n in names:
+        if n in seen:
+            diag(out, "A3", A3_MOD, 1, f"duplicate experiment name `{n}` in the registry")
+        seen.add(n)
+    extras = a3_cli_extras(tree, out)
+
+    readme = tree.get(A3_README)
+    if readme is None:
+        missing_file(out, "A3", A3_README)
+    else:
+        rows, table_line = {}, 1
+        for i, line in enumerate(readme.split("\n")):
+            if line.startswith("| Subcommand"):
+                table_line = i + 1
+            if not line.startswith("| `"):
+                continue
+            cells = line.split("|")
+            if len(cells) < 2:
+                continue
+            for tok in backticked(cells[1]):
+                rows.setdefault(tok, i + 1)
+        for name in names:
+            if name not in rows:
+                diag(out, "A3", A3_README, table_line,
+                     f"experiment `{name}` is missing from the README subcommand table")
+        for tok, line in sorted(rows.items()):
+            if tok not in names and tok not in extras:
+                diag(out, "A3", A3_README, line,
+                     f"`{tok}` in the README subcommand table is not a CLI subcommand")
+
+    tests = tree.get(A3_TESTS)
+    if tests is None:
+        missing_file(out, "A3", A3_TESTS)
+    else:
+        blk = delim_block(tests, "fn registry_covers_every_subcommand", "{", "}")
+        if blk is None:
+            diag(out, "A3", A3_TESTS, 1, "no registry completeness test found")
+        else:
+            line, body = blk
+            wants = {
+                s for _, s in string_literals(body)
+                if s and all(c.isascii() and (c.islower() or c.isdigit()) or c == "-" for c in s)
+            }
+            for name in names:
+                if name not in wants:
+                    diag(out, "A3", A3_TESTS, line,
+                         f"`{name}` is missing from the registry completeness want-list")
+            cnt = int_after(tests, "names.len(),")
+            if cnt is None:
+                diag(out, "A3", A3_TESTS, line,
+                     "no `names.len()` count assertion in the completeness test")
+            elif cnt[1] != len(names):
+                diag(out, "A3", A3_TESTS, cnt[0],
+                     f"registry count assertion says {cnt[1]} but the registry has "
+                     f"{len(names)}")
+
+    arch = tree.get(A3_ARCH)
+    if arch is None:
+        missing_file(out, "A3", A3_ARCH)
+        return out
+    entries, map_line = {}, 1
+    for i, line in enumerate(arch.split("\n")):
+        at = line.find("── ")
+        if at < 0:
+            continue
+        if not entries:
+            map_line = i + 1
+        tok = ""
+        for ch in line[at + 3:]:
+            if ch.isspace():
+                break
+            tok += ch
+        entries.setdefault(tok, i + 1)
+    top_dirs = set()
+    for p, _ in files_under(tree, "rust/src/"):
+        rest = p[len("rust/src/"):]
+        if "/" in rest:
+            first, remainder = rest.split("/", 1)
+            if remainder:
+                top_dirs.add(first)
+    for d in sorted(top_dirs):
+        if f"{d}/" not in entries:
+            diag(out, "A3", A3_ARCH, map_line,
+                 f"module `rust/src/{d}/` is missing from the module map")
+    for tok, line in sorted(entries.items()):
+        if tok.endswith("/"):
+            dirname = tok[:-1]
+            exists = any(
+                p.startswith("rust/src/") and dirname in p.split("/") and not p.endswith(dirname)
+                for p in tree
+            )
+            if not exists:
+                diag(out, "A3", A3_ARCH, line,
+                     f"`{tok}` in the module map does not exist under rust/src/")
+        elif tok.endswith(".rs"):
+            suffix = f"/{tok}"
+            if not any(p.startswith("rust/src/") and p.endswith(suffix) for p in tree):
+                diag(out, "A3", A3_ARCH, line,
+                     f"`{tok}` in the module map does not exist under rust/src/")
+    return out
+
+
+# ---------------------------------------------------------------- A4
+
+
+A4_TEL = "rust/src/telemetry/mod.rs"
+A4_DOCS = "docs/TELEMETRY.md"
+A4_PY = "scripts/check_events.py"
+
+
+def a4_literal_set(py, anchor, out, what):
+    blk = delim_block(py, anchor, "{", "}")
+    if blk is None:
+        diag(out, "A4", A4_PY, 1, f"no `{what}` set in check_events.py")
+        return []
+    line, body = blk
+    return [(line + l - 1, s) for l, s in string_literals(body)]
+
+
+def run_a4(tree):
+    out = []
+    tel, docs, py = tree.get(A4_TEL), tree.get(A4_DOCS), tree.get(A4_PY)
+    if tel is None or docs is None or py is None:
+        for path, got in ((A4_TEL, tel), (A4_DOCS, docs), (A4_PY, py)):
+            if got is None:
+                missing_file(out, "A4", path)
+        return out
+    blk = delim_block(tel, "pub fn kind", "{", "}")
+    if blk is None:
+        diag(out, "A4", A4_TEL, 1, "no `pub fn kind` match found")
+        return out
+    kind_line, kind_body = blk
+    kinds_rs = [(kind_line + l - 1, s) for l, s in string_literals(kind_body)]
+    if not kinds_rs:
+        diag(out, "A4", A4_TEL, kind_line, "`kind()` yields no kind strings")
+        return out
+    kinds_py = a4_literal_set(py, "KINDS =", out, "KINDS")
+    preamble_py = a4_literal_set(py, "PREAMBLE_KINDS =", out, "PREAMBLE_KINDS")
+    rs_set = {s for _, s in kinds_rs}
+    py_set = {s for _, s in kinds_py}
+    for line, kind in kinds_rs:
+        if kind not in py_set:
+            diag(out, "A4", A4_TEL, line,
+                 f"wire kind `{kind}` is missing from check_events.py KINDS")
+        if not contains_word(docs, kind):
+            diag(out, "A4", A4_TEL, line, f"wire kind `{kind}` is not documented in {A4_DOCS}")
+    for line, kind in kinds_py:
+        if kind not in rs_set:
+            diag(out, "A4", A4_PY, line,
+                 f"KINDS entry `{kind}` is not a wire kind emitted by `kind()`")
+    for line, kind in preamble_py:
+        if kind not in py_set:
+            diag(out, "A4", A4_PY, line, f"PREAMBLE_KINDS entry `{kind}` is not in KINDS")
+    rs_v = int_after(tel, "SCHEMA_VERSION: u64 =")
+    py_v = int_after(py, "SCHEMA_VERSION = ")
+    if rs_v is None:
+        diag(out, "A4", A4_TEL, 1, "no SCHEMA_VERSION const")
+    elif py_v is None:
+        diag(out, "A4", A4_PY, 1, "no SCHEMA_VERSION const")
+    elif rs_v[1] != py_v[1]:
+        diag(out, "A4", A4_TEL, rs_v[0],
+             f"SCHEMA_VERSION {rs_v[1]} != check_events.py SCHEMA_VERSION {py_v[1]}")
+    blk = delim_block(tel, "pub fn to_json", "{", "}")
+    if blk is None:
+        diag(out, "A4", A4_TEL, 1, "no `pub fn to_json` emitter found")
+        return out
+    json_line, json_body = blk
+    seen = set()
+    for l, key in paren_keys(json_body):
+        if key in seen:
+            continue
+        seen.add(key)
+        if not contains_word(docs, key):
+            diag(out, "A4", A4_TEL, json_line + l - 1,
+                 f"wire key `{key}` emitted by to_json() is not documented in {A4_DOCS}")
+    return out
+
+
+# ---------------------------------------------------------------- A5
+
+
+A5_UNIT_RULES = [
+    ("_gbps", None, [["8", "BITS_PER_BYTE"], ["1e9", "1_000_000_000"]],
+     "Gbit/s arithmetic needs an explicit x8 bits-per-byte and a 1e9 factor"),
+    ("_ms", None, [["1e3", "1e-3", "1000", "0.001"]],
+     "millisecond arithmetic needs an explicit 1e3 factor"),
+    ("_us", None, [["1e6", "1e-6", "1_000_000"]],
+     "microsecond arithmetic needs an explicit 1e6 factor"),
+    ("_gb", "_bytes", [["1e9", "GB"]],
+     "bytes-to-GB arithmetic needs an explicit 1e9 (or GB const) factor"),
+]
+
+A5_APPROVED = [
+    "_s", "_ms", "_us", "_hz", "_j", "_w", "_watts", "_gb", "_gbps", "_bytes", "_byte",
+    "_frac", "_share", "_util", "_pct", "_x", "_b",
+]
+
+A5_GRANDFATHERED = {
+    "action", "actions", "actions_sum", "arrival", "base_total", "bytes", "capacity",
+    "clock", "decode", "decode_time", "decode_tps", "dispatch_overhead", "draft_step",
+    "eff_bw", "eff_gflops", "efficiency", "embeds_sum", "energy", "flops", "flops_bf16",
+    "flops_f32", "host_dispatch", "hz", "internal_bw", "kernel_launch_overhead", "l2_bw",
+    "link_utilization", "max", "mean", "min", "p50", "p90", "p99", "peak_bw", "prefill",
+    "prefill_logits_l2", "reduction_bw_penalty", "speedup_vs_baseline", "std",
+    "step_latency", "stream_efficiency", "t_compute", "t_compute_bound", "t_mem_other",
+    "t_mem_weights", "t_memory", "t_memory_bound", "t_overhead", "t_overhead_bound",
+    "t_parallel", "t_serial", "throughput", "time", "time_serial", "total_latency",
+    "vision", "weight_scale",
+}
+
+
+def a5_suffixed_chains(code, suffix):
+    out, i, n = [], 0, len(code)
+
+    def is_chain(c):
+        return c.isascii() and c.isalnum() or c in "_."
+
+    while i < n:
+        if not is_chain(code[i]):
+            i += 1
+            continue
+        start = i
+        while i < n and is_chain(code[i]):
+            i += 1
+        chain = code[start:i].strip(".")
+        if chain.endswith(suffix) and len(chain) > len(suffix):
+            out.append((start, i, chain))
+    return out
+
+
+def a5_arith_adjacent(code, start, end):
+    n = len(code)
+    r = end
+    while r < n and code[r] == " ":
+        r += 1
+    if r < n and code[r] in "*/":
+        return True
+    left = start
+    while left > 0 and code[left - 1] == " ":
+        left -= 1
+    if left == 0:
+        return False
+    c = code[left - 1]
+    if c == "/":
+        return True
+    if c == "*":
+        m = left - 1
+        while m > 0 and code[m - 1] == " ":
+            m -= 1
+        if m == 0:
+            return False
+        p = code[m - 1]
+        return p.isascii() and p.isalnum() or p in '_)"'
+    return False
+
+
+def a5_f64_field(code):
+    t = code.strip()
+    if not t.startswith("pub "):
+        return None
+    rest = t[4:]
+    if ":" not in rest:
+        return None
+    name, ty = rest.split(":", 1)
+    name = name.strip()
+    ty = ty.strip().rstrip(",").strip()
+    if ty != "f64":
+        return None
+    ok = name and all(
+        (c.islower() or c.isdigit()) and c.isascii() or c == "_" for c in name
+    ) and not name[0].isdigit()
+    return name if ok else None
+
+
+def run_a5(tree):
+    out = []
+    for path, text in rust_src(tree):
+        for i, raw in enumerate(text.split("\n")):
+            code = blank_strings(raw)
+            for suffix, only_if, factors, why in A5_UNIT_RULES:
+                if only_if is not None and only_if not in code:
+                    continue
+                for start, end, chain in a5_suffixed_chains(code, suffix):
+                    if not a5_arith_adjacent(code, start, end):
+                        continue
+                    ok = all(any(contains_word(code, tok) for tok in grp) for grp in factors)
+                    if not ok:
+                        diag(out, "A5", path, i + 1,
+                             f"`{chain}` is scaled without its unit conversion — {why}")
+                    break
+            name = a5_f64_field(code)
+            if name is not None:
+                named = ("_per_" in name or any(name.endswith(s) for s in A5_APPROVED)
+                         or name in A5_GRANDFATHERED)
+                if not named:
+                    suffixes = ", ".join(A5_APPROVED[:4])
+                    diag(out, "A5", path, i + 1,
+                         f"public f64 field `{name}` does not name its unit — add a "
+                         f"suffix ({suffixes}, ...) or `_per_`")
+    return out
+
+
+# ---------------------------------------------------------------- A6
+
+
+A6_BASELINES = [
+    ("BENCH_sim.json", "rust/benches/bench_sim_perf.rs"),
+    ("BENCH_fleet.json", "rust/benches/bench_fleet.rs"),
+]
+A6_CI = ["scripts/ci.sh", ".github/workflows/ci.yml"]
+
+
+def a6_bench_name(base):
+    for i, raw in enumerate(base.split("\n")):
+        if not raw.lstrip().startswith('"bench"'):
+            continue
+        lits = [s for _, s in string_literals(raw)]
+        if lits[:1] == ["bench"] and len(lits) > 1:
+            return (i + 1, lits[1])
+    return None
+
+
+def a6_object_keys(inner, base_line):
+    out = []
+    for k, raw in enumerate(inner.split("\n")):
+        t = raw.strip()
+        if not t.startswith('"'):
+            continue
+        endq = t.find('"', 1)
+        if endq < 0:
+            continue
+        if t[endq + 1:].lstrip().startswith(":"):
+            out.append((base_line + k, t[1:endq]))
+    return out
+
+
+def run_a6(tree):
+    out = []
+    for baseline, bench_src in A6_BASELINES:
+        base, src = tree.get(baseline), tree.get(bench_src)
+        if base is None:
+            missing_file(out, "A6", baseline)
+            continue
+        if src is None:
+            missing_file(out, "A6", bench_src)
+            continue
+        src_lits = {s for _, s in string_literals(src)}
+        bn = a6_bench_name(base)
+        if bn is None:
+            diag(out, "A6", baseline, 1, 'baseline has no `"bench": "<name>"` entry')
+        elif bn[1] not in src_lits:
+            diag(out, "A6", baseline, bn[0],
+                 f"bench name `{bn[1]}` is not emitted by {bench_src}")
+        for section in ('"exact"', '"metrics"'):
+            blk = delim_block(base, section, "{", "}")
+            if blk is None:
+                diag(out, "A6", baseline, 1, f"baseline has no {section} object")
+                continue
+            for line, key in a6_object_keys(blk[1], blk[0]):
+                if key not in src_lits:
+                    diag(out, "A6", baseline, line,
+                         f"baseline key `{key}` is not emitted by {bench_src} — the "
+                         "gate would fail on every run (or the key was renamed on one "
+                         "side only)")
+    for path, text in files_under(tree, "rust/benches/"):
+        if path.endswith(".rs") and not contains_word(text, "json_path_from_args"):
+            diag(out, "A6", path, 1,
+                 "bench binary does not call `json_path_from_args` — it cannot be gated")
+    for ci in A6_CI:
+        text = tree.get(ci)
+        if text is None:
+            missing_file(out, "A6", ci)
+            continue
+        for baseline, _ in A6_BASELINES:
+            gated = any(
+                "check_bench.py" in l and baseline in l for l in text.split("\n")
+            )
+            if not gated:
+                diag(out, "A6", ci, 1, f"{ci} never runs check_bench.py against {baseline}")
+    return out
+
+
+# ---------------------------------------------------------------- driver
+
+
+RULES = [("A1", run_a1), ("A2", run_a2), ("A3", run_a3), ("A4", run_a4),
+         ("A5", run_a5), ("A6", run_a6)]
+
+
+def is_suppressed(tree, d):
+    rule, file, line, _ = d
+    text = tree.get(file)
+    if text is None:
+        return False
+    marker = f"audit:allow({rule})"
+    lines = text.split("\n")
+
+    def has(n):
+        return 1 <= n <= len(lines) and marker in lines[n - 1]
+
+    return has(line) or (line >= 2 and has(line - 1))
+
+
+def main():
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(__file__).resolve().parents[1]
+    tree = load_tree(root)
+    print(f"mirror audit over {len(tree)} files from {root}")
+    total = 0
+    for rule_id, run in RULES:
+        diags = [d for d in run(tree) if not is_suppressed(tree, d)]
+        status = "ok" if not diags else f"{len(diags)} diagnostic(s)"
+        print(f"  {rule_id}: {status}")
+        for r, f, l, m in diags:
+            print(f"    {r} {f}:{l}: {m}")
+        total += len(diags)
+    if total:
+        print(f"mirror audit FAILED ({total} diagnostic(s))")
+        return 1
+    print("mirror audit clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
